@@ -1,0 +1,60 @@
+//! Memoization-threshold sweep (paper Fig. 4): threshold 1 → low, measuring
+//! memoization rate and accuracy at each point.
+//!
+//! ```sh
+//! cargo run --release --example accuracy_sweep [family] [n_test]
+//! ```
+
+use attmemo::bench_support::{workload, TableWriter};
+use attmemo::config::{MemoConfig, MemoLevel};
+use attmemo::eval::evaluate;
+use attmemo::model::ModelRunner;
+use attmemo::serving::engine::{Engine, EngineOptions};
+
+fn main() -> attmemo::Result<()> {
+    attmemo::util::logger::init();
+    let args: Vec<String> = std::env::args().collect();
+    let family = args.get(1).cloned().unwrap_or_else(|| "bert".into());
+    let n: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(32);
+
+    let rt = workload::open_runtime()?;
+    let seq_len = rt.artifacts().serving_seq_len;
+    let (ids, labels) = workload::test_workload(&rt, &family, seq_len, n)?;
+
+    println!("building database once (256 seqs)…");
+    let built = std::sync::Arc::new(
+        workload::build_db(&rt, &family, seq_len, 256)?);
+    // Sweep around the calibrated range, down to "accept anything".
+    let hi = built.thresholds.conservative;
+    let lo = built.thresholds.aggressive;
+    let mut points = vec![1.0f32];
+    for i in 0..=4 {
+        points.push(hi + (lo - hi) * i as f32 / 4.0);
+    }
+    points.push(lo - (hi - lo).abs() * 0.5);
+    points.push(-1.0); // all memoization
+
+    let mut table = TableWriter::new(
+        &format!("Fig. 4 reproduction — threshold sweep ({family})"),
+        &["threshold", "memo_rate", "accuracy"],
+    );
+    for thr in points {
+        let runner = ModelRunner::load(rt.clone(), &family)?;
+        let memo = MemoConfig {
+            level: MemoLevel::Moderate,
+            threshold_override: Some(thr as f64),
+            selective: false,
+            ..MemoConfig::default()
+        };
+        let mut engine = Engine::new(runner, Some(built.clone()),
+                                     EngineOptions { memo, seq_len })?;
+        let r = evaluate(&mut engine, &ids, &labels, 8, false)?;
+        table.row(&[
+            format!("{thr:.3}"),
+            format!("{:.3}", r.memo_rate),
+            format!("{:.3}", r.accuracy()),
+        ]);
+    }
+    table.emit(Some(std::path::Path::new("bench_results/fig4_sweep.csv")));
+    Ok(())
+}

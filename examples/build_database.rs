@@ -1,0 +1,52 @@
+//! Offline attention-database population (paper §5.1 / Table 3 flavour).
+//!
+//! Ingests training sequences for one family, then prints database size,
+//! indexing time, calibrated thresholds and the per-layer Eq. 3 profile.
+//!
+//! ```sh
+//! cargo run --release --example build_database [family] [db_seqs]
+//! ```
+
+use attmemo::bench_support::{workload, TableWriter};
+
+fn main() -> attmemo::Result<()> {
+    attmemo::util::logger::init();
+    let args: Vec<String> = std::env::args().collect();
+    let family = args.get(1).cloned().unwrap_or_else(|| "bert".into());
+    let db_seqs: usize =
+        args.get(2).and_then(|s| s.parse().ok()).unwrap_or(256);
+
+    let rt = workload::open_runtime()?;
+    let seq_len = rt.artifacts().serving_seq_len;
+    println!("building {family} attention database from {db_seqs} sequences \
+              (seq_len {seq_len})…");
+    let built = workload::build_db(&rt, &family, seq_len, db_seqs)?;
+
+    println!("\nsequences ingested : {}", built.sequences);
+    println!("entries            : {}", built.db.total_entries());
+    println!("database size      : {:.1} MiB",
+             built.db.resident_bytes() as f64 / (1 << 20) as f64);
+    println!("indexing time      : {:.2} s", built.indexing_seconds);
+    println!("total build time   : {:.2} s", built.build_seconds);
+    println!("thresholds         : conservative={:.4} moderate={:.4} \
+              aggressive={:.4}",
+             built.thresholds.conservative, built.thresholds.moderate,
+             built.thresholds.aggressive);
+
+    let mut t = TableWriter::new(
+        "Per-layer Eq. 3 profile (selective memoization inputs)",
+        &["layer", "t_attn (s)", "t_overhead (s)", "alpha", "PB>0?"],
+    );
+    for (li, p) in built.profiles.iter().enumerate() {
+        let pb = p.t_attn * p.alpha - p.t_overhead;
+        t.row(&[
+            li.to_string(),
+            format!("{:.4}", p.t_attn),
+            format!("{:.4}", p.t_overhead),
+            format!("{:.3}", p.alpha),
+            format!("{}", pb > 0.0),
+        ]);
+    }
+    t.emit(None);
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! LLM CPU-vs-GPU deployment cost planner (paper §6.9, Table 9).
+//!
+//! The paper argues big-memory CPU instances beat multi-GPU setups for
+//! LLaMA-65B inference on cost and slightly on throughput. This planner
+//! reproduces the Table 9 arithmetic with the paper's published constants
+//! and lets you explore other model sizes / instance counts.
+//!
+//! ```sh
+//! cargo run --release --example llm_cost_planner [model_params_B]
+//! ```
+
+use attmemo::bench_support::TableWriter;
+
+/// Instance types with paper-published characteristics (Table 9 context).
+#[derive(Clone, Copy)]
+struct Instance {
+    name: &'static str,
+    /// tokens/s for LLaMA-65B on ONE instance (paper's measurements:
+    /// 4 GPU instances → 5.54 tok/s total; 1 CPU instance → 1.01).
+    tokens_per_s: f64,
+    /// Hardware acquisition cost per instance ($).
+    acq_cost: f64,
+    /// Cloud cost per hour per instance ($, Oracle list prices the paper
+    /// cites).
+    cloud_per_hr: f64,
+    /// Usable memory per instance (GB).
+    mem_gb: f64,
+}
+
+const GPU_INST: Instance = Instance {
+    name: "2xA10 GPU instance",
+    tokens_per_s: 5.54 / 4.0, // paper measured 4 instances together
+    acq_cost: 61_200.0 / 4.0,
+    cloud_per_hr: 1.6 / 4.0,
+    mem_gb: 48.0, // 2 × 24 GB
+};
+
+const CPU_INST: Instance = Instance {
+    name: "64c/1TB CPU instance",
+    tokens_per_s: 1.01,
+    acq_cost: 7_900.0,
+    cloud_per_hr: 0.88 / 6.0, // paper: 6 instances at $0.88/hr total
+    mem_gb: 1024.0,
+};
+
+/// LLaMA-65B needs 147 GB (paper); scale linearly for other sizes.
+fn model_mem_gb(params_b: f64) -> f64 {
+    147.0 * params_b / 65.0
+}
+
+/// Near-linear multi-instance scaling with the paper's observed efficiency
+/// (6 CPU instances: 6.06/1.01 = 6.0× ⇒ ~1.0; 8 GPUs over EoIB: 5.54 over
+/// 4 instances ⇒ interconnect-bound, efficiency already folded into the
+/// per-instance number).
+fn throughput(inst: Instance, n: usize) -> f64 {
+    inst.tokens_per_s * n as f64
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let params_b: f64 = args.get(1).and_then(|s| s.parse().ok())
+        .unwrap_or(65.0);
+    let need_gb = model_mem_gb(params_b);
+    println!("model: {params_b:.0}B params → {need_gb:.0} GB inference \
+              footprint");
+
+    let mut t = TableWriter::new(
+        "Table 9 reproduction — LLM deployment cost model",
+        &["config", "fits?", "tokens/s", "acq cost ($)", "cloud $/hr",
+          "$ per 1M tokens (cloud)"],
+    );
+    let configs: [(Instance, usize); 4] =
+        [(GPU_INST, 4), (CPU_INST, 1), (CPU_INST, 6), (GPU_INST, 8)];
+    for (inst, n) in configs {
+        let mem = inst.mem_gb * n as f64;
+        let fits = mem >= need_gb;
+        let tps = throughput(inst, n);
+        let cloud = inst.cloud_per_hr * n as f64;
+        let per_m = if tps > 0.0 { cloud / (tps * 3600.0) * 1e6 } else { 0.0 };
+        t.row(&[
+            format!("{} x{}", inst.name, n),
+            fits.to_string(),
+            format!("{tps:.2}"),
+            format!("{:.0}", inst.acq_cost * n as f64),
+            format!("{cloud:.2}"),
+            format!("{per_m:.2}"),
+        ]);
+    }
+    t.emit(Some(std::path::Path::new("bench_results/table9_cost.csv")));
+
+    // The paper's headline claims, derived from the same numbers:
+    let gpu4 = throughput(GPU_INST, 4);
+    let cpu6 = throughput(CPU_INST, 6);
+    println!("6 CPU instances vs 4 GPU instances: {:.1}% faster, {:.2}x \
+              cheaper to acquire, {:.1}x cheaper on cloud",
+             (cpu6 / gpu4 - 1.0) * 100.0,
+             (GPU_INST.acq_cost * 4.0) / (CPU_INST.acq_cost * 6.0),
+             (GPU_INST.cloud_per_hr * 4.0) / (CPU_INST.cloud_per_hr * 6.0));
+}

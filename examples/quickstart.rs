@@ -1,0 +1,56 @@
+//! Quickstart: load the artifacts, build a small attention database, and
+//! run one memoized inference against the baseline.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use attmemo::bench_support::workload;
+use attmemo::config::MemoLevel;
+use attmemo::data::tokenizer::Vocab;
+
+fn main() -> attmemo::Result<()> {
+    attmemo::util::logger::init();
+    let rt = workload::open_runtime()?;
+    let seq_len = rt.artifacts().serving_seq_len;
+    let vocab = Vocab::load(&rt.artifacts().root().join("vocab.json"))?;
+
+    println!("== AttMemo quickstart (family: bert) ==");
+    println!("building attention database from 128 training sequences…");
+    let mut engine = workload::engine_with_db(
+        &rt, "bert", seq_len, MemoLevel::Moderate, 128, true)?;
+    let mut baseline = workload::engine_with_db(
+        &rt, "bert", seq_len, MemoLevel::Off, 0, false)?;
+
+    let texts = [
+        "the film was wonderful and the ending was superb",
+        "a truly dreadful plot with lifeless acting",
+        "critics felt the story was not terrible",
+    ];
+    for text in texts {
+        let ids = vocab.encode(text, seq_len);
+        let batch = attmemo::tensor::tensor::IdTensor::new(
+            vec![1, seq_len], ids)?;
+
+        let b = baseline.infer_baseline(&batch)?;
+        let m = engine.infer(&batch)?;
+        println!("\n  input: {text:?}");
+        println!(
+            "  baseline : label={} ({:.1} ms)",
+            b.labels[0],
+            b.seconds * 1e3
+        );
+        println!(
+            "  attmemo  : label={} memoized_layers={}/{} ({:.1} ms)",
+            m.labels[0],
+            m.memo_hits[0],
+            engine.runner().config().layers,
+            m.seconds * 1e3
+        );
+    }
+    println!(
+        "\nengine memoization rate so far: {:.1} %",
+        engine.stats.memoization_rate() * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! End-to-end serving driver (the DESIGN.md §5 mandated validation run).
+//!
+//! Builds the attention database, starts the real TCP server with the
+//! dynamic batcher, drives it with concurrent clients sending
+//! template-generated requests, and reports latency / throughput /
+//! memoization-rate / accuracy against the no-memoization baseline.
+//! Results are recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! cargo run --release --example serve_e2e [requests] [clients]
+//! ```
+
+use std::sync::Arc;
+
+use attmemo::bench_support::workload;
+use attmemo::config::{MemoLevel, ServingConfig};
+use attmemo::data::synth::SynthGen;
+use attmemo::data::tokenizer::Vocab;
+use attmemo::serving::server::{Client, Server};
+use attmemo::util::stats::{Stopwatch, Summary};
+
+fn run_load(addr: &str, vocab: &Vocab, requests: usize, clients: usize,
+            seed: u64) -> attmemo::Result<(Summary, usize, usize, u64)> {
+    // Generate labelled workload up front so accuracy is measurable.
+    let dir = workload::artifacts_dir();
+    let mut gen = SynthGen::load(&dir.join("templates.json"), seed)?;
+    let mut texts = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let (ids, label) = gen.gen_sequence(96)?;
+        texts.push((vocab.decode(&ids[1..]).replace("[sep]", " "), label));
+    }
+
+    let texts = Arc::new(texts);
+    let addr = addr.to_string();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let texts = texts.clone();
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || -> attmemo::Result<_> {
+            let mut client = Client::connect(&addr)?;
+            let mut lat = Summary::new();
+            let mut correct = 0usize;
+            let mut n = 0usize;
+            let mut hits = 0u64;
+            for (i, (text, label)) in texts.iter().enumerate() {
+                if i % clients != c {
+                    continue;
+                }
+                let (pred, memo_hits, ms) = client.infer(text)?;
+                lat.record(ms);
+                hits += memo_hits as u64;
+                if pred == *label {
+                    correct += 1;
+                }
+                n += 1;
+            }
+            client.quit()?;
+            Ok((lat, correct, n, hits))
+        }));
+    }
+    let mut all = Summary::new();
+    let (mut correct, mut total, mut hits) = (0usize, 0usize, 0u64);
+    for h in handles {
+        let (lat, c, n, hh) = h.join().expect("client thread")?;
+        correct += c;
+        total += n;
+        hits += hh;
+        all.merge(&lat);
+    }
+    Ok((all, correct, total, hits))
+}
+
+fn serve_once(level: MemoLevel, requests: usize, clients: usize)
+    -> attmemo::Result<()> {
+    let rt = workload::open_runtime()?;
+    let seq_len = rt.artifacts().serving_seq_len;
+    let vocab = Arc::new(Vocab::load(
+        &rt.artifacts().root().join("vocab.json"))?);
+
+    let db_seqs = if level == MemoLevel::Off { 0 } else { 256 };
+    println!("\n== level={} (db_seqs={db_seqs}) ==", level.name());
+    let engine = workload::engine_with_db(
+        &rt, "bert", seq_len, level, db_seqs, true)?;
+
+    let mut cfg = ServingConfig::default();
+    cfg.seq_len = seq_len;
+    cfg.bind = "127.0.0.1:0".into(); // ephemeral port
+    cfg.max_batch = 8;
+    let server = Server::start(engine, vocab.clone(), cfg)?;
+    let addr = server.addr.to_string();
+
+    let sw = Stopwatch::start();
+    let (mut lat, correct, total, hits) =
+        run_load(&addr, &vocab, requests, clients, 424242)?;
+    let secs = sw.secs();
+
+    println!("  requests      : {total} via {clients} clients");
+    println!("  throughput    : {:.2} req/s", total as f64 / secs);
+    println!("  mean latency  : {:.1} ms (per-client means, p50 {:.1})",
+             lat.mean(), lat.p50());
+    println!("  accuracy      : {:.3}", correct as f64 / total.max(1) as f64);
+    println!("  memoized lyrs : {:.2} per request",
+             hits as f64 / total.max(1) as f64);
+    server.shutdown();
+    Ok(())
+}
+
+fn main() -> attmemo::Result<()> {
+    attmemo::util::logger::init();
+    let args: Vec<String> = std::env::args().collect();
+    let requests: usize = args.get(1).and_then(|s| s.parse().ok())
+        .unwrap_or(48);
+    let clients: usize = args.get(2).and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    println!("end-to-end serving driver: {requests} requests, {clients} \
+              concurrent clients, model=bert");
+    serve_once(MemoLevel::Off, requests, clients)?;
+    serve_once(MemoLevel::Moderate, requests, clients)?;
+    Ok(())
+}

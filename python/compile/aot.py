@@ -1,0 +1,370 @@
+"""AOT build driver: data → training → HLO artifacts (`make artifacts`).
+
+Runs ONCE at build time; the rust coordinator is self-contained afterwards.
+
+Outputs under ``artifacts/``:
+
+* ``vocab.json``, ``templates.json`` — shared corpus definition.
+* ``datasets/*.bin``      — pre-generated train/test sets (ATDS format).
+* ``weights/<fam>.bin``   — trained weights (model + AttMemo embedder),
+  plus ``<fam>_sparse<NN>.bin`` pruned variants for the bert family.
+* ``hlo/<fam>_<graph>_b<B>_s<L>.hlo.txt`` — lowered graphs, HLO TEXT
+  (never ``.serialize()``: xla_extension 0.5.1 rejects jax≥0.5 64-bit-id
+  protos; the text parser reassigns ids — see /opt/xla-example/README.md).
+* ``fixtures/<fam>.bin``  — cross-language numeric test vectors.
+* ``manifest.json``       — the single index the rust side loads.
+
+Env knobs: ``ATTMEMO_FAST=1`` shrinks training/datasets for smoke runs;
+``ATTMEMO_FAMILIES=bert,gpt`` restricts families.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen, io_utils, train
+from . import model as M
+from .config import (FAMILIES, ModelConfig, SERVING_BATCHES, SERVING_SEQ_LEN,
+                     SWEEP_SEQ_LENS, TRAIN_SEQ_LEN)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _fast() -> bool:
+    return os.environ.get("ATTMEMO_FAST", "0") == "1"
+
+
+def _families():
+    env = os.environ.get("ATTMEMO_FAMILIES")
+    if env:
+        return tuple(f for f in env.split(",") if f)
+    return FAMILIES
+
+
+# ---------------------------------------------------------------------------
+# Graph lowering
+# ---------------------------------------------------------------------------
+
+def graph_signature(cfg: ModelConfig, kind: str, batch: int, seq: int):
+    """(callable, input specs, param-name list) for one graph kind."""
+    h, nh = cfg.hidden, cfg.heads
+    hid = spec((batch, seq, h))
+    apm = spec((batch, nh, seq, seq))
+    ln = [spec((h,)), spec((h,))]
+    mat = lambda a, b: spec((a, b))
+    layer_w = [
+        mat(h, h), spec((h,)), mat(h, h), spec((h,)),       # wq bq wk bk
+        mat(h, h), spec((h,)), mat(h, h), spec((h,)),       # wv bv wo bo
+        *ln,                                                # ln1
+        mat(h, cfg.ffn), spec((cfg.ffn,)),                  # wf1 bf1
+        mat(cfg.ffn, h), spec((h,)),                        # wf2 bf2
+        *ln,                                                # ln2
+    ]
+    rel = [mat(cfg.rel_pos_buckets, h)] if cfg.family == "deberta" else []
+
+    if kind == "embed":
+        fn = M.embed_graph(cfg)
+        ins = [spec((batch, seq), I32), mat(cfg.vocab_size, h),
+               mat(cfg.max_len, h), *ln]
+        names = ["ids", "tok_emb", "pos_emb", "lne_g", "lne_b"]
+    elif kind == "attn_scores":
+        fn = M.attn_scores_graph(cfg)
+        ins = [hid, mat(h, h), spec((h,)), mat(h, h), spec((h,)), *ln, *rel]
+        names = ["hidden", "wq", "bq", "wk", "bk", "ln1_g", "ln1_b"] \
+            + (["rel_emb"] if rel else [])
+    elif kind == "attn_apply":
+        fn = M.attn_apply_graph(cfg)
+        ins = [hid, apm, *layer_w]
+        names = ["hidden", "apm"] + list(M.LAYER_WEIGHTS)
+    elif kind == "layer_full":
+        fn = M.layer_full_graph(cfg)
+        ins = [hid, *layer_w, *rel]
+        names = ["hidden"] + list(M.LAYER_WEIGHTS) \
+            + (["rel_emb"] if rel else [])
+    elif kind == "classifier":
+        fn = M.classifier_graph(cfg)
+        ins = [hid, mat(h, h), spec((h,)), mat(h, cfg.num_classes),
+               spec((cfg.num_classes,))]
+        names = ["hidden"] + list(M.CLS_WEIGHTS)
+    elif kind == "lm_head":
+        fn = M.lm_head_graph(cfg)
+        ins = [hid, mat(cfg.vocab_size, h)]
+        names = ["hidden", "tok_emb"]
+    elif kind == "mlp_embed":
+        fn = M.mlp_embed_graph(cfg)
+        d_in = cfg.embed_segments * h
+        ins = [hid, mat(d_in, cfg.embed_hidden), spec((cfg.embed_hidden,)),
+               mat(cfg.embed_hidden, cfg.embed_hidden),
+               spec((cfg.embed_hidden,)),
+               mat(cfg.embed_hidden, cfg.embed_dim), spec((cfg.embed_dim,))]
+        names = ["hidden"] + list(M.EMBEDDER_WEIGHTS)
+    else:
+        raise ValueError(f"unknown graph kind {kind}")
+    return fn, ins, names
+
+
+def lower_graph(cfg, kind, batch, seq, out_path):
+    fn, ins, names = graph_signature(cfg, kind, batch, seq)
+    lowered = jax.jit(fn, keep_unused=True).lower(*ins)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return names, len(text)
+
+
+def graph_plan(cfg: ModelConfig):
+    """Which (kind, batch, seq) combos to lower for one family."""
+    kinds = ["embed", "attn_scores", "attn_apply", "layer_full", "mlp_embed"]
+    kinds.append("lm_head" if cfg.family == "gpt" else "classifier")
+    plan = []
+    serve_l = SERVING_SEQ_LEN
+    for kind in kinds:
+        for b in SERVING_BATCHES:
+            plan.append((kind, b, serve_l))
+    # Sequence-length sweep (Fig. 12 / Fig. 1): encoders at 64; bert also
+    # at 16 and 32.
+    sweep = []
+    if cfg.family != "gpt":
+        sweep.append(64)
+    if cfg.family == "bert":
+        sweep += [16, 32]
+    for l in sweep:
+        for kind in kinds:
+            plan.append((kind, 8, l))
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Build steps
+# ---------------------------------------------------------------------------
+
+def build(out_dir: str, log=print):
+    t_start = time.time()
+    fast = _fast()
+    io_utils.ensure_dir(out_dir)
+    for sub in ("hlo", "weights", "datasets", "fixtures"):
+        io_utils.ensure_dir(os.path.join(out_dir, sub))
+
+    # 1. Corpus ------------------------------------------------------------
+    vocab = datagen.build_vocab()
+    vocab_size = datagen.padded_vocab_size(vocab)
+    datagen.export_vocab_and_templates(
+        vocab, os.path.join(out_dir, "vocab.json"),
+        os.path.join(out_dir, "templates.json"))
+
+    n_train = 512 if fast else 4096
+    n_test = 128 if fast else 640
+    train_ids, train_labels = datagen.gen_classification(
+        n_train, TRAIN_SEQ_LEN, 0, vocab)
+    test_ids, test_labels = datagen.gen_classification(
+        n_test, TRAIN_SEQ_LEN, 10_000, vocab)
+    lm_ids, lm_labels = datagen.gen_lm(n_train // 2, TRAIN_SEQ_LEN, 1, vocab)
+    lm_test_ids, lm_test_labels = datagen.gen_lm(
+        n_test, TRAIN_SEQ_LEN, 10_001, vocab)
+    # Serving-length sets (L=128) used by the rust engine and benches.
+    serve_train_ids, serve_train_labels = datagen.gen_classification(
+        n_train, SERVING_SEQ_LEN, 2, vocab)
+    serve_test_ids, serve_test_labels = datagen.gen_classification(
+        n_test, SERVING_SEQ_LEN, 10_002, vocab)
+    serve_lm_ids, _ = datagen.gen_lm(n_train // 2, SERVING_SEQ_LEN, 3, vocab)
+    serve_lm_test_ids, _ = datagen.gen_lm(
+        n_test, SERVING_SEQ_LEN, 10_003, vocab)
+    # Fig. 12 sweep sets.
+    sweep_sets = {}
+    for l in SWEEP_SEQ_LENS:
+        sweep_sets[l] = datagen.gen_classification(
+            256 if fast else 1024, l, 100 + l, vocab)
+
+    datasets = {}
+
+    def put_ds(name, ids, labels):
+        p = os.path.join(out_dir, "datasets", name + ".bin")
+        datagen.write_dataset(p, ids, labels)
+        datasets[name] = {"path": f"datasets/{name}.bin",
+                          "n": int(ids.shape[0]),
+                          "seq_len": int(ids.shape[1])}
+
+    put_ds("cls_train", train_ids, train_labels)
+    put_ds("cls_test", test_ids, test_labels)
+    put_ds("lm_train", lm_ids, lm_labels)
+    put_ds("lm_test", lm_test_ids, lm_test_labels)
+    put_ds("cls_train_serve", serve_train_ids, serve_train_labels)
+    put_ds("cls_test_serve", serve_test_ids, serve_test_labels)
+    put_ds("lm_train_serve", serve_lm_ids,
+           np.zeros(serve_lm_ids.shape[0], np.int32))
+    put_ds("lm_test_serve", serve_lm_test_ids,
+           np.zeros(serve_lm_test_ids.shape[0], np.int32))
+    for l, (i_, l_) in sweep_sets.items():
+        put_ds(f"cls_sweep_{l}", i_, l_)
+    log(f"[aot] corpus ready ({time.time()-t_start:.0f}s)")
+
+    # 2. Training ----------------------------------------------------------
+    os.environ["ATTMEMO_NO_PALLAS"] = "1"   # pure-jnp training fast path
+    steps = 60 if fast else 600
+    esteps = 60 if fast else 400
+    fams = {}
+    for fam in _families():
+        cfg = ModelConfig(family=fam, vocab_size=vocab_size,
+                          max_len=SERVING_SEQ_LEN)
+        t0 = time.time()
+        if fam == "gpt":
+            tr_i, tr_l, te_i, te_l = lm_ids, lm_labels, lm_test_ids, \
+                lm_test_labels
+        else:
+            tr_i, tr_l, te_i, te_l = train_ids, train_labels, test_ids, \
+                test_labels
+        lr = 1.5e-3 if fam == "gpt" else 7e-4
+        params, hist = train.train_task(cfg, tr_i, tr_l, steps=steps, lr=lr,
+                                        log=log)
+        acc = train.eval_accuracy(cfg, params, te_i, te_l)
+        train_secs = time.time() - t0
+        log(f"[aot] {fam}: acc={acc:.4f} train={train_secs:.0f}s")
+
+        # Embedder (Siamese) on a subsample of per-layer states.
+        t0 = time.time()
+        sub = tr_i[: (64 if fast else 256)]
+        hiddens, apms = train.collect_states(cfg, params, sub)
+        eparams, ehist = train.train_embedder(cfg, hiddens, apms,
+                                              steps=esteps, log=log)
+        embed_secs = time.time() - t0
+        log(f"[aot] {fam}: embedder trained in {embed_secs:.0f}s")
+
+        all_params = {**params, **eparams}
+        order = M.param_order(cfg) + list(M.EMBEDDER_WEIGHTS)
+        wpath = os.path.join(out_dir, "weights", f"{fam}.bin")
+        entries = io_utils.write_tensor_bin(
+            wpath, [(n, np.asarray(all_params[n])) for n in order])
+        fams[fam] = {
+            "config": cfg.to_dict(),
+            "weights": f"weights/{fam}.bin",
+            "tensors": entries,
+            "accuracy": float(acc),
+            "train_seconds": train_secs,
+            "embedder_seconds": embed_secs,
+            "final_loss": hist[-1],
+            "embedder_final_loss": ehist[-1],
+            "sparse_variants": [],
+        }
+
+        # Sparse variants (§6.8) — bert family only, three sparsities.
+        if fam == "bert":
+            for sp in (0.80, 0.85, 0.90):
+                masks = train.prune_masks(params, sp)
+                sparams = train.finetune_sparse(
+                    cfg, params, masks, tr_i, tr_l,
+                    steps=10 if fast else 80, log=log)
+                sacc = train.eval_accuracy(cfg, sparams, te_i, te_l)
+                tag = f"sparse{int(sp*100)}"
+                sall = {**sparams, **eparams}
+                spath = os.path.join(out_dir, "weights", f"{fam}_{tag}.bin")
+                sentries = io_utils.write_tensor_bin(
+                    spath, [(n, np.asarray(sall[n])) for n in order])
+                fams[fam]["sparse_variants"].append({
+                    "tag": tag, "sparsity": sp,
+                    "realized_sparsity": train.sparsity_of(sparams),
+                    "weights": f"weights/{fam}_{tag}.bin",
+                    "tensors": sentries,
+                    "accuracy": float(sacc),
+                })
+                log(f"[aot] {fam}-{tag}: acc={sacc:.4f}")
+
+        # Fixtures: cross-language numeric test vectors (serving length, so
+        # the rust side exercises the same graphs it serves with).
+        fix_src = serve_lm_test_ids if fam == "gpt" else serve_test_ids
+        fb, fl = 4, SERVING_SEQ_LEN
+        fix_in = jnp.asarray(fix_src[:fb])
+        hidden0 = M.embed_graph(cfg)(
+            fix_in, *[jnp.asarray(params[n]) for n in M.EMBED_WEIGHTS])
+        extra = [jnp.asarray(params["rel_emb"])] \
+            if fam == "deberta" else []
+        apm0 = M.attn_scores_graph(cfg)(
+            hidden0,
+            jnp.asarray(params["l0_wq"]), jnp.asarray(params["l0_bq"]),
+            jnp.asarray(params["l0_wk"]), jnp.asarray(params["l0_bk"]),
+            jnp.asarray(params["l0_ln1_g"]), jnp.asarray(params["l0_ln1_b"]),
+            *extra)
+        logits = M.forward_logits(cfg, params, fix_in)
+        feat = M.mlp_embed_graph(cfg)(
+            hidden0, *[jnp.asarray(eparams[n]) for n in M.EMBEDDER_WEIGHTS])
+        fpath = os.path.join(out_dir, "fixtures", f"{fam}.bin")
+        fentries = io_utils.write_tensor_bin(fpath, [
+            ("ids", np.asarray(fix_in)),
+            ("hidden0", np.asarray(hidden0)),
+            ("apm0", np.asarray(apm0)),
+            ("logits", np.asarray(logits)),
+            ("feature0", np.asarray(feat)),
+        ])
+        fams[fam]["fixtures"] = {"path": f"fixtures/{fam}.bin",
+                                 "tensors": fentries,
+                                 "batch": fb, "seq_len": int(fl)}
+
+    # 3. Graph lowering (Pallas kernels ON) ---------------------------------
+    os.environ["ATTMEMO_NO_PALLAS"] = "0"
+    graphs = []
+    for fam, info in fams.items():
+        cfg = ModelConfig(family=fam, vocab_size=vocab_size,
+                          max_len=SERVING_SEQ_LEN)
+        for kind, b, l in graph_plan(cfg):
+            name = f"{fam}_{kind}_b{b}_s{l}"
+            path = os.path.join(out_dir, "hlo", name + ".hlo.txt")
+            t0 = time.time()
+            names, nbytes = lower_graph(cfg, kind, b, l, path)
+            graphs.append({
+                "family": fam, "kind": kind, "batch": b, "seq_len": l,
+                "path": f"hlo/{name}.hlo.txt", "params": names,
+                "bytes": nbytes,
+            })
+            log(f"[aot] lowered {name} ({nbytes/1024:.0f} KiB, "
+                f"{time.time()-t0:.1f}s)")
+
+    manifest = {
+        "version": 1,
+        "vocab_size": vocab_size,
+        "vocab": "vocab.json",
+        "templates": "templates.json",
+        "serving_seq_len": SERVING_SEQ_LEN,
+        "serving_batches": list(SERVING_BATCHES),
+        "sweep_seq_lens": list(SWEEP_SEQ_LENS),
+        "train_seq_len": TRAIN_SEQ_LEN,
+        "families": fams,
+        "graphs": graphs,
+        "datasets": datasets,
+        "build_seconds": time.time() - t_start,
+        "fast_mode": fast,
+    }
+    io_utils.write_manifest(os.path.join(out_dir, "manifest.json"), manifest)
+    log(f"[aot] DONE in {time.time()-t_start:.0f}s → {out_dir}/manifest.json")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts output directory")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,69 @@
+"""Model-family configurations shared by the whole compile path.
+
+Four tiny-scale families mirror the paper's evaluation models (Table 1):
+
+* ``bert``    — post-LN encoder, learned positions, tanh pooler (BERT-like).
+* ``roberta`` — pre-LN encoder, scaled embeddings, GELU FFN (RoBERTa-like).
+* ``deberta`` — encoder with a disentangled relative-position attention term
+  (DeBERTa-like); attention is deliberately more expensive, reproducing the
+  paper's observation that DeBERTa benefits most from memoization.
+* ``gpt``     — causal decoder with a tied LM head (GPT-2-like).
+
+The paper's models are ~110M parameters; these are ~1-2M because the
+evaluation box has a single CPU core and Pallas runs under interpret=True.
+All claims reproduced downstream are ratios, not absolute times
+(DESIGN.md §2).
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters for one transformer family."""
+
+    family: str                 # bert | roberta | deberta | gpt
+    vocab_size: int = 1024      # padded to a round number after datagen
+    hidden: int = 128           # H; one MXU tile wide on real TPU
+    layers: int = 4
+    heads: int = 4
+    ffn: int = 256
+    max_len: int = 128
+    num_classes: int = 2        # sentiment polarity (encoder families)
+    rel_pos_buckets: int = 32   # deberta only: relative-position range 2R
+    embed_dim: int = 128        # AttMemo embedding-network output dim
+    embed_hidden: int = 256     # AttMemo embedding-network hidden width
+    embed_segments: int = 8     # sequence pooled into S segments pre-MLP
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    @property
+    def causal(self) -> bool:
+        return self.family == "gpt"
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        d["causal"] = self.causal
+        return d
+
+
+FAMILIES = ("bert", "roberta", "deberta", "gpt")
+
+
+def config_for(family: str) -> ModelConfig:
+    """Canonical config for a family name."""
+    if family not in FAMILIES:
+        raise ValueError(f"unknown family {family!r}, expected one of {FAMILIES}")
+    return ModelConfig(family=family)
+
+
+# Batch sizes and sequence lengths lowered by aot.py. Batch {1,8,32} is the
+# scaled analogue of the paper's {1,32,64}; sequence lengths cover the
+# Fig. 12 sweep plus the serving length (128 ~ paper's 512/1024).
+SERVING_BATCHES = (1, 8, 32)
+SERVING_SEQ_LEN = 128
+SWEEP_SEQ_LENS = (16, 32, 64, 128)
+TRAIN_SEQ_LEN = 64

@@ -1,0 +1,212 @@
+"""Synthetic corpora standing in for SST-2 and WikiText-2 (DESIGN.md §2).
+
+The memoization opportunity the paper exploits comes from *shared syntactic
+frames with varying content words* ("I like apple." vs "I like banana.").
+This generator reproduces that structure explicitly: a bank of sentence
+templates with sentiment-bearing slots. Sequences drawn from the same
+template produce near-identical attention structure — exactly the
+cross-sequence APM similarity of paper Figs. 3/12/15 — while slot words
+carry the label, so the classification task is learnable but not trivial
+(negators flip polarity; the *last* sentiment clause wins in contrastive
+templates).
+
+Everything is exported to ``artifacts/``: the vocab, the template bank
+(token ids + slot specs) and pre-generated train/test datasets, so the rust
+workload generator (``data::synth``) draws from the *identical*
+distribution at serving time.
+"""
+
+import json
+import struct
+
+import numpy as np
+
+PAD, CLS, SEP, UNK = 0, 1, 2, 3
+SPECIALS = ["[pad]", "[cls]", "[sep]", "[unk]"]
+
+POS_ADJ = """great wonderful brilliant delightful superb excellent charming
+ moving gripping fresh clever inspired stunning masterful heartfelt rich
+ funny sharp tender luminous elegant vivid thrilling graceful sincere
+ powerful polished radiant warm triumphant""".split()
+
+NEG_ADJ = """terrible awful dreadful boring bland clumsy tedious hollow
+ stale messy lifeless shallow grating dull sloppy forgettable flat
+ pretentious weak murky plodding contrived lazy soulless tiresome cheap
+ muddled annoying pointless dismal""".split()
+
+NOUNS = """film movie plot script story acting cast ending dialogue pacing
+ scene soundtrack直 direction premise sequel drama comedy thriller documentary
+ performance cinematography character narrative romance adaptation""".split()
+NOUNS = [n for n in NOUNS if n.isascii()]
+
+VERBS_LIKE = ["loved", "enjoyed", "adored", "admired", "savored"]
+VERBS_HATE = ["hated", "loathed", "despised", "dreaded", "resented"]
+INTENS = ["really", "truly", "utterly", "absolutely", "quite", "deeply"]
+FILLER = """the a an it this that was is but and because while though
+ with of in by for audience critics viewers i we everyone nobody felt
+ seemed looked turned became remained started ended overall frankly
+ honestly surprisingly somewhat rather never always often barely""".split()
+NEGATORS = ["not", "hardly", "never"]
+
+# Templates: items are literal words, or slots interpreted relative to the
+# sequence's *target label* (chosen first, uniformly):
+#   +A  sentiment adjective AGREEING with the target
+#   -A  sentiment adjective OPPOSING the target (contrastive clauses)
+#   +V/-V  sentiment verbs likewise
+#   !+A agreeing adjective expressed by negating an opposing one
+#       ("not terrible" for a positive target)
+#   N   neutral noun, I intensifier
+# Every clause in a sequence is rendered with the same target, so the label
+# is bag-of-words learnable, while contrastive/negated templates still
+# reward attention to word order.
+TEMPLATES = [
+    ["the", "N", "was", "+A"],
+    ["the", "N", "was", "I", "+A"],
+    ["i", "+V", "the", "N", "because", "it", "was", "+A"],
+    ["a", "I", "+A", "N", "with", "a", "+A", "ending"],
+    ["the", "N", "started", "-A", "but", "ended", "+A"],
+    ["critics", "felt", "the", "N", "was", "!+A"],
+    ["this", "N", "is", "+A", "and", "the", "N", "is", "+A"],
+    ["nobody", "expected", "such", "a", "+A", "N"],
+    ["overall", "a", "I", "+A", "piece", "of", "work"],
+    ["the", "acting", "was", "+A", "though", "the", "N", "was", "I", "+A"],
+    ["it", "seemed", "-A", "at", "first", "but", "became", "I", "+A"],
+    ["we", "+V", "every", "I", "+A", "scene"],
+]
+
+
+def build_vocab():
+    """Vocab = specials + every word reachable from the template bank."""
+    words = []
+    for t in TEMPLATES:
+        for w in t:
+            if w not in ("N", "I", "+A", "-A", "+V", "-V", "!+A", "!-A") \
+                    and w not in words:
+                words.append(w)
+    for group in (POS_ADJ, NEG_ADJ, NOUNS, VERBS_LIKE, VERBS_HATE, INTENS,
+                  FILLER, NEGATORS):
+        for w in group:
+            if w not in words:
+                words.append(w)
+    vocab = {w: i + len(SPECIALS) for i, w in enumerate(words)}
+    for i, s in enumerate(SPECIALS):
+        vocab[s] = i
+    return vocab
+
+
+def _render(template, rng, vocab, target):
+    """Render one template to token ids, agreeing with ``target`` (0/1)."""
+    adj = (NEG_ADJ, POS_ADJ)
+    verb = (VERBS_HATE, VERBS_LIKE)
+    ids = []
+    for item in template:
+        neg = item.startswith("!")
+        slot = item[1:] if neg else item
+        if slot == "+A":
+            pool = adj[target]
+        elif slot == "-A":
+            pool = adj[1 - target]
+        elif slot == "+V":
+            pool = verb[target]
+        elif slot == "-V":
+            pool = verb[1 - target]
+        elif slot == "N":
+            pool = NOUNS
+        elif slot == "I":
+            pool = INTENS
+        else:
+            ids.append(vocab[item])
+            continue
+        if neg:
+            # "not <opposing adjective>" expresses agreement with target.
+            ids.append(vocab[NEGATORS[rng.integers(len(NEGATORS))]])
+            pool = adj[1 - target] if slot == "+A" else adj[target]
+        ids.append(vocab[pool[rng.integers(len(pool))]])
+    return ids
+
+
+def gen_classification(n, seq_len, seed, vocab):
+    """n sequences of fixed seq_len: [cls] sent [sep] sent [sep] … [pad]*.
+
+    Sentences are appended until the length budget is filled (longer
+    sequences therefore contain more sentiment clauses — more attention
+    structure, reproducing the Fig. 12 length effect). Label = polarity of
+    the last sentiment clause (documented rule).
+    """
+    rng = np.random.default_rng(seed)
+    ids = np.zeros((n, seq_len), dtype=np.int32)
+    labels = np.zeros((n,), dtype=np.int32)
+    for s in range(n):
+        target = int(rng.integers(2))
+        row = [CLS]
+        while True:
+            t = TEMPLATES[rng.integers(len(TEMPLATES))]
+            sent = _render(t, rng, vocab, target)
+            if len(row) + len(sent) + 1 > seq_len:
+                break
+            row += sent + [SEP]
+            # Short sequences keep one sentence; long ones pack several.
+            if len(row) > seq_len * 3 // 4 or rng.random() < 0.3:
+                break
+        row = row[:seq_len] + [PAD] * max(0, seq_len - len(row))
+        ids[s] = np.asarray(row, dtype=np.int32)
+        labels[s] = target
+    return ids, labels
+
+
+def gen_lm(n, seq_len, seed, vocab):
+    """LM corpus: templated sentences joined by [sep]; next-token targets."""
+    rng = np.random.default_rng(seed)
+    ids = np.zeros((n, seq_len), dtype=np.int32)
+    for s in range(n):
+        row = [CLS]
+        while len(row) < seq_len:
+            t = TEMPLATES[rng.integers(len(TEMPLATES))]
+            sent = _render(t, rng, vocab, int(rng.integers(2)))
+            row += sent + [SEP]
+        ids[s] = np.asarray(row[:seq_len], dtype=np.int32)
+    labels = np.zeros((n,), dtype=np.int32)  # unused for LM
+    return ids, labels
+
+
+def write_dataset(path, ids, labels):
+    """Binary dataset: magic 'ATDS', u32 n, u32 seq_len, ids i32 LE row-major,
+    labels i32 LE."""
+    n, seq_len = ids.shape
+    with open(path, "wb") as f:
+        f.write(b"ATDS")
+        f.write(struct.pack("<II", n, seq_len))
+        f.write(ids.astype("<i4").tobytes())
+        f.write(labels.astype("<i4").tobytes())
+
+
+def export_vocab_and_templates(vocab, path_vocab, path_templates):
+    """JSON exports consumed by rust data::synth (identical generator)."""
+    with open(path_vocab, "w") as f:
+        json.dump({"vocab": vocab, "specials": SPECIALS}, f)
+    slots = {
+        "+A": [vocab[w] for w in POS_ADJ],
+        "-A": [vocab[w] for w in NEG_ADJ],
+        "+V": [vocab[w] for w in VERBS_LIKE],
+        "-V": [vocab[w] for w in VERBS_HATE],
+        "N": [vocab[w] for w in NOUNS],
+        "I": [vocab[w] for w in INTENS],
+        "NEG": [vocab[w] for w in NEGATORS],
+    }
+    templates = []
+    for t in TEMPLATES:
+        items = []
+        for item in t:
+            if item in ("+A", "-A", "+V", "-V", "N", "I", "!+A", "!-A"):
+                items.append({"slot": item})
+            else:
+                items.append({"word": vocab[item]})
+        templates.append(items)
+    with open(path_templates, "w") as f:
+        json.dump({"templates": templates, "slots": slots}, f)
+
+
+def padded_vocab_size(vocab, multiple=128):
+    """Vocab size rounded up (keeps embedding matmuls MXU-tile aligned)."""
+    n = len(vocab)
+    return (n + multiple - 1) // multiple * multiple

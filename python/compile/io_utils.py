@@ -1,0 +1,68 @@
+"""Artifact serialisation shared between aot.py and the tests.
+
+Formats consumed by the rust runtime (rust/src/runtime/artifacts.rs):
+
+* ``weights/<name>.bin`` — concatenated little-endian f32 tensor data; the
+  manifest records each tensor's (name, shape, offset-in-floats, len).
+* ``manifest.json`` — single index of families, graphs, datasets, fixtures.
+* ``fixtures/<family>.bin`` — named f32/i32 tensors for cross-language
+  numeric integration tests (same layout as weights bins plus a dtype tag).
+"""
+
+import json
+import os
+
+import numpy as np
+
+
+def write_tensor_bin(path, tensors):
+    """Write ordered (name, np.ndarray) pairs; returns manifest entries.
+
+    Float tensors are stored as f32, integer tensors as i32; `dtype` is
+    recorded per entry.
+    """
+    entries = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name, arr in tensors:
+            arr = np.asarray(arr)
+            if np.issubdtype(arr.dtype, np.integer):
+                data = arr.astype("<i4")
+                dtype = "i32"
+            else:
+                data = arr.astype("<f4")
+                dtype = "f32"
+            f.write(data.tobytes())
+            entries.append({
+                "name": name,
+                "shape": list(arr.shape),
+                "offset": offset,          # in elements (4 bytes each)
+                "len": int(arr.size),
+                "dtype": dtype,
+            })
+            offset += int(arr.size)
+    return entries
+
+
+def read_tensor_bin(path, entries):
+    """Inverse of write_tensor_bin (used by pytest round-trip checks)."""
+    raw = np.fromfile(path, dtype="<u4")
+    out = {}
+    for e in entries:
+        chunk = raw[e["offset"]:e["offset"] + e["len"]]
+        if e["dtype"] == "i32":
+            arr = chunk.view("<i4")
+        else:
+            arr = chunk.view("<f4")
+        out[e["name"]] = arr.reshape(e["shape"]).copy()
+    return out
+
+
+def write_manifest(path, manifest):
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def ensure_dir(path):
+    os.makedirs(path, exist_ok=True)
+    return path

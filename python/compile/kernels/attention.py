@@ -1,0 +1,196 @@
+"""L1 Pallas attention kernels.
+
+Two kernels cover the paper's attention hot-spot:
+
+* :func:`apm_pallas` — produces the attention probability matrix
+  ``softmax(Q·Kᵀ·scale)`` explicitly. This is the *memoization subject*: the
+  rust coordinator stores these APMs in the attention database and, on a
+  hit, skips this kernel entirely (paper §5).
+* :func:`attention_pallas` — fused FlashAttention-style kernel
+  (Q·Kᵀ → streaming online softmax → ·V) used by the non-memoized
+  ``layer_full`` fast path; the L×L score matrix never materialises.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets
+CPUs; these kernels are authored for TPU semantics. The grid tiles the
+query dimension so one grid cell holds a ``block_q × dh`` Q tile plus the
+K/V panels in VMEM; contractions are shaped for 128-wide MXU tiles
+(H = 128, dh = 32). The HBM↔VMEM schedule that a CUDA version would express
+with threadblocks lives in the BlockSpec index maps. ``interpret=True`` is
+mandatory on this CPU-PJRT setup — real TPU lowering emits Mosaic
+custom-calls the CPU plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _pick_block(l: int, preferred: int) -> int:
+    """Largest divisor of ``l`` not exceeding ``preferred``."""
+    b = min(preferred, l)
+    while l % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# APM kernel: softmax(Q Kᵀ) materialised, q-tiled.
+# ---------------------------------------------------------------------------
+
+def _apm_kernel(q_ref, k_ref, o_ref, *, scale, causal, block_q):
+    """One (batch, head, q-block) grid cell: [bq, dh] × [L, dh]ᵀ → [bq, L]."""
+    q = q_ref[0, 0]                      # [bq, dh] VMEM tile
+    k = k_ref[0, 0]                      # [L, dh] VMEM panel
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        qi = pl.program_id(2) * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0
+        )
+        ki = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(ki <= qi, s, NEG_INF)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    o_ref[0, 0] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def _apm_bias_kernel(q_ref, k_ref, bias_ref, o_ref, *, scale, causal, block_q):
+    """Like :func:`_apm_kernel` plus an additive [bq, L] score bias
+    (the DeBERTa-like disentangled relative-position term)."""
+    q = q_ref[0, 0]
+    k = k_ref[0, 0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = s + bias_ref[0].astype(jnp.float32)
+    if causal:
+        qi = pl.program_id(2) * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0
+        )
+        ki = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(ki <= qi, s, NEG_INF)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    o_ref[0, 0] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def apm_pallas(q, k, *, scale=None, causal=False, bias=None, block_q=32,
+               interpret=True):
+    """Attention probability matrix via Pallas.
+
+    q, k: [B, nH, L, dh]; bias: optional [nH, L, L]. Returns [B, nH, L, L].
+    """
+    b, nh, l, dh = q.shape
+    if scale is None:
+        scale = 1.0 / float(dh) ** 0.5
+    bq = _pick_block(l, block_q)
+    grid = (b, nh, l // bq)
+    q_spec = pl.BlockSpec((1, 1, bq, dh), lambda i, j, t: (i, j, t, 0))
+    k_spec = pl.BlockSpec((1, 1, l, dh), lambda i, j, t: (i, j, 0, 0))
+    o_spec = pl.BlockSpec((1, 1, bq, l), lambda i, j, t: (i, j, t, 0))
+    out_shape = jax.ShapeDtypeStruct((b, nh, l, l), q.dtype)
+    if bias is None:
+        kern = functools.partial(_apm_kernel, scale=scale, causal=causal,
+                                 block_q=bq)
+        return pl.pallas_call(
+            kern, grid=grid, in_specs=[q_spec, k_spec], out_specs=o_spec,
+            out_shape=out_shape, interpret=interpret,
+        )(q, k)
+    bias_spec = pl.BlockSpec((1, bq, l), lambda i, j, t: (j, t, 0))
+    kern = functools.partial(_apm_bias_kernel, scale=scale, causal=causal,
+                             block_q=bq)
+    return pl.pallas_call(
+        kern, grid=grid, in_specs=[q_spec, k_spec, bias_spec], out_specs=o_spec,
+        out_shape=out_shape, interpret=interpret,
+    )(q, k, bias)
+
+
+# ---------------------------------------------------------------------------
+# Fused attention: streaming online softmax (FlashAttention schedule).
+# ---------------------------------------------------------------------------
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal,
+                  block_q, block_k):
+    """One (batch, head, q-block) cell: stream K/V panels in ``block_k``
+    chunks with online-softmax rescaling; the [bq, L] score block never
+    exists in full."""
+    q = q_ref[0, 0]                       # [bq, dh]
+    dh = q.shape[-1]
+    l = k_ref.shape[2]
+    nk = l // block_k
+    q_off = pl.program_id(2) * block_q
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        kc = k_ref[0, 0, pl.ds(i * block_k, block_k), :]   # [bk, dh]
+        vc = v_ref[0, 0, pl.ds(i * block_k, block_k), :]   # [bk, dh]
+        s = jnp.dot(q, kc.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qi = q_off + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            ki = i * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(ki <= qi, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.dot(p, vc.astype(jnp.float32),
+                                   preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((q.shape[0], 1), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((q.shape[0], 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((q.shape[0], dh), dtype=jnp.float32)
+    _, l_fin, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, acc0))
+    o_ref[0, 0] = (acc / l_fin).astype(o_ref.dtype)
+
+
+def attention_pallas(q, k, v, *, scale=None, causal=False, block_q=32,
+                     block_k=64, interpret=True):
+    """Fused attention context via Pallas.
+
+    q, k, v: [B, nH, L, dh]. Returns [B, nH, L, dh] = softmax(QKᵀ)·V.
+    """
+    b, nh, l, dh = q.shape
+    if scale is None:
+        scale = 1.0 / float(dh) ** 0.5
+    bq = _pick_block(l, block_q)
+    bk = _pick_block(l, block_k)
+    grid = (b, nh, l // bq)
+    q_spec = pl.BlockSpec((1, 1, bq, dh), lambda i, j, t: (i, j, t, 0))
+    kv_spec = pl.BlockSpec((1, 1, l, dh), lambda i, j, t: (i, j, 0, 0))
+    o_spec = pl.BlockSpec((1, 1, bq, dh), lambda i, j, t: (i, j, t, 0))
+    out_shape = jax.ShapeDtypeStruct((b, nh, l, dh), q.dtype)
+    kern = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                             block_q=bq, block_k=bk)
+    return pl.pallas_call(
+        kern, grid=grid, in_specs=[q_spec, kv_spec, kv_spec], out_specs=o_spec,
+        out_shape=out_shape, interpret=interpret,
+    )(q, k, v)
+
+
+def apply_apm_pallas(apm, v, *, interpret=True):
+    """Context from a (possibly memoized) APM: [B,nH,L,L] · [B,nH,L,dh].
+
+    This is the kernel the memoized path runs *instead of* score
+    computation — the APM arrives from the attention database.
+    """
+    b, nh, l, dh = v.shape
+    bq = _pick_block(l, 32)
+    grid = (b, nh, l // bq)
+
+    def kern(a_ref, v_ref, o_ref):
+        a = a_ref[0, 0]                   # [bq, L]
+        vv = v_ref[0, 0]                  # [L, dh]
+        o_ref[0, 0] = jnp.dot(
+            a, vv, preferred_element_type=jnp.float32
+        ).astype(o_ref.dtype)
+
+    a_spec = pl.BlockSpec((1, 1, bq, l), lambda i, j, t: (i, j, t, 0))
+    v_spec = pl.BlockSpec((1, 1, l, dh), lambda i, j, t: (i, j, 0, 0))
+    o_spec = pl.BlockSpec((1, 1, bq, dh), lambda i, j, t: (i, j, t, 0))
+    return pl.pallas_call(
+        kern, grid=grid, in_specs=[a_spec, v_spec], out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nh, l, dh), v.dtype),
+        interpret=interpret,
+    )(apm, v)

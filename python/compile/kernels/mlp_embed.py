@@ -1,0 +1,77 @@
+"""L1 Pallas kernel for the AttMemo hidden-state embedding network.
+
+The paper's embedding model (§5.2) is a lightweight 3-layer MLP mapping a
+hidden state [L, H] to a 128-d feature vector; its L2 distances must predict
+APM similarity (trained as a Siamese network, Fig. 6). Here the sequence is
+first pooled into S segment means ([B, S·H], see ref.segment_pool_ref) and
+the 3 affine layers + normalisation run as one Pallas kernel: the weight
+panels (S·H×256, 256×256, 256×128 ≈ 1.3 MiB f32, ~0.7 MiB bf16) all fit in
+VMEM simultaneously, so the kernel tiles only the batch dimension.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as _ref
+
+
+def _embed_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref,
+                  o_ref):
+    """One batch tile through the full MLP; weights stay resident."""
+    x = x_ref[...]
+    h = jnp.maximum(
+        jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+        + b1_ref[...], 0.0)
+    h = jnp.maximum(
+        jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+        + b2_ref[...], 0.0)
+    z = (jnp.dot(h, w3_ref[...], preferred_element_type=jnp.float32)
+         + b3_ref[...])
+    norm = jnp.sqrt(jnp.sum(z * z, axis=-1, keepdims=True) + 1e-12)
+    o_ref[...] = (z / norm).astype(o_ref.dtype)
+
+
+def mlp_embed_pallas(pooled, w1, b1, w2, b2, w3, b3, *, block_b=8,
+                     interpret=True):
+    """Run the embedding MLP: pooled [B, D_in] → [B, D_out], L2-normalised.
+
+    Matches :func:`compile.kernels.ref.mlp_embed_ref`.
+    """
+    b, d_in = pooled.shape
+    d_h1 = w1.shape[1]
+    d_h2 = w2.shape[1]
+    d_out = w3.shape[1]
+    assert w1.shape == (d_in, d_h1) and w2.shape == (d_h1, d_h2)
+    assert w3.shape == (d_h2, d_out)
+    bb = min(block_b, b)
+    while b % bb != 0:
+        bb -= 1
+    grid = (b // bb,)
+
+    def whole(shape):
+        return pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    return pl.pallas_call(
+        functools.partial(_embed_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d_in), lambda i: (i, 0)),
+            whole((d_in, d_h1)), whole((d_h1,)),
+            whole((d_h1, d_h2)), whole((d_h2,)),
+            whole((d_h2, d_out)), whole((d_out,)),
+        ],
+        out_specs=pl.BlockSpec((bb, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d_out), pooled.dtype),
+        interpret=interpret,
+    )(pooled, w1, b1, w2, b2, w3, b3)
+
+
+def embed_hidden(hidden, params, *, segments, interpret=True):
+    """Full embedding path: [B, L, H] hidden → [B, 128] feature vectors."""
+    pooled = _ref.segment_pool_ref(hidden, segments)
+    w1, b1, w2, b2, w3, b3 = params
+    return mlp_embed_pallas(pooled, w1, b1, w2, b2, w3, b3,
+                            interpret=interpret)

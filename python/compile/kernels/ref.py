@@ -1,0 +1,87 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These definitions are the correctness contract: pytest (and hypothesis
+sweeps) assert that each kernel in this package matches its oracle to
+float32 tolerance across shapes and dtypes. They are also reused by the L2
+model as the non-kernel fallback path when ``ATTMEMO_NO_PALLAS=1``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def apm_ref(q, k, *, scale=None, causal=False, bias=None):
+    """Attention probability matrix: softmax(q·kᵀ·scale [+ bias] [+ mask]).
+
+    q, k: [B, nH, L, dh]; bias (optional): [nH, L, L] broadcast over batch.
+    Returns [B, nH, L, L] rows summing to 1.
+    """
+    dh = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if bias is not None:
+        s = s + bias[None, :, :, :]
+    if causal:
+        ql, kl = s.shape[-2], s.shape[-1]
+        mask = jnp.tril(jnp.ones((ql, kl), dtype=bool))
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def attention_ref(q, k, v, *, scale=None, causal=False, bias=None):
+    """Fused attention: apm_ref(q,k) · v → [B, nH, L, dh]."""
+    apm = apm_ref(q, k, scale=scale, causal=causal, bias=bias)
+    return jnp.einsum("bhqk,bhkd->bhqd", apm, v)
+
+
+def mlp_embed_ref(pooled, w1, b1, w2, b2, w3, b3):
+    """AttMemo embedding network on pre-pooled features.
+
+    pooled: [B, S*H]. Three affine layers with ReLU between (DESIGN.md notes
+    the deviation from the paper's all-linear MLP, which is degenerate), then
+    L2 normalisation so HNSW L2 distance is a cosine-style metric.
+    """
+    h = jnp.maximum(pooled @ w1 + b1, 0.0)
+    h = jnp.maximum(h @ w2 + b2, 0.0)
+    z = h @ w3 + b3
+    norm = jnp.sqrt(jnp.sum(z * z, axis=-1, keepdims=True) + 1e-12)
+    return z / norm
+
+
+def segment_pool_ref(hidden, segments):
+    """Pool [B, L, H] into [B, segments*H] by per-segment means.
+
+    Keeps coarse positional structure (unlike a global mean) so the embedder
+    can distinguish 'important word early' from 'important word late'.
+    """
+    b, l, h = hidden.shape
+    assert l % segments == 0, f"L={l} not divisible by segments={segments}"
+    seg = hidden.reshape(b, segments, l // segments, h).mean(axis=2)
+    return seg.reshape(b, segments * h)
+
+
+def similarity_ref(a, b):
+    """Paper Eq. 1 similarity score between APM batches, averaged over heads.
+
+    a, b: [N, nH, L, L] row-stochastic. Returns [N] in [0, 1]:
+    ``1 - mean_p TV(a[p,:], b[p,:])`` with TV = 0.5·L1.
+    """
+    tv = 0.5 * jnp.sum(jnp.abs(a - b), axis=-1)  # [N, nH, L]
+    return 1.0 - tv.mean(axis=(1, 2))
+
+
+def layernorm_ref(x, g, b, eps=1e-5):
+    """LayerNorm over the last axis."""
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def gelu_ref(x):
+    """tanh-approximated GELU (matches jax.nn.gelu(approximate=True))."""
+    return jax.nn.gelu(x, approximate=True)

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel for the paper's Eq. 1 similarity score.
+
+Used by the offline attention-database builder and the evaluation
+harnesses: given two batches of APMs it returns, per pair, the
+total-variation-based similarity ``1 - mean_p TV(A[p,:], A'[p,:])``.
+
+The kernel reduces one (pair, head) grid cell at a time; the [L, L]
+difference tile is formed in VMEM and reduced to a scalar partial that the
+grid accumulates into the per-pair output (heads are averaged).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sim_kernel(a_ref, b_ref, o_ref, *, heads):
+    """Accumulate 1 - mean-row-TV for one head into the pair's slot."""
+    a = a_ref[0, 0]
+    b = b_ref[0, 0]
+    tv = 0.5 * jnp.sum(jnp.abs(a - b), axis=-1)     # [L]
+    partial = (1.0 - jnp.mean(tv)) / heads
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+    o_ref[0] += partial.astype(o_ref.dtype)
+
+
+def similarity_pallas(a, b, *, interpret=True):
+    """Similarity scores for paired APM batches.
+
+    a, b: [N, nH, L, L] row-stochastic; returns [N] in [0, 1].
+    Matches :func:`compile.kernels.ref.similarity_ref`.
+    """
+    n, nh, l, _ = a.shape
+    grid = (n, nh)
+    spec = pl.BlockSpec((1, 1, l, l), lambda i, j: (i, j, 0, 0))
+    o_spec = pl.BlockSpec((1,), lambda i, j: (i,))
+    return pl.pallas_call(
+        functools.partial(_sim_kernel, heads=float(nh)),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=interpret,
+    )(a, b)

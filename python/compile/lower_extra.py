@@ -1,0 +1,53 @@
+"""Lower additional attn_scores batch sizes into existing artifacts.
+
+§Perf: the engine computes scores only for memoization *misses*, packed
+into a sub-batch. With only {1,8,32} lowered, a 3-miss sub-batch pads to 8
+and costs as much as the full batch. This utility adds {2,4,16} for
+`attn_scores` (the only sub-batched graph) without re-running training.
+
+Usage: cd python && python -m compile.lower_extra ../artifacts
+"""
+
+import json
+import os
+import sys
+
+from . import aot
+from .config import ModelConfig
+
+EXTRA_BATCHES = (2, 4, 16)
+
+
+def lower_extra(out_dir: str) -> None:
+    os.environ["ATTMEMO_NO_PALLAS"] = "0"   # ship the pallas kernels
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    seq = manifest["serving_seq_len"]
+    have = {(g["family"], g["kind"], g["batch"], g["seq_len"])
+            for g in manifest["graphs"]}
+    for fam, info in manifest["families"].items():
+        cfg = ModelConfig(**{
+            k: v for k, v in info["config"].items()
+            if k not in ("head_dim", "causal")
+        })
+        for b in EXTRA_BATCHES:
+            key = (fam, "attn_scores", b, seq)
+            if key in have:
+                continue
+            name = f"{fam}_attn_scores_b{b}_s{seq}"
+            path = os.path.join(out_dir, "hlo", name + ".hlo.txt")
+            names, nbytes = aot.lower_graph(cfg, "attn_scores", b, seq, path)
+            manifest["graphs"].append({
+                "family": fam, "kind": "attn_scores", "batch": b,
+                "seq_len": seq, "path": f"hlo/{name}.hlo.txt",
+                "params": names, "bytes": nbytes,
+            })
+            print(f"[extra] lowered {name}")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[extra] manifest updated ({len(manifest['graphs'])} graphs)")
+
+
+if __name__ == "__main__":
+    lower_extra(sys.argv[1] if len(sys.argv) > 1 else "../artifacts")

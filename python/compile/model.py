@@ -1,0 +1,380 @@
+"""L2 JAX model graphs for the four transformer families.
+
+Every graph is a pure function over ``(activations, *weights)`` with weights
+as *runtime arguments* (not baked constants): the rust runtime uploads each
+family's weights once as PJRT device buffers, so a single lowered HLO per
+(graph kind, batch, seq-len) serves all layers of a model.
+
+Graph inventory (DESIGN.md §3):
+
+* ``embed``        ids → hidden                       (token+position embed)
+* ``attn_scores``  hidden → APM[B,nH,L,L]             (the memoization subject)
+* ``attn_apply``   hidden, APM → hidden'              (memoized-path remainder)
+* ``layer_full``   hidden → hidden'                   (fused non-memoized path)
+* ``classifier``   hidden → logits[B,C]               (encoder families)
+* ``lm_head``      hidden → logits[B,L,V]             (gpt family)
+* ``mlp_embed``    hidden → feature[B,128]            (AttMemo embedder)
+
+Family deltas: bert/deberta are post-LN, roberta/gpt are pre-LN; roberta
+scales embeddings by sqrt(H); deberta adds disentangled relative-position
+terms (c2p + p2c) to the attention scores; gpt is causal with a tied LM
+head. Kernels come from ``compile.kernels`` (Pallas); set
+``ATTMEMO_NO_PALLAS=1`` to swap in the pure-jnp oracles (used to speed up
+training — equivalence is asserted by pytest).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import attention as attk
+from .kernels import mlp_embed as embk
+from .kernels import ref
+
+
+def _use_pallas() -> bool:
+    return os.environ.get("ATTMEMO_NO_PALLAS", "0") != "1"
+
+
+# Per-layer weight names, in the exact order every graph takes them.
+LAYER_WEIGHTS = (
+    "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+    "ln1_g", "ln1_b", "wf1", "bf1", "wf2", "bf2", "ln2_g", "ln2_b",
+)
+EMBED_WEIGHTS = ("tok_emb", "pos_emb", "lne_g", "lne_b")
+CLS_WEIGHTS = ("pool_w", "pool_b", "cls_w", "cls_b")
+EMBEDDER_WEIGHTS = ("e_w1", "e_b1", "e_w2", "e_b2", "e_w3", "e_b3")
+
+
+def is_pre_ln(cfg: ModelConfig) -> bool:
+    return cfg.family in ("roberta", "gpt")
+
+
+def _split_heads(x, cfg: ModelConfig):
+    b, l, _ = x.shape
+    return x.reshape(b, l, cfg.heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, nh, l, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, l, nh * dh)
+
+
+def _rel_index(l: int, buckets: int):
+    """Clipped relative-position index matrix rel[i, j] in [0, buckets)."""
+    i = jnp.arange(l)[:, None]
+    j = jnp.arange(l)[None, :]
+    r = buckets // 2
+    return jnp.clip(i - j + r, 0, buckets - 1)
+
+
+def _deberta_bias(q, k, rel_emb, wq, wk, cfg: ModelConfig):
+    """Disentangled attention terms (DeBERTa-like, batch-dependent).
+
+    c2p[b,h,i,j] = Q[b,h,i,:]·Pk[h,rel(i,j),:] and
+    p2c[b,h,i,j] = K[b,h,j,:]·Pq[h,rel(j,i),:], where Pq/Pk are the shared
+    relative-position table projected through the layer's own Wq/Wk.
+    Returns [B, nH, L, L] to add to the content scores before softmax.
+    """
+    l = q.shape[2]
+    buckets = rel_emb.shape[0]
+    pk = _split_heads((rel_emb @ wk)[None], cfg)[0]      # [nH, R, dh]
+    pq = _split_heads((rel_emb @ wq)[None], cfg)[0]      # [nH, R, dh]
+    rel = _rel_index(l, buckets)                          # [L, L]
+    c2p_all = jnp.einsum("bhid,hrd->bhir", q, pk)         # [B,nH,L,R]
+    c2p = jnp.take_along_axis(c2p_all, rel[None, None], axis=-1)
+    p2c_all = jnp.einsum("bhjd,hrd->bhjr", k, pq)         # [B,nH,L,R]
+    p2c = jnp.take_along_axis(p2c_all, rel.T[None, None], axis=-1)
+    p2c = p2c.transpose(0, 1, 3, 2)                       # [B,nH,L,L]
+    scale = 1.0 / (3.0 * cfg.head_dim) ** 0.5
+    return (c2p + p2c) * scale
+
+
+def _attn_input(hidden, ln1_g, ln1_b, cfg: ModelConfig):
+    """Pre-LN families attend over LN(hidden); post-LN over hidden itself."""
+    if is_pre_ln(cfg):
+        return ref.layernorm_ref(hidden, ln1_g, ln1_b)
+    return hidden
+
+
+# ---------------------------------------------------------------------------
+# Graphs
+# ---------------------------------------------------------------------------
+
+def embed_graph(cfg: ModelConfig):
+    """ids [B, L] i32 → hidden [B, L, H]."""
+
+    def fn(ids, tok_emb, pos_emb, lne_g, lne_b):
+        l = ids.shape[1]
+        x = tok_emb[ids] + pos_emb[:l][None]
+        if cfg.family == "roberta":
+            x = x * (cfg.hidden ** 0.5)
+        if cfg.family != "gpt":          # gpt uses no embedding LayerNorm
+            x = ref.layernorm_ref(x, lne_g, lne_b)
+        return x
+
+    return fn
+
+
+def attn_scores_graph(cfg: ModelConfig):
+    """hidden [+layer weights] → APM [B, nH, L, L]. The memoization subject.
+
+    Takes the full per-layer weight tuple (unused tails kept so one
+    signature serves every family; lower with keep_unused=True) plus, for
+    deberta, the shared relative-position table as the last argument.
+    """
+    scale = 1.0 / cfg.head_dim ** 0.5
+
+    def fn(hidden, wq, bq, wk, bk, ln1_g, ln1_b, *rest):
+        x = _attn_input(hidden, ln1_g, ln1_b, cfg)
+        q = _split_heads(x @ wq + bq, cfg)
+        k = _split_heads(x @ wk + bk, cfg)
+        bias = None
+        if cfg.family == "deberta":
+            (rel_emb,) = rest
+            bias = _deberta_bias(q, k, rel_emb, wq, wk, cfg)
+        if _use_pallas():
+            if bias is None:
+                return attk.apm_pallas(q, k, scale=scale, causal=cfg.causal)
+            # Batch-dependent bias: fold batch into the head axis so the
+            # [nH,L,L]-bias kernel variant applies.
+            return _apm_with_batch_bias(q, k, bias, scale, cfg.causal)
+        if bias is None:
+            return ref.apm_ref(q, k, scale=scale, causal=cfg.causal)
+        return _apm_batch_bias_ref(q, k, bias, scale, cfg.causal)
+
+    return fn
+
+
+def _apm_batch_bias_ref(q, k, bias, scale, causal):
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale + bias
+    if causal:
+        l = s.shape[-1]
+        mask = jnp.tril(jnp.ones((l, l), dtype=bool))
+        s = jnp.where(mask[None, None], s, ref.NEG_INF)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _apm_with_batch_bias(q, k, bias, scale, causal):
+    """Pallas APM with a batch-dependent bias: reuse the [nH,L,L]-bias kernel
+    by folding the batch into the head axis."""
+    b, nh, l, dh = q.shape
+    qf = q.reshape(1, b * nh, l, dh)
+    kf = k.reshape(1, b * nh, l, dh)
+    bf = bias.reshape(b * nh, l, l)
+    apm = attk.apm_pallas(qf, kf, scale=scale, causal=causal, bias=bf)
+    return apm.reshape(b, nh, l, l)
+
+
+def attn_apply_graph(cfg: ModelConfig):
+    """(hidden, APM, layer weights) → next hidden.
+
+    The APM argument is either freshly computed by ``attn_scores`` or fetched
+    from the attention database — this graph is the shared remainder of the
+    layer: V projection, context, output projection, residuals, FFN.
+    """
+
+    def fn(hidden, apm, wq, bq, wk, bk, wv, bv, wo, bo, ln1_g, ln1_b,
+           wf1, bf1, wf2, bf2, ln2_g, ln2_b):
+        x = hidden
+        a_in = _attn_input(x, ln1_g, ln1_b, cfg)
+        v = _split_heads(a_in @ wv + bv, cfg)
+        # §Perf: APM·V here is a plain batched GEMM over an *input* APM —
+        # XLA's native dot beats the interpret-mode Pallas grid loop by ~2×
+        # on CPU-PJRT. The paper's attention hot-spot (scores / fused
+        # softmax·V) stays in the Pallas kernels of attn_scores/layer_full.
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", apm, v)
+        attn_out = _merge_heads(ctx) @ wo + bo
+        if is_pre_ln(cfg):
+            x = x + attn_out
+            h = ref.layernorm_ref(x, ln2_g, ln2_b)
+            x = x + (ref.gelu_ref(h @ wf1 + bf1) @ wf2 + bf2)
+        else:
+            x = ref.layernorm_ref(x + attn_out, ln1_g, ln1_b)
+            x = ref.layernorm_ref(
+                x + (ref.gelu_ref(x @ wf1 + bf1) @ wf2 + bf2), ln2_g, ln2_b)
+        return x
+
+    return fn
+
+
+def layer_full_graph(cfg: ModelConfig):
+    """(hidden, layer weights [, rel_emb]) → next hidden, fused fast path.
+
+    Uses the streaming FlashAttention kernel — the L×L APM never
+    materialises. deberta needs the explicit-bias score path instead.
+    """
+    scale = 1.0 / cfg.head_dim ** 0.5
+
+    def fn(hidden, wq, bq, wk, bk, wv, bv, wo, bo, ln1_g, ln1_b,
+           wf1, bf1, wf2, bf2, ln2_g, ln2_b, *rest):
+        x = hidden
+        a_in = _attn_input(x, ln1_g, ln1_b, cfg)
+        q = _split_heads(a_in @ wq + bq, cfg)
+        k = _split_heads(a_in @ wk + bk, cfg)
+        v = _split_heads(a_in @ wv + bv, cfg)
+        if cfg.family == "deberta":
+            (rel_emb,) = rest
+            bias = _deberta_bias(q, k, rel_emb, wq, wk, cfg)
+            if _use_pallas():
+                apm = _apm_with_batch_bias(q, k, bias, scale, cfg.causal)
+                ctx = attk.apply_apm_pallas(apm, v)
+            else:
+                apm = _apm_batch_bias_ref(q, k, bias, scale, cfg.causal)
+                ctx = jnp.einsum("bhqk,bhkd->bhqd", apm, v)
+        elif _use_pallas():
+            ctx = attk.attention_pallas(q, k, v, scale=scale,
+                                        causal=cfg.causal)
+        else:
+            ctx = ref.attention_ref(q, k, v, scale=scale, causal=cfg.causal)
+        attn_out = _merge_heads(ctx) @ wo + bo
+        if is_pre_ln(cfg):
+            x = x + attn_out
+            h = ref.layernorm_ref(x, ln2_g, ln2_b)
+            x = x + (ref.gelu_ref(h @ wf1 + bf1) @ wf2 + bf2)
+        else:
+            x = ref.layernorm_ref(x + attn_out, ln1_g, ln1_b)
+            x = ref.layernorm_ref(
+                x + (ref.gelu_ref(x @ wf1 + bf1) @ wf2 + bf2), ln2_g, ln2_b)
+        return x
+
+    return fn
+
+
+def classifier_graph(cfg: ModelConfig):
+    """hidden → logits [B, num_classes] via CLS-token tanh pooler."""
+
+    def fn(hidden, pool_w, pool_b, cls_w, cls_b):
+        pooled = jnp.tanh(hidden[:, 0] @ pool_w + pool_b)
+        return pooled @ cls_w + cls_b
+
+    return fn
+
+
+def lm_head_graph(cfg: ModelConfig):
+    """hidden → next-token logits [B, L, V] with tied embeddings."""
+
+    def fn(hidden, tok_emb):
+        return hidden @ tok_emb.T
+
+    return fn
+
+
+def mlp_embed_graph(cfg: ModelConfig):
+    """hidden → L2-normalised feature [B, embed_dim] (AttMemo embedder)."""
+
+    def fn(hidden, e_w1, e_b1, e_w2, e_b2, e_w3, e_b3):
+        pooled = ref.segment_pool_ref(hidden, cfg.embed_segments)
+        if _use_pallas():
+            return embk.mlp_embed_pallas(pooled, e_w1, e_b1, e_w2, e_b2,
+                                         e_w3, e_b3)
+        return ref.mlp_embed_ref(pooled, e_w1, e_b1, e_w2, e_b2, e_w3, e_b3)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Whole-model forward (training / fixtures; not lowered for serving)
+# ---------------------------------------------------------------------------
+
+def forward_hidden(cfg: ModelConfig, params, ids, *, collect=False):
+    """Run embed + all layers. Returns final hidden, plus per-layer
+    (input_hidden, APM) pairs when ``collect`` (DB building / fixtures)."""
+    emb = embed_graph(cfg)
+    scores = attn_scores_graph(cfg)
+    apply_ = attn_apply_graph(cfg)
+    x = emb(ids, *[params[n] for n in EMBED_WEIGHTS])
+    collected = []
+    for li in range(cfg.layers):
+        lw = [params[f"l{li}_{n}"] for n in LAYER_WEIGHTS]
+        extra = [params["rel_emb"]] if cfg.family == "deberta" else []
+        score_args = [lw[0], lw[1], lw[2], lw[3], lw[8], lw[9]] + extra
+        apm = scores(x, *score_args)
+        if collect:
+            collected.append((x, apm))
+        x = apply_(x, apm, *lw)
+    return (x, collected) if collect else x
+
+
+def forward_logits(cfg: ModelConfig, params, ids):
+    """Full task forward: classifier logits (encoders) or LM logits (gpt)."""
+    x = forward_hidden(cfg, params, ids)
+    if cfg.family == "gpt":
+        return lm_head_graph(cfg)(x, params["tok_emb"])
+    return classifier_graph(cfg)(x, *[params[n] for n in CLS_WEIGHTS])
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation & flattening
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    """Gaussian-init parameter dict for one family (training start point)."""
+    h, f, v = cfg.hidden, cfg.ffn, cfg.vocab_size
+
+    def nrm(key, shape, std):
+        return jax.random.normal(key, shape, jnp.float32) * std
+
+    keys = iter(jax.random.split(key, 256))
+    p = {
+        "tok_emb": nrm(next(keys), (v, h), 0.02),
+        "pos_emb": nrm(next(keys), (cfg.max_len, h), 0.02),
+        "lne_g": jnp.ones((h,)), "lne_b": jnp.zeros((h,)),
+        "pool_w": nrm(next(keys), (h, h), 0.02), "pool_b": jnp.zeros((h,)),
+        "cls_w": nrm(next(keys), (h, cfg.num_classes), 0.02),
+        "cls_b": jnp.zeros((cfg.num_classes,)),
+    }
+    if cfg.family == "deberta":
+        p["rel_emb"] = nrm(next(keys), (cfg.rel_pos_buckets, h), 0.02)
+    for li in range(cfg.layers):
+        p[f"l{li}_wq"] = nrm(next(keys), (h, h), 0.02)
+        p[f"l{li}_bq"] = jnp.zeros((h,))
+        p[f"l{li}_wk"] = nrm(next(keys), (h, h), 0.02)
+        p[f"l{li}_bk"] = jnp.zeros((h,))
+        p[f"l{li}_wv"] = nrm(next(keys), (h, h), 0.02)
+        p[f"l{li}_bv"] = jnp.zeros((h,))
+        p[f"l{li}_wo"] = nrm(next(keys), (h, h), 0.02)
+        p[f"l{li}_bo"] = jnp.zeros((h,))
+        p[f"l{li}_ln1_g"] = jnp.ones((h,))
+        p[f"l{li}_ln1_b"] = jnp.zeros((h,))
+        p[f"l{li}_wf1"] = nrm(next(keys), (h, f), 0.02)
+        p[f"l{li}_bf1"] = jnp.zeros((f,))
+        p[f"l{li}_wf2"] = nrm(next(keys), (f, h), 0.02)
+        p[f"l{li}_bf2"] = jnp.zeros((h,))
+        p[f"l{li}_ln2_g"] = jnp.ones((h,))
+        p[f"l{li}_ln2_b"] = jnp.zeros((h,))
+    return p
+
+
+def init_embedder(cfg: ModelConfig, key):
+    """Init the AttMemo embedding MLP (segment-pooled input)."""
+    d_in = cfg.embed_segments * cfg.hidden
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def glorot(key, shape):
+        lim = (6.0 / (shape[0] + shape[1])) ** 0.5
+        return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+    return {
+        "e_w1": glorot(k1, (d_in, cfg.embed_hidden)),
+        "e_b1": jnp.zeros((cfg.embed_hidden,)),
+        "e_w2": glorot(k2, (cfg.embed_hidden, cfg.embed_hidden)),
+        "e_b2": jnp.zeros((cfg.embed_hidden,)),
+        "e_w3": glorot(k3, (cfg.embed_hidden, cfg.embed_dim)),
+        "e_b3": jnp.zeros((cfg.embed_dim,)),
+    }
+
+
+def param_order(cfg: ModelConfig):
+    """Deterministic weight order for the manifest / rust weight loader."""
+    names = list(EMBED_WEIGHTS)
+    if cfg.family == "deberta":
+        names.append("rel_emb")
+    for li in range(cfg.layers):
+        names += [f"l{li}_{n}" for n in LAYER_WEIGHTS]
+    names += list(CLS_WEIGHTS)
+    return names

@@ -1,0 +1,77 @@
+"""Regenerate the cross-language fixtures from already-trained weights.
+
+Maintenance utility: recomputes `fixtures/<family>.bin` (ids, hidden0,
+apm0, logits, feature0 at the serving sequence length) from the weight
+bins referenced by `manifest.json`, then patches the manifest in place.
+Much cheaper than a full `make artifacts` when only fixtures changed.
+
+Usage: cd python && python -m compile.refresh_fixtures ../artifacts
+"""
+
+import json
+import os
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import io_utils
+from . import model as M
+from .config import ModelConfig
+
+
+def refresh(out_dir: str) -> None:
+    os.environ["ATTMEMO_NO_PALLAS"] = "1"  # oracle path; equivalence tested
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    seq_len = manifest["serving_seq_len"]
+
+    for fam, info in manifest["families"].items():
+        cfg = ModelConfig(**{
+            k: v for k, v in info["config"].items()
+            if k not in ("head_dim", "causal")
+        })
+        weights = io_utils.read_tensor_bin(
+            os.path.join(out_dir, info["weights"]), info["tensors"])
+        params = {k: jnp.asarray(v) for k, v in weights.items()}
+
+        ds = manifest["datasets"][
+            "lm_test_serve" if fam == "gpt" else "cls_test_serve"]
+        raw = np.fromfile(os.path.join(out_dir, ds["path"]), dtype=np.uint8)
+        n, sl = np.frombuffer(raw[4:12], "<u4")
+        ids = np.frombuffer(
+            raw[12:12 + n * sl * 4], "<i4").reshape(n, sl)[:4]
+        assert sl == seq_len, (sl, seq_len)
+        fix_in = jnp.asarray(ids)
+
+        hidden0 = M.embed_graph(cfg)(
+            fix_in, *[params[k] for k in M.EMBED_WEIGHTS])
+        extra = [params["rel_emb"]] if fam == "deberta" else []
+        apm0 = M.attn_scores_graph(cfg)(
+            hidden0, params["l0_wq"], params["l0_bq"], params["l0_wk"],
+            params["l0_bk"], params["l0_ln1_g"], params["l0_ln1_b"], *extra)
+        logits = M.forward_logits(cfg, params, fix_in)
+        feat = M.mlp_embed_graph(cfg)(
+            hidden0, *[params[k] for k in M.EMBEDDER_WEIGHTS])
+
+        fpath = os.path.join(out_dir, "fixtures", f"{fam}.bin")
+        entries = io_utils.write_tensor_bin(fpath, [
+            ("ids", np.asarray(fix_in)),
+            ("hidden0", np.asarray(hidden0)),
+            ("apm0", np.asarray(apm0)),
+            ("logits", np.asarray(logits)),
+            ("feature0", np.asarray(feat)),
+        ])
+        info["fixtures"] = {"path": f"fixtures/{fam}.bin",
+                            "tensors": entries,
+                            "batch": 4, "seq_len": int(seq_len)}
+        print(f"[fixtures] refreshed {fam} at seq_len {seq_len}")
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[fixtures] manifest updated: {manifest_path}")
+
+
+if __name__ == "__main__":
+    refresh(sys.argv[1] if len(sys.argv) > 1 else "../artifacts")

@@ -1,0 +1,48 @@
+"""Re-lower existing manifest graphs after an L2 graph change (§Perf).
+
+Weights are runtime arguments, so graph changes never require retraining —
+this utility re-lowers the named graph kinds for every (family, batch,
+seq-len) combination already present in `manifest.json`, in place.
+
+Usage: cd python && python -m compile.relower ../artifacts [kind ...]
+"""
+
+import json
+import os
+import sys
+
+from . import aot
+from .config import ModelConfig
+
+
+def relower(out_dir: str, kinds) -> None:
+    os.environ["ATTMEMO_NO_PALLAS"] = "0"
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    cfgs = {
+        fam: ModelConfig(**{
+            k: v for k, v in info["config"].items()
+            if k not in ("head_dim", "causal")
+        })
+        for fam, info in manifest["families"].items()
+    }
+    count = 0
+    for g in manifest["graphs"]:
+        if g["kind"] not in kinds:
+            continue
+        path = os.path.join(out_dir, g["path"])
+        names, nbytes = aot.lower_graph(
+            cfgs[g["family"]], g["kind"], g["batch"], g["seq_len"], path)
+        g["params"] = names
+        g["bytes"] = nbytes
+        count += 1
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[relower] {count} graphs re-lowered for kinds {sorted(kinds)}")
+
+
+if __name__ == "__main__":
+    out = sys.argv[1] if len(sys.argv) > 1 else "../artifacts"
+    kinds = set(sys.argv[2:]) or {"attn_apply"}
+    relower(out, kinds)

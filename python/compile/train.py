@@ -1,0 +1,269 @@
+"""Build-time training loops (hand-rolled Adam; optax is not available).
+
+Trains, per family:
+  1. the task model (sentiment classification, or next-token LM for gpt);
+  2. the AttMemo Siamese embedding MLP (Fig. 6): pairs of per-layer hidden
+     states, ground truth = Eq. 1 similarity of their APMs, loss =
+     (‖e(x)−e(y)‖₂ − (1 − sc))² so embedding distance predicts APM
+     similarity;
+  3. magnitude-pruned sparse variants (§6.8) with mask-preserving finetune.
+
+Training runs with ``ATTMEMO_NO_PALLAS=1`` (pure-jnp attention) for speed;
+kernel/oracle equivalence is enforced by pytest, and the *shipped* HLO
+artifacts are lowered with the Pallas kernels enabled.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .config import ModelConfig
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                               state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Task training
+# ---------------------------------------------------------------------------
+
+def _cls_loss(cfg, params, ids, labels):
+    logits = M.forward_logits(cfg, params, ids)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def _lm_loss(cfg, params, ids):
+    logits = M.forward_logits(cfg, params, ids)  # [B, L, V]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = ids[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    mask = (tgt != 0).astype(jnp.float32)
+    return (nll * mask).sum() / mask.sum()
+
+
+def train_task(cfg: ModelConfig, ids, labels, *, steps=800, batch=32,
+               lr=7e-4, seed=0, log_every=100, log=print):
+    """Train one family; returns (params, loss history).
+
+    Post-LN families are slow starters, so residual output projections are
+    down-scaled at init (GPT-2-style 1/sqrt(2·layers)) and the LR ramps
+    linearly over the first 10% of steps.
+    """
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    resid_scale = 1.0 / (2.0 * cfg.layers) ** 0.5
+    for name in list(params):
+        if name.startswith("l") and (name.endswith("wo")
+                                     or name.endswith("wf2")):
+            params[name] = params[name] * resid_scale
+    opt = adam_init(params)
+    n = ids.shape[0]
+    warmup = max(1, steps // 10)
+
+    if cfg.family == "gpt":
+        loss_fn = lambda p, i, l: _lm_loss(cfg, p, i)
+    else:
+        loss_fn = lambda p, i, l: _cls_loss(cfg, p, i, l)
+
+    @jax.jit
+    def step(params, opt, i, l, lr_t):
+        loss, grads = jax.value_and_grad(loss_fn)(params, i, l)
+        params, opt = adam_update(params, grads, opt, lr=lr_t)
+        return params, opt, loss
+
+    rng = np.random.default_rng(seed)
+    history = []
+    for s in range(steps):
+        lr_t = lr * min(1.0, (s + 1) / warmup)
+        idx = rng.integers(0, n, size=batch)
+        params, opt, loss = step(params, opt, jnp.asarray(ids[idx]),
+                                 jnp.asarray(labels[idx]), lr_t)
+        if s % log_every == 0 or s == steps - 1:
+            log(f"  [{cfg.family}] step {s:4d} loss {float(loss):.4f}")
+        history.append(float(loss))
+    return params, history
+
+
+def eval_accuracy(cfg: ModelConfig, params, ids, labels, batch=32):
+    """Classification accuracy (encoders) or next-token accuracy (gpt)."""
+    correct = total = 0
+    fwd = jax.jit(lambda i: M.forward_logits(cfg, params, i))
+    for s in range(0, ids.shape[0], batch):
+        chunk = jnp.asarray(ids[s:s + batch])
+        logits = fwd(chunk)
+        if cfg.family == "gpt":
+            pred = jnp.argmax(logits[:, :-1], axis=-1)
+            tgt = chunk[:, 1:]
+            mask = tgt != 0
+            correct += int(((pred == tgt) & mask).sum())
+            total += int(mask.sum())
+        else:
+            pred = jnp.argmax(logits, axis=-1)
+            correct += int((pred == jnp.asarray(labels[s:s + batch])).sum())
+            total += chunk.shape[0]
+    return correct / max(total, 1)
+
+
+# ---------------------------------------------------------------------------
+# Hidden-state / APM collection (DB building + Siamese training data)
+# ---------------------------------------------------------------------------
+
+def collect_states(cfg: ModelConfig, params, ids, batch=16):
+    """Per-layer (hidden, APM) for every sequence.
+
+    Returns hiddens [layers, N, L, H] and apms [layers, N, nH, L, L]
+    (numpy, float32).
+    """
+    fwd = jax.jit(functools.partial(_collect_fwd, cfg), static_argnums=())
+
+    hs, ams = [], []
+    for s in range(0, ids.shape[0], batch):
+        chunk = jnp.asarray(ids[s:s + batch])
+        h_layers, a_layers = _collect_fwd(cfg, params, chunk)
+        hs.append(np.stack([np.asarray(h) for h in h_layers], axis=0))
+        ams.append(np.stack([np.asarray(a) for a in a_layers], axis=0))
+    return np.concatenate(hs, axis=1), np.concatenate(ams, axis=1)
+
+
+def _collect_fwd(cfg, params, ids):
+    _, collected = M.forward_hidden(cfg, params, ids, collect=True)
+    return [c[0] for c in collected], [c[1] for c in collected]
+
+
+# ---------------------------------------------------------------------------
+# Siamese embedder training (paper §5.2, Fig. 6)
+# ---------------------------------------------------------------------------
+
+def train_embedder(cfg: ModelConfig, hiddens, apms, *, steps=400, batch=64,
+                   lr=1e-3, seed=0, log_every=100, log=print):
+    """Train the embedding MLP on (hidden, hidden') pairs across all layers.
+
+    hiddens: [layers, N, L, H]; apms: [layers, N, nH, L, L].
+    Ground truth per pair = similarity_ref of their APMs; target embedding
+    distance = 1 − similarity.
+    """
+    eparams = M.init_embedder(cfg, jax.random.PRNGKey(seed + 17))
+    opt = adam_init(eparams)
+    layers, n = hiddens.shape[0], hiddens.shape[1]
+
+    def embed(p, h):
+        pooled = ref.segment_pool_ref(h, cfg.embed_segments)
+        return ref.mlp_embed_ref(pooled, p["e_w1"], p["e_b1"], p["e_w2"],
+                                 p["e_b2"], p["e_w3"], p["e_b3"])
+
+    def loss_fn(p, ha, hb, sc):
+        ea, eb = embed(p, ha), embed(p, hb)
+        d = jnp.sqrt(jnp.sum((ea - eb) ** 2, axis=-1) + 1e-12)
+        return jnp.mean((d - (1.0 - sc)) ** 2)
+
+    @jax.jit
+    def step(p, opt, ha, hb, sc):
+        loss, grads = jax.value_and_grad(loss_fn)(p, ha, hb, sc)
+        p, opt = adam_update(p, grads, opt, lr=lr)
+        return p, opt, loss
+
+    rng = np.random.default_rng(seed)
+    history = []
+    for s in range(steps):
+        li = rng.integers(0, layers)
+        ia = rng.integers(0, n, size=batch)
+        ib = rng.integers(0, n, size=batch)
+        ha = jnp.asarray(hiddens[li, ia])
+        hb = jnp.asarray(hiddens[li, ib])
+        sc = ref.similarity_ref(jnp.asarray(apms[li, ia]),
+                                jnp.asarray(apms[li, ib]))
+        eparams, opt, loss = step(eparams, opt, ha, hb, sc)
+        if s % log_every == 0 or s == steps - 1:
+            log(f"  [{cfg.family}-embedder] step {s:4d} loss {float(loss):.5f}")
+        history.append(float(loss))
+    return eparams, history
+
+
+# ---------------------------------------------------------------------------
+# Magnitude pruning (§6.8)
+# ---------------------------------------------------------------------------
+
+PRUNABLE_SUFFIXES = ("wq", "wk", "wv", "wo", "wf1", "wf2")
+
+
+def prune_masks(params, sparsity):
+    """Per-tensor magnitude masks over the prunable layer matrices."""
+    masks = {}
+    for name, w in params.items():
+        if any(name.endswith(s) for s in PRUNABLE_SUFFIXES) \
+                and name.startswith("l"):
+            k = int(w.size * sparsity)
+            thresh = jnp.sort(jnp.abs(w).reshape(-1))[k]
+            masks[name] = (jnp.abs(w) >= thresh).astype(w.dtype)
+    return masks
+
+
+def apply_masks(params, masks):
+    out = dict(params)
+    for name, m in masks.items():
+        out[name] = params[name] * m
+    return out
+
+
+def finetune_sparse(cfg: ModelConfig, params, masks, ids, labels, *,
+                    steps=60, batch=16, lr=5e-4, seed=1, log=print):
+    """Finetune with masks re-applied after every update (dense grads,
+    masked weights — the standard prune-then-finetune recipe)."""
+    params = apply_masks(params, masks)
+    opt = adam_init(params)
+    if cfg.family == "gpt":
+        loss_fn = lambda p, i, l: _lm_loss(cfg, p, i)
+    else:
+        loss_fn = lambda p, i, l: _cls_loss(cfg, p, i, l)
+
+    @jax.jit
+    def step(params, opt, i, l):
+        loss, grads = jax.value_and_grad(loss_fn)(params, i, l)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    rng = np.random.default_rng(seed)
+    n = ids.shape[0]
+    for s in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        params, opt, loss = step(params, opt, jnp.asarray(ids[idx]),
+                                 jnp.asarray(labels[idx]))
+        params = apply_masks(params, masks)
+        if s == steps - 1:
+            log(f"  [{cfg.family}-sparse] final loss {float(loss):.4f}")
+    return params
+
+
+def sparsity_of(params):
+    """Realised sparsity over the prunable matrices."""
+    zero = total = 0
+    for name, w in params.items():
+        if any(name.endswith(s) for s in PRUNABLE_SUFFIXES) \
+                and name.startswith("l"):
+            zero += int((w == 0).sum())
+            total += int(w.size)
+    return zero / max(total, 1)

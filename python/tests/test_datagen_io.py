@@ -1,0 +1,108 @@
+"""Corpus generator + artifact-format tests (the rust side must parse
+everything these emit)."""
+
+import json
+import struct
+
+import numpy as np
+import pytest
+
+from compile import datagen, io_utils
+
+VOCAB = datagen.build_vocab()
+
+
+def test_vocab_has_specials_first():
+    for i, s in enumerate(datagen.SPECIALS):
+        assert VOCAB[s] == i
+    assert len(set(VOCAB.values())) == len(VOCAB)
+
+
+def test_padded_vocab_size():
+    assert datagen.padded_vocab_size(VOCAB) % 128 == 0
+    assert datagen.padded_vocab_size(VOCAB) >= len(VOCAB)
+
+
+def test_classification_labels_match_sentiment_words():
+    ids, labels = datagen.gen_classification(64, 32, 0, VOCAB)
+    pos = {VOCAB[w] for w in datagen.POS_ADJ + datagen.VERBS_LIKE}
+    neg = {VOCAB[w] for w in datagen.NEG_ADJ + datagen.VERBS_HATE}
+    negators = {VOCAB[w] for w in datagen.NEGATORS}
+    for row, label in zip(ids, labels):
+        toks = set(int(t) for t in row)
+        if toks & negators:
+            continue  # negated clauses legitimately mix pools
+        has_pos, has_neg = bool(toks & pos), bool(toks & neg)
+        if label == 1:
+            assert has_pos, row
+        else:
+            assert has_neg, row
+
+
+def test_classification_deterministic_by_seed():
+    a = datagen.gen_classification(8, 32, 5, VOCAB)
+    b = datagen.gen_classification(8, 32, 5, VOCAB)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    c = datagen.gen_classification(8, 32, 6, VOCAB)
+    assert not np.array_equal(a[0], c[0])
+
+
+def test_sequences_start_with_cls_and_pad():
+    ids, _ = datagen.gen_classification(16, 24, 1, VOCAB)
+    assert (ids[:, 0] == datagen.CLS).all()
+    assert ids.shape == (16, 24)
+
+
+def test_lm_sequences_are_fully_packed():
+    ids, _ = datagen.gen_lm(4, 48, 2, VOCAB)
+    assert (ids != datagen.PAD).all()
+
+
+def test_dataset_binary_roundtrip(tmp_path):
+    ids, labels = datagen.gen_classification(10, 16, 3, VOCAB)
+    p = tmp_path / "ds.bin"
+    datagen.write_dataset(p, ids, labels)
+    raw = p.read_bytes()
+    assert raw[:4] == b"ATDS"
+    n, seq = struct.unpack("<II", raw[4:12])
+    assert (n, seq) == (10, 16)
+    got_ids = np.frombuffer(raw[12:12 + n * seq * 4], "<i4").reshape(n, seq)
+    got_labels = np.frombuffer(raw[12 + n * seq * 4:], "<i4")
+    np.testing.assert_array_equal(got_ids, ids)
+    np.testing.assert_array_equal(got_labels, labels)
+
+
+def test_templates_export_covers_all_slots(tmp_path):
+    datagen.export_vocab_and_templates(
+        VOCAB, tmp_path / "vocab.json", tmp_path / "templates.json")
+    t = json.loads((tmp_path / "templates.json").read_text())
+    assert len(t["templates"]) == len(datagen.TEMPLATES)
+    for pool in ("+A", "-A", "+V", "-V", "N", "I", "NEG"):
+        assert t["slots"][pool], pool
+    v = json.loads((tmp_path / "vocab.json").read_text())
+    assert v["vocab"]["[cls]"] == 1
+
+
+def test_tensor_bin_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = [
+        ("a", rng.normal(size=(3, 4)).astype(np.float32)),
+        ("ids", np.arange(6, dtype=np.int32).reshape(2, 3)),
+        ("b", rng.normal(size=(5,)).astype(np.float32)),
+    ]
+    p = tmp_path / "w.bin"
+    entries = io_utils.write_tensor_bin(p, tensors)
+    assert [e["dtype"] for e in entries] == ["f32", "i32", "f32"]
+    back = io_utils.read_tensor_bin(p, entries)
+    for name, arr in tensors:
+        np.testing.assert_array_equal(back[name], arr)
+
+
+def test_longer_sequences_pack_more_clauses():
+    """The Fig. 12 premise: longer inputs contain more sentence frames."""
+    short, _ = datagen.gen_classification(64, 16, 9, VOCAB)
+    long_, _ = datagen.gen_classification(64, 128, 9, VOCAB)
+    seps_short = (short == datagen.SEP).sum(axis=1).mean()
+    seps_long = (long_ == datagen.SEP).sum(axis=1).mean()
+    assert seps_long > seps_short * 2

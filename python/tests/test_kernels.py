@@ -1,0 +1,178 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes as mandated by DESIGN.md §5; the
+deadline is disabled because interpret-mode pallas is slow on CPU.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import attention, mlp_embed, ref, similarity
+
+SETTINGS = dict(max_examples=12, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def rand(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+shapes = st.tuples(
+    st.sampled_from([1, 2, 3]),          # batch
+    st.sampled_from([1, 2, 4]),          # heads
+    st.sampled_from([8, 16, 24, 32]),    # seq len
+    st.sampled_from([4, 8, 16]),         # head dim
+)
+
+
+@hypothesis.given(shape=shapes, causal=st.booleans(),
+                  seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(**SETTINGS)
+def test_apm_matches_ref(shape, causal, seed):
+    rng = np.random.default_rng(seed)
+    b, nh, l, dh = shape
+    q = rand(rng, (b, nh, l, dh))
+    k = rand(rng, (b, nh, l, dh))
+    got = attention.apm_pallas(q, k, causal=causal, block_q=8)
+    want = ref.apm_ref(q, k, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@hypothesis.given(shape=shapes, seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(**SETTINGS)
+def test_apm_bias_matches_ref(shape, seed):
+    rng = np.random.default_rng(seed)
+    b, nh, l, dh = shape
+    q = rand(rng, (b, nh, l, dh))
+    k = rand(rng, (b, nh, l, dh))
+    bias = rand(rng, (nh, l, l))
+    got = attention.apm_pallas(q, k, bias=bias, block_q=8)
+    want = ref.apm_ref(q, k, bias=bias)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@hypothesis.given(shape=shapes, causal=st.booleans(),
+                  seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(**SETTINGS)
+def test_flash_matches_ref(shape, causal, seed):
+    rng = np.random.default_rng(seed)
+    b, nh, l, dh = shape
+    q = rand(rng, (b, nh, l, dh))
+    k = rand(rng, (b, nh, l, dh))
+    v = rand(rng, (b, nh, l, dh))
+    got = attention.attention_pallas(q, k, v, causal=causal,
+                                     block_q=8, block_k=8)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_flash_block_shapes_dont_change_result():
+    rng = np.random.default_rng(0)
+    q = rand(rng, (2, 2, 32, 8))
+    k = rand(rng, (2, 2, 32, 8))
+    v = rand(rng, (2, 2, 32, 8))
+    a = attention.attention_pallas(q, k, v, block_q=8, block_k=8)
+    b = attention.attention_pallas(q, k, v, block_q=16, block_k=32)
+    c = attention.attention_pallas(q, k, v, block_q=32, block_k=16)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(a, c, rtol=1e-5, atol=1e-6)
+
+
+def test_apm_rows_are_stochastic():
+    rng = np.random.default_rng(1)
+    q = rand(rng, (2, 2, 16, 8))
+    k = rand(rng, (2, 2, 16, 8))
+    apm = attention.apm_pallas(q, k, block_q=8)
+    np.testing.assert_allclose(jnp.sum(apm, -1), 1.0, rtol=1e-5)
+
+
+def test_causal_apm_is_lower_triangular():
+    rng = np.random.default_rng(2)
+    q = rand(rng, (1, 1, 16, 8))
+    k = rand(rng, (1, 1, 16, 8))
+    apm = np.asarray(attention.apm_pallas(q, k, causal=True, block_q=8))
+    upper = np.triu(apm[0, 0], k=1)
+    assert np.abs(upper).max() < 1e-7
+
+
+def test_apply_apm_matches_einsum():
+    rng = np.random.default_rng(3)
+    q = rand(rng, (2, 2, 16, 8))
+    k = rand(rng, (2, 2, 16, 8))
+    v = rand(rng, (2, 2, 16, 8))
+    apm = ref.apm_ref(q, k)
+    got = attention.apply_apm_pallas(apm, v)
+    want = jnp.einsum("bhqk,bhkd->bhqd", apm, v)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@hypothesis.given(
+    b=st.sampled_from([1, 2, 5, 8]),
+    dims=st.sampled_from([(16, 8, 4), (32, 16, 8), (64, 32, 16)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_mlp_embed_matches_ref(b, dims, seed):
+    rng = np.random.default_rng(seed)
+    d_in, d_h, d_out = dims
+    pooled = rand(rng, (b, d_in))
+    ws = [
+        rand(rng, (d_in, d_h)) * 0.1, rand(rng, (d_h,)) * 0.1,
+        rand(rng, (d_h, d_h)) * 0.1, rand(rng, (d_h,)) * 0.1,
+        rand(rng, (d_h, d_out)) * 0.1, rand(rng, (d_out,)) * 0.1,
+    ]
+    got = mlp_embed.mlp_embed_pallas(pooled, *ws, block_b=4)
+    want = ref.mlp_embed_ref(pooled, *ws)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_mlp_embed_output_is_unit_norm():
+    rng = np.random.default_rng(4)
+    pooled = rand(rng, (6, 32))
+    ws = [rand(rng, s) * 0.2 for s in
+          [(32, 16), (16,), (16, 16), (16,), (16, 8), (8,)]]
+    out = mlp_embed.mlp_embed_pallas(pooled, *ws)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(out, axis=-1), 1.0, rtol=1e-4)
+
+
+@hypothesis.given(
+    n=st.sampled_from([1, 2, 4]),
+    nh=st.sampled_from([1, 2, 4]),
+    l=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_similarity_matches_ref(n, nh, l, seed):
+    rng = np.random.default_rng(seed)
+    a = jax.nn.softmax(rand(rng, (n, nh, l, l)), axis=-1)
+    b = jax.nn.softmax(rand(rng, (n, nh, l, l)), axis=-1)
+    got = similarity.similarity_pallas(a, b)
+    want = ref.similarity_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_similarity_bounds_and_identity():
+    rng = np.random.default_rng(5)
+    a = jax.nn.softmax(rand(rng, (3, 2, 16, 16)), axis=-1)
+    b = jax.nn.softmax(rand(rng, (3, 2, 16, 16)), axis=-1)
+    s_ab = np.asarray(similarity.similarity_pallas(a, b))
+    assert (s_ab >= -1e-5).all() and (s_ab <= 1 + 1e-5).all()
+    s_aa = np.asarray(similarity.similarity_pallas(a, a))
+    np.testing.assert_allclose(s_aa, 1.0, atol=1e-6)
+
+
+def test_segment_pool_shapes():
+    rng = np.random.default_rng(6)
+    h = rand(rng, (2, 16, 8))
+    pooled = ref.segment_pool_ref(h, 4)
+    assert pooled.shape == (2, 32)
+    # Each segment mean matches the naive computation.
+    np.testing.assert_allclose(
+        pooled[0, :8], np.asarray(h)[0, :4].mean(axis=0), rtol=1e-6)
+    with pytest.raises(AssertionError):
+        ref.segment_pool_ref(h, 5)

@@ -1,0 +1,155 @@
+"""L2 model-graph tests: shapes, family deltas, pallas/oracle equivalence,
+and training-substrate sanity."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datagen, model as M, train
+from compile.config import ModelConfig
+
+VOCAB = datagen.build_vocab()
+VS = datagen.padded_vocab_size(VOCAB)
+
+
+def cfg_for(family, **kw):
+    return ModelConfig(family=family, vocab_size=VS, max_len=32,
+                       hidden=32, layers=2, heads=2, ffn=64,
+                       rel_pos_buckets=8, embed_dim=16, embed_hidden=32,
+                       embed_segments=4, **kw)
+
+
+@pytest.fixture(params=["bert", "roberta", "deberta", "gpt"])
+def family(request):
+    return request.param
+
+
+@pytest.fixture
+def setup(family, monkeypatch):
+    monkeypatch.setenv("ATTMEMO_NO_PALLAS", "1")
+    cfg = cfg_for(family)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ids, labels = datagen.gen_classification(4, 32, 0, VOCAB)
+    return cfg, params, jnp.asarray(ids), labels
+
+
+def test_forward_shapes(setup):
+    cfg, params, ids, _ = setup
+    logits = M.forward_logits(cfg, params, ids)
+    if cfg.family == "gpt":
+        assert logits.shape == (4, 32, VS)
+    else:
+        assert logits.shape == (4, cfg.num_classes)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_collect_returns_per_layer_states(setup):
+    cfg, params, ids, _ = setup
+    _, collected = M.forward_hidden(cfg, params, ids, collect=True)
+    assert len(collected) == cfg.layers
+    for hidden, apm in collected:
+        assert hidden.shape == (4, 32, cfg.hidden)
+        assert apm.shape == (4, cfg.heads, 32, 32)
+        np.testing.assert_allclose(jnp.sum(apm, -1), 1.0, rtol=1e-4)
+
+
+def test_split_path_equals_layer_full(setup):
+    """attn_scores + attn_apply must equal layer_full exactly — the engine
+    relies on this to mix memoized and fused layers."""
+    cfg, params, ids, _ = setup
+    emb = M.embed_graph(cfg)
+    x = emb(ids, *[params[n] for n in M.EMBED_WEIGHTS])
+    lw = [params[f"l0_{n}"] for n in M.LAYER_WEIGHTS]
+    extra = [params["rel_emb"]] if cfg.family == "deberta" else []
+    apm = M.attn_scores_graph(cfg)(
+        x, lw[0], lw[1], lw[2], lw[3], lw[8], lw[9], *extra)
+    split = M.attn_apply_graph(cfg)(x, apm, *lw)
+    fused = M.layer_full_graph(cfg)(x, *lw, *extra)
+    np.testing.assert_allclose(split, fused, rtol=1e-4, atol=1e-5)
+
+
+def test_pallas_and_oracle_graphs_agree(family):
+    """The shipped (pallas) graphs must match the training (oracle) path."""
+    cfg = cfg_for(family)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    ids, _ = datagen.gen_classification(2, 32, 1, VOCAB)
+    ids = jnp.asarray(ids)
+    os.environ["ATTMEMO_NO_PALLAS"] = "1"
+    ref_logits = M.forward_logits(cfg, params, ids)
+    os.environ["ATTMEMO_NO_PALLAS"] = "0"
+    pal_logits = M.forward_logits(cfg, params, ids)
+    os.environ["ATTMEMO_NO_PALLAS"] = "1"
+    np.testing.assert_allclose(pal_logits, ref_logits, rtol=2e-4, atol=2e-4)
+
+
+def test_causal_family_ignores_future(monkeypatch):
+    monkeypatch.setenv("ATTMEMO_NO_PALLAS", "1")
+    cfg = cfg_for("gpt")
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    ids, _ = datagen.gen_lm(1, 32, 0, VOCAB)
+    ids2 = ids.copy()
+    ids2[0, -1] = (ids2[0, -1] + 1) % VS  # perturb the last token
+    a = M.forward_logits(cfg, params, jnp.asarray(ids))
+    b = M.forward_logits(cfg, params, jnp.asarray(ids2))
+    # Position t logits depend only on tokens ≤ t.
+    np.testing.assert_allclose(a[0, :-1], b[0, :-1], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(a[0, -1], b[0, -1])
+
+
+def test_deberta_bias_changes_scores(monkeypatch):
+    monkeypatch.setenv("ATTMEMO_NO_PALLAS", "1")
+    cfg = cfg_for("deberta")
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    ids, _ = datagen.gen_classification(2, 32, 3, VOCAB)
+    x = M.embed_graph(cfg)(jnp.asarray(ids),
+                           *[params[n] for n in M.EMBED_WEIGHTS])
+    lw = [params[f"l0_{n}"] for n in M.LAYER_WEIGHTS]
+    rel = params["rel_emb"] * 20.0  # amplify so the delta is unambiguous
+    with_bias = M.attn_scores_graph(cfg)(
+        x, lw[0], lw[1], lw[2], lw[3], lw[8], lw[9], rel)
+    zero_rel = jnp.zeros_like(params["rel_emb"])
+    without = M.attn_scores_graph(cfg)(
+        x, lw[0], lw[1], lw[2], lw[3], lw[8], lw[9], zero_rel)
+    assert float(jnp.abs(with_bias - without).max()) > 1e-4
+
+
+def test_param_order_is_complete(family):
+    cfg = cfg_for(family)
+    params = M.init_params(cfg, jax.random.PRNGKey(4))
+    order = M.param_order(cfg)
+    assert sorted(order) == sorted(params.keys())
+
+
+def test_training_step_reduces_loss(monkeypatch):
+    monkeypatch.setenv("ATTMEMO_NO_PALLAS", "1")
+    cfg = cfg_for("roberta")
+    ids, labels = datagen.gen_classification(64, 32, 7, VOCAB)
+    _, hist = train.train_task(cfg, ids, labels, steps=60, batch=16,
+                               lr=2e-3, log=lambda *_: None)
+    assert hist[-1] < hist[0], f"{hist[0]} -> {hist[-1]}"
+
+
+def test_pruning_reaches_target_sparsity(monkeypatch):
+    monkeypatch.setenv("ATTMEMO_NO_PALLAS", "1")
+    cfg = cfg_for("bert")
+    params = M.init_params(cfg, jax.random.PRNGKey(5))
+    masks = train.prune_masks(params, 0.85)
+    sparse = train.apply_masks(params, masks)
+    s = train.sparsity_of(sparse)
+    assert 0.8 <= s <= 0.9, s
+
+
+def test_embedder_training_learns_similarity(monkeypatch):
+    monkeypatch.setenv("ATTMEMO_NO_PALLAS", "1")
+    cfg = cfg_for("bert")
+    params = M.init_params(cfg, jax.random.PRNGKey(6))
+    ids, _ = datagen.gen_classification(32, 32, 8, VOCAB)
+    hiddens, apms = train.collect_states(cfg, params, ids, batch=8)
+    assert hiddens.shape == (cfg.layers, 32, 32, cfg.hidden)
+    assert apms.shape == (cfg.layers, 32, cfg.heads, 32, 32)
+    _, hist = train.train_embedder(cfg, hiddens, apms, steps=80,
+                                   batch=32, log=lambda *_: None)
+    assert hist[-1] < hist[0]

@@ -1,0 +1,86 @@
+//! Table 5 + Fig. 4 reproduction — inference accuracy at each memoization
+//! level vs the baseline, and the threshold sweep showing memoization rate
+//! rising as the threshold drops while accuracy degrades slowly.
+
+use std::sync::Arc;
+
+use attmemo::bench_support::{workload, TableWriter};
+use attmemo::config::{MemoConfig, MemoLevel};
+use attmemo::eval::evaluate;
+use attmemo::model::ModelRunner;
+use attmemo::serving::engine::{Engine, EngineOptions};
+
+fn main() -> attmemo::Result<()> {
+    attmemo::util::logger::init();
+    let rt = workload::open_runtime()?;
+    let seq_len = rt.artifacts().serving_seq_len;
+    let n_test = 48usize;
+    let batch = 8usize;
+
+    // ---- Table 5 ----------------------------------------------------------
+    let mut t5 = TableWriter::new(
+        "Table 5 reproduction — accuracy at each memoization level (batch 8)",
+        &["model", "baseline", "conservative", "moderate", "aggressive",
+          "memo_rate@aggr"],
+    );
+    for family in ["bert", "roberta", "deberta"] {
+        let (ids, labels) =
+            workload::test_workload(&rt, family, seq_len, n_test)?;
+        let built = Arc::new(
+            workload::build_db(&rt, family, seq_len, 192)?);
+        let mut base = workload::engine_with_shared_db(
+            &rt, family, seq_len, MemoLevel::Off, None, false)?;
+        let b = evaluate(&mut base, &ids, &labels, batch, true)?;
+        let mut cells = vec![family.to_string(),
+                             format!("{:.3}", b.accuracy())];
+        let mut aggr_rate = 0.0;
+        for level in MemoLevel::ALL_ON {
+            let mut e = workload::engine_with_shared_db(
+                &rt, family, seq_len, level, Some(built.clone()), false)?;
+            let r = evaluate(&mut e, &ids, &labels, batch, false)?;
+            cells.push(format!("{:.3}", r.accuracy()));
+            if level == MemoLevel::Aggressive {
+                aggr_rate = r.memo_rate;
+            }
+        }
+        cells.push(format!("{aggr_rate:.2}"));
+        t5.row(&cells);
+    }
+    t5.emit(Some(std::path::Path::new("bench_results/table5_accuracy.csv")));
+
+    // ---- Fig. 4 -----------------------------------------------------------
+    let family = "bert";
+    let (ids, labels) = workload::test_workload(&rt, family, seq_len, n_test)?;
+    let built = Arc::new(workload::build_db(&rt, family, seq_len, 192)?);
+    let hi = built.thresholds.conservative;
+    let lo = built.thresholds.aggressive;
+    let mut fig4 = TableWriter::new(
+        "Fig. 4 reproduction — threshold vs memoization rate vs accuracy \
+         (bert)",
+        &["threshold", "memo_rate", "accuracy"],
+    );
+    let mut points = vec![2.0f32]; // above any similarity ⇒ no memoization
+    for i in 0..=4 {
+        points.push(hi + (lo - hi) * i as f32 / 4.0);
+    }
+    points.push(-1.0); // accept everything ⇒ all memoization
+    for thr in points {
+        let runner = ModelRunner::load(rt.clone(), family)?;
+        let memo = MemoConfig {
+            level: MemoLevel::Moderate,
+            threshold_override: Some(thr as f64),
+            selective: false,
+            ..MemoConfig::default()
+        };
+        let mut e = Engine::new(runner, Some(built.clone()),
+                                EngineOptions { memo, seq_len })?;
+        let r = evaluate(&mut e, &ids, &labels, batch, false)?;
+        fig4.row(&[
+            format!("{thr:.3}"),
+            format!("{:.3}", r.memo_rate),
+            format!("{:.3}", r.accuracy()),
+        ]);
+    }
+    fig4.emit(Some(std::path::Path::new("bench_results/fig4_threshold.csv")));
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Fig. 1 + Table 4 reproduction.
+//!
+//! Fig. 1: inference-time breakdown (attention scores vs everything else)
+//! for the three encoder families at two sequence lengths — attention must
+//! dominate and its share must grow with L.
+//!
+//! Table 4: per-stage breakdown of a memoized self-attention layer
+//! (embedding / search / mapping / apply) vs the non-memoized layer.
+
+use attmemo::bench_support::harness::time_ms;
+use attmemo::bench_support::{workload, TableWriter};
+use attmemo::config::MemoLevel;
+use attmemo::model::ModelRunner;
+
+fn main() -> attmemo::Result<()> {
+    attmemo::util::logger::init();
+    let rt = workload::open_runtime()?;
+
+    // ---- Fig. 1 ----------------------------------------------------------
+    let mut fig1 = TableWriter::new(
+        "Fig. 1 reproduction — attention share of inference time",
+        &["model", "seq_len", "attention_ms", "other_ms", "attention_share"],
+    );
+    for family in ["bert", "roberta", "deberta"] {
+        for seq_len in [64usize, 128] {
+            let runner = ModelRunner::load(rt.clone(), family)?;
+            let (ids, _) = workload::test_workload(&rt, family, seq_len, 8)?;
+            // Warmup (compile).
+            let h0 = runner.embed(&ids)?;
+            let _ = runner.attn_scores(&h0, 0)?;
+            let _ = runner.attn_apply(&h0, &runner.attn_scores(&h0, 0)?, 0)?;
+            let _ = runner.head(&h0)?;
+
+            let (h, embed_ms) = time_ms(|| runner.embed(&ids).unwrap());
+            let mut attn_ms = 0.0;
+            let mut other_ms = embed_ms;
+            let mut hh = h;
+            for li in 0..runner.config().layers {
+                let (apm, s_ms) =
+                    time_ms(|| runner.attn_scores(&hh, li).unwrap());
+                let (next, a_ms) =
+                    time_ms(|| runner.attn_apply(&hh, &apm, li).unwrap());
+                attn_ms += s_ms;
+                other_ms += a_ms;
+                hh = next;
+            }
+            let (_, head_ms) = time_ms(|| runner.head(&hh).unwrap());
+            other_ms += head_ms;
+            let share = attn_ms / (attn_ms + other_ms);
+            fig1.row(&[
+                family.into(),
+                seq_len.to_string(),
+                format!("{attn_ms:.1}"),
+                format!("{other_ms:.1}"),
+                format!("{:.1}%", share * 100.0),
+            ]);
+        }
+    }
+    fig1.emit(Some(std::path::Path::new("bench_results/fig1_breakdown.csv")));
+
+    // ---- Table 4 ---------------------------------------------------------
+    let seq_len = rt.artifacts().serving_seq_len;
+    let mut engine = workload::engine_with_db(
+        &rt, "bert", seq_len, MemoLevel::Aggressive, 128, false)?;
+    let (ids, _) = workload::test_workload(&rt, "bert", seq_len, 32)?;
+    // Warm + run several batches to fill the stage summaries.
+    for start in (0..32).step_by(8) {
+        let chunk = ids.slice0(start, 8)?;
+        engine.infer(&chunk)?;
+    }
+    let st = &mut engine.stats.stages;
+    let mut t4 = TableWriter::new(
+        "Table 4 reproduction — memoized self-attention stage breakdown \
+         (ms per batch, bert)",
+        &["stage", "with memoization", "without memoization"],
+    );
+    let scores_full = {
+        // Reference: full-batch score computation time.
+        let runner = ModelRunner::load(rt.clone(), "bert")?;
+        let chunk = ids.slice0(0, 8)?;
+        let h = runner.embed(&chunk)?;
+        let _ = runner.attn_scores(&h, 0)?; // warm
+        let (_, ms) = time_ms(|| runner.attn_scores(&h, 0).unwrap());
+        ms
+    };
+    t4.row(&["embedding".into(), format!("{:.2}", st.embedding_ms.mean()),
+             "N/A".into()]);
+    t4.row(&["index search".into(), format!("{:.2}", st.search_ms.mean()),
+             "N/A".into()]);
+    t4.row(&["APM mapping".into(), format!("{:.2}", st.mapping_ms.mean()),
+             "N/A".into()]);
+    t4.row(&["score computation (misses only)".into(),
+             format!("{:.2}", st.scores_ms.mean()),
+             format!("{scores_full:.2}")]);
+    t4.row(&["APM·V + FFN (attn_apply)".into(),
+             format!("{:.2}", st.apply_ms.mean()),
+             format!("{:.2}", st.apply_ms.mean())]);
+    t4.emit(Some(std::path::Path::new("bench_results/table4_stages.csv")));
+    println!("memoization rate during Table 4 run: {:.2}",
+             engine.stats.memoization_rate());
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Table 3 + Fig. 13 + Fig. 11 reproduction — database-scaling behaviour.
+//!
+//! Table 3: pre-populated DB size / indexing time as the ingested sequence
+//! count grows (embedding-training time comes from the manifest, measured
+//! at build time in python).
+//!
+//! Fig. 13: bigger DB ⇒ higher memoization rate ⇒ lower inference time.
+//!
+//! Fig. 11: APM reuse counts — no hot records; most entries reused at most
+//! a few times (the argument for needing big memory rather than a cache).
+
+use std::sync::Arc;
+
+use attmemo::bench_support::{workload, TableWriter};
+use attmemo::config::MemoLevel;
+use attmemo::eval::evaluate;
+
+fn main() -> attmemo::Result<()> {
+    attmemo::util::logger::init();
+    let rt = workload::open_runtime()?;
+    let seq_len = rt.artifacts().serving_seq_len;
+    let family = "bert";
+    let (ids, labels) = workload::test_workload(&rt, family, seq_len, 32)?;
+
+    let mut t3 = TableWriter::new(
+        "Table 3 reproduction — DB size / indexing time vs #sequences",
+        &["#seqs", "entries", "db_size_MiB", "indexing_s", "build_s"],
+    );
+    let mut fig13 = TableWriter::new(
+        "Fig. 13 reproduction — memoization and latency vs DB size",
+        &["#seqs", "memo_rate", "inference_s", "accuracy"],
+    );
+
+    let mut reuse_db = None;
+    for &n in &[64usize, 128, 256] {
+        let built = Arc::new(
+            workload::build_db(&rt, family, seq_len, n)?);
+        t3.row(&[
+            n.to_string(),
+            built.db.total_entries().to_string(),
+            format!("{:.1}",
+                    built.db.resident_bytes() as f64 / (1 << 20) as f64),
+            format!("{:.2}", built.indexing_seconds),
+            format!("{:.2}", built.build_seconds),
+        ]);
+
+        let mut e = workload::engine_with_shared_db(
+            &rt, family, seq_len, MemoLevel::Moderate, Some(built.clone()),
+            false)?;
+        evaluate(&mut e, &ids.slice0(0, 8)?, &labels[..8], 8, false)?; // warm
+        let r = evaluate(&mut e, &ids, &labels, 8, false)?;
+        fig13.row(&[
+            n.to_string(),
+            format!("{:.3}", r.memo_rate),
+            format!("{:.2}", r.seconds),
+            format!("{:.3}", r.accuracy()),
+        ]);
+        if n == 256 {
+            reuse_db = Some(built);
+        }
+    }
+    t3.emit(Some(std::path::Path::new("bench_results/table3_db_build.csv")));
+    fig13.emit(Some(std::path::Path::new(
+        "bench_results/fig13_db_scaling.csv")));
+
+    // ---- Fig. 11: reuse histogram over the largest DB ---------------------
+    if let Some(built) = reuse_db {
+        let mut hist = std::collections::BTreeMap::<u32, usize>::new();
+        for li in 0..built.db.num_layers() {
+            for c in built.db.layer(li).reuse_counts() {
+                *hist.entry(c).or_default() += 1;
+            }
+        }
+        let mut fig11 = TableWriter::new(
+            "Fig. 11 reproduction — APM reuse counts (after the Fig. 13 \
+             query load)",
+            &["reuse_count", "#entries"],
+        );
+        for (c, n) in &hist {
+            fig11.row(&[c.to_string(), n.to_string()]);
+        }
+        fig11.emit(Some(std::path::Path::new(
+            "bench_results/fig11_reuse.csv")));
+        let max_reuse = hist.keys().max().copied().unwrap_or(0);
+        println!("max reuse of any record: {max_reuse} (paper: ≤ 6, no hot \
+                  records)");
+    }
+    println!("\nembedder training time (python, manifest): see \
+              EXPERIMENTS.md Table 3 row — recorded at artifact build.");
+    Ok(())
+}

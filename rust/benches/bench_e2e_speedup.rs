@@ -1,0 +1,60 @@
+//! Fig. 10 reproduction — end-to-end inference speedup over the
+//! no-memoization baseline: 4 model families × batch sizes × memoization
+//! levels. Expected shape: positive speedups everywhere, growing from
+//! batch 1 to the middle batch, dipping slightly at the largest batch
+//! (embedding cost), DeBERTa showing the largest gains.
+
+use std::sync::Arc;
+
+use attmemo::bench_support::{workload, TableWriter};
+use attmemo::config::MemoLevel;
+use attmemo::eval::evaluate;
+
+fn main() -> attmemo::Result<()> {
+    attmemo::util::logger::init();
+    let rt = workload::open_runtime()?;
+    let seq_len = rt.artifacts().serving_seq_len;
+    let batches = rt.artifacts().serving_batches.clone();
+    let n_test = 32usize;
+    let db_seqs = 192usize;
+
+    let mut table = TableWriter::new(
+        "Fig. 10 reproduction — end-to-end speedup vs baseline",
+        &["model", "batch", "level", "baseline_s", "memo_s", "speedup",
+          "memo_rate"],
+    );
+
+    for family in ["bert", "roberta", "deberta", "gpt"] {
+        let (ids, labels) =
+            workload::test_workload(&rt, family, seq_len, n_test)?;
+        let built = Arc::new(
+            workload::build_db(&rt, family, seq_len, db_seqs)?);
+        for &batch in &batches {
+            // Baseline timing (fused path), warmed.
+            let mut base = workload::engine_with_shared_db(
+                &rt, family, seq_len, MemoLevel::Off, None, false)?;
+            evaluate(&mut base, &ids.slice0(0, batch.min(n_test))?,
+                     &labels[..batch.min(n_test)], batch, true)?;
+            let b = evaluate(&mut base, &ids, &labels, batch, true)?;
+
+            for level in MemoLevel::ALL_ON {
+                let mut memo = workload::engine_with_shared_db(
+                    &rt, family, seq_len, level, Some(built.clone()), false)?;
+                evaluate(&mut memo, &ids.slice0(0, batch.min(n_test))?,
+                         &labels[..batch.min(n_test)], batch, false)?;
+                let m = evaluate(&mut memo, &ids, &labels, batch, false)?;
+                table.row(&[
+                    family.into(),
+                    batch.to_string(),
+                    level.name().into(),
+                    format!("{:.2}", b.seconds),
+                    format!("{:.2}", m.seconds),
+                    format!("{:.2}x", b.seconds / m.seconds),
+                    format!("{:.2}", m.memo_rate),
+                ]);
+            }
+        }
+    }
+    table.emit(Some(std::path::Path::new("bench_results/fig10_speedup.csv")));
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Ablation bench (DESIGN.md §7) — HNSW construction/search parameters:
+//! recall and latency vs `ef_search` and `m`, against the brute-force
+//! oracle, on embedding-like unit vectors. Supports the §5.3 claim that
+//! index search is never the bottleneck.
+
+use attmemo::bench_support::harness::bench_fn;
+use attmemo::bench_support::TableWriter;
+use attmemo::memo::index::{BruteForceIndex, Hnsw, HnswParams, VectorIndex};
+use attmemo::util::Pcg32;
+
+fn unit_vecs(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n)
+        .map(|_| {
+            let mut v: Vec<f32> =
+                (0..dim).map(|_| rng.next_gaussian()).collect();
+            let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            v.iter_mut().for_each(|x| *x /= norm);
+            v
+        })
+        .collect()
+}
+
+fn main() {
+    attmemo::util::logger::init();
+    let dim = 128;
+    let n = 2000;
+    let queries = 64;
+    let vecs = unit_vecs(n, dim, 1);
+    let qs = unit_vecs(queries, dim, 2);
+
+    let mut bf = BruteForceIndex::new(dim);
+    for v in &vecs {
+        bf.add(v);
+    }
+    let exact: Vec<Vec<u32>> = qs
+        .iter()
+        .map(|q| bf.search(q, 10).into_iter().map(|h| h.id).collect())
+        .collect();
+
+    let mut table = TableWriter::new(
+        "Ablation — HNSW recall@10 and latency vs parameters (n=2000, d=128)",
+        &["m", "ef_search", "recall@10", "search_ms_p50", "brute_ms_p50"],
+    );
+    let brute = bench_fn("bf", 2, 60.0, || {
+        std::hint::black_box(bf.search(&qs[0], 10));
+    });
+    for m in [8usize, 16, 32] {
+        let params = HnswParams { m, ..HnswParams::default() };
+        let mut idx = Hnsw::new(dim, params);
+        for v in &vecs {
+            idx.add(v);
+        }
+        for ef in [16usize, 48, 128] {
+            let mut found = 0usize;
+            for (q, ex) in qs.iter().zip(&exact) {
+                let got: Vec<u32> = idx
+                    .search_ef(q, 10, ef)
+                    .into_iter()
+                    .map(|h| h.id)
+                    .collect();
+                found += ex.iter().filter(|e| got.contains(e)).count();
+            }
+            let recall = found as f64 / (queries * 10) as f64;
+            let lat = bench_fn("h", 2, 40.0, || {
+                std::hint::black_box(idx.search_ef(&qs[0], 10, ef));
+            });
+            table.row(&[
+                m.to_string(),
+                ef.to_string(),
+                format!("{recall:.3}"),
+                format!("{:.4}", lat.p50_ms),
+                format!("{:.4}", brute.p50_ms),
+            ]);
+        }
+    }
+    table.emit(Some(std::path::Path::new("bench_results/hnsw_ablation.csv")));
+}

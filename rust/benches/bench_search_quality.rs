@@ -1,0 +1,107 @@
+//! Fig. 7 reproduction — exhaustive search vs embedding-based HNSW search:
+//! quality gap (similarity-score difference of the returned record) and
+//! latency gap. Expected shape: quality within ~0.1, latency orders of
+//! magnitude apart.
+//!
+//! Plus the §6.7 claim: HNSW search time varies <~1% when the database
+//! doubles (measured here across three DB sizes).
+
+use attmemo::bench_support::harness::bench_fn;
+use attmemo::bench_support::{workload, TableWriter};
+use attmemo::memo::builder::DbBuilder;
+use attmemo::model::ModelRunner;
+use attmemo::tensor::ops;
+
+fn main() -> attmemo::Result<()> {
+    attmemo::util::logger::init();
+    let rt = workload::open_runtime()?;
+    let seq = rt.artifacts().serving_seq_len;
+    let runner = ModelRunner::load(rt.clone(), "bert")?;
+
+    // Build a DB and keep the stored APMs for exhaustive comparison.
+    let ds = workload::dataset_for(&rt, "bert", seq, true)?;
+    let (train_ids, _) = rt.artifacts().load_dataset(&ds)?;
+    let db_ids = train_ids.slice0(0, 128.min(train_ids.shape[0]))?;
+    let built = DbBuilder::new(&runner).build(&db_ids)?;
+
+    let (q_ids, _) = workload::test_workload(&rt, "bert", seq, 16)?;
+    let layer = 0usize;
+    let cfg = runner.config();
+    let rows = cfg.heads * seq;
+
+    // Query hidden states + APMs + features.
+    let h = runner.embed(&q_ids)?;
+    let q_apm = runner.attn_scores(&h, layer)?;
+    let feats = runner.mlp_embed(&h)?;
+    let n = q_ids.shape[0];
+    let elems = q_apm.len() / n;
+
+    let mut quality = TableWriter::new(
+        "Fig. 7 reproduction — exhaustive vs embedding-based search",
+        &["query", "exhaustive_best_sim", "hnsw_sim", "difference"],
+    );
+    let mut diffs = Vec::new();
+    let mut exh_ms_total = 0.0;
+    for i in 0..n {
+        let q = &q_apm.data()[i * elems..(i + 1) * elems];
+        // Exhaustive: scan every stored APM with exact Eq. 1.
+        let t0 = std::time::Instant::now();
+        let mut best = 0.0f32;
+        for id in 0..built.db.layer(layer).len() {
+            let rec = built
+                .db
+                .layer(layer)
+                .arena()
+                .get(attmemo::memo::ApmId(id as u32))?;
+            best = best.max(ops::similarity_score(q, rec, rows, seq));
+        }
+        exh_ms_total += t0.elapsed().as_secs_f64() * 1e3;
+        // HNSW on the embedding: exact similarity of the returned record.
+        let hit = built.db.layer(layer).lookup(feats.row(i), 48).unwrap();
+        let rec = built.db.layer(layer).arena().get(hit.id)?;
+        let hnsw_sim = ops::similarity_score(q, rec, rows, seq);
+        diffs.push(best - hnsw_sim);
+        quality.row(&[
+            i.to_string(),
+            format!("{best:.4}"),
+            format!("{hnsw_sim:.4}"),
+            format!("{:.4}", best - hnsw_sim),
+        ]);
+    }
+    quality.emit(Some(std::path::Path::new(
+        "bench_results/fig7_quality.csv")));
+    let mean_diff = diffs.iter().sum::<f32>() / diffs.len() as f32;
+
+    // Latency comparison (per query).
+    let probe = feats.row(0).to_vec();
+    let hnsw_lat = bench_fn("hnsw", 3, 50.0, || {
+        std::hint::black_box(built.db.layer(layer).lookup(&probe, 48));
+    });
+    println!(
+        "\nmean similarity difference (exhaustive - hnsw): {mean_diff:.4} \
+         (paper: < 0.1)"
+    );
+    println!(
+        "exhaustive search: {:.2} ms/query; embedding+HNSW: {:.4} ms/query \
+         → {:.0}x faster",
+        exh_ms_total / n as f64,
+        hnsw_lat.p50_ms,
+        (exh_ms_total / n as f64) / hnsw_lat.p50_ms.max(1e-9)
+    );
+
+    // §6.7: search latency vs DB size.
+    let mut scale = TableWriter::new(
+        "§6.7 — HNSW search latency vs database size",
+        &["db_entries", "search_ms_p50"],
+    );
+    for size in [32usize, 64, 128] {
+        let ids = train_ids.slice0(0, size)?;
+        let b = DbBuilder::new(&runner).build(&ids)?;
+        let lat = bench_fn("s", 3, 30.0, || {
+            std::hint::black_box(b.db.layer(0).lookup(&probe, 48));
+        });
+        scale.row(&[size.to_string(), format!("{:.4}", lat.p50_ms)]);
+    }
+    scale.emit(Some(std::path::Path::new("bench_results/fig7_scale.csv")));
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Table 7 reproduction — impact of selective memoization (Eq. 3):
+//! inference-time reduction and memoization-rate delta of the
+//! performance-model policy vs always-attempt, per family and batch size.
+
+use std::sync::Arc;
+
+use attmemo::bench_support::{workload, TableWriter};
+use attmemo::config::MemoLevel;
+use attmemo::eval::evaluate;
+
+fn main() -> attmemo::Result<()> {
+    attmemo::util::logger::init();
+    let rt = workload::open_runtime()?;
+    let seq_len = rt.artifacts().serving_seq_len;
+    let n_test = 24usize;
+
+    let mut table = TableWriter::new(
+        "Table 7 reproduction — selective memoization (Eq. 3) impact",
+        &["model", "batch", "always_s", "selective_s", "time_reduction",
+          "memo_rate_always", "memo_rate_selective", "active_layers"],
+    );
+    for family in ["bert", "roberta", "deberta", "gpt"] {
+        let (ids, labels) =
+            workload::test_workload(&rt, family, seq_len, n_test)?;
+        let built = Arc::new(
+            workload::build_db(&rt, family, seq_len, 160)?);
+        for batch in [1usize, 8] {
+            let mut always = workload::engine_with_shared_db(
+                &rt, family, seq_len, MemoLevel::Moderate,
+                Some(built.clone()), false)?;
+            evaluate(&mut always, &ids.slice0(0, batch)?, &labels[..batch],
+                     batch, false)?; // warm
+            let a = evaluate(&mut always, &ids, &labels, batch, false)?;
+
+            let mut sel = workload::engine_with_shared_db(
+                &rt, family, seq_len, MemoLevel::Moderate,
+                Some(built.clone()), true)?;
+            evaluate(&mut sel, &ids.slice0(0, batch)?, &labels[..batch],
+                     batch, false)?;
+            let s = evaluate(&mut sel, &ids, &labels, batch, false)?;
+
+            let active = built
+                .policy(built.thresholds.moderate, true)
+                .active_layers((batch * seq_len) as u64)
+                .len();
+            table.row(&[
+                family.into(),
+                batch.to_string(),
+                format!("{:.2}", a.seconds),
+                format!("{:.2}", s.seconds),
+                format!("{:+.1}%",
+                        (a.seconds - s.seconds) / a.seconds * 100.0),
+                format!("{:.2}", a.memo_rate),
+                format!("{:.2}", s.memo_rate),
+                format!("{active}/{}",
+                        built.profiles.len()),
+            ]);
+        }
+    }
+    table.emit(Some(std::path::Path::new(
+        "bench_results/table7_selective.csv")));
+    Ok(())
+}

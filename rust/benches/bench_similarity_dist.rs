@@ -1,0 +1,149 @@
+//! Figs. 3, 12 and 15 reproduction — similarity-score distributions.
+//!
+//! Fig. 3: per-layer distribution of the best-match Eq. 1 similarity in the
+//! attention database (bert). Expect: a large high-similarity mass, with
+//! clear layer-to-layer differences.
+//!
+//! Fig. 12: the same distribution as the input sequence length grows —
+//! longer sequences show higher average similarity.
+//!
+//! Fig. 15: decoder (gpt) layer 0 vs a deep layer — layer 0 shows far more
+//! memoization potential.
+
+use attmemo::bench_support::{workload, TableWriter};
+use attmemo::model::ModelRunner;
+use attmemo::tensor::ops;
+use attmemo::util::stats::Histogram;
+
+/// Collect best-match exact similarities: for each query APM, the max
+/// Eq. 1 score against every stored APM of the same layer (the paper's
+/// exhaustive method for Figs. 3/12/15).
+fn best_similarities(runner: &ModelRunner, db_ids: &attmemo::tensor::tensor::IdTensor,
+                     q_ids: &attmemo::tensor::tensor::IdTensor,
+                     layer: usize) -> attmemo::Result<Vec<f32>> {
+    let cfg = runner.config();
+    let heads = cfg.heads;
+    // Stored APMs for this layer.
+    let mut stored: Vec<Vec<f32>> = Vec::new();
+    for s in (0..db_ids.shape[0]).step_by(8) {
+        let chunk = db_ids.slice0(s, 8.min(db_ids.shape[0] - s))?;
+        let mut h = runner.embed(&chunk)?;
+        for li in 0..=layer {
+            let apm = runner.attn_scores(&h, li)?;
+            if li == layer {
+                let n = apm.shape()[0];
+                let elems = apm.len() / n;
+                for i in 0..n {
+                    stored.push(
+                        apm.data()[i * elems..(i + 1) * elems].to_vec());
+                }
+                break;
+            }
+            h = runner.attn_apply(&h, &apm, li)?;
+        }
+    }
+    // Queries.
+    let mut best = Vec::new();
+    let l = q_ids.shape[1];
+    let rows = heads * l;
+    for s in (0..q_ids.shape[0]).step_by(8) {
+        let chunk = q_ids.slice0(s, 8.min(q_ids.shape[0] - s))?;
+        let mut h = runner.embed(&chunk)?;
+        for li in 0..=layer {
+            let apm = runner.attn_scores(&h, li)?;
+            if li == layer {
+                let n = apm.shape()[0];
+                let elems = apm.len() / n;
+                for i in 0..n {
+                    let q = &apm.data()[i * elems..(i + 1) * elems];
+                    let mut m = 0.0f32;
+                    for srec in &stored {
+                        m = m.max(ops::similarity_score(q, srec, rows, l));
+                    }
+                    best.push(m);
+                }
+                break;
+            }
+            h = runner.attn_apply(&h, &apm, li)?;
+        }
+    }
+    Ok(best)
+}
+
+fn dist_row(name: &str, sims: &[f32]) -> Vec<String> {
+    let mut h = Histogram::new(0.0, 1.0001, 10);
+    for &s in sims {
+        h.record(s as f64);
+    }
+    let mean = sims.iter().sum::<f32>() / sims.len().max(1) as f32;
+    let high = h.frac_at_least(0.7);
+    vec![
+        name.into(),
+        format!("{:.3}", mean),
+        format!("{:.1}%", high * 100.0),
+        h.rows()
+            .iter()
+            .map(|(_, c)| c.to_string())
+            .collect::<Vec<_>>()
+            .join("|"),
+    ]
+}
+
+fn main() -> attmemo::Result<()> {
+    attmemo::util::logger::init();
+    let rt = workload::open_runtime()?;
+    let headers = ["case", "mean_sim", "frac>=0.7", "hist(0..1, 10 bins)"];
+
+    // ---- Fig. 3: per-layer, bert, serving length -------------------------
+    let runner = ModelRunner::load(rt.clone(), "bert")?;
+    let seq = rt.artifacts().serving_seq_len;
+    let ds = workload::dataset_for(&rt, "bert", seq, true)?;
+    let (train_ids, _) = rt.artifacts().load_dataset(&ds)?;
+    let db_ids = train_ids.slice0(0, 96.min(train_ids.shape[0]))?;
+    let (q_ids, _) = workload::test_workload(&rt, "bert", seq, 24)?;
+    let mut fig3 = TableWriter::new(
+        "Fig. 3 reproduction — best-match similarity per layer (bert)",
+        &headers,
+    );
+    for li in 0..runner.config().layers {
+        let sims = best_similarities(&runner, &db_ids, &q_ids, li)?;
+        fig3.row(&dist_row(&format!("layer {li}"), &sims));
+    }
+    fig3.emit(Some(std::path::Path::new("bench_results/fig3_similarity.csv")));
+
+    // ---- Fig. 12: sequence-length sweep (bert, layer 0) -------------------
+    let mut fig12 = TableWriter::new(
+        "Fig. 12 reproduction — similarity vs input sequence length \
+         (bert, layer 0)",
+        &headers,
+    );
+    for &l in &rt.artifacts().sweep_seq_lens.clone() {
+        let name = format!("cls_sweep_{l}");
+        let Ok((ids, _)) = rt.artifacts().load_dataset(&name) else {
+            continue;
+        };
+        let db = ids.slice0(0, 64.min(ids.shape[0]))?;
+        let q = ids.slice0(64.min(ids.shape[0] - 16), 16)?;
+        let sims = best_similarities(&runner, &db, &q, 0)?;
+        fig12.row(&dist_row(&format!("L={l}"), &sims));
+    }
+    fig12.emit(Some(std::path::Path::new("bench_results/fig12_seqlen.csv")));
+
+    // ---- Fig. 15: decoder layers 0 vs deep --------------------------------
+    let gpt = ModelRunner::load(rt.clone(), "gpt")?;
+    let ds = workload::dataset_for(&rt, "gpt", seq, true)?;
+    let (lm_ids, _) = rt.artifacts().load_dataset(&ds)?;
+    let db = lm_ids.slice0(0, 48.min(lm_ids.shape[0]))?;
+    let (q, _) = workload::test_workload(&rt, "gpt", seq, 16)?;
+    let mut fig15 = TableWriter::new(
+        "Fig. 15 reproduction — decoder similarity, shallow vs deep layer",
+        &headers,
+    );
+    let deep = gpt.config().layers - 1;
+    for li in [0usize, deep] {
+        let sims = best_similarities(&gpt, &db, &q, li)?;
+        fig15.row(&dist_row(&format!("layer {li}"), &sims));
+    }
+    fig15.emit(Some(std::path::Path::new("bench_results/fig15_decoder.csv")));
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Fig. 14 + Table 8 reproduction — AttMemo composed with sparsity-pruned
+//! models (§6.8): speedup and accuracy for the pruned bert variants at each
+//! memoization level.
+
+use std::sync::Arc;
+
+use attmemo::bench_support::{workload, TableWriter};
+use attmemo::config::{MemoConfig, MemoLevel};
+use attmemo::eval::evaluate;
+use attmemo::memo::builder::DbBuilder;
+use attmemo::model::ModelRunner;
+use attmemo::serving::engine::{Engine, EngineOptions};
+
+fn main() -> attmemo::Result<()> {
+    attmemo::util::logger::init();
+    let rt = workload::open_runtime()?;
+    let seq_len = rt.artifacts().serving_seq_len;
+    let family = "bert";
+    let info = rt.artifacts().family(family)?;
+    if info.sparse_variants.is_empty() {
+        println!("no sparse variants in the artifacts — rebuild with the \
+                  full (non-fast) pipeline");
+        return Ok(());
+    }
+    let tags: Vec<String> =
+        info.sparse_variants.iter().map(|v| v.tag.clone()).collect();
+    let (ids, labels) = workload::test_workload(&rt, family, seq_len, 32)?;
+
+    let mut table = TableWriter::new(
+        "Fig. 14 / Table 8 reproduction — AttMemo on pruned models",
+        &["variant", "level", "baseline_s", "memo_s", "speedup", "accuracy",
+          "memo_rate"],
+    );
+    let ds = workload::dataset_for(&rt, family, seq_len, true)?;
+    let (train_ids, _) = rt.artifacts().load_dataset(&ds)?;
+    let db_ids = train_ids.slice0(0, 160)?;
+
+    for tag in &tags {
+        // DB must be built with the *same* (pruned) model that serves.
+        let runner = ModelRunner::load_sparse(rt.clone(), family, tag)?;
+        let built = Arc::new(DbBuilder::new(&runner).build(&db_ids)?);
+
+        let base_runner = ModelRunner::load_sparse(rt.clone(), family, tag)?;
+        let memo_off = MemoConfig { level: MemoLevel::Off,
+                                    ..MemoConfig::default() };
+        let mut base = Engine::new(base_runner, None,
+                                   EngineOptions { memo: memo_off, seq_len })?;
+        evaluate(&mut base, &ids.slice0(0, 8)?, &labels[..8], 8, true)?;
+        let b = evaluate(&mut base, &ids, &labels, 8, true)?;
+
+        for level in MemoLevel::ALL_ON {
+            let r2 = ModelRunner::load_sparse(rt.clone(), family, tag)?;
+            let memo = MemoConfig { level, selective: false,
+                                    ..MemoConfig::default() };
+            let mut e = Engine::new(r2, Some(built.clone()),
+                                    EngineOptions { memo, seq_len })?;
+            evaluate(&mut e, &ids.slice0(0, 8)?, &labels[..8], 8, false)?;
+            let r = evaluate(&mut e, &ids, &labels, 8, false)?;
+            table.row(&[
+                tag.clone(),
+                level.name().into(),
+                format!("{:.2}", b.seconds),
+                format!("{:.2}", r.seconds),
+                format!("{:.2}x", b.seconds / r.seconds),
+                format!("{:.3}", r.accuracy()),
+                format!("{:.2}", r.memo_rate),
+            ]);
+        }
+    }
+    table.emit(Some(std::path::Path::new("bench_results/table8_sparse.csv")));
+    println!("dense-model baseline accuracy (manifest): {:.3}",
+             info.accuracy);
+    for v in &info.sparse_variants {
+        println!("  {}: python-side accuracy {:.3} (sparsity {:.0}%)",
+                 v.tag, v.accuracy, v.sparsity * 100.0);
+    }
+    Ok(())
+}

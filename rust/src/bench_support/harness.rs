@@ -1,0 +1,85 @@
+//! Criterion-free micro/macro benchmark harness (criterion is not in the
+//! offline registry). Warmup + timed iterations with mean/p50/min reporting
+//! and an adaptive iteration count targeted at a wall-clock budget.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Timing result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub min_ms: f64,
+    pub stddev_ms: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>7} iters  mean {:>9.3} ms  p50 {:>9.3} ms  min {:>9.3} ms",
+            self.name, self.iters, self.mean_ms, self.p50_ms, self.min_ms
+        )
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then enough timed runs to
+/// fill ~`budget_ms` (bounded to [min_iters, max_iters]).
+pub fn bench_fn<F: FnMut()>(name: &str, warmup: usize, budget_ms: f64,
+                            mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    // Pilot run to size the iteration count.
+    let t0 = Instant::now();
+    f();
+    let pilot_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let iters = ((budget_ms / pilot_ms.max(1e-6)) as usize).clamp(3, 1000);
+
+    let mut s = Summary::new();
+    s.record(pilot_ms);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        s.record(t.elapsed().as_secs_f64() * 1e3);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: s.count(),
+        mean_ms: s.mean(),
+        p50_ms: s.p50(),
+        min_ms: s.min(),
+        stddev_ms: s.stddev(),
+    }
+}
+
+/// Time a single execution of a closure in milliseconds.
+pub fn time_ms<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64() * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench_fn("noop-ish", 1, 5.0, || {
+            std::hint::black_box((0..100).sum::<usize>());
+        });
+        assert!(r.iters >= 3);
+        assert!(r.min_ms <= r.mean_ms * 1.5 + 1e-9);
+        assert!(r.line().contains("noop-ish"));
+    }
+
+    #[test]
+    fn time_ms_measures() {
+        let (_, ms) = time_ms(|| std::thread::sleep(
+            std::time::Duration::from_millis(5)));
+        assert!(ms >= 4.0);
+    }
+}

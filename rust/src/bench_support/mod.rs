@@ -1,0 +1,10 @@
+//! Benchmark scaffolding: a criterion-free timing harness, aligned table
+//! printing (paper-table style output), and shared workload setup used by
+//! every `benches/bench_*.rs` target.
+
+pub mod harness;
+pub mod tables;
+pub mod workload;
+
+pub use harness::{bench_fn, BenchResult};
+pub use tables::TableWriter;

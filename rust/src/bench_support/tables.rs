@@ -1,0 +1,108 @@
+//! Paper-style table printing for bench output (aligned columns, a title
+//! row naming the table/figure being reproduced, and a CSV sidecar so
+//! results can be post-processed).
+
+use std::fmt::Write as _;
+
+/// Collects rows and renders an aligned text table + CSV.
+pub struct TableWriter {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TableWriter {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        TableWriter {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: format heterogeneous cells.
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells);
+    }
+
+    /// Aligned text rendering.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n=== {} ===", self.title);
+        let line = |cells: &[String], out: &mut String| {
+            let mut parts = Vec::new();
+            for (i, c) in cells.iter().enumerate() {
+                parts.push(format!("{:<w$}", c, w = widths[i]));
+            }
+            let _ = writeln!(out, "  {}", parts.join("  "));
+        };
+        line(&self.headers, &mut out);
+        let total: usize =
+            widths.iter().sum::<usize>() + 2 * widths.len().saturating_sub(1);
+        let _ = writeln!(out, "  {}", "-".repeat(total));
+        for row in &self.rows {
+            line(row, &mut out);
+        }
+        out
+    }
+
+    /// CSV rendering (for EXPERIMENTS.md extraction).
+    pub fn csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+
+    /// Print the table and optionally persist the CSV next to the bench.
+    pub fn emit(&self, csv_path: Option<&std::path::Path>) {
+        println!("{}", self.render());
+        if let Some(p) = csv_path {
+            if let Some(dir) = p.parent() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+            if let Err(e) = std::fs::write(p, self.csv()) {
+                eprintln!("warn: could not write {}: {e}", p.display());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = TableWriter::new("Demo", &["model", "speedup"]);
+        t.row(&["bert".into(), "1.22x".into()]);
+        t.row(&["roberta-long".into(), "1.05x".into()]);
+        let r = t.render();
+        assert!(r.contains("=== Demo ==="));
+        assert!(r.contains("roberta-long"));
+        let csv = t.csv();
+        assert!(csv.starts_with("model,speedup\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn row_width_checked() {
+        let mut t = TableWriter::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,93 @@
+//! Shared bench/example setup: locate artifacts, build engines with a
+//! populated attention database, and produce workload batches.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::config::{MemoConfig, MemoLevel};
+use crate::memo::builder::{BuiltDb, DbBuilder};
+use crate::model::ModelRunner;
+use crate::runtime::Runtime;
+use crate::serving::engine::{Engine, EngineOptions};
+use crate::tensor::tensor::IdTensor;
+use crate::{Error, Result};
+
+/// Artifacts directory: `$ATTMEMO_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("ATTMEMO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Open the runtime, with a helpful error if artifacts are missing.
+pub fn open_runtime() -> Result<Arc<Runtime>> {
+    let dir = artifacts_dir();
+    Runtime::open(&dir).map(Arc::new).map_err(|e| {
+        Error::config(format!(
+            "{e}\nhint: run `make artifacts` (or set ATTMEMO_ARTIFACTS)"
+        ))
+    })
+}
+
+/// Build a populated database for a family from the serving training set.
+///
+/// `db_seqs` caps how many training sequences are ingested (DB-size sweeps);
+/// 0 means all.
+pub fn build_db(runtime: &Arc<Runtime>, family: &str, seq_len: usize,
+                db_seqs: usize) -> Result<BuiltDb> {
+    let runner = ModelRunner::load(runtime.clone(), family)?;
+    let ds_name = dataset_for(runtime, family, seq_len, true)?;
+    let (ids, _) = runtime.artifacts().load_dataset(&ds_name)?;
+    let n = if db_seqs == 0 { ids.shape[0] } else { db_seqs.min(ids.shape[0]) };
+    let ids = ids.slice0(0, n)?;
+    DbBuilder::new(&runner).build(&ids)
+}
+
+/// Pick the exported dataset matching a family/seq-len (train or test).
+pub fn dataset_for(runtime: &Arc<Runtime>, family: &str, seq_len: usize,
+                   train: bool) -> Result<String> {
+    let serving = runtime.artifacts().serving_seq_len;
+    let kind = if family == "gpt" { "lm" } else { "cls" };
+    let split = if train { "train" } else { "test" };
+    let name = if seq_len == serving {
+        format!("{kind}_{split}_serve")
+    } else if kind == "cls" && !train {
+        format!("cls_sweep_{seq_len}")
+    } else {
+        format!("{kind}_{split}")
+    };
+    // Validate existence up front.
+    runtime.artifacts().dataset(&name)?;
+    Ok(name)
+}
+
+/// Engine with a fresh DB at the given level (None ⇒ no DB, pure baseline).
+pub fn engine_with_db(runtime: &Arc<Runtime>, family: &str, seq_len: usize,
+                      level: MemoLevel, db_seqs: usize,
+                      selective: bool) -> Result<Engine> {
+    let built = if level == MemoLevel::Off {
+        None
+    } else {
+        Some(Arc::new(build_db(runtime, family, seq_len, db_seqs)?))
+    };
+    engine_with_shared_db(runtime, family, seq_len, level, built, selective)
+}
+
+/// Engine over an already-built (shared) database — sweeps reuse one DB.
+pub fn engine_with_shared_db(runtime: &Arc<Runtime>, family: &str,
+                             seq_len: usize, level: MemoLevel,
+                             built: Option<Arc<BuiltDb>>,
+                             selective: bool) -> Result<Engine> {
+    let runner = ModelRunner::load(runtime.clone(), family)?;
+    let memo = MemoConfig { level, selective, ..MemoConfig::default() };
+    Engine::new(runner, built, EngineOptions { memo, seq_len })
+}
+
+/// Test-set workload for a family.
+pub fn test_workload(runtime: &Arc<Runtime>, family: &str, seq_len: usize,
+                     n: usize) -> Result<(IdTensor, Vec<i32>)> {
+    let ds = dataset_for(runtime, family, seq_len, false)?;
+    let (ids, labels) = runtime.artifacts().load_dataset(&ds)?;
+    let take = if n == 0 { ids.shape[0] } else { n.min(ids.shape[0]) };
+    Ok((ids.slice0(0, take)?, labels[..take].to_vec()))
+}

@@ -1,0 +1,330 @@
+//! Hand-rolled CLI (clap is not in the offline registry).
+//!
+//! Subcommands:
+//!   info                         — manifest summary
+//!   serve                        — start the TCP serving loop
+//!   client                       — fire requests at a server
+//!   build-db                     — populate a DB, print Table-3-style stats
+//!   eval                         — accuracy/latency/memo-rate over the test set
+//!
+//! Common flags: `--artifacts DIR`, `--family NAME`, `--level LEVEL`,
+//! `--db-seqs N`, `--batch N`, `--no-selective`, `--set key=value`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::bench_support::workload;
+use crate::config::{MemoLevel, ServingConfig};
+use crate::data::tokenizer::Vocab;
+use crate::eval::evaluate;
+use crate::serving::server::{Client, Server};
+use crate::{Error, Result};
+
+/// Parsed flags: positional subcommand + `--key value` options
+/// (bare `--flag` toggles).
+pub struct Args {
+    pub command: String,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    sets: Vec<(String, String)>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut command = String::new();
+        let mut opts = HashMap::new();
+        let mut flags = Vec::new();
+        let mut sets = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if name == "set" {
+                    let kv = argv.get(i + 1).ok_or_else(|| {
+                        Error::config("--set needs key=value")
+                    })?;
+                    let (k, v) = kv.split_once('=').ok_or_else(|| {
+                        Error::config(format!("--set {kv:?}: want key=value"))
+                    })?;
+                    sets.push((k.to_string(), v.to_string()));
+                    i += 2;
+                    continue;
+                }
+                // Option with a value unless the next token is a flag/end.
+                match argv.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        opts.insert(name.to_string(), v.clone());
+                        i += 2;
+                    }
+                    _ => {
+                        flags.push(name.to_string());
+                        i += 1;
+                    }
+                }
+            } else if command.is_empty() {
+                command = a.clone();
+                i += 1;
+            } else {
+                return Err(Error::config(format!("unexpected argument {a:?}")));
+            }
+        }
+        Ok(Args { command, opts, flags, sets })
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::config(format!("--{name}: bad number {v:?}"))
+            }),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+const USAGE: &str = "\
+attmemo — AttMemo serving coordinator
+
+USAGE: attmemo <command> [flags]
+
+COMMANDS
+  info       print the artifact manifest summary
+  serve      start the TCP server (flags: --family, --level, --db-seqs,
+             --no-selective, --set max_batch=N, --set bind=ADDR, ...)
+  client     send requests (--addr HOST:PORT, --n COUNT, --text \"...\")
+  build-db   populate an attention database and print its stats
+             (--save FILE persists it; eval/serve take --load-db FILE)
+  eval       accuracy/latency/memo-rate on the test set
+             (--family, --level off|conservative|moderate|aggressive,
+              --batch N, --db-seqs N, --n N, --no-selective)
+
+COMMON FLAGS
+  --artifacts DIR   artifacts directory (default ./artifacts or
+                    $ATTMEMO_ARTIFACTS)
+";
+
+/// CLI entrypoint (also driven by integration tests).
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    if let Some(dir) = args.opt("artifacts") {
+        std::env::set_var("ATTMEMO_ARTIFACTS", dir);
+    }
+    match args.command.as_str() {
+        "" | "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "info" => cmd_info(),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "build-db" => cmd_build_db(&args),
+        "eval" => cmd_eval(&args),
+        other => Err(Error::config(format!(
+            "unknown command {other:?} (try `attmemo help`)"
+        ))),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = workload::open_runtime()?;
+    let a = rt.artifacts();
+    println!("artifacts: {}", a.root().display());
+    println!("vocab_size: {}", a.vocab_size);
+    println!("serving_seq_len: {}  batches: {:?}", a.serving_seq_len,
+             a.serving_batches);
+    for fam in a.family_names() {
+        let f = a.family(fam)?;
+        println!(
+            "  {fam:<8} layers={} hidden={} heads={} acc={:.3} sparse={:?}",
+            f.config.layers,
+            f.config.hidden,
+            f.config.heads,
+            f.accuracy,
+            f.sparse_variants.iter().map(|s| s.tag.as_str()).collect::<Vec<_>>()
+        );
+    }
+    println!("graphs lowered: {}", a.graphs().len());
+    Ok(())
+}
+
+fn parse_level(args: &Args) -> Result<MemoLevel> {
+    MemoLevel::parse(&args.opt_or("level", "moderate"))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let rt = workload::open_runtime()?;
+    let family = args.opt_or("family", "bert");
+    let level = parse_level(args)?;
+    let mut cfg = ServingConfig::default();
+    cfg.seq_len = rt.artifacts().serving_seq_len;
+    for (k, v) in &args.sets {
+        cfg.set(k, v)?;
+    }
+    let db_seqs = args.opt_usize("db-seqs", 256)?;
+    log::info!("building attention database ({db_seqs} seqs)…");
+    let engine = workload::engine_with_db(
+        &rt, &family, cfg.seq_len, level, db_seqs, !args.flag("no-selective"),
+    )?;
+    let vocab = Arc::new(Vocab::load(&rt.artifacts().root().join("vocab.json"))?);
+    let server = Server::start(engine, vocab, cfg.clone())?;
+    println!("serving {family} (level={}) on {}", level.name(), server.addr);
+    println!("press ctrl-c to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.opt_or("addr", "127.0.0.1:7191");
+    let n = args.opt_usize("n", 10)?;
+    let text = args.opt_or("text", "the film was great");
+    let mut client = Client::connect(&addr)?;
+    for i in 0..n {
+        let (label, hits, ms) = client.infer(&text)?;
+        println!("[{i}] label={label} memo_hits={hits} latency={ms:.2} ms");
+    }
+    println!("{}", client.stats()?);
+    client.quit()
+}
+
+fn cmd_build_db(args: &Args) -> Result<()> {
+    let rt = workload::open_runtime()?;
+    let family = args.opt_or("family", "bert");
+    let seq_len = rt.artifacts().serving_seq_len;
+    let db_seqs = args.opt_usize("db-seqs", 256)?;
+    let built = workload::build_db(&rt, &family, seq_len, db_seqs)?;
+    if let Some(path) = args.opt("save") {
+        crate::memo::persist::save(&built, std::path::Path::new(path))?;
+        println!("saved database to {path}");
+    }
+    println!("family: {family}");
+    println!("sequences ingested: {}", built.sequences);
+    println!("entries: {}", built.db.total_entries());
+    println!(
+        "db size: {:.1} MiB",
+        built.db.resident_bytes() as f64 / (1 << 20) as f64
+    );
+    println!("indexing time: {:.2} s", built.indexing_seconds);
+    println!("build time: {:.2} s", built.build_seconds);
+    println!(
+        "thresholds: cons={:.4} mod={:.4} aggr={:.4}",
+        built.thresholds.conservative,
+        built.thresholds.moderate,
+        built.thresholds.aggressive
+    );
+    for (li, p) in built.profiles.iter().enumerate() {
+        println!(
+            "  layer {li}: t_attn={:.3}s t_overhead={:.3}s alpha={:.3}",
+            p.t_attn, p.t_overhead, p.alpha
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let rt = workload::open_runtime()?;
+    let family = args.opt_or("family", "bert");
+    let level = parse_level(args)?;
+    let seq_len = rt.artifacts().serving_seq_len;
+    let batch = args.opt_usize("batch", 8)?;
+    let db_seqs = args.opt_usize("db-seqs", 256)?;
+    let n = args.opt_usize("n", 64)?;
+    let (ids, labels) = workload::test_workload(&rt, &family, seq_len, n)?;
+    let mut engine = match args.opt("load-db") {
+        Some(path) if level != MemoLevel::Off => {
+            let cfg = rt.artifacts().family(&family)?.config.clone();
+            let built = crate::memo::persist::load(
+                std::path::Path::new(path), &cfg, Default::default())?;
+            workload::engine_with_shared_db(
+                &rt, &family, seq_len, level,
+                Some(std::sync::Arc::new(built)),
+                !args.flag("no-selective"))?
+        }
+        _ => workload::engine_with_db(
+            &rt, &family, seq_len, level, db_seqs,
+            !args.flag("no-selective"))?,
+    };
+    let baseline = level == MemoLevel::Off;
+    let r = evaluate(&mut engine, &ids, &labels, batch, baseline)?;
+    println!(
+        "family={family} level={} n={} acc={:.4} time={:.2}s \
+         throughput={:.2} seq/s memo_rate={:.3}",
+        level.name(),
+        r.sequences,
+        r.accuracy(),
+        r.seconds,
+        r.throughput(),
+        r.memo_rate
+    );
+    if args.flag("stages") {
+        let st = &mut engine.stats.stages;
+        println!(
+            "stages (ms, mean per batch-layer): embed={:.2} search={:.2} \
+             map={:.2} scores={:.2} apply={:.2}",
+            st.embedding_ms.mean(),
+            st.search_ms.mean(),
+            st.mapping_ms.mean(),
+            st.scores_ms.mean(),
+            st.apply_ms.mean()
+        );
+        for (li, l) in engine.stats.layers.iter().enumerate() {
+            println!(
+                "  layer {li}: total={} attempts={} hits={} skipped={}",
+                l.total, l.attempts, l.hits, l.skipped
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_and_sets() {
+        let a = Args::parse(&argv(&[
+            "eval", "--family", "bert", "--no-selective", "--set",
+            "max_batch=8", "--n", "32",
+        ]))
+        .unwrap();
+        assert_eq!(a.command, "eval");
+        assert_eq!(a.opt("family"), Some("bert"));
+        assert!(a.flag("no-selective"));
+        assert_eq!(a.sets, vec![("max_batch".into(), "8".into())]);
+        assert_eq!(a.opt_usize("n", 0).unwrap(), 32);
+    }
+
+    #[test]
+    fn rejects_bad_numbers_and_args() {
+        let a = Args::parse(&argv(&["eval", "--n", "xyz"])).unwrap();
+        assert!(a.opt_usize("n", 0).is_err());
+        assert!(Args::parse(&argv(&["eval", "stray"])).is_err());
+        assert!(Args::parse(&argv(&["x", "--set", "novalue"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&argv(&["definitely-not-a-command"])).is_err());
+    }
+
+    #[test]
+    fn help_succeeds() {
+        run(&argv(&["help"])).unwrap();
+    }
+}

@@ -1,0 +1,240 @@
+//! Configuration system: model-family configs (mirroring
+//! `python/compile/config.py`), serving-engine options, and memoization
+//! options, all loadable from JSON files or CLI overrides.
+
+pub mod json;
+
+use crate::{Error, Result};
+use json::Json;
+
+/// Transformer family hyper-parameters (must match the python side; parsed
+/// from `manifest.json`, never hard-coded).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub family: String,
+    pub vocab_size: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub max_len: usize,
+    pub num_classes: usize,
+    pub rel_pos_buckets: usize,
+    pub embed_dim: usize,
+    pub embed_hidden: usize,
+    pub embed_segments: usize,
+    pub causal: bool,
+}
+
+impl ModelConfig {
+    /// Parse from the manifest's `config` object.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(ModelConfig {
+            family: v.req_str("family")?.to_string(),
+            vocab_size: v.req_usize("vocab_size")?,
+            hidden: v.req_usize("hidden")?,
+            layers: v.req_usize("layers")?,
+            heads: v.req_usize("heads")?,
+            ffn: v.req_usize("ffn")?,
+            max_len: v.req_usize("max_len")?,
+            num_classes: v.req_usize("num_classes")?,
+            rel_pos_buckets: v.req_usize("rel_pos_buckets")?,
+            embed_dim: v.req_usize("embed_dim")?,
+            embed_hidden: v.req_usize("embed_hidden")?,
+            embed_segments: v.req_usize("embed_segments")?,
+            causal: v
+                .get("causal")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+        })
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Elements in one memoized APM entry: heads × L × L.
+    pub fn apm_elems(&self, seq_len: usize) -> usize {
+        self.heads * seq_len * seq_len
+    }
+
+    /// Bytes of one APM entry (f32).
+    pub fn apm_bytes(&self, seq_len: usize) -> usize {
+        self.apm_elems(seq_len) * 4
+    }
+}
+
+/// Memoization aggressiveness levels (paper Table 2). Thresholds apply to
+/// the search-estimated similarity `1 − d` (d = embedding L2 distance).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoLevel {
+    /// No memoization (the paper's baseline).
+    Off,
+    Conservative,
+    Moderate,
+    Aggressive,
+}
+
+impl MemoLevel {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "off" | "none" | "baseline" => MemoLevel::Off,
+            "conservative" => MemoLevel::Conservative,
+            "moderate" => MemoLevel::Moderate,
+            "aggressive" => MemoLevel::Aggressive,
+            other => {
+                return Err(Error::config(format!(
+                    "unknown memo level {other:?}"
+                )))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MemoLevel::Off => "off",
+            MemoLevel::Conservative => "conservative",
+            MemoLevel::Moderate => "moderate",
+            MemoLevel::Aggressive => "aggressive",
+        }
+    }
+
+    pub const ALL_ON: [MemoLevel; 3] =
+        [MemoLevel::Conservative, MemoLevel::Moderate, MemoLevel::Aggressive];
+}
+
+/// Memoization options for the engine.
+#[derive(Debug, Clone)]
+pub struct MemoConfig {
+    pub level: MemoLevel,
+    /// Similarity threshold per level; `None` derives defaults calibrated
+    /// per family (see `memo::thresholds`).
+    pub threshold_override: Option<f64>,
+    /// Enable the Eq. 3 selective-memoization performance model.
+    pub selective: bool,
+    /// Use memory-mapped APM gathering (vs the copy baseline).
+    pub mmap_gather: bool,
+    /// HNSW search breadth.
+    pub ef_search: usize,
+    /// Cap on attention-database entries (0 = unbounded).
+    pub max_db_entries: usize,
+}
+
+impl Default for MemoConfig {
+    fn default() -> Self {
+        MemoConfig {
+            level: MemoLevel::Moderate,
+            threshold_override: None,
+            selective: true,
+            mmap_gather: true,
+            ef_search: 48,
+            max_db_entries: 0,
+        }
+    }
+}
+
+/// Serving-engine options (dynamic batcher + server).
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Max requests fused into one engine batch. Must be one of the
+    /// batch sizes lowered by aot.py (the engine pads up to the nearest).
+    pub max_batch: usize,
+    /// Batch-formation wait budget.
+    pub max_wait_ms: u64,
+    /// Bounded request-queue depth (backpressure beyond this).
+    pub queue_depth: usize,
+    /// Sequence length served (must be lowered in the artifacts).
+    pub seq_len: usize,
+    /// TCP bind address for `attmemo serve`.
+    pub bind: String,
+    /// Worker threads handling connections.
+    pub io_threads: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            max_batch: 32,
+            max_wait_ms: 4,
+            queue_depth: 1024,
+            seq_len: 128,
+            bind: "127.0.0.1:7191".into(),
+            io_threads: 2,
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Apply `key=value` overrides (CLI `--set`).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "max_batch" => self.max_batch = parse_num(key, value)?,
+            "max_wait_ms" => self.max_wait_ms = parse_num(key, value)? as u64,
+            "queue_depth" => self.queue_depth = parse_num(key, value)?,
+            "seq_len" => self.seq_len = parse_num(key, value)?,
+            "bind" => self.bind = value.to_string(),
+            "io_threads" => self.io_threads = parse_num(key, value)?,
+            other => {
+                return Err(Error::config(format!(
+                    "unknown serving option {other:?}"
+                )))
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_num(key: &str, value: &str) -> Result<usize> {
+    value
+        .parse()
+        .map_err(|_| Error::config(format!("{key}: bad number {value:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_cfg_json() -> Json {
+        Json::parse(
+            r#"{"family":"bert","vocab_size":256,"hidden":128,"layers":4,
+                "heads":4,"ffn":256,"max_len":128,"num_classes":2,
+                "rel_pos_buckets":32,"embed_dim":128,"embed_hidden":256,
+                "embed_segments":8,"causal":false,"head_dim":32}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn model_config_parses() {
+        let c = ModelConfig::from_json(&demo_cfg_json()).unwrap();
+        assert_eq!(c.family, "bert");
+        assert_eq!(c.head_dim(), 32);
+        assert_eq!(c.apm_bytes(128), 4 * 128 * 128 * 4);
+    }
+
+    #[test]
+    fn model_config_missing_field_errors() {
+        let v = Json::parse(r#"{"family":"bert"}"#).unwrap();
+        assert!(ModelConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn memo_level_roundtrip() {
+        for l in [MemoLevel::Off, MemoLevel::Conservative, MemoLevel::Moderate,
+                  MemoLevel::Aggressive] {
+            assert_eq!(MemoLevel::parse(l.name()).unwrap(), l);
+        }
+        assert!(MemoLevel::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn serving_overrides() {
+        let mut s = ServingConfig::default();
+        s.set("max_batch", "8").unwrap();
+        s.set("bind", "0.0.0.0:1").unwrap();
+        assert_eq!(s.max_batch, 8);
+        assert_eq!(s.bind, "0.0.0.0:1");
+        assert!(s.set("nope", "1").is_err());
+        assert!(s.set("max_batch", "x").is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Corpus handling: vocab, the template workload generator (mirroring
+//! `python/compile/datagen.py` exactly via the exported `templates.json`),
+//! and dataset accuracy evaluation.
+
+pub mod synth;
+pub mod tokenizer;
+
+pub use synth::SynthGen;
+pub use tokenizer::Vocab;

@@ -1,0 +1,225 @@
+//! Serving-time workload generator: renders the SAME template bank the
+//! python datagen used for training (loaded from `artifacts/templates.json`),
+//! so inference requests are distributionally identical to the corpus the
+//! attention database was populated from — the property the paper's
+//! selective-memoization transfer argument (§5.4) relies on.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::config::json::Json;
+use crate::data::tokenizer::{CLS, PAD, SEP};
+use crate::tensor::tensor::IdTensor;
+use crate::util::Pcg32;
+use crate::{Error, Result};
+
+/// One template item: a literal token id or a slot name.
+#[derive(Debug, Clone)]
+enum Item {
+    Word(i32),
+    Slot(String),
+}
+
+/// The template bank + slot pools.
+pub struct SynthGen {
+    templates: Vec<Vec<Item>>,
+    slots: HashMap<String, Vec<i32>>,
+    rng: Pcg32,
+}
+
+impl SynthGen {
+    /// Load `templates.json`.
+    pub fn load(path: &Path, seed: u64) -> Result<SynthGen> {
+        let v = Json::from_file(path)?;
+        let mut templates = Vec::new();
+        for t in v.req_arr("templates")? {
+            let items = t
+                .as_arr()
+                .ok_or_else(|| Error::Json("template not an array".into()))?
+                .iter()
+                .map(|item| {
+                    if let Some(w) = item.get("word").and_then(Json::as_i64) {
+                        Ok(Item::Word(w as i32))
+                    } else if let Some(s) =
+                        item.get("slot").and_then(Json::as_str)
+                    {
+                        Ok(Item::Slot(s.to_string()))
+                    } else {
+                        Err(Error::Json("template item missing word/slot".into()))
+                    }
+                })
+                .collect::<Result<Vec<_>>>()?;
+            templates.push(items);
+        }
+        let mut slots = HashMap::new();
+        for (name, ids) in v
+            .req("slots")?
+            .as_obj()
+            .ok_or_else(|| Error::Json("slots not an object".into()))?
+        {
+            let pool = ids
+                .as_arr()
+                .ok_or_else(|| Error::Json("slot pool not an array".into()))?
+                .iter()
+                .map(|x| x.as_i64().map(|i| i as i32))
+                .collect::<Option<Vec<i32>>>()
+                .ok_or_else(|| Error::Json("slot pool: non-number".into()))?;
+            slots.insert(name.clone(), pool);
+        }
+        Ok(SynthGen { templates, slots, rng: Pcg32::seeded(seed) })
+    }
+
+    fn pick(&mut self, pool_name: &str) -> Result<i32> {
+        let pool = self.slots.get(pool_name).ok_or_else(|| {
+            Error::config(format!("no slot pool {pool_name:?}"))
+        })?;
+        Ok(pool[self.rng.range_usize(0, pool.len())])
+    }
+
+    /// Render one sentence agreeing with `target` (0 = negative,
+    /// 1 = positive) — the mirror of python `datagen._render`.
+    fn render(&mut self, ti: usize, target: usize) -> Result<Vec<i32>> {
+        let template = self.templates[ti].clone();
+        let mut out = Vec::with_capacity(template.len() + 2);
+        for item in template {
+            match item {
+                Item::Word(w) => out.push(w),
+                Item::Slot(s) => {
+                    let (neg, slot) = match s.strip_prefix('!') {
+                        Some(rest) => (true, rest),
+                        None => (false, s.as_str()),
+                    };
+                    let agree = target == 1;
+                    let pool = match slot {
+                        "+A" => if agree { "+A" } else { "-A" },
+                        "-A" => if agree { "-A" } else { "+A" },
+                        "+V" => if agree { "+V" } else { "-V" },
+                        "-V" => if agree { "-V" } else { "+V" },
+                        "N" => "N",
+                        "I" => "I",
+                        other => {
+                            return Err(Error::config(format!(
+                                "unknown slot {other:?}"
+                            )))
+                        }
+                    };
+                    if neg {
+                        out.push(self.pick("NEG")?);
+                        // Negation flips the adjective pool.
+                        let flipped = match pool {
+                            "+A" => "-A",
+                            "-A" => "+A",
+                            p => p,
+                        };
+                        out.push(self.pick(flipped)?);
+                    } else {
+                        out.push(self.pick(pool)?);
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Generate one classification sequence; returns (ids, label).
+    pub fn gen_sequence(&mut self, seq_len: usize) -> Result<(Vec<i32>, i32)> {
+        let target = self.rng.range_usize(0, 2);
+        let mut row = vec![CLS];
+        loop {
+            let ti = self.rng.range_usize(0, self.templates.len());
+            let sent = self.render(ti, target)?;
+            if row.len() + sent.len() + 1 > seq_len {
+                break;
+            }
+            row.extend_from_slice(&sent);
+            row.push(SEP);
+            if row.len() > seq_len * 3 / 4 || self.rng.next_f32() < 0.3 {
+                break;
+            }
+        }
+        row.resize(seq_len, PAD);
+        Ok((row, target as i32))
+    }
+
+    /// Generate a batch `[n, seq_len]` with labels.
+    pub fn gen_batch(&mut self, n: usize,
+                     seq_len: usize) -> Result<(IdTensor, Vec<i32>)> {
+        let mut data = Vec::with_capacity(n * seq_len);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (row, label) = self.gen_sequence(seq_len)?;
+            data.extend_from_slice(&row);
+            labels.push(label);
+        }
+        Ok((IdTensor::new(vec![n, seq_len], data)?, labels))
+    }
+
+    pub fn num_templates(&self) -> usize {
+        self.templates.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> SynthGen {
+        let json = r#"{
+            "templates": [
+                [{"word": 10}, {"slot": "N"}, {"word": 11}, {"slot": "+A"}],
+                [{"word": 12}, {"slot": "!+A"}]
+            ],
+            "slots": {
+                "+A": [20, 21], "-A": [30, 31], "+V": [40], "-V": [41],
+                "N": [50, 51], "I": [60], "NEG": [70]
+            }
+        }"#;
+        let dir = std::env::temp_dir().join("attmemo_synth_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("templates.json");
+        std::fs::write(&p, json).unwrap();
+        SynthGen::load(&p, 42).unwrap()
+    }
+
+    #[test]
+    fn sequences_have_frame_and_label() {
+        let mut g = demo();
+        for _ in 0..50 {
+            let (ids, label) = g.gen_sequence(16).unwrap();
+            assert_eq!(ids.len(), 16);
+            assert_eq!(ids[0], CLS);
+            assert!((0..=1).contains(&label));
+            // Sentiment words agree with the label.
+            let pos = ids.iter().any(|&t| t == 20 || t == 21);
+            let neg_adj = ids.iter().any(|&t| t == 30 || t == 31);
+            let negator = ids.iter().any(|&t| t == 70);
+            if label == 1 && !negator {
+                assert!(pos && !neg_adj, "{ids:?}");
+            }
+            if label == 0 && !negator {
+                assert!(neg_adj && !pos, "{ids:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut g = demo();
+        let (ids, labels) = g.gen_batch(5, 12).unwrap();
+        assert_eq!(ids.shape, vec![5, 12]);
+        assert_eq!(labels.len(), 5);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = {
+            let mut g = demo();
+            g.gen_batch(3, 16).unwrap().0
+        };
+        let b = {
+            let mut g = demo();
+            g.gen_batch(3, 16).unwrap().0
+        };
+        assert_eq!(a, b);
+    }
+}

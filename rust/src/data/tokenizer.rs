@@ -1,0 +1,149 @@
+//! Vocabulary loaded from `artifacts/vocab.json` (written by datagen.py).
+//!
+//! Serving requests arrive as text; this tokenizer maps whitespace-split
+//! words to the training vocab (unknown words → `[unk]`), pads/truncates to
+//! the serving sequence length, and decodes ids back for debugging.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::config::json::Json;
+use crate::{Error, Result};
+
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const UNK: i32 = 3;
+
+/// Word ↔ id tables.
+pub struct Vocab {
+    word_to_id: HashMap<String, i32>,
+    id_to_word: Vec<String>,
+}
+
+impl Vocab {
+    /// Load `vocab.json` (`{"vocab": {word: id}, "specials": [...]}`).
+    pub fn load(path: &Path) -> Result<Vocab> {
+        let v = Json::from_file(path)?;
+        let obj = v
+            .req("vocab")?
+            .as_obj()
+            .ok_or_else(|| Error::Json("vocab not an object".into()))?;
+        let mut word_to_id = HashMap::new();
+        let mut max_id = 0usize;
+        for (w, id) in obj {
+            let id = id
+                .as_usize()
+                .ok_or_else(|| Error::Json(format!("vocab id for {w:?}")))?;
+            word_to_id.insert(w.clone(), id as i32);
+            max_id = max_id.max(id);
+        }
+        let mut id_to_word = vec![String::new(); max_id + 1];
+        for (w, &id) in &word_to_id {
+            id_to_word[id as usize] = w.clone();
+        }
+        Ok(Vocab { word_to_id, id_to_word })
+    }
+
+    /// In-memory vocab for tests.
+    pub fn from_pairs(pairs: &[(&str, i32)]) -> Vocab {
+        let mut word_to_id = HashMap::new();
+        let mut max_id = 0;
+        for &(w, id) in pairs {
+            word_to_id.insert(w.to_string(), id);
+            max_id = max_id.max(id as usize);
+        }
+        let mut id_to_word = vec![String::new(); max_id + 1];
+        for (w, &id) in &word_to_id {
+            id_to_word[id as usize] = w.clone();
+        }
+        Vocab { word_to_id, id_to_word }
+    }
+
+    pub fn len(&self) -> usize {
+        self.word_to_id.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.word_to_id.is_empty()
+    }
+
+    pub fn id(&self, word: &str) -> i32 {
+        self.word_to_id.get(word).copied().unwrap_or(UNK)
+    }
+
+    pub fn word(&self, id: i32) -> &str {
+        self.id_to_word
+            .get(id as usize)
+            .map(String::as_str)
+            .unwrap_or("[unk]")
+    }
+
+    /// Encode text → `[cls] tokens… [sep]`, padded/truncated to `seq_len`.
+    pub fn encode(&self, text: &str, seq_len: usize) -> Vec<i32> {
+        let mut ids = vec![CLS];
+        for w in text.split_whitespace() {
+            if ids.len() + 1 >= seq_len {
+                break;
+            }
+            ids.push(self.id(&w.to_lowercase()));
+        }
+        ids.push(SEP);
+        ids.resize(seq_len, PAD);
+        ids
+    }
+
+    /// Decode ids → text (skipping pads).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter(|&&i| i != PAD)
+            .map(|&i| self.word(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v() -> Vocab {
+        Vocab::from_pairs(&[
+            ("[pad]", 0),
+            ("[cls]", 1),
+            ("[sep]", 2),
+            ("[unk]", 3),
+            ("the", 4),
+            ("film", 5),
+            ("was", 6),
+            ("great", 7),
+        ])
+    }
+
+    #[test]
+    fn encode_wraps_and_pads() {
+        let ids = v().encode("the film was great", 8);
+        assert_eq!(ids, vec![1, 4, 5, 6, 7, 2, 0, 0]);
+    }
+
+    #[test]
+    fn encode_truncates() {
+        let ids = v().encode("the film was great the film was great", 6);
+        assert_eq!(ids.len(), 6);
+        assert_eq!(ids[0], 1);
+        assert_eq!(ids[5], 2);
+    }
+
+    #[test]
+    fn unknown_words_map_to_unk() {
+        let ids = v().encode("the zebra", 6);
+        assert_eq!(ids[2], UNK);
+    }
+
+    #[test]
+    fn decode_roundtrip() {
+        let voc = v();
+        let ids = voc.encode("the film was great", 8);
+        assert_eq!(voc.decode(&ids), "[cls] the film was great [sep]");
+    }
+}

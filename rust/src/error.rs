@@ -1,0 +1,55 @@
+//! Crate-wide error type.
+
+/// Convenience alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Unified error for the AttMemo stack.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// PJRT / XLA runtime failures (compile, execute, literal conversion).
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// Filesystem and socket failures.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Malformed artifacts, manifests or configs.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// JSON parse errors from the hand-rolled codec.
+    #[error("json: {0}")]
+    Json(String),
+
+    /// Shape mismatches between tensors / literals / executables.
+    #[error("shape: {0}")]
+    Shape(String),
+
+    /// Attention/index database errors.
+    #[error("memo: {0}")]
+    Memo(String),
+
+    /// Serving-layer errors (queue closed, request rejected…).
+    #[error("serving: {0}")]
+    Serving(String),
+}
+
+impl Error {
+    /// Shorthand for a config error.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    /// Shorthand for a shape error.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+    /// Shorthand for a memoization error.
+    pub fn memo(msg: impl Into<String>) -> Self {
+        Error::Memo(msg.into())
+    }
+    /// Shorthand for a serving error.
+    pub fn serving(msg: impl Into<String>) -> Self {
+        Error::Serving(msg.into())
+    }
+}

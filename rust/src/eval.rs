@@ -1,0 +1,77 @@
+//! Dataset evaluation helpers shared by the CLI, examples and benches:
+//! accuracy, latency and memoization-rate measurement over a dataset, for
+//! the baseline and each memoization level (papers Tables 5/7/8, Fig. 10).
+
+use crate::serving::engine::Engine;
+use crate::tensor::tensor::IdTensor;
+use crate::util::stats::Stopwatch;
+use crate::Result;
+
+/// Outcome of one evaluation run.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub sequences: usize,
+    pub correct: usize,
+    pub seconds: f64,
+    pub memo_rate: f64,
+}
+
+impl EvalResult {
+    pub fn accuracy(&self) -> f64 {
+        if self.sequences == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.sequences as f64
+        }
+    }
+
+    pub fn throughput(&self) -> f64 {
+        if self.seconds <= 0.0 {
+            0.0
+        } else {
+            self.sequences as f64 / self.seconds
+        }
+    }
+}
+
+/// Run `ids` through the engine in `batch`-sized chunks.
+///
+/// `baseline` forces the fused non-memoized path regardless of the engine's
+/// memo configuration.
+pub fn evaluate(engine: &mut Engine, ids: &IdTensor, labels: &[i32],
+                batch: usize, baseline: bool) -> Result<EvalResult> {
+    let n = ids.shape[0];
+    let mut correct = 0usize;
+    let hits_before: u64 =
+        engine.stats.layers.iter().map(|l| l.hits).sum();
+    let total_before: u64 =
+        engine.stats.layers.first().map_or(0, |l| l.total);
+    let sw = Stopwatch::start();
+    let mut start = 0;
+    while start < n {
+        let count = batch.min(n - start);
+        let chunk = ids.slice0(start, count)?;
+        let result = if baseline {
+            engine.infer_baseline(&chunk)?
+        } else {
+            engine.infer(&chunk)?
+        };
+        for (i, &pred) in result.labels.iter().enumerate() {
+            if pred == labels[start + i] {
+                correct += 1;
+            }
+        }
+        start += count;
+    }
+    let seconds = sw.secs();
+    let layers = engine.stats.layers.len().max(1) as u64;
+    let hits: u64 = engine.stats.layers.iter().map(|l| l.hits).sum();
+    let total: u64 = engine.stats.layers.first().map_or(0, |l| l.total);
+    let denom = (total - total_before) * layers;
+    let memo_rate = if denom == 0 || baseline {
+        0.0
+    } else {
+        (hits - hits_before) as f64 / denom as f64
+    };
+    Ok(EvalResult { sequences: n, correct, seconds, memo_rate })
+}

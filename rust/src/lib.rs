@@ -1,0 +1,30 @@
+//! AttMemo: accelerating transformer self-attention with memoization on big
+//! memory systems.
+//!
+//! Reproduction of Feng et al., *AttMemo* (2023) as a three-layer
+//! Rust + JAX + Pallas serving stack: Pallas kernels (L1) and JAX model
+//! graphs (L2) are AOT-lowered to HLO text at build time; this crate (L3)
+//! loads the artifacts through PJRT and owns the entire request path —
+//! routing, dynamic batching, the attention/index databases, selective
+//! memoization, and metrics. Python never runs at request time.
+
+pub mod bench_support;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod error;
+pub mod eval;
+pub mod memo;
+pub mod memtier;
+pub mod model;
+pub mod runtime;
+pub mod serving;
+pub mod tensor;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// CLI entrypoint used by `rust/src/main.rs` and integration tests.
+pub fn run_cli(args: &[String]) -> Result<()> {
+    cli::run(args)
+}

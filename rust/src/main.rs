@@ -1,0 +1,13 @@
+//! AttMemo CLI entrypoint (leader process).
+
+fn main() {
+    attmemo::util::logger::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match attmemo::run_cli(&args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
+}

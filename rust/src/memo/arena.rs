@@ -1,0 +1,253 @@
+//! Page-aligned APM arena backed by an in-memory file (`memfd_create`).
+//!
+//! This is the substrate for the paper's memory-mapping trick (§5.3,
+//! Fig. 9): every APM is stored page-aligned inside one shared memory file,
+//! so a *batch* of scattered APMs can be gathered into a contiguous virtual
+//! tensor by mapping their pages back-to-back (`gather.rs`) instead of
+//! copying them. The arena is the "attention database memory" — on the
+//! paper's testbed it would live in Optane; here it is anonymous shared
+//! memory with the tier's latency modelled separately (`memtier`).
+
+use std::os::fd::RawFd;
+
+use crate::{Error, Result};
+
+/// System page size (4096 on this platform; queried once).
+pub fn page_size() -> usize {
+    static PAGE: once_cell::sync::OnceCell<usize> = once_cell::sync::OnceCell::new();
+    *PAGE.get_or_init(|| unsafe { libc::sysconf(libc::_SC_PAGESIZE) as usize })
+}
+
+/// Round `n` up to a page multiple.
+pub fn page_align(n: usize) -> usize {
+    let p = page_size();
+    (n + p - 1) / p * p
+}
+
+/// Identifier of one stored APM entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ApmId(pub u32);
+
+/// Fixed-stride, page-aligned entry store on a memfd.
+pub struct ApmArena {
+    fd: RawFd,
+    /// Bytes of payload per entry (f32 count × 4).
+    entry_bytes: usize,
+    /// Page-aligned stride between entries.
+    stride: usize,
+    /// Entries stored.
+    len: usize,
+    /// Capacity in entries the file currently holds.
+    cap: usize,
+    /// Persistent read-write mapping of the whole file.
+    base: *mut u8,
+    map_bytes: usize,
+}
+
+// The raw pointer is only dereferenced through &self/&mut self with range
+// checks; the underlying memfd pages are valid for the arena's lifetime.
+unsafe impl Send for ApmArena {}
+unsafe impl Sync for ApmArena {}
+
+const GROW_CHUNK: usize = 256; // entries added per ftruncate
+
+impl ApmArena {
+    /// Create an arena for entries of `elems` f32 values each.
+    pub fn new(elems: usize) -> Result<Self> {
+        if elems == 0 {
+            return Err(Error::memo("arena entry size must be positive"));
+        }
+        let entry_bytes = elems * 4;
+        let stride = page_align(entry_bytes);
+        let fd = unsafe {
+            libc::memfd_create(b"attmemo-apm\0".as_ptr().cast(), 0)
+        };
+        if fd < 0 {
+            return Err(Error::Io(std::io::Error::last_os_error()));
+        }
+        let mut arena = ApmArena {
+            fd,
+            entry_bytes,
+            stride,
+            len: 0,
+            cap: 0,
+            base: std::ptr::null_mut(),
+            map_bytes: 0,
+        };
+        arena.grow(GROW_CHUNK)?;
+        Ok(arena)
+    }
+
+    /// Whether gathered batches are usable as one contiguous f32 tensor
+    /// (true iff the payload exactly fills its pages; holds for all
+    /// serving shapes — e.g. 4·128·128·4 B = 64 pages).
+    pub fn dense_mappable(&self) -> bool {
+        self.entry_bytes == self.stride
+    }
+
+    pub fn entry_bytes(&self) -> usize {
+        self.entry_bytes
+    }
+
+    pub fn entry_elems(&self) -> usize {
+        self.entry_bytes / 4
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub(crate) fn fd(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Total bytes resident in the store (capacity × stride).
+    pub fn resident_bytes(&self) -> usize {
+        self.cap * self.stride
+    }
+
+    /// Byte offset of an entry inside the file (for gather mappings).
+    pub(crate) fn file_offset(&self, id: ApmId) -> Result<usize> {
+        if (id.0 as usize) < self.len {
+            Ok(id.0 as usize * self.stride)
+        } else {
+            Err(Error::memo(format!("ApmId {} out of range {}", id.0, self.len)))
+        }
+    }
+
+    fn grow(&mut self, extra: usize) -> Result<()> {
+        let new_cap = self.cap + extra;
+        let bytes = new_cap * self.stride;
+        if unsafe { libc::ftruncate(self.fd, bytes as libc::off_t) } != 0 {
+            return Err(Error::Io(std::io::Error::last_os_error()));
+        }
+        // Remap the full file read-write.
+        if !self.base.is_null() {
+            unsafe { libc::munmap(self.base.cast(), self.map_bytes) };
+        }
+        let base = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                bytes,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED,
+                self.fd,
+                0,
+            )
+        };
+        if base == libc::MAP_FAILED {
+            return Err(Error::Io(std::io::Error::last_os_error()));
+        }
+        self.base = base.cast();
+        self.map_bytes = bytes;
+        self.cap = new_cap;
+        Ok(())
+    }
+
+    /// Append one entry; returns its id.
+    pub fn push(&mut self, data: &[f32]) -> Result<ApmId> {
+        if data.len() * 4 != self.entry_bytes {
+            return Err(Error::memo(format!(
+                "arena push: want {} f32, got {}",
+                self.entry_bytes / 4,
+                data.len()
+            )));
+        }
+        if self.len == self.cap {
+            self.grow(GROW_CHUNK.max(self.cap / 2))?;
+        }
+        let off = self.len * self.stride;
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                data.as_ptr().cast::<u8>(),
+                self.base.add(off),
+                self.entry_bytes,
+            );
+        }
+        self.len += 1;
+        Ok(ApmId((self.len - 1) as u32))
+    }
+
+    /// Read-only view of one entry.
+    pub fn get(&self, id: ApmId) -> Result<&[f32]> {
+        let off = self.file_offset(id)?;
+        unsafe {
+            Ok(std::slice::from_raw_parts(
+                self.base.add(off).cast::<f32>(),
+                self.entry_bytes / 4,
+            ))
+        }
+    }
+}
+
+impl Drop for ApmArena {
+    fn drop(&mut self) {
+        if !self.base.is_null() {
+            unsafe { libc::munmap(self.base.cast(), self.map_bytes) };
+        }
+        unsafe { libc::close(self.fd) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_alignment() {
+        let p = page_size();
+        assert!(p >= 4096);
+        assert_eq!(page_align(1), p);
+        assert_eq!(page_align(p), p);
+        assert_eq!(page_align(p + 1), 2 * p);
+    }
+
+    #[test]
+    fn push_get_roundtrip() {
+        let mut a = ApmArena::new(16).unwrap();
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..16).map(|i| -(i as f32)).collect();
+        let ix = a.push(&x).unwrap();
+        let iy = a.push(&y).unwrap();
+        assert_eq!(a.get(ix).unwrap(), &x[..]);
+        assert_eq!(a.get(iy).unwrap(), &y[..]);
+        assert_eq!(a.len(), 2);
+        assert!(a.get(ApmId(2)).is_err());
+    }
+
+    #[test]
+    fn wrong_size_push_rejected() {
+        let mut a = ApmArena::new(16).unwrap();
+        assert!(a.push(&[0.0; 8]).is_err());
+    }
+
+    #[test]
+    fn growth_preserves_data() {
+        let elems = 32;
+        let mut a = ApmArena::new(elems).unwrap();
+        let n = GROW_CHUNK * 2 + 7; // force at least two grows
+        for i in 0..n {
+            let v = vec![i as f32; elems];
+            a.push(&v).unwrap();
+        }
+        for i in (0..n).step_by(97) {
+            assert_eq!(a.get(ApmId(i as u32)).unwrap()[0], i as f32);
+        }
+        assert_eq!(a.len(), n);
+    }
+
+    #[test]
+    fn dense_mappable_when_entry_fills_pages() {
+        let page_elems = page_size() / 4;
+        assert!(ApmArena::new(page_elems).unwrap().dense_mappable());
+        assert!(!ApmArena::new(page_elems - 1).unwrap().dense_mappable());
+    }
+}

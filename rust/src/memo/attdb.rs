@@ -1,0 +1,245 @@
+//! The attention database: per-layer APM stores plus their HNSW indexes.
+//!
+//! One `LayerDb` per self-attention layer (the paper's memoization
+//! granularity): an `ApmArena` holding the APM payloads `[heads, L, L]`,
+//! an HNSW index over the embedding feature-vectors of the hidden states
+//! that produced them, and reuse counters for the Fig. 11 analysis.
+
+use crate::config::ModelConfig;
+use crate::memo::arena::{ApmArena, ApmId};
+use crate::memo::index::{Hnsw, HnswParams, VectorIndex};
+use crate::{Error, Result};
+
+/// Result of a lookup: nearest stored entry + similarity estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct Lookup {
+    pub id: ApmId,
+    /// Estimated similarity `1 − ‖e(q) − e(x)‖₂` (embeddings are
+    /// L2-normalised, so the distance lives in [0, 2]).
+    pub similarity: f32,
+}
+
+/// One layer's attention + index database.
+pub struct LayerDb {
+    arena: ApmArena,
+    index: Hnsw,
+    /// Reuse count per entry (Fig. 11). Interior mutability so engines can
+    /// share a built database read-only behind `Arc` and still account
+    /// reuse.
+    reuse: std::sync::Mutex<Vec<u32>>,
+}
+
+impl LayerDb {
+    pub fn new(cfg: &ModelConfig, seq_len: usize, params: HnswParams) -> Self {
+        LayerDb {
+            arena: ApmArena::new(cfg.apm_elems(seq_len))
+                .expect("arena creation"),
+            index: Hnsw::new(cfg.embed_dim, params),
+            reuse: std::sync::Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Insert one (feature vector, APM) pair.
+    pub fn insert(&mut self, feature: &[f32], apm: &[f32]) -> Result<ApmId> {
+        let id = self.arena.push(apm)?;
+        let iid = self.index.add(feature);
+        debug_assert_eq!(iid, id.0, "arena and index ids must stay aligned");
+        self.reuse.lock().unwrap().push(0);
+        Ok(id)
+    }
+
+    /// Nearest entry for a query feature vector; `ef` overrides the beam.
+    pub fn lookup(&self, feature: &[f32], ef: usize) -> Option<Lookup> {
+        let hit = self.index.search_ef(feature, 1, ef).into_iter().next()?;
+        Some(Lookup {
+            id: ApmId(hit.id),
+            similarity: 1.0 - hit.dist_sq.sqrt(),
+        })
+    }
+
+    /// Record that an entry was used for memoization.
+    pub fn mark_reused(&self, id: ApmId) {
+        if let Some(c) = self.reuse.lock().unwrap().get_mut(id.0 as usize) {
+            *c += 1;
+        }
+    }
+
+    pub fn arena(&self) -> &ApmArena {
+        &self.arena
+    }
+
+    pub fn len(&self) -> usize {
+        self.arena.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arena.is_empty()
+    }
+
+    pub fn reuse_counts(&self) -> Vec<u32> {
+        self.reuse.lock().unwrap().clone()
+    }
+
+    /// Stored feature vector for an entry (persistence).
+    pub fn index_vector(&self, id: ApmId) -> &[f32] {
+        self.index.vector(id.0)
+    }
+}
+
+/// The full multi-layer database for one model family.
+pub struct AttentionDb {
+    pub family: String,
+    pub seq_len: usize,
+    layers: Vec<LayerDb>,
+    apm_elems: usize,
+    embed_dim: usize,
+}
+
+impl AttentionDb {
+    pub fn new(cfg: &ModelConfig, seq_len: usize, params: HnswParams) -> Self {
+        AttentionDb {
+            family: cfg.family.clone(),
+            seq_len,
+            layers: (0..cfg.layers)
+                .map(|_| LayerDb::new(cfg, seq_len, params))
+                .collect(),
+            apm_elems: cfg.apm_elems(seq_len),
+            embed_dim: cfg.embed_dim,
+        }
+    }
+
+    pub fn layer(&self, i: usize) -> &LayerDb {
+        &self.layers[i]
+    }
+
+    pub fn layer_mut(&mut self, i: usize) -> &mut LayerDb {
+        &mut self.layers[i]
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Entries per f32 APM payload.
+    pub fn apm_elems(&self) -> usize {
+        self.apm_elems
+    }
+
+    pub fn embed_dim(&self) -> usize {
+        self.embed_dim
+    }
+
+    /// Total entries across layers.
+    pub fn total_entries(&self) -> usize {
+        self.layers.iter().map(LayerDb::len).sum()
+    }
+
+    /// Total resident payload bytes (the paper's "pre-populated DB size").
+    pub fn resident_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.arena().resident_bytes()).sum()
+    }
+
+    /// Bulk-insert a layer's batch of (features [n, d], apms [n, elems]).
+    pub fn insert_batch(&mut self, layer: usize, features: &[f32],
+                        apms: &[f32]) -> Result<Vec<ApmId>> {
+        let d = self.embed_dim;
+        let e = self.apm_elems;
+        if features.len() % d != 0 || apms.len() % e != 0
+            || features.len() / d != apms.len() / e
+        {
+            return Err(Error::memo(format!(
+                "insert_batch: {} features vs {} apms",
+                features.len() / d,
+                apms.len() / e
+            )));
+        }
+        let n = features.len() / d;
+        let ldb = &mut self.layers[layer];
+        (0..n)
+            .map(|i| ldb.insert(&features[i * d..(i + 1) * d],
+                                &apms[i * e..(i + 1) * e]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            family: "bert".into(),
+            vocab_size: 256,
+            hidden: 32,
+            layers: 2,
+            heads: 2,
+            ffn: 64,
+            max_len: 16,
+            num_classes: 2,
+            rel_pos_buckets: 8,
+            embed_dim: 8,
+            embed_hidden: 16,
+            embed_segments: 4,
+            causal: false,
+        }
+    }
+
+    fn unit(rng: &mut Pcg32, d: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let n = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        v.iter_mut().for_each(|x| *x /= n);
+        v
+    }
+
+    #[test]
+    fn insert_and_lookup_self() {
+        let c = cfg();
+        let mut db = AttentionDb::new(&c, 16, HnswParams::default());
+        let mut rng = Pcg32::seeded(1);
+        let elems = c.apm_elems(16);
+        let mut feats = Vec::new();
+        for _ in 0..20 {
+            let f = unit(&mut rng, c.embed_dim);
+            let apm = vec![1.0 / 16.0; elems];
+            db.layer_mut(0).insert(&f, &apm).unwrap();
+            feats.push(f);
+        }
+        let hit = db.layer(0).lookup(&feats[7], 32).unwrap();
+        assert_eq!(hit.id, ApmId(7));
+        assert!(hit.similarity > 0.999, "{}", hit.similarity);
+    }
+
+    #[test]
+    fn batch_insert_validates_counts() {
+        let c = cfg();
+        let mut db = AttentionDb::new(&c, 16, HnswParams::default());
+        let d = c.embed_dim;
+        let e = c.apm_elems(16);
+        assert!(db.insert_batch(0, &vec![0.0; 2 * d], &vec![0.0; e]).is_err());
+        let ids = db
+            .insert_batch(1, &vec![0.1; 2 * d], &vec![0.0; 2 * e])
+            .unwrap();
+        assert_eq!(ids.len(), 2);
+        assert_eq!(db.total_entries(), 2);
+    }
+
+    #[test]
+    fn reuse_counters() {
+        let c = cfg();
+        let mut db = AttentionDb::new(&c, 16, HnswParams::default());
+        let f = vec![0.5; c.embed_dim];
+        let apm = vec![0.0; c.apm_elems(16)];
+        let id = db.layer_mut(0).insert(&f, &apm).unwrap();
+        db.layer(0).mark_reused(id);
+        db.layer(0).mark_reused(id);
+        assert_eq!(db.layer(0).reuse_counts(), vec![2]);
+    }
+
+    #[test]
+    fn empty_lookup_is_none() {
+        let c = cfg();
+        let db = AttentionDb::new(&c, 16, HnswParams::default());
+        assert!(db.layer(0).lookup(&vec![0.0; c.embed_dim], 16).is_none());
+    }
+}

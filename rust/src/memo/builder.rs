@@ -1,0 +1,178 @@
+//! Offline attention-database population (paper §5.1 "pre-populated during
+//! training") + threshold calibration + the Eq. 3 layer profiles.
+//!
+//! The builder replays the training set through the split forward path,
+//! inserting every layer's (embedded hidden state → APM) pair. From the
+//! second chunk on, it first *queries* the partial database, recording the
+//! estimated similarity of each lookup — those samples calibrate the
+//! conservative/moderate/aggressive thresholds and the per-layer hit rate
+//! α used by selective memoization.
+
+use std::time::Instant;
+
+use crate::config::ModelConfig;
+use crate::memo::attdb::AttentionDb;
+use crate::memo::index::HnswParams;
+use crate::memo::policy::{LayerProfile, SelectivePolicy};
+use crate::memo::thresholds::Thresholds;
+use crate::model::ModelRunner;
+use crate::tensor::tensor::IdTensor;
+use crate::Result;
+
+/// Everything the engine needs, produced by one offline build.
+pub struct BuiltDb {
+    pub db: AttentionDb,
+    pub thresholds: Thresholds,
+    /// Per-layer similarity samples observed while building (threshold
+    /// sweeps and the Fig. 3/12 distributions reuse these).
+    pub similarity_samples: Vec<Vec<f32>>,
+    /// Eq. 3 inputs measured during the build.
+    pub profiles: Vec<LayerProfile>,
+    /// Wall-clock seconds spent inserting into the HNSW indexes.
+    pub indexing_seconds: f64,
+    /// Wall-clock seconds of the whole build.
+    pub build_seconds: f64,
+    /// Sequences ingested.
+    pub sequences: usize,
+}
+
+impl BuiltDb {
+    /// Selective policy with α derived from the samples at `threshold`.
+    pub fn policy(&self, threshold: f32, enabled: bool) -> SelectivePolicy {
+        let layers = self
+            .profiles
+            .iter()
+            .enumerate()
+            .map(|(li, p)| LayerProfile {
+                alpha: alpha_at(&self.similarity_samples[li], threshold),
+                ..*p
+            })
+            .collect();
+        SelectivePolicy::new(layers, enabled)
+    }
+}
+
+/// Fraction of similarity samples clearing a threshold.
+pub fn alpha_at(samples: &[f32], threshold: f32) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.iter().filter(|&&s| s >= threshold).count() as f64
+        / samples.len() as f64
+}
+
+/// Offline builder.
+pub struct DbBuilder<'a> {
+    runner: &'a ModelRunner,
+    pub hnsw: HnswParams,
+    /// Chunk size for replaying the training set.
+    pub chunk: usize,
+    /// Beam width for calibration lookups.
+    pub ef: usize,
+}
+
+impl<'a> DbBuilder<'a> {
+    pub fn new(runner: &'a ModelRunner) -> Self {
+        DbBuilder { runner, hnsw: HnswParams::default(), chunk: 8, ef: 48 }
+    }
+
+    /// Ingest `ids` (shape `[n, L]`), returning the populated database.
+    pub fn build(&self, ids: &IdTensor) -> Result<BuiltDb> {
+        let t_start = Instant::now();
+        let cfg: &ModelConfig = self.runner.config();
+        let seq_len = ids.shape[1];
+        let mut db = AttentionDb::new(cfg, seq_len, self.hnsw);
+        let n = ids.shape[0];
+        let mut samples: Vec<Vec<f32>> = vec![Vec::new(); cfg.layers];
+        let mut t_attn = vec![0.0f64; cfg.layers];
+        let mut t_overhead = vec![0.0f64; cfg.layers];
+        let mut t_apply = vec![0.0f64; cfg.layers];
+        let mut t_fused = vec![0.0f64; cfg.layers];
+        let mut indexing = 0.0f64;
+        let mut profiled_tokens = 0u64;
+
+        let mut start = 0;
+        while start < n {
+            let count = self.chunk.min(n - start);
+            let chunk_ids = ids.slice0(start, count)?;
+            let mut h = self.runner.embed(&chunk_ids)?;
+            for li in 0..cfg.layers {
+                // Overhead side of Eq. 3: embedding + search.
+                let t0 = Instant::now();
+                let feats = crate::memo::embedder::Embedder::new(self.runner)
+                    .embed(&h)?;
+                if !db.layer(li).is_empty() {
+                    for i in 0..feats.len() {
+                        if let Some(hit) =
+                            db.layer(li).lookup(feats.vector(i), self.ef)
+                        {
+                            samples[li].push(hit.similarity);
+                        }
+                    }
+                }
+                t_overhead[li] += t0.elapsed().as_secs_f64();
+
+                // Attention side of Eq. 3: the score computation.
+                let t1 = Instant::now();
+                let apm = self.runner.attn_scores(&h, li)?;
+                t_attn[li] += t1.elapsed().as_secs_f64();
+
+                let t2 = Instant::now();
+                db.insert_batch(li, feats.raw(), apm.data())?;
+                indexing += t2.elapsed().as_secs_f64();
+
+                // Fused-path reference cost for the extended Eq. 3 (the
+                // result is discarded; the split path drives the build).
+                let t3 = Instant::now();
+                let _ = self.runner.layer_full(&h, li)?;
+                t_fused[li] += t3.elapsed().as_secs_f64();
+
+                let t4 = Instant::now();
+                h = self.runner.attn_apply(&h, &apm, li)?;
+                t_apply[li] += t4.elapsed().as_secs_f64();
+            }
+            profiled_tokens += (count * seq_len) as u64;
+            start += count;
+        }
+
+        let mut all: Vec<f32> = samples.iter().flatten().copied().collect();
+        // Clamp pathological negative estimates (distance > 1) out of the
+        // calibration pool; they can never clear a sane threshold anyway.
+        all.retain(|s| s.is_finite());
+        let thresholds = Thresholds::calibrate(all);
+
+        let profiles = (0..cfg.layers)
+            .map(|li| LayerProfile {
+                t_attn: t_attn[li],
+                t_overhead: t_overhead[li],
+                t_apply: t_apply[li],
+                t_fused: t_fused[li],
+                alpha: alpha_at(&samples[li], thresholds.moderate),
+                profiled_tokens,
+            })
+            .collect();
+
+        Ok(BuiltDb {
+            db,
+            thresholds,
+            similarity_samples: samples,
+            profiles,
+            indexing_seconds: indexing,
+            build_seconds: t_start.elapsed().as_secs_f64(),
+            sequences: n,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_at_fractions() {
+        let s = vec![0.1, 0.5, 0.9];
+        assert!((alpha_at(&s, 0.5) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(alpha_at(&s, 1.0), 0.0);
+        assert_eq!(alpha_at(&[], 0.5), 0.0);
+    }
+}

@@ -1,0 +1,83 @@
+//! Hidden-state embedding on the request path (paper §5.2).
+//!
+//! Thin wrapper around the family's `mlp_embed` executable plus feature
+//! bookkeeping: splits batched features into per-sequence vectors and
+//! exposes the similarity estimate used against the memoization threshold.
+
+use crate::model::ModelRunner;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Batched embedding results, one feature vector per sequence.
+pub struct Features {
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl Features {
+    pub fn from_tensor(t: &Tensor) -> Result<Features> {
+        if t.shape().len() != 2 {
+            return Err(Error::shape(format!(
+                "features must be [n, d], got {:?}",
+                t.shape()
+            )));
+        }
+        Ok(Features { dim: t.shape()[1], data: t.data().to_vec() })
+    }
+
+    pub fn len(&self) -> usize {
+        if self.dim == 0 { 0 } else { self.data.len() / self.dim }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn vector(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn raw(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+/// Runs the embedding network for a hidden-state batch.
+pub struct Embedder<'a> {
+    runner: &'a ModelRunner,
+}
+
+impl<'a> Embedder<'a> {
+    pub fn new(runner: &'a ModelRunner) -> Self {
+        Embedder { runner }
+    }
+
+    /// Embed `[n, L, H]` hidden states → `n` L2-normalised features.
+    pub fn embed(&self, hidden: &Tensor) -> Result<Features> {
+        let t = self.runner.mlp_embed(hidden)?;
+        Features::from_tensor(&t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn features_split() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let f = Features::from_tensor(&t).unwrap();
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.vector(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn rejects_bad_rank() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert!(Features::from_tensor(&t).is_err());
+    }
+}

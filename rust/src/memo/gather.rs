@@ -1,0 +1,214 @@
+//! APM batch gathering: memory-copy baseline vs the paper's memory-mapping
+//! technique (§5.3, Fig. 9, Table 6).
+//!
+//! * **Copy gather** slices each APM out of the arena and memcpy-s it into a
+//!   fresh contiguous buffer — what an unmodified ML framework forces.
+//! * **Mapped gather** reserves one contiguous virtual range and maps each
+//!   APM's *pages* into consecutive slots with `mmap(MAP_FIXED)` over the
+//!   arena's memfd. No data moves; the OS just writes PTEs. The virtual
+//!   range is reserved once and remapped batch after batch, mirroring the
+//!   paper's observation that PTEs are reused across layers.
+
+use crate::memo::arena::{page_align, ApmArena, ApmId};
+use crate::{Error, Result};
+
+/// A reusable contiguous virtual window for mapped gathers.
+///
+/// `map_batch` binds `ids.len()` arena entries into the window and returns a
+/// view; the window keeps its reservation between batches (PTE reuse), so
+/// steady-state gathers cost only the remap syscalls.
+pub struct GatherWindow {
+    base: *mut u8,
+    capacity_bytes: usize,
+    slot_bytes: usize,
+    mapped_slots: usize,
+}
+
+unsafe impl Send for GatherWindow {}
+
+impl GatherWindow {
+    /// Reserve a window for up to `max_batch` entries of `entry_elems` f32.
+    pub fn new(entry_elems: usize, max_batch: usize) -> Result<Self> {
+        let slot_bytes = page_align(entry_elems * 4);
+        let capacity_bytes = slot_bytes * max_batch.max(1);
+        let base = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                capacity_bytes,
+                libc::PROT_NONE,
+                libc::MAP_PRIVATE | libc::MAP_ANONYMOUS,
+                -1,
+                0,
+            )
+        };
+        if base == libc::MAP_FAILED {
+            return Err(Error::Io(std::io::Error::last_os_error()));
+        }
+        Ok(GatherWindow {
+            base: base.cast(),
+            capacity_bytes,
+            slot_bytes,
+            mapped_slots: 0,
+        })
+    }
+
+    /// Map a batch of APMs into the window; returns a contiguous f32 view
+    /// of `ids.len() * entry_elems` values (valid until the next map/drop).
+    ///
+    /// Requires a dense-mappable arena (payload exactly fills its pages);
+    /// otherwise the gathered view would contain page padding.
+    pub fn map_batch<'a>(&'a mut self, arena: &ApmArena,
+                         ids: &[ApmId]) -> Result<&'a [f32]> {
+        if !arena.dense_mappable() {
+            return Err(Error::memo(
+                "arena entries are not page-dense; use copy gather",
+            ));
+        }
+        if arena.stride() != self.slot_bytes {
+            return Err(Error::memo(format!(
+                "window slot {} != arena stride {}",
+                self.slot_bytes,
+                arena.stride()
+            )));
+        }
+        let need = ids.len() * self.slot_bytes;
+        if need > self.capacity_bytes {
+            return Err(Error::memo(format!(
+                "gather window too small: need {need}, have {}",
+                self.capacity_bytes
+            )));
+        }
+        for (slot, id) in ids.iter().enumerate() {
+            let file_off = arena.file_offset(*id)?;
+            let addr = unsafe { self.base.add(slot * self.slot_bytes) };
+            let mapped = unsafe {
+                libc::mmap(
+                    addr.cast(),
+                    self.slot_bytes,
+                    libc::PROT_READ,
+                    libc::MAP_SHARED | libc::MAP_FIXED,
+                    arena.fd(),
+                    file_off as libc::off_t,
+                )
+            };
+            if mapped == libc::MAP_FAILED {
+                return Err(Error::Io(std::io::Error::last_os_error()));
+            }
+        }
+        self.mapped_slots = self.mapped_slots.max(ids.len());
+        let elems = ids.len() * self.slot_bytes / 4;
+        Ok(unsafe { std::slice::from_raw_parts(self.base.cast::<f32>(), elems) })
+    }
+
+    /// Drop the page bindings (PROT_NONE anonymous again) but keep the
+    /// reservation. Not required between batches — `map_batch` overwrites —
+    /// but used by tests and by the engine when a batch's APMs must not
+    /// outlive their request.
+    pub fn unmap(&mut self) -> Result<()> {
+        if self.mapped_slots == 0 {
+            return Ok(());
+        }
+        let bytes = self.mapped_slots * self.slot_bytes;
+        let r = unsafe {
+            libc::mmap(
+                self.base.cast(),
+                bytes,
+                libc::PROT_NONE,
+                libc::MAP_PRIVATE | libc::MAP_ANONYMOUS | libc::MAP_FIXED,
+                -1,
+                0,
+            )
+        };
+        if r == libc::MAP_FAILED {
+            return Err(Error::Io(std::io::Error::last_os_error()));
+        }
+        self.mapped_slots = 0;
+        Ok(())
+    }
+}
+
+impl Drop for GatherWindow {
+    fn drop(&mut self) {
+        unsafe { libc::munmap(self.base.cast(), self.capacity_bytes) };
+    }
+}
+
+/// Copy-based gather baseline: memcpy each APM into a fresh buffer.
+pub fn copy_gather(arena: &ApmArena, ids: &[ApmId]) -> Result<Vec<f32>> {
+    let elems = arena.entry_elems();
+    let mut out = Vec::with_capacity(elems * ids.len());
+    for id in ids {
+        out.extend_from_slice(arena.get(*id)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memo::arena::page_size;
+
+    fn arena_with(n: usize, elems: usize) -> (ApmArena, Vec<ApmId>) {
+        let mut a = ApmArena::new(elems).unwrap();
+        let ids = (0..n)
+            .map(|i| {
+                let v: Vec<f32> =
+                    (0..elems).map(|j| (i * 1000 + j) as f32).collect();
+                a.push(&v).unwrap()
+            })
+            .collect();
+        (a, ids)
+    }
+
+    #[test]
+    fn mapped_equals_copy() {
+        let elems = page_size() / 4; // one page per entry → dense
+        let (arena, ids) = arena_with(8, elems);
+        let picks = [ids[5], ids[0], ids[7], ids[2]];
+        let copied = copy_gather(&arena, &picks).unwrap();
+        let mut win = GatherWindow::new(elems, 4).unwrap();
+        let mapped = win.map_batch(&arena, &picks).unwrap();
+        assert_eq!(mapped, &copied[..]);
+    }
+
+    #[test]
+    fn window_reuse_across_batches() {
+        let elems = page_size() / 4;
+        let (arena, ids) = arena_with(6, elems);
+        let mut win = GatherWindow::new(elems, 3).unwrap();
+        let first: Vec<f32> =
+            win.map_batch(&arena, &[ids[0], ids[1], ids[2]]).unwrap().to_vec();
+        let second = win.map_batch(&arena, &[ids[3], ids[4], ids[5]]).unwrap();
+        assert_ne!(&first[..], second);
+        assert_eq!(second[0], 3000.0);
+    }
+
+    #[test]
+    fn oversized_batch_rejected() {
+        let elems = page_size() / 4;
+        let (arena, ids) = arena_with(4, elems);
+        let mut win = GatherWindow::new(elems, 2).unwrap();
+        assert!(win.map_batch(&arena, &ids).is_err());
+    }
+
+    #[test]
+    fn non_dense_arena_rejected_for_mapping() {
+        let mut a = ApmArena::new(10).unwrap(); // 40 bytes ≪ page
+        let id = a.push(&[0.5; 10]).unwrap();
+        let mut win = GatherWindow::new(a.stride() / 4, 1).unwrap();
+        assert!(win.map_batch(&a, &[id]).is_err());
+        // copy gather still works
+        assert_eq!(copy_gather(&a, &[id]).unwrap(), vec![0.5; 10]);
+    }
+
+    #[test]
+    fn unmap_then_remap() {
+        let elems = page_size() / 4;
+        let (arena, ids) = arena_with(2, elems);
+        let mut win = GatherWindow::new(elems, 2).unwrap();
+        win.map_batch(&arena, &[ids[0]]).unwrap();
+        win.unmap().unwrap();
+        let v = win.map_batch(&arena, &[ids[1]]).unwrap();
+        assert_eq!(v[0], 1000.0);
+    }
+}

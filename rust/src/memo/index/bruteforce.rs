@@ -1,0 +1,72 @@
+//! Exact nearest-neighbour baseline (the paper's "exhaustive search").
+
+use crate::memo::index::{Hit, VectorIndex};
+use crate::tensor::ops::l2_sq;
+
+/// Flat store + linear scan. O(N·d) per query; used for Fig. 7 quality
+/// comparisons and as the recall oracle in property tests.
+pub struct BruteForceIndex {
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl BruteForceIndex {
+    pub fn new(dim: usize) -> Self {
+        BruteForceIndex { dim, data: Vec::new() }
+    }
+
+    pub fn vector(&self, id: u32) -> &[f32] {
+        let i = id as usize * self.dim;
+        &self.data[i..i + self.dim]
+    }
+}
+
+impl VectorIndex for BruteForceIndex {
+    fn add(&mut self, v: &[f32]) -> u32 {
+        assert_eq!(v.len(), self.dim, "dimension mismatch");
+        let id = self.len() as u32;
+        self.data.extend_from_slice(v);
+        id
+    }
+
+    fn search(&self, q: &[f32], k: usize) -> Vec<Hit> {
+        let n = self.len();
+        let mut hits: Vec<Hit> = (0..n)
+            .map(|i| Hit {
+                id: i as u32,
+                dist_sq: l2_sq(q, &self.data[i * self.dim..(i + 1) * self.dim]),
+            })
+            .collect();
+        hits.sort_by(|a, b| a.dist_sq.partial_cmp(&b.dist_sq).unwrap());
+        hits.truncate(k);
+        hits
+    }
+
+    fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_exact_match_first() {
+        let mut idx = BruteForceIndex::new(3);
+        idx.add(&[0.0, 0.0, 0.0]);
+        idx.add(&[1.0, 0.0, 0.0]);
+        idx.add(&[0.0, 2.0, 0.0]);
+        let hits = idx.search(&[1.0, 0.1, 0.0], 2);
+        assert_eq!(hits[0].id, 1);
+        assert_eq!(hits.len(), 2);
+        assert!(hits[0].dist_sq <= hits[1].dist_sq);
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let mut idx = BruteForceIndex::new(2);
+        idx.add(&[0.0, 0.0]);
+        assert_eq!(idx.search(&[1.0, 1.0], 5).len(), 1);
+    }
+}

@@ -1,0 +1,357 @@
+//! Hierarchical Navigable Small World graphs (Malkov & Yashunin, 2016),
+//! implemented from scratch — the stand-in for the paper's Faiss index.
+//!
+//! Standard construction: geometric level assignment, greedy descent
+//! through upper layers, beam (`ef`) search at each level, bidirectional
+//! links pruned to `m` (2·m at level 0) by distance. Search quality /
+//! recall is validated against `BruteForceIndex` in property tests and the
+//! Fig. 7 bench.
+
+use crate::memo::index::{Hit, VectorIndex};
+use crate::tensor::ops::l2_sq;
+use crate::util::Pcg32;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Construction/search parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct HnswParams {
+    /// Max links per node per level (level 0 allows 2·m).
+    pub m: usize,
+    /// Beam width during construction.
+    pub ef_construction: usize,
+    /// Default beam width during search (override per call available).
+    pub ef_search: usize,
+    /// RNG seed for level draws (deterministic builds).
+    pub seed: u64,
+}
+
+impl Default for HnswParams {
+    fn default() -> Self {
+        HnswParams { m: 16, ef_construction: 100, ef_search: 48, seed: 7 }
+    }
+}
+
+struct Node {
+    /// Neighbour lists, one per level (index 0 = ground level).
+    links: Vec<Vec<u32>>,
+}
+
+/// The index. Vectors are stored in one flat array.
+pub struct Hnsw {
+    dim: usize,
+    params: HnswParams,
+    data: Vec<f32>,
+    nodes: Vec<Node>,
+    entry: Option<u32>,
+    max_level: usize,
+    rng: Pcg32,
+    level_mult: f64,
+}
+
+/// Max-heap entry by distance (for result sets).
+#[derive(PartialEq)]
+struct Far(f32, u32);
+impl Eq for Far {}
+impl PartialOrd for Far {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Far {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Min-heap entry by distance (candidate frontier) via reversed ordering.
+#[derive(PartialEq)]
+struct Near(f32, u32);
+impl Eq for Near {}
+impl PartialOrd for Near {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Near {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.0.partial_cmp(&self.0).unwrap_or(Ordering::Equal)
+    }
+}
+
+impl Hnsw {
+    pub fn new(dim: usize, params: HnswParams) -> Self {
+        let level_mult = 1.0 / (params.m as f64).ln();
+        Hnsw {
+            dim,
+            params,
+            data: Vec::new(),
+            nodes: Vec::new(),
+            entry: None,
+            max_level: 0,
+            rng: Pcg32::seeded(params.seed),
+            level_mult,
+        }
+    }
+
+    pub fn params(&self) -> &HnswParams {
+        &self.params
+    }
+
+    #[inline]
+    fn vec(&self, id: u32) -> &[f32] {
+        let i = id as usize * self.dim;
+        &self.data[i..i + self.dim]
+    }
+
+    /// Stored vector by id (persistence / diagnostics).
+    pub fn vector(&self, id: u32) -> &[f32] {
+        self.vec(id)
+    }
+
+    #[inline]
+    fn dist(&self, q: &[f32], id: u32) -> f32 {
+        l2_sq(q, self.vec(id))
+    }
+
+    /// Greedy closest-point descent on one level.
+    fn greedy(&self, q: &[f32], start: u32, level: usize) -> u32 {
+        let mut cur = start;
+        let mut cur_d = self.dist(q, cur);
+        loop {
+            let mut improved = false;
+            for &n in &self.nodes[cur as usize].links[level] {
+                let d = self.dist(q, n);
+                if d < cur_d {
+                    cur = n;
+                    cur_d = d;
+                    improved = true;
+                }
+            }
+            if !improved {
+                return cur;
+            }
+        }
+    }
+
+    /// Beam search on one level; returns up to `ef` closest as a max-heap.
+    fn search_level(&self, q: &[f32], start: u32, level: usize,
+                    ef: usize) -> Vec<Hit> {
+        let mut visited = vec![false; self.nodes.len()];
+        visited[start as usize] = true;
+        let d0 = self.dist(q, start);
+        let mut frontier = BinaryHeap::new(); // min-heap
+        let mut results: BinaryHeap<Far> = BinaryHeap::new(); // max-heap
+        frontier.push(Near(d0, start));
+        results.push(Far(d0, start));
+        while let Some(Near(d, c)) = frontier.pop() {
+            let worst = results.peek().map_or(f32::INFINITY, |f| f.0);
+            if d > worst && results.len() >= ef {
+                break;
+            }
+            for &n in &self.nodes[c as usize].links[level] {
+                if visited[n as usize] {
+                    continue;
+                }
+                visited[n as usize] = true;
+                let dn = self.dist(q, n);
+                let worst = results.peek().map_or(f32::INFINITY, |f| f.0);
+                if results.len() < ef || dn < worst {
+                    frontier.push(Near(dn, n));
+                    results.push(Far(dn, n));
+                    if results.len() > ef {
+                        results.pop();
+                    }
+                }
+            }
+        }
+        let mut hits: Vec<Hit> = results
+            .into_iter()
+            .map(|Far(d, id)| Hit { id, dist_sq: d })
+            .collect();
+        hits.sort_by(|a, b| a.dist_sq.partial_cmp(&b.dist_sq).unwrap());
+        hits
+    }
+
+    /// Select up to `m` neighbours (simple nearest selection).
+    fn select(&self, hits: &[Hit], m: usize) -> Vec<u32> {
+        hits.iter().take(m).map(|h| h.id).collect()
+    }
+
+    /// Prune a node's link list back to the cap, keeping the closest.
+    fn shrink(&mut self, id: u32, level: usize) {
+        let cap = if level == 0 { self.params.m * 2 } else { self.params.m };
+        let links = &self.nodes[id as usize].links[level];
+        if links.len() <= cap {
+            return;
+        }
+        let base = self.vec(id).to_vec();
+        let mut scored: Vec<(f32, u32)> = links
+            .iter()
+            .map(|&n| (l2_sq(&base, self.vec(n)), n))
+            .collect();
+        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        scored.truncate(cap);
+        self.nodes[id as usize].links[level] =
+            scored.into_iter().map(|(_, n)| n).collect();
+    }
+
+    /// Search with an explicit beam width.
+    pub fn search_ef(&self, q: &[f32], k: usize, ef: usize) -> Vec<Hit> {
+        let Some(entry) = self.entry else {
+            return Vec::new();
+        };
+        let mut cur = entry;
+        for level in (1..=self.max_level).rev() {
+            cur = self.greedy(q, cur, level);
+        }
+        let mut hits = self.search_level(q, cur, 0, ef.max(k));
+        hits.truncate(k);
+        hits
+    }
+}
+
+impl VectorIndex for Hnsw {
+    fn add(&mut self, v: &[f32]) -> u32 {
+        assert_eq!(v.len(), self.dim, "dimension mismatch");
+        let id = self.nodes.len() as u32;
+        self.data.extend_from_slice(v);
+        let level = self.rng.hnsw_level(self.level_mult);
+        self.nodes.push(Node { links: vec![Vec::new(); level + 1] });
+
+        let Some(entry) = self.entry else {
+            self.entry = Some(id);
+            self.max_level = level;
+            return id;
+        };
+
+        let mut cur = entry;
+        for l in ((level + 1)..=self.max_level).rev() {
+            cur = self.greedy(v, cur, l);
+        }
+        for l in (0..=level.min(self.max_level)).rev() {
+            let hits = self.search_level(v, cur, l, self.params.ef_construction);
+            cur = hits.first().map_or(cur, |h| h.id);
+            let neighbours = self.select(&hits, if l == 0 {
+                self.params.m * 2
+            } else {
+                self.params.m
+            });
+            for &n in &neighbours {
+                self.nodes[id as usize].links[l].push(n);
+                self.nodes[n as usize].links[l].push(id);
+                self.shrink(n, l);
+            }
+        }
+        if level > self.max_level {
+            self.max_level = level;
+            self.entry = Some(id);
+        }
+        id
+    }
+
+    fn search(&self, q: &[f32], k: usize) -> Vec<Hit> {
+        self.search_ef(q, k, self.params.ef_search)
+    }
+
+    fn len(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memo::index::BruteForceIndex;
+
+    fn random_vecs(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.next_gaussian()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn empty_index_returns_nothing() {
+        let idx = Hnsw::new(4, HnswParams::default());
+        assert!(idx.search(&[0.0; 4], 3).is_empty());
+    }
+
+    #[test]
+    fn single_element() {
+        let mut idx = Hnsw::new(2, HnswParams::default());
+        idx.add(&[1.0, 2.0]);
+        let hits = idx.search(&[1.0, 2.0], 1);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].id, 0);
+        assert!(hits[0].dist_sq < 1e-9);
+    }
+
+    #[test]
+    fn exact_match_found() {
+        let vecs = random_vecs(200, 16, 1);
+        let mut idx = Hnsw::new(16, HnswParams::default());
+        for v in &vecs {
+            idx.add(v);
+        }
+        for probe in [0usize, 57, 123, 199] {
+            let hits = idx.search(&vecs[probe], 1);
+            assert_eq!(hits[0].id, probe as u32, "probe {probe}");
+        }
+    }
+
+    #[test]
+    fn recall_at_10_vs_bruteforce() {
+        let dim = 16;
+        let vecs = random_vecs(500, dim, 2);
+        let mut hnsw = Hnsw::new(dim, HnswParams::default());
+        let mut bf = BruteForceIndex::new(dim);
+        for v in &vecs {
+            hnsw.add(v);
+            bf.add(v);
+        }
+        let queries = random_vecs(50, dim, 3);
+        let mut found = 0usize;
+        let mut total = 0usize;
+        for q in &queries {
+            let exact: Vec<u32> =
+                bf.search(q, 10).into_iter().map(|h| h.id).collect();
+            let approx: Vec<u32> =
+                hnsw.search_ef(q, 10, 64).into_iter().map(|h| h.id).collect();
+            total += exact.len();
+            found += exact.iter().filter(|e| approx.contains(e)).count();
+        }
+        let recall = found as f64 / total as f64;
+        assert!(recall > 0.9, "recall {recall}");
+    }
+
+    #[test]
+    fn results_sorted_and_unique() {
+        let vecs = random_vecs(300, 8, 4);
+        let mut idx = Hnsw::new(8, HnswParams::default());
+        for v in &vecs {
+            idx.add(v);
+        }
+        let hits = idx.search(&vecs[5], 20);
+        for w in hits.windows(2) {
+            assert!(w[0].dist_sq <= w[1].dist_sq);
+        }
+        let mut ids: Vec<u32> = hits.iter().map(|h| h.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), hits.len());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let vecs = random_vecs(100, 8, 5);
+        let build = || {
+            let mut idx = Hnsw::new(8, HnswParams::default());
+            for v in &vecs {
+                idx.add(v);
+            }
+            idx.search(&vecs[0], 5)
+        };
+        assert_eq!(build(), build());
+    }
+}

@@ -1,0 +1,30 @@
+//! The index database (paper §5.3): approximate nearest-neighbour search
+//! over hidden-state embeddings. HNSW (the paper uses Faiss-HNSW) is
+//! implemented from scratch, with an exact brute-force index as the
+//! search-quality baseline (paper Fig. 7).
+
+pub mod bruteforce;
+pub mod hnsw;
+
+pub use bruteforce::BruteForceIndex;
+pub use hnsw::{Hnsw, HnswParams};
+
+/// A (vector id, squared-L2 distance) search hit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hit {
+    pub id: u32,
+    pub dist_sq: f32,
+}
+
+/// Common interface over the exact and approximate indexes.
+pub trait VectorIndex {
+    /// Insert a vector; ids are assigned densely in insertion order.
+    fn add(&mut self, v: &[f32]) -> u32;
+    /// `k` nearest neighbours of `q`, nearest first.
+    fn search(&self, q: &[f32], k: usize) -> Vec<Hit>;
+    /// Number of stored vectors.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

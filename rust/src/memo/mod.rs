@@ -1,0 +1,28 @@
+//! The AttMemo memoization engine — the paper's contribution.
+//!
+//! * [`arena`] / [`attdb`] — the attention database (pre-computed APMs in
+//!   page-aligned big memory, per layer).
+//! * [`gather`] — copy vs memory-mapped APM batch gathering (§5.3).
+//! * [`index`] — the index database: HNSW over hidden-state embeddings.
+//! * [`embedder`] — runs the MLP embedding executable (§5.2).
+//! * [`thresholds`] — conservative/moderate/aggressive levels (Table 2).
+//! * [`policy`] — selective memoization performance model (Eq. 3, §5.4).
+//! * [`builder`] — offline DB population from the training set.
+//! * [`stats`] — reuse counters and hit-rate accounting (Fig. 11).
+
+pub mod arena;
+pub mod attdb;
+pub mod builder;
+pub mod embedder;
+pub mod gather;
+pub mod index;
+pub mod persist;
+pub mod policy;
+pub mod stats;
+pub mod thresholds;
+
+pub use arena::{ApmArena, ApmId};
+pub use attdb::AttentionDb;
+pub use builder::DbBuilder;
+pub use policy::{LayerProfile, SelectivePolicy};
+pub use stats::MemoStats;

@@ -1,0 +1,328 @@
+//! Attention-database persistence.
+//!
+//! The paper's database is pre-populated once during training and then
+//! served from big memory; rebuilding it per process (replaying the
+//! training set through the model) is the expensive part. This module
+//! saves a `BuiltDb` to one binary file and restores it without touching
+//! the model: features + APM payloads per layer, the calibrated
+//! thresholds, the Eq. 3 profiles, and the similarity samples. The HNSW
+//! index is rebuilt deterministically from the stored features (same
+//! seed ⇒ same graph), which keeps the format independent of the index's
+//! in-memory layout.
+//!
+//! Format (little-endian): magic `ATDB`, u32 version, header numbers,
+//! then per layer: entry count, features `[n, dim]` f32, APMs
+//! `[n, elems]` f32, similarity samples, profile, reuse counters.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::config::ModelConfig;
+use crate::memo::attdb::AttentionDb;
+use crate::memo::builder::BuiltDb;
+use crate::memo::index::HnswParams;
+use crate::memo::policy::LayerProfile;
+use crate::memo::thresholds::Thresholds;
+use crate::memo::ApmId;
+use crate::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"ATDB";
+const VERSION: u32 = 2;
+
+fn w_u32(w: &mut impl Write, x: u32) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_u64(w: &mut impl Write, x: u64) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_f64(w: &mut impl Write, x: f64) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    w_u64(w, xs.len() as u64)?;
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn r_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn r_f64(r: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+fn r_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let n = r_u64(r)? as usize;
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Save a built database to `path`.
+pub fn save(built: &BuiltDb, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    w_u32(&mut w, VERSION)?;
+    w_u32(&mut w, built.db.num_layers() as u32)?;
+    w_u32(&mut w, built.db.seq_len as u32)?;
+    w_u32(&mut w, built.db.apm_elems() as u32)?;
+    w_u32(&mut w, built.db.embed_dim() as u32)?;
+    w_u64(&mut w, built.sequences as u64)?;
+    w_f64(&mut w, built.indexing_seconds)?;
+    w_f64(&mut w, built.build_seconds)?;
+    for t in [built.thresholds.conservative, built.thresholds.moderate,
+              built.thresholds.aggressive] {
+        w.write_all(&t.to_le_bytes())?;
+    }
+    for li in 0..built.db.num_layers() {
+        let layer = built.db.layer(li);
+        let n = layer.len();
+        w_u64(&mut w, n as u64)?;
+        for id in 0..n {
+            let f = layer.index_vector(ApmId(id as u32));
+            w.write_all(
+                unsafe {
+                    std::slice::from_raw_parts(
+                        f.as_ptr().cast::<u8>(),
+                        f.len() * 4,
+                    )
+                },
+            )?;
+        }
+        for id in 0..n {
+            let apm = layer.arena().get(ApmId(id as u32))?;
+            w.write_all(
+                unsafe {
+                    std::slice::from_raw_parts(
+                        apm.as_ptr().cast::<u8>(),
+                        apm.len() * 4,
+                    )
+                },
+            )?;
+        }
+        w_f32s(&mut w, &built.similarity_samples[li])?;
+        let p = &built.profiles[li];
+        for x in [p.t_attn, p.t_overhead, p.t_apply, p.t_fused, p.alpha] {
+            w_f64(&mut w, x)?;
+        }
+        w_u64(&mut w, p.profiled_tokens)?;
+    }
+    Ok(())
+}
+
+/// Load a database saved by [`save`]. `cfg` must match the family the DB
+/// was built with (validated against the stored dimensions).
+pub fn load(path: &Path, cfg: &ModelConfig,
+            hnsw: HnswParams) -> Result<BuiltDb> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::memo(format!("{}: not an ATDB file",
+                                       path.display())));
+    }
+    let version = r_u32(&mut r)?;
+    if version != VERSION {
+        return Err(Error::memo(format!("ATDB version {version} != {VERSION}")));
+    }
+    let layers = r_u32(&mut r)? as usize;
+    let seq_len = r_u32(&mut r)? as usize;
+    let apm_elems = r_u32(&mut r)? as usize;
+    let embed_dim = r_u32(&mut r)? as usize;
+    if layers != cfg.layers || apm_elems != cfg.apm_elems(seq_len)
+        || embed_dim != cfg.embed_dim
+    {
+        return Err(Error::memo(format!(
+            "ATDB dims (layers {layers}, elems {apm_elems}, dim {embed_dim}) \
+             do not match family {:?}",
+            cfg.family
+        )));
+    }
+    let sequences = r_u64(&mut r)? as usize;
+    let indexing_seconds = r_f64(&mut r)?;
+    let build_seconds = r_f64(&mut r)?;
+    let mut thr = [0f32; 3];
+    for t in thr.iter_mut() {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        *t = f32::from_le_bytes(b);
+    }
+    let thresholds = Thresholds {
+        conservative: thr[0],
+        moderate: thr[1],
+        aggressive: thr[2],
+    };
+
+    let mut db = AttentionDb::new(cfg, seq_len, hnsw);
+    let mut similarity_samples = Vec::with_capacity(layers);
+    let mut profiles = Vec::with_capacity(layers);
+    for li in 0..layers {
+        let n = r_u64(&mut r)? as usize;
+        let mut feat_bytes = vec![0u8; n * embed_dim * 4];
+        r.read_exact(&mut feat_bytes)?;
+        let feats: Vec<f32> = feat_bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let mut apm_bytes = vec![0u8; n * apm_elems * 4];
+        r.read_exact(&mut apm_bytes)?;
+        let apms: Vec<f32> = apm_bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        db.insert_batch(li, &feats, &apms)?;
+        similarity_samples.push(r_f32s(&mut r)?);
+        let vals: Vec<f64> =
+            (0..5).map(|_| r_f64(&mut r)).collect::<Result<_>>()?;
+        profiles.push(LayerProfile {
+            t_attn: vals[0],
+            t_overhead: vals[1],
+            t_apply: vals[2],
+            t_fused: vals[3],
+            alpha: vals[4],
+            profiled_tokens: r_u64(&mut r)?,
+        });
+    }
+    Ok(BuiltDb {
+        db,
+        thresholds,
+        similarity_samples,
+        profiles,
+        indexing_seconds,
+        build_seconds,
+        sequences,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            family: "bert".into(),
+            vocab_size: 64,
+            hidden: 16,
+            layers: 2,
+            heads: 2,
+            ffn: 32,
+            max_len: 8,
+            num_classes: 2,
+            rel_pos_buckets: 4,
+            embed_dim: 8,
+            embed_hidden: 16,
+            embed_segments: 4,
+            causal: false,
+        }
+    }
+
+    fn demo_built() -> BuiltDb {
+        let c = cfg();
+        let mut db = AttentionDb::new(&c, 8, HnswParams::default());
+        let mut rng = Pcg32::seeded(5);
+        for li in 0..c.layers {
+            for _ in 0..6 {
+                let f: Vec<f32> =
+                    (0..c.embed_dim).map(|_| rng.next_gaussian()).collect();
+                let apm: Vec<f32> =
+                    (0..c.apm_elems(8)).map(|_| rng.next_f32()).collect();
+                db.layer_mut(li).insert(&f, &apm).unwrap();
+            }
+        }
+        BuiltDb {
+            db,
+            thresholds: Thresholds {
+                conservative: 0.9,
+                moderate: 0.8,
+                aggressive: 0.7,
+            },
+            similarity_samples: vec![vec![0.5, 0.9], vec![0.3]],
+            profiles: vec![
+                LayerProfile {
+                    t_attn: 1.0,
+                    t_overhead: 0.1,
+                    t_apply: 0.2,
+                    t_fused: 1.1,
+                    alpha: 0.5,
+                    profiled_tokens: 64,
+                };
+                2
+            ],
+            indexing_seconds: 0.5,
+            build_seconds: 2.0,
+            sequences: 6,
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let built = demo_built();
+        let dir = std::env::temp_dir().join("attmemo_persist");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("db.atdb");
+        save(&built, &path).unwrap();
+        let loaded = load(&path, &cfg(), HnswParams::default()).unwrap();
+        assert_eq!(loaded.db.total_entries(), built.db.total_entries());
+        assert_eq!(loaded.sequences, 6);
+        assert_eq!(loaded.thresholds.moderate, 0.8);
+        assert_eq!(loaded.similarity_samples, built.similarity_samples);
+        assert_eq!(loaded.profiles[0].profiled_tokens, 64);
+        // Payloads survive byte-exactly.
+        for li in 0..2 {
+            for id in 0..6u32 {
+                assert_eq!(
+                    loaded.db.layer(li).arena().get(ApmId(id)).unwrap(),
+                    built.db.layer(li).arena().get(ApmId(id)).unwrap()
+                );
+            }
+        }
+        // The rebuilt index finds the same nearest entry.
+        let f = built.db.layer(0).index_vector(ApmId(3)).to_vec();
+        let hit = loaded.db.layer(0).lookup(&f, 32).unwrap();
+        assert_eq!(hit.id, ApmId(3));
+    }
+
+    #[test]
+    fn load_rejects_wrong_family_dims() {
+        let built = demo_built();
+        let dir = std::env::temp_dir().join("attmemo_persist2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("db.atdb");
+        save(&built, &path).unwrap();
+        let mut other = cfg();
+        other.embed_dim = 16;
+        assert!(load(&path, &other, HnswParams::default()).is_err());
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("attmemo_persist3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.atdb");
+        std::fs::write(&path, b"not a database").unwrap();
+        assert!(load(&path, &cfg(), HnswParams::default()).is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! Selective memoization (paper §5.4, Eq. 3).
+//!
+//! Per layer i: `PBᵢ = T_attnᵢ · αᵢ − T_overheadᵢ`; memoization is
+//! attempted only where `PBᵢ > 0`. `T_attn` (score-computation time),
+//! `T_overhead` (embedding + search + mapping) and `α` (layer hit rate)
+//! are measured offline on the training set by `DbBuilder`, then scaled
+//! online by the ratio of inference-batch token count to profiled token
+//! count (the paper's linear-scaling rule).
+
+/// Offline profile of one layer.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerProfile {
+    /// Seconds to compute attention scores for the profiled token count.
+    pub t_attn: f64,
+    /// Seconds of memoization overhead (embed + search + map) for the same.
+    pub t_overhead: f64,
+    /// Seconds of the memoized remainder (`attn_apply`).
+    pub t_apply: f64,
+    /// Seconds of the fused non-memoized layer (`layer_full`).
+    pub t_fused: f64,
+    /// Layer memoization rate α measured on the training set.
+    pub alpha: f64,
+    /// Token count the timings were measured over (batch × seq).
+    pub profiled_tokens: u64,
+}
+
+impl LayerProfile {
+    /// Fused-aware Eq. 3 (§Perf extension, see DESIGN.md): the paper's
+    /// `PB = T_attn·α − T_overhead` assumes skipping scores is the whole
+    /// story; on this runtime the non-memoized path is a *fused* kernel
+    /// that is cheaper than split scores+apply, so the honest benefit is
+    ///
+    ///   PB = T_fused − (T_overhead + (1−α)·T_attn + T_apply)
+    ///
+    /// which reduces to the paper's form when T_fused ≈ T_attn + T_apply.
+    pub fn benefit(&self, tokens: u64) -> f64 {
+        let scale = if self.profiled_tokens == 0 {
+            1.0
+        } else {
+            tokens as f64 / self.profiled_tokens as f64
+        };
+        let memo_cost =
+            self.t_overhead + (1.0 - self.alpha) * self.t_attn + self.t_apply;
+        (self.t_fused - memo_cost) * scale
+    }
+}
+
+/// The per-layer decision table.
+#[derive(Debug, Clone)]
+pub struct SelectivePolicy {
+    layers: Vec<LayerProfile>,
+    /// Disabled ⇒ always attempt (the "no selective memoization" baseline).
+    pub enabled: bool,
+}
+
+impl SelectivePolicy {
+    pub fn new(layers: Vec<LayerProfile>, enabled: bool) -> Self {
+        SelectivePolicy { layers, enabled }
+    }
+
+    /// Policy that always attempts memoization (profile-free).
+    pub fn always(num_layers: usize) -> Self {
+        SelectivePolicy {
+            layers: vec![
+                LayerProfile {
+                    t_attn: 1.0,
+                    t_overhead: 0.0,
+                    t_apply: 0.0,
+                    t_fused: 2.0,
+                    alpha: 1.0,
+                    profiled_tokens: 1,
+                };
+                num_layers
+            ],
+            enabled: false,
+        }
+    }
+
+    pub fn profiles(&self) -> &[LayerProfile] {
+        &self.layers
+    }
+
+    /// Should layer `i` attempt memoization for a batch of `tokens`?
+    pub fn attempt(&self, layer: usize, tokens: u64) -> bool {
+        if !self.enabled {
+            return true;
+        }
+        self.layers
+            .get(layer)
+            .map_or(true, |p| p.benefit(tokens) > 0.0)
+    }
+
+    /// Layers that would attempt at a given token count.
+    pub fn active_layers(&self, tokens: u64) -> Vec<usize> {
+        (0..self.layers.len())
+            .filter(|&i| self.attempt(i, tokens))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prof(t_attn: f64, t_overhead: f64, alpha: f64) -> LayerProfile {
+        // t_fused = t_attn + t_apply reduces the fused-aware form to the
+        // paper's `PB = t_attn·α − t_overhead`.
+        LayerProfile { t_attn, t_overhead, t_apply: 0.5, t_fused: 1.5,
+                       alpha, profiled_tokens: 1000 }
+    }
+
+    #[test]
+    fn eq3_sign_drives_decision() {
+        // with t_fused = t_attn + t_apply: benefit = t_attn*alpha - t_overhead
+        let pol = SelectivePolicy::new(
+            vec![
+                prof(1.0, 0.2, 0.5), // 0.3 > 0 → attempt
+                prof(1.0, 0.6, 0.5), // -0.1 < 0 → skip
+                prof(1.0, 0.5, 0.5), // 0 → skip (strict >)
+            ],
+            true,
+        );
+        assert!(pol.attempt(0, 1000));
+        assert!(!pol.attempt(1, 1000));
+        assert!(!pol.attempt(2, 1000));
+        assert_eq!(pol.active_layers(1000), vec![0]);
+    }
+
+    #[test]
+    fn fused_advantage_disables_low_alpha_layers() {
+        // A fast fused path (t_fused < split cost) demands higher alpha.
+        let p = LayerProfile { t_attn: 1.0, t_overhead: 0.05, t_apply: 0.25,
+                               t_fused: 1.0, alpha: 0.2,
+                               profiled_tokens: 1000 };
+        assert!(p.benefit(1000) < 0.0);
+        let p2 = LayerProfile { alpha: 0.9, ..p };
+        assert!(p2.benefit(1000) > 0.0);
+    }
+
+    #[test]
+    fn scaling_is_sign_preserving() {
+        // Linear scaling multiplies both terms; the decision must not flip
+        // with token count.
+        let pol = SelectivePolicy::new(vec![prof(1.0, 0.6, 0.5)], true);
+        assert!(!pol.attempt(0, 10));
+        assert!(!pol.attempt(0, 1_000_000));
+    }
+
+    #[test]
+    fn disabled_policy_always_attempts() {
+        let pol = SelectivePolicy::new(vec![prof(1.0, 9.0, 0.1)], false);
+        assert!(pol.attempt(0, 1000));
+        let pol2 = SelectivePolicy::always(3);
+        assert_eq!(pol2.active_layers(1), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn out_of_range_layer_defaults_to_attempt() {
+        let pol = SelectivePolicy::new(vec![], true);
+        assert!(pol.attempt(5, 100));
+    }
+}

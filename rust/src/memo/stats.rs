@@ -1,0 +1,106 @@
+//! Memoization accounting: hit/miss/attempt counters per layer, the
+//! paper's memoization rate (Eq. 2), and per-stage timing for Table 4.
+
+use crate::util::stats::Summary;
+
+/// Per-stage latency breakdown of a memoized self-attention (paper
+/// Table 4 rows).
+#[derive(Debug, Default)]
+pub struct StageTimes {
+    pub embedding_ms: Summary,
+    pub search_ms: Summary,
+    pub mapping_ms: Summary,
+    pub scores_ms: Summary,
+    pub apply_ms: Summary,
+}
+
+/// Counters for one layer.
+#[derive(Debug, Default, Clone)]
+pub struct LayerCounters {
+    /// Sequences for which memoization was attempted (embedding + search).
+    pub attempts: u64,
+    /// Attempts whose similarity cleared the threshold (APM reused).
+    pub hits: u64,
+    /// Sequences that skipped the attempt entirely (selective policy).
+    pub skipped: u64,
+    /// Sequences processed through this layer in total.
+    pub total: u64,
+}
+
+/// Whole-engine memoization statistics.
+#[derive(Debug, Default)]
+pub struct MemoStats {
+    pub layers: Vec<LayerCounters>,
+    pub stages: StageTimes,
+}
+
+impl MemoStats {
+    pub fn new(num_layers: usize) -> Self {
+        MemoStats {
+            layers: vec![LayerCounters::default(); num_layers],
+            stages: StageTimes::default(),
+        }
+    }
+
+    /// Paper Eq. 2: `ms = M / (N × L)` — successful memoizations over
+    /// (sequences × layers).
+    pub fn memoization_rate(&self) -> f64 {
+        let hits: u64 = self.layers.iter().map(|l| l.hits).sum();
+        let n: u64 = self.layers.first().map_or(0, |l| l.total);
+        let denom = n * self.layers.len() as u64;
+        if denom == 0 {
+            0.0
+        } else {
+            hits as f64 / denom as f64
+        }
+    }
+
+    /// Per-layer memoization rate (Eq. 2 with L = 1).
+    pub fn layer_rate(&self, layer: usize) -> f64 {
+        let l = &self.layers[layer];
+        if l.total == 0 {
+            0.0
+        } else {
+            l.hits as f64 / l.total as f64
+        }
+    }
+
+    /// Hit rate among attempted lookups.
+    pub fn attempt_hit_rate(&self, layer: usize) -> f64 {
+        let l = &self.layers[layer];
+        if l.attempts == 0 {
+            0.0
+        } else {
+            l.hits as f64 / l.attempts as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates() {
+        let mut s = MemoStats::new(2);
+        for l in &mut s.layers {
+            l.total = 10;
+        }
+        s.layers[0].attempts = 10;
+        s.layers[0].hits = 5;
+        s.layers[1].attempts = 4;
+        s.layers[1].hits = 1;
+        s.layers[1].skipped = 6;
+        assert!((s.memoization_rate() - 6.0 / 20.0).abs() < 1e-12);
+        assert!((s.layer_rate(0) - 0.5).abs() < 1e-12);
+        assert!((s.attempt_hit_rate(1) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let s = MemoStats::new(0);
+        assert_eq!(s.memoization_rate(), 0.0);
+        let s2 = MemoStats::new(3);
+        assert_eq!(s2.memoization_rate(), 0.0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Memoization thresholds (paper Table 2).
+//!
+//! The paper pins per-model absolute thresholds on the Eq. 1 similarity
+//! scale. Our thresholds apply to the *search-estimated* similarity
+//! `1 − ‖e(q) − e(db)‖₂` returned by the index database, whose scale
+//! depends on the trained embedder; so the per-family defaults here are
+//! expressed as quantiles calibrated during DB building (`DbBuilder`
+//! records the distance distribution) with Table 2-like spacing between
+//! the three levels. A fixed absolute override is available for
+//! experiments that sweep the threshold explicitly (Fig. 4).
+
+use crate::config::MemoLevel;
+
+/// Calibrated thresholds for one family.
+#[derive(Debug, Clone, Copy)]
+pub struct Thresholds {
+    pub conservative: f32,
+    pub moderate: f32,
+    pub aggressive: f32,
+}
+
+impl Thresholds {
+    /// Threshold for a level (`Off` returns +∞ so nothing ever memoizes).
+    pub fn for_level(&self, level: MemoLevel) -> f32 {
+        match level {
+            MemoLevel::Off => f32::INFINITY,
+            MemoLevel::Conservative => self.conservative,
+            MemoLevel::Moderate => self.moderate,
+            MemoLevel::Aggressive => self.aggressive,
+        }
+    }
+
+    /// Calibrate from a sample of estimated similarities observed between
+    /// training queries and their nearest database entries.
+    ///
+    /// Conservative admits roughly the top 30% most-similar lookups,
+    /// moderate ~50%, aggressive ~70% — mirroring the relative spacing the
+    /// paper's absolute values produce on its models (Table 2 / Fig. 4).
+    pub fn calibrate(mut sims: Vec<f32>) -> Thresholds {
+        if sims.is_empty() {
+            // No data: thresholds that admit only near-exact matches.
+            return Thresholds {
+                conservative: 0.95,
+                moderate: 0.9,
+                aggressive: 0.85,
+            };
+        }
+        sims.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |frac: f64| -> f32 {
+            let idx = ((sims.len() - 1) as f64 * frac).round() as usize;
+            sims[idx]
+        };
+        Thresholds {
+            conservative: q(0.70),
+            moderate: q(0.50),
+            aggressive: q(0.30),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_are_ordered() {
+        let sims: Vec<f32> = (0..100).map(|i| i as f32 / 100.0).collect();
+        let t = Thresholds::calibrate(sims);
+        assert!(t.conservative >= t.moderate);
+        assert!(t.moderate >= t.aggressive);
+    }
+
+    #[test]
+    fn off_never_memoizes() {
+        let t = Thresholds::calibrate(vec![0.5; 10]);
+        assert_eq!(t.for_level(MemoLevel::Off), f32::INFINITY);
+        assert!(t.for_level(MemoLevel::Aggressive).is_finite());
+    }
+
+    #[test]
+    fn empty_calibration_is_conservative() {
+        let t = Thresholds::calibrate(vec![]);
+        assert!(t.conservative > t.aggressive);
+        assert!(t.conservative >= 0.9);
+    }
+
+    #[test]
+    fn quantiles_admit_expected_fractions() {
+        let sims: Vec<f32> = (0..1000).map(|i| i as f32 / 1000.0).collect();
+        let t = Thresholds::calibrate(sims.clone());
+        let admitted = |thr: f32| {
+            sims.iter().filter(|&&s| s >= thr).count() as f64
+                / sims.len() as f64
+        };
+        assert!((admitted(t.conservative) - 0.30).abs() < 0.02);
+        assert!((admitted(t.moderate) - 0.50).abs() < 0.02);
+        assert!((admitted(t.aggressive) - 0.70).abs() < 0.02);
+    }
+}

@@ -1,0 +1,104 @@
+//! Big-memory tier simulator (DESIGN.md §2 substitution).
+//!
+//! The paper's attention database lives on Intel Optane DC behind a DRAM
+//! hardware cache ("memory mode"). This box has plain DRAM, so benches that
+//! report absolute DB-access costs (Table 6, Fig. 13) apply this analytic
+//! model on top of measured DRAM numbers: a fetch of `bytes` from the cold
+//! tier costs `latency + bytes/bandwidth`, with a DRAM-cache hit
+//! probability short-circuiting to DRAM cost. Parameters default to
+//! published Optane DC characteristics (~300 ns load latency, ~6.6 GB/s
+//! per-DIMM sequential read — Izraelevitz et al. 2019), and the Fig. 11
+//! reuse analysis justifies the low default hit probability: APM accesses
+//! have no hot set, so the DRAM cache rarely helps.
+
+/// Analytic two-tier memory model.
+#[derive(Debug, Clone, Copy)]
+pub struct TierModel {
+    /// Extra latency per access that misses DRAM (seconds).
+    pub cold_latency_s: f64,
+    /// Cold-tier sequential bandwidth (bytes/second).
+    pub cold_bw: f64,
+    /// DRAM bandwidth (bytes/second).
+    pub dram_bw: f64,
+    /// Probability an access hits the DRAM cache.
+    pub dram_hit_prob: f64,
+}
+
+impl TierModel {
+    /// Optane-DC-like defaults (memory mode, low reuse → 10% hit rate).
+    pub fn optane() -> Self {
+        TierModel {
+            cold_latency_s: 300e-9,
+            cold_bw: 6.6e9,
+            dram_bw: 25e9,
+            dram_hit_prob: 0.10,
+        }
+    }
+
+    /// Pure-DRAM model (what this box actually measures).
+    pub fn dram() -> Self {
+        TierModel {
+            cold_latency_s: 0.0,
+            cold_bw: 25e9,
+            dram_bw: 25e9,
+            dram_hit_prob: 1.0,
+        }
+    }
+
+    /// Expected seconds to fetch `bytes` once.
+    pub fn fetch_seconds(&self, bytes: usize) -> f64 {
+        let dram = bytes as f64 / self.dram_bw;
+        let cold = self.cold_latency_s + bytes as f64 / self.cold_bw;
+        self.dram_hit_prob * dram + (1.0 - self.dram_hit_prob) * cold
+    }
+
+    /// Expected seconds for a *copy-based* gather of `n` entries of
+    /// `entry_bytes` (read cold + write DRAM — the paper's two reads one
+    /// write chain collapses to read-cold + write-dram here).
+    pub fn copy_gather_seconds(&self, n: usize, entry_bytes: usize) -> f64 {
+        n as f64
+            * (self.fetch_seconds(entry_bytes)
+                + entry_bytes as f64 / self.dram_bw)
+    }
+
+    /// Expected seconds for a *mapping-based* gather: page-table updates
+    /// only (`n` mmap calls), data moves lazily on compute access (charged
+    /// to compute, as in the paper's accounting).
+    pub fn map_gather_seconds(&self, n: usize, syscall_s: f64) -> f64 {
+        n as f64 * syscall_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_fetch_slower_than_dram() {
+        let m = TierModel::optane();
+        let d = TierModel::dram();
+        let bytes = 256 * 1024;
+        assert!(m.fetch_seconds(bytes) > d.fetch_seconds(bytes));
+    }
+
+    #[test]
+    fn mapping_beats_copy_by_orders_of_magnitude() {
+        let m = TierModel::optane();
+        // 64 APMs of 256 KiB, 2 µs per mmap syscall.
+        let copy = m.copy_gather_seconds(64, 256 * 1024);
+        let map = m.map_gather_seconds(64, 2e-6);
+        // The analytic floor is ~20×; the measured gap (Table 6 bench) is
+        // far larger because the copy path also pays allocator + framework
+        // costs that this model deliberately excludes.
+        assert!(copy / map > 10.0, "copy {copy} map {map}");
+    }
+
+    #[test]
+    fn hit_prob_one_is_pure_dram() {
+        let mut m = TierModel::optane();
+        m.dram_hit_prob = 1.0;
+        let bytes = 4096;
+        assert!((m.fetch_seconds(bytes) - bytes as f64 / m.dram_bw).abs()
+            < 1e-12);
+    }
+}

@@ -1,0 +1,393 @@
+//! `ModelRunner`: executes one model family layer-by-layer through the
+//! PJRT executables, which is what lets the memoization engine intercept
+//! each layer's APM.
+//!
+//! Two forward paths exist:
+//! * **fused** — `embed → layer_full× → head`, the non-memoized baseline;
+//! * **split** — `embed → (attn_scores → attn_apply)× → head`, where the
+//!   engine may replace `attn_scores` output with a database APM.
+//!
+//! Graphs are lowered at fixed batch sizes; the runner pads a smaller batch
+//! up to the nearest lowered size and slices the outputs back.
+//!
+//! §Perf: arguments are passed as *device buffers* (`execute_b`). Weight
+//! buffers are uploaded once per (graph, layer) and cached in an `ArgPlan`;
+//! a call uploads only its activations. The engine additionally shares one
+//! uploaded hidden-state buffer across the three executables a memoized
+//! layer touches (`mlp_embed`, `attn_scores`, `attn_apply`).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::config::ModelConfig;
+use crate::runtime::{GraphKey, Runtime, WeightSet};
+use crate::tensor::tensor::IdTensor;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// One executable argument: a resident weight buffer or the i-th activation
+/// supplied at call time.
+enum Slot {
+    Weight(xla::PjRtBuffer),
+    Act(usize),
+}
+
+/// Cached argument plan for one (graph, layer) pair.
+struct ArgPlan {
+    slots: Vec<Slot>,
+    /// Activation names in the order the caller must supply them.
+    act_names: Vec<String>,
+}
+
+/// Executes one family (dense or a sparse variant — same graphs, different
+/// `WeightSet`).
+pub struct ModelRunner {
+    runtime: Arc<Runtime>,
+    cfg: ModelConfig,
+    weights: Arc<WeightSet>,
+    family: String,
+    plans: Mutex<HashMap<(GraphKey, Option<usize>), Arc<ArgPlan>>>,
+}
+
+impl ModelRunner {
+    pub fn new(runtime: Arc<Runtime>, family: &str,
+               weights: Arc<WeightSet>) -> Result<Self> {
+        let cfg = runtime.artifacts().family(family)?.config.clone();
+        Ok(ModelRunner {
+            runtime,
+            cfg,
+            weights,
+            family: family.into(),
+            plans: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Load a family with its dense weights.
+    pub fn load(runtime: Arc<Runtime>, family: &str) -> Result<Self> {
+        let info = runtime.artifacts().family(family)?;
+        let ws = WeightSet::load(runtime.artifacts().root(), &info.weights,
+                                 &info.tensors)?;
+        Self::new(runtime, family, Arc::new(ws))
+    }
+
+    /// Load a sparse variant (§6.8) by tag, e.g. `sparse85`.
+    pub fn load_sparse(runtime: Arc<Runtime>, family: &str,
+                       tag: &str) -> Result<Self> {
+        let info = runtime.artifacts().family(family)?;
+        let sv = info
+            .sparse_variants
+            .iter()
+            .find(|v| v.tag == tag)
+            .ok_or_else(|| {
+                Error::config(format!("no sparse variant {tag:?} for {family}"))
+            })?;
+        let ws = WeightSet::load(runtime.artifacts().root(), &sv.weights,
+                                 &sv.tensors)?;
+        Self::new(runtime, family, Arc::new(ws))
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn family(&self) -> &str {
+        &self.family
+    }
+
+    pub fn weights(&self) -> &WeightSet {
+        &self.weights
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Smallest lowered batch that fits `want` for a graph kind.
+    pub fn fit_batch(&self, kind: &str, seq_len: usize,
+                     want: usize) -> Result<usize> {
+        self.runtime.fit_batch(&self.family, kind, seq_len, want)
+    }
+
+    // -- device-buffer plumbing ---------------------------------------------
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        Ok(self
+            .runtime
+            .client()
+            .buffer_from_host_buffer(t.data(), t.shape(), None)?)
+    }
+
+    /// Upload an i32 id tensor to the device.
+    pub fn upload_ids(&self, t: &IdTensor) -> Result<xla::PjRtBuffer> {
+        Ok(self
+            .runtime
+            .client()
+            .buffer_from_host_buffer(&t.data, &t.shape, None)?)
+    }
+
+    /// Pad a `[n, …]` hidden tensor to the lowered batch for `kind` and
+    /// upload it once; returns (buffer, padded batch).
+    pub fn upload_padded(&self, t: &Tensor, kind: &str)
+        -> Result<(xla::PjRtBuffer, usize)> {
+        let (n, l) = (t.shape()[0], t.shape()[1]);
+        let b = self.fit_batch(kind, l, n)?;
+        let padded = pad0(t, b)?;
+        Ok((self.upload(&padded)?, b))
+    }
+
+    /// Fetch (building if absent) the argument plan for a graph/layer.
+    fn plan(&self, key: &GraphKey, act_names: &[&str],
+            layer: Option<usize>) -> Result<Arc<ArgPlan>> {
+        if let Some(p) = self.plans.lock().unwrap().get(&(key.clone(), layer))
+        {
+            debug_assert_eq!(p.act_names, act_names);
+            return Ok(p.clone());
+        }
+        let info = self.runtime.artifacts().graph(key)?;
+        let mut slots = Vec::with_capacity(info.params.len());
+        for p in &info.params {
+            if let Some(i) = act_names.iter().position(|n| n == p) {
+                slots.push(Slot::Act(i));
+            } else {
+                // Resolve (layer-scoped first) and upload the weight once.
+                let name = match layer {
+                    Some(li)
+                        if self
+                            .weights
+                            .tensor(&format!("l{li}_{p}"))
+                            .is_ok() =>
+                    {
+                        format!("l{li}_{p}")
+                    }
+                    _ => p.clone(),
+                };
+                let t = self.weights.tensor(&name)?;
+                slots.push(Slot::Weight(
+                    self.runtime
+                        .client()
+                        .buffer_from_host_buffer(t.data(), t.shape(), None)?,
+                ));
+            }
+        }
+        let plan = Arc::new(ArgPlan {
+            slots,
+            act_names: act_names.iter().map(|s| s.to_string()).collect(),
+        });
+        self.plans
+            .lock()
+            .unwrap()
+            .insert((key.clone(), layer), plan.clone());
+        Ok(plan)
+    }
+
+    /// Execute a graph with activation buffers; weights come from the plan.
+    fn run_with(&self, kind: &str, seq_len: usize, batch: usize,
+                act_names: &[&str], acts: &[&xla::PjRtBuffer],
+                layer: Option<usize>) -> Result<Tensor> {
+        let key = GraphKey::new(&self.family, kind, batch, seq_len);
+        let exe = self.runtime.executable(&key)?;
+        let plan = self.plan(&key, act_names, layer)?;
+        let args: Vec<&xla::PjRtBuffer> = plan
+            .slots
+            .iter()
+            .map(|s| match s {
+                Slot::Weight(b) => b,
+                Slot::Act(i) => acts[*i],
+            })
+            .collect();
+        exe.run_buffers(&args)
+    }
+
+    // -- graph wrappers (all pad to the lowered batch and slice back) ------
+
+    /// Token ids → hidden states.
+    pub fn embed(&self, ids: &IdTensor) -> Result<Tensor> {
+        let (n, l) = (ids.shape[0], ids.shape[1]);
+        let b = self.fit_batch("embed", l, n)?;
+        let padded = pad_ids(ids, b)?;
+        let buf = self.upload_ids(&padded)?;
+        let out = self.run_with("embed", l, b, &["ids"], &[&buf], None)?;
+        slice_batch(out, n)
+    }
+
+    /// Hidden → APM `[n, heads, L, L]` for one layer.
+    pub fn attn_scores(&self, hidden: &Tensor, layer: usize) -> Result<Tensor> {
+        let n = hidden.shape()[0];
+        let (buf, b) = self.upload_padded(hidden, "attn_scores")?;
+        let out = self.attn_scores_from(&buf, b, hidden.shape()[1], layer)?;
+        slice_batch(out, n)
+    }
+
+    /// `attn_scores` over an already-uploaded padded hidden buffer.
+    pub fn attn_scores_from(&self, hidden: &xla::PjRtBuffer, batch: usize,
+                            seq_len: usize, layer: usize) -> Result<Tensor> {
+        self.run_with("attn_scores", seq_len, batch, &["hidden"], &[hidden],
+                      Some(layer))
+    }
+
+    /// (hidden, APM) → next hidden for one layer. `apm` may come from
+    /// `attn_scores` or from the attention database.
+    pub fn attn_apply(&self, hidden: &Tensor, apm: &Tensor,
+                      layer: usize) -> Result<Tensor> {
+        let n = hidden.shape()[0];
+        let (hbuf, b) = self.upload_padded(hidden, "attn_apply")?;
+        let out = self.attn_apply_from(&hbuf, apm, b, hidden.shape()[1],
+                                       layer)?;
+        slice_batch(out, n)
+    }
+
+    /// `attn_apply` with a shared hidden buffer; the APM batch is padded
+    /// with uniform rows and uploaded here.
+    pub fn attn_apply_from(&self, hidden: &xla::PjRtBuffer, apm: &Tensor,
+                           batch: usize, seq_len: usize,
+                           layer: usize) -> Result<Tensor> {
+        let pa = pad_apm(apm, batch)?;
+        let abuf = self.upload(&pa)?;
+        self.run_with("attn_apply", seq_len, batch, &["hidden", "apm"],
+                      &[hidden, &abuf], Some(layer))
+    }
+
+    /// Fused layer (non-memoized fast path).
+    pub fn layer_full(&self, hidden: &Tensor, layer: usize) -> Result<Tensor> {
+        let n = hidden.shape()[0];
+        let (buf, b) = self.upload_padded(hidden, "layer_full")?;
+        let out = self.run_with("layer_full", hidden.shape()[1], b,
+                                &["hidden"], &[&buf], Some(layer))?;
+        slice_batch(out, n)
+    }
+
+    /// Final head: classifier logits `[n, C]` or LM logits `[n, L, V]`.
+    pub fn head(&self, hidden: &Tensor) -> Result<Tensor> {
+        let n = hidden.shape()[0];
+        let kind = if self.cfg.causal { "lm_head" } else { "classifier" };
+        let (buf, b) = self.upload_padded(hidden, kind)?;
+        let out = self.run_with(kind, hidden.shape()[1], b, &["hidden"],
+                                &[&buf], None)?;
+        slice_batch(out, n)
+    }
+
+    /// AttMemo embedding network: hidden → features `[n, embed_dim]`.
+    pub fn mlp_embed(&self, hidden: &Tensor) -> Result<Tensor> {
+        let n = hidden.shape()[0];
+        let (buf, b) = self.upload_padded(hidden, "mlp_embed")?;
+        let out = self.mlp_embed_from(&buf, b, hidden.shape()[1])?;
+        slice_batch(out, n)
+    }
+
+    /// `mlp_embed` over an already-uploaded padded hidden buffer.
+    pub fn mlp_embed_from(&self, hidden: &xla::PjRtBuffer, batch: usize,
+                          seq_len: usize) -> Result<Tensor> {
+        self.run_with("mlp_embed", seq_len, batch, &["hidden"], &[hidden],
+                      None)
+    }
+
+    /// Baseline end-to-end forward (fused layers, no memoization).
+    pub fn forward_baseline(&self, ids: &IdTensor) -> Result<Tensor> {
+        let mut h = self.embed(ids)?;
+        for li in 0..self.cfg.layers {
+            h = self.layer_full(&h, li)?;
+        }
+        self.head(&h)
+    }
+
+    /// Split forward that also returns each layer's (input hidden, APM) —
+    /// used by the offline DB builder.
+    pub fn forward_collect(&self, ids: &IdTensor)
+        -> Result<(Tensor, Vec<(Tensor, Tensor)>)> {
+        let mut h = self.embed(ids)?;
+        let mut collected = Vec::with_capacity(self.cfg.layers);
+        for li in 0..self.cfg.layers {
+            let apm = self.attn_scores(&h, li)?;
+            let next = self.attn_apply(&h, &apm, li)?;
+            collected.push((h, apm));
+            h = next;
+        }
+        let logits = self.head(&h)?;
+        Ok((logits, collected))
+    }
+}
+
+/// Pad ids `[n, L]` to `[b, L]` with PAD(0) rows.
+fn pad_ids(ids: &IdTensor, b: usize) -> Result<IdTensor> {
+    let (n, l) = (ids.shape[0], ids.shape[1]);
+    if n == b {
+        return Ok(ids.clone());
+    }
+    if n > b {
+        return Err(Error::shape(format!("pad_ids: {n} > {b}")));
+    }
+    let mut data = ids.data.clone();
+    data.resize(b * l, 0);
+    IdTensor::new(vec![b, l], data)
+}
+
+/// Pad a `[n, …]` f32 tensor with zero rows to `[b, …]`.
+fn pad0(t: &Tensor, b: usize) -> Result<Tensor> {
+    let n = t.shape()[0];
+    if n == b {
+        return Ok(t.clone());
+    }
+    if n > b {
+        return Err(Error::shape(format!("pad0: {n} > {b}")));
+    }
+    let row: usize = t.shape()[1..].iter().product();
+    let mut data = t.data().to_vec();
+    data.resize(b * row, 0.0);
+    let mut shape = t.shape().to_vec();
+    shape[0] = b;
+    Tensor::new(shape, data)
+}
+
+/// Pad an APM batch with uniform rows (keeps rows stochastic so softmax
+/// invariants hold in padded lanes).
+fn pad_apm(t: &Tensor, b: usize) -> Result<Tensor> {
+    let n = t.shape()[0];
+    if n == b {
+        return Ok(t.clone());
+    }
+    let l = *t.shape().last().unwrap();
+    let row: usize = t.shape()[1..].iter().product();
+    let mut data = t.data().to_vec();
+    data.resize(b * row, 1.0 / l as f32);
+    let mut shape = t.shape().to_vec();
+    shape[0] = b;
+    Tensor::new(shape, data)
+}
+
+/// Take the first `n` rows of an output tensor.
+fn slice_batch(t: Tensor, n: usize) -> Result<Tensor> {
+    if t.shape()[0] == n {
+        Ok(t)
+    } else {
+        t.slice0(0, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_helpers() {
+        let ids = IdTensor::new(vec![2, 3], vec![1, 2, 3, 4, 5, 6]).unwrap();
+        let p = pad_ids(&ids, 4).unwrap();
+        assert_eq!(p.shape, vec![4, 3]);
+        assert_eq!(&p.data[6..], &[0; 6]);
+        assert!(pad_ids(&ids, 1).is_err());
+
+        let t = Tensor::new(vec![1, 2], vec![1.0, 2.0]).unwrap();
+        let p = pad0(&t, 3).unwrap();
+        assert_eq!(p.shape(), &[3, 2]);
+        assert_eq!(p.data()[2..], [0.0; 4]);
+    }
+
+    #[test]
+    fn pad_apm_rows_remain_stochastic() {
+        let apm = Tensor::new(vec![1, 1, 2, 2], vec![1.0, 0.0, 0.5, 0.5])
+            .unwrap();
+        let p = pad_apm(&apm, 2).unwrap();
+        assert_eq!(p.shape(), &[2, 1, 2, 2]);
+        assert_eq!(&p.data()[4..], &[0.5, 0.5, 0.5, 0.5]);
+    }
+}

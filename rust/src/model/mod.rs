@@ -1,0 +1,5 @@
+//! Layer-wise transformer execution over the AOT artifacts.
+
+pub mod forward;
+
+pub use forward::ModelRunner;

@@ -1,0 +1,288 @@
+//! Artifact manifest: the single index written by `python/compile/aot.py`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::json::Json;
+use crate::config::ModelConfig;
+use crate::{Error, Result};
+
+/// Identifies one lowered HLO graph.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct GraphKey {
+    pub family: String,
+    pub kind: String,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl GraphKey {
+    pub fn new(family: &str, kind: &str, batch: usize, seq_len: usize) -> Self {
+        GraphKey {
+            family: family.into(),
+            kind: kind.into(),
+            batch,
+            seq_len,
+        }
+    }
+}
+
+/// One lowered graph's manifest entry.
+#[derive(Debug, Clone)]
+pub struct GraphInfo {
+    pub family: String,
+    pub kind: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub path: String,
+    /// Parameter names in HLO argument order (activations first).
+    pub params: Vec<String>,
+}
+
+/// One tensor inside a weights/fixtures bin.
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize, // elements
+    pub len: usize,    // elements
+    pub dtype: String, // "f32" | "i32"
+}
+
+/// A pruned variant of a family (§6.8).
+#[derive(Debug, Clone)]
+pub struct SparseVariant {
+    pub tag: String,
+    pub sparsity: f64,
+    pub weights: String,
+    pub tensors: Vec<TensorEntry>,
+    pub accuracy: f64,
+}
+
+/// A family's manifest entry.
+#[derive(Debug, Clone)]
+pub struct FamilyInfo {
+    pub config: ModelConfig,
+    pub weights: String,
+    pub tensors: Vec<TensorEntry>,
+    pub accuracy: f64,
+    pub sparse_variants: Vec<SparseVariant>,
+    pub fixtures: Option<FixtureInfo>,
+}
+
+/// Cross-language numeric test vectors.
+#[derive(Debug, Clone)]
+pub struct FixtureInfo {
+    pub path: String,
+    pub tensors: Vec<TensorEntry>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+/// A dataset exported by datagen.
+#[derive(Debug, Clone)]
+pub struct DatasetInfo {
+    pub path: String,
+    pub n: usize,
+    pub seq_len: usize,
+}
+
+/// Parsed `manifest.json` plus the artifacts root directory.
+pub struct Artifacts {
+    root: PathBuf,
+    pub vocab_size: usize,
+    pub serving_seq_len: usize,
+    pub serving_batches: Vec<usize>,
+    pub sweep_seq_lens: Vec<usize>,
+    families: HashMap<String, FamilyInfo>,
+    graphs: Vec<GraphInfo>,
+    graph_index: HashMap<GraphKey, usize>,
+    datasets: HashMap<String, DatasetInfo>,
+}
+
+fn parse_tensor_entries(v: &[Json]) -> Result<Vec<TensorEntry>> {
+    v.iter()
+        .map(|t| {
+            Ok(TensorEntry {
+                name: t.req_str("name")?.to_string(),
+                shape: t.usize_vec("shape")?,
+                offset: t.req_usize("offset")?,
+                len: t.req_usize("len")?,
+                dtype: t.req_str("dtype")?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Artifacts {
+    /// Load and validate `<root>/manifest.json`.
+    pub fn load(root: PathBuf) -> Result<Self> {
+        let manifest_path = root.join("manifest.json");
+        if !manifest_path.exists() {
+            return Err(Error::config(format!(
+                "no manifest at {} — run `make artifacts` first",
+                manifest_path.display()
+            )));
+        }
+        let m = Json::from_file(&manifest_path)?;
+        let vocab_size = m.req_usize("vocab_size")?;
+        let serving_seq_len = m.req_usize("serving_seq_len")?;
+        let serving_batches = m.usize_vec("serving_batches")?;
+        let sweep_seq_lens = m.usize_vec("sweep_seq_lens")?;
+
+        let mut families = HashMap::new();
+        for (name, f) in m
+            .req("families")?
+            .as_obj()
+            .ok_or_else(|| Error::Json("families not an object".into()))?
+        {
+            let mut sparse_variants = Vec::new();
+            if let Some(svs) = f.get("sparse_variants").and_then(Json::as_arr)
+            {
+                for sv in svs {
+                    sparse_variants.push(SparseVariant {
+                        tag: sv.req_str("tag")?.to_string(),
+                        sparsity: sv.req_f64("sparsity")?,
+                        weights: sv.req_str("weights")?.to_string(),
+                        tensors: parse_tensor_entries(sv.req_arr("tensors")?)?,
+                        accuracy: sv.req_f64("accuracy")?,
+                    });
+                }
+            }
+            let fixtures = match f.get("fixtures") {
+                Some(fx) => Some(FixtureInfo {
+                    path: fx.req_str("path")?.to_string(),
+                    tensors: parse_tensor_entries(fx.req_arr("tensors")?)?,
+                    batch: fx.req_usize("batch")?,
+                    seq_len: fx.req_usize("seq_len")?,
+                }),
+                None => None,
+            };
+            families.insert(
+                name.clone(),
+                FamilyInfo {
+                    config: ModelConfig::from_json(f.req("config")?)?,
+                    weights: f.req_str("weights")?.to_string(),
+                    tensors: parse_tensor_entries(f.req_arr("tensors")?)?,
+                    accuracy: f.req_f64("accuracy")?,
+                    sparse_variants,
+                    fixtures,
+                },
+            );
+        }
+
+        let mut graphs = Vec::new();
+        let mut graph_index = HashMap::new();
+        for g in m.req_arr("graphs")? {
+            let info = GraphInfo {
+                family: g.req_str("family")?.to_string(),
+                kind: g.req_str("kind")?.to_string(),
+                batch: g.req_usize("batch")?,
+                seq_len: g.req_usize("seq_len")?,
+                path: g.req_str("path")?.to_string(),
+                params: g
+                    .req_arr("params")?
+                    .iter()
+                    .map(|p| {
+                        p.as_str().map(str::to_string).ok_or_else(|| {
+                            Error::Json("graph params: non-string".into())
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+            };
+            let key = GraphKey::new(&info.family, &info.kind, info.batch,
+                                    info.seq_len);
+            graph_index.insert(key, graphs.len());
+            graphs.push(info);
+        }
+
+        let mut datasets = HashMap::new();
+        if let Some(ds) = m.get("datasets").and_then(Json::as_obj) {
+            for (name, d) in ds {
+                datasets.insert(
+                    name.clone(),
+                    DatasetInfo {
+                        path: d.req_str("path")?.to_string(),
+                        n: d.req_usize("n")?,
+                        seq_len: d.req_usize("seq_len")?,
+                    },
+                );
+            }
+        }
+
+        Ok(Artifacts {
+            root,
+            vocab_size,
+            serving_seq_len,
+            serving_batches,
+            sweep_seq_lens,
+            families,
+            graphs,
+            graph_index,
+            datasets,
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn family(&self, name: &str) -> Result<&FamilyInfo> {
+        self.families.get(name).ok_or_else(|| {
+            Error::config(format!("family {name:?} not in manifest"))
+        })
+    }
+
+    pub fn family_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.families.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn graphs(&self) -> &[GraphInfo] {
+        &self.graphs
+    }
+
+    pub fn graph(&self, key: &GraphKey) -> Result<&GraphInfo> {
+        self.graph_index
+            .get(key)
+            .map(|&i| &self.graphs[i])
+            .ok_or_else(|| Error::config(format!("graph {key:?} not lowered")))
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetInfo> {
+        self.datasets.get(name).ok_or_else(|| {
+            Error::config(format!("dataset {name:?} not in manifest"))
+        })
+    }
+
+    /// Load a dataset (ATDS format): returns (ids [n, seq], labels [n]).
+    pub fn load_dataset(&self, name: &str) -> Result<(crate::tensor::tensor::IdTensor, Vec<i32>)> {
+        let info = self.dataset(name)?;
+        let bytes = std::fs::read(self.root.join(&info.path))?;
+        if bytes.len() < 12 || &bytes[0..4] != b"ATDS" {
+            return Err(Error::config(format!("bad dataset file {}", info.path)));
+        }
+        let n = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        let seq = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let want = 12 + n * seq * 4 + n * 4;
+        if bytes.len() != want {
+            return Err(Error::config(format!(
+                "dataset {} truncated: {} != {want}",
+                info.path,
+                bytes.len()
+            )));
+        }
+        let mut ids = Vec::with_capacity(n * seq);
+        for i in 0..n * seq {
+            let o = 12 + i * 4;
+            ids.push(i32::from_le_bytes(bytes[o..o + 4].try_into().unwrap()));
+        }
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let o = 12 + n * seq * 4 + i * 4;
+            labels.push(i32::from_le_bytes(bytes[o..o + 4].try_into().unwrap()));
+        }
+        Ok((crate::tensor::tensor::IdTensor::new(vec![n, seq], ids)?, labels))
+    }
+}

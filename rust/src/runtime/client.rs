@@ -1,0 +1,113 @@
+//! PJRT client wrapper with a lazy, cached executable registry.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::runtime::artifacts::{Artifacts, GraphKey};
+use crate::runtime::executable::Executable;
+use crate::{Error, Result};
+
+/// Owns the PJRT CPU client, the parsed artifact manifest, and a cache of
+/// compiled executables keyed by (family, graph kind, batch, seq-len).
+///
+/// Compilation is lazy: the first request for a graph pays the PJRT compile
+/// once; everything after hits the cache. Executables are reference-shared.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: Artifacts,
+    cache: Mutex<HashMap<GraphKey, std::sync::Arc<Executable>>>,
+}
+
+// SAFETY: the `xla` crate wraps PJRT handles in `Rc` + raw pointers, which
+// makes them `!Send`/`!Sync` even though the underlying PJRT CPU client is
+// thread-safe (PJRT serialises CPU execution internally). The coordinator
+// shares `Runtime` behind `Arc` and mutates only the `Mutex`-guarded
+// compile cache; `PjRtClient` `Rc` clones happen only inside `compile`,
+// which this crate always reaches through the cache mutex (see
+// `executable()`), so refcount updates are never concurrent.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Open the artifacts directory and start a PJRT CPU client.
+    pub fn open(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let artifacts = Artifacts::load(artifacts_dir.into())?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "runtime: PJRT platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client, artifacts, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn artifacts(&self) -> &Artifacts {
+        &self.artifacts
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Fetch (compiling on first use) the executable for a graph.
+    pub fn executable(&self, key: &GraphKey) -> Result<std::sync::Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(key) {
+            return Ok(exe.clone());
+        }
+        let info = self.artifacts.graph(key)?;
+        let path = self.artifacts.root().join(&info.path);
+        let t0 = std::time::Instant::now();
+        let exe = std::sync::Arc::new(Executable::compile_hlo_file(
+            &self.client,
+            &path,
+            info.params.clone(),
+        )?);
+        log::debug!(
+            "runtime: compiled {key:?} in {:.0} ms",
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .entry(key.clone())
+            .or_insert_with(|| exe.clone());
+        Ok(exe)
+    }
+
+    /// Pick the smallest lowered batch size >= `want` for a family/kind/seq.
+    pub fn fit_batch(&self, family: &str, kind: &str, seq_len: usize,
+                     want: usize) -> Result<usize> {
+        let mut best: Option<usize> = None;
+        for g in self.artifacts.graphs() {
+            if g.family == family && g.kind == kind && g.seq_len == seq_len {
+                if g.batch >= want {
+                    best = Some(best.map_or(g.batch, |b: usize| b.min(g.batch)));
+                }
+            }
+        }
+        best.ok_or_else(|| {
+            Error::config(format!(
+                "no lowered {family}/{kind} graph with batch >= {want} at \
+                 seq_len {seq_len}"
+            ))
+        })
+    }
+
+    /// All batch sizes lowered for a family/kind/seq (ascending).
+    pub fn available_batches(&self, family: &str, kind: &str,
+                             seq_len: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .graphs()
+            .iter()
+            .filter(|g| {
+                g.family == family && g.kind == kind && g.seq_len == seq_len
+            })
+            .map(|g| g.batch)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}

@@ -1,0 +1,86 @@
+//! A compiled PJRT executable plus its parameter-name signature.
+
+use std::path::Path;
+
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// One compiled HLO graph. Executables are immutable and thread-safe to
+/// share; PJRT serialises execution internally on the CPU client.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Parameter names in argument order (from the manifest).
+    params: Vec<String>,
+}
+
+// SAFETY: `PjRtLoadedExecutable` is `!Send` only because the wrapper holds
+// an `Rc<PjRtClientInternal>` and raw pointers; PJRT itself allows
+// concurrent Execute calls on the CPU client. Executables here are
+// compiled once, shared via `Arc`, and never cloned after construction,
+// so the inner `Rc` refcount is only touched at drop — which happens on
+// whichever thread drops the last `Arc`, strictly after all use.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Load HLO **text** (see aot.py for why text, not proto) and compile.
+    pub fn compile_hlo_file(client: &xla::PjRtClient, path: &Path,
+                            params: Vec<String>) -> Result<Self> {
+        let path_str = path.to_str().ok_or_else(|| {
+            Error::config(format!("non-utf8 path {}", path.display()))
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Executable { exe, params })
+    }
+
+    pub fn params(&self) -> &[String] {
+        &self.params
+    }
+
+    /// Execute with literal inputs; returns the tuple elements as literals.
+    ///
+    /// aot.py lowers with `return_tuple=True`, so the single output is a
+    /// tuple even for one result.
+    pub fn run_literals(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.params.len() {
+            return Err(Error::shape(format!(
+                "executable wants {} args {:?}, got {}",
+                self.params.len(),
+                self.params,
+                inputs.len()
+            )));
+        }
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute and convert the single output to a host tensor.
+    pub fn run_one(&self, inputs: &[xla::Literal]) -> Result<Tensor> {
+        let outs = self.run_literals(inputs)?;
+        let first = outs.into_iter().next().ok_or_else(|| {
+            Error::shape("executable returned empty tuple")
+        })?;
+        Tensor::from_literal(&first)
+    }
+
+    /// Execute with device buffers (§Perf: weights stay resident on the
+    /// device; only activations are uploaded per call).
+    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Tensor> {
+        if inputs.len() != self.params.len() {
+            return Err(Error::shape(format!(
+                "executable wants {} args, got {}",
+                self.params.len(),
+                inputs.len()
+            )));
+        }
+        let result = self.exe.execute_b(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let first = lit.to_tuple()?.into_iter().next().ok_or_else(|| {
+            Error::shape("executable returned empty tuple")
+        })?;
+        Tensor::from_literal(&first)
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them on
+//! the request path. Python never runs here.
+
+pub mod artifacts;
+pub mod client;
+pub mod executable;
+pub mod weights;
+
+pub use artifacts::{Artifacts, GraphKey};
+pub use client::Runtime;
+pub use executable::Executable;
+pub use weights::WeightSet;

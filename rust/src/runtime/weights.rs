@@ -1,0 +1,170 @@
+//! Weight loading: raw f32 bins + manifest tensor entries → cached literals.
+//!
+//! Weights are converted to `xla::Literal`s once at load; graph argument
+//! lists are assembled per call by name. Per-layer tensors are stored under
+//! their manifest names (`l<idx>_<short>`); graphs reference the short name
+//! and the caller supplies the layer index.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::runtime::artifacts::TensorEntry;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// All tensors of one weight bin (a family, or one sparse variant), as
+/// host tensors plus pre-built literals.
+pub struct WeightSet {
+    tensors: HashMap<String, Tensor>,
+    literals: HashMap<String, xla::Literal>,
+}
+
+// SAFETY: `xla::Literal` holds a raw pointer to immutable host data; after
+// `load` the set is read-only (`literal()` clones via the XLA C++ copy
+// constructor from an immutable source). Shared behind `Arc` with all
+// mutation confined to construction.
+unsafe impl Send for WeightSet {}
+unsafe impl Sync for WeightSet {}
+
+impl WeightSet {
+    /// Read `<root>/<relpath>` with its manifest entries.
+    pub fn load(root: &Path, relpath: &str, entries: &[TensorEntry]) -> Result<Self> {
+        let bytes = std::fs::read(root.join(relpath))?;
+        let mut tensors = HashMap::new();
+        let mut literals = HashMap::new();
+        for e in entries {
+            if e.dtype != "f32" {
+                // Weight bins are all-f32; ids appear only in fixtures.
+                continue;
+            }
+            let start = e.offset * 4;
+            let end = start + e.len * 4;
+            if end > bytes.len() {
+                return Err(Error::config(format!(
+                    "weights {relpath}: tensor {} out of range",
+                    e.name
+                )));
+            }
+            let mut data = Vec::with_capacity(e.len);
+            for i in 0..e.len {
+                let o = start + i * 4;
+                data.push(f32::from_le_bytes(
+                    bytes[o..o + 4].try_into().unwrap(),
+                ));
+            }
+            let t = Tensor::new(e.shape.clone(), data)?;
+            literals.insert(e.name.clone(), t.to_literal()?);
+            tensors.insert(e.name.clone(), t);
+        }
+        Ok(WeightSet { tensors, literals })
+    }
+
+    /// Host copy of a tensor.
+    pub fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| Error::config(format!("no weight tensor {name:?}")))
+    }
+
+    /// Literal for a tensor (cloning an `xla::Literal` copies host data —
+    /// cheap relative to execution at these sizes).
+    pub fn literal(&self, name: &str) -> Result<xla::Literal> {
+        self.literals
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::config(format!("no weight literal {name:?}")))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.tensors.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Resolve a graph-parameter name to a weight literal, given an optional
+    /// layer index. Activation names must be handled by the caller first.
+    pub fn resolve(&self, param: &str, layer: Option<usize>) -> Result<xla::Literal> {
+        if let Some(li) = layer {
+            let layered = format!("l{li}_{param}");
+            if self.literals.contains_key(&layered) {
+                return self.literal(&layered);
+            }
+        }
+        self.literal(param)
+    }
+
+    /// Assemble the full argument vector for an executable: `activations`
+    /// supplies the leading non-weight parameters (by name), the rest are
+    /// resolved from this weight set.
+    pub fn assemble_args(
+        &self,
+        params: &[String],
+        activations: &[(&str, xla::Literal)],
+        layer: Option<usize>,
+    ) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(params.len());
+        for p in params {
+            if let Some((_, lit)) =
+                activations.iter().find(|(n, _)| n == p)
+            {
+                out.push(lit.clone());
+            } else {
+                out.push(self.resolve(p, layer)?);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_entries() -> (Vec<u8>, Vec<TensorEntry>) {
+        let data: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let bytes: Vec<u8> =
+            data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        let entries = vec![
+            TensorEntry {
+                name: "l0_wq".into(),
+                shape: vec![2, 2],
+                offset: 0,
+                len: 4,
+                dtype: "f32".into(),
+            },
+            TensorEntry {
+                name: "bias".into(),
+                shape: vec![2],
+                offset: 4,
+                len: 2,
+                dtype: "f32".into(),
+            },
+        ];
+        (bytes, entries)
+    }
+
+    #[test]
+    fn load_and_resolve() {
+        let dir = std::env::temp_dir().join("attmemo_wtest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (bytes, entries) = mk_entries();
+        std::fs::write(dir.join("w.bin"), &bytes).unwrap();
+        let ws = WeightSet::load(&dir, "w.bin", &entries).unwrap();
+        assert_eq!(ws.tensor("l0_wq").unwrap().shape(), &[2, 2]);
+        assert_eq!(ws.tensor("bias").unwrap().data(), &[5.0, 6.0]);
+        // short-name resolution through the layer index
+        assert!(ws.resolve("wq", Some(0)).is_ok());
+        assert!(ws.resolve("wq", Some(1)).is_err());
+        assert!(ws.resolve("bias", None).is_ok());
+    }
+
+    #[test]
+    fn out_of_range_entry_errors() {
+        let dir = std::env::temp_dir().join("attmemo_wtest2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (bytes, mut entries) = mk_entries();
+        std::fs::write(dir.join("w.bin"), &bytes).unwrap();
+        entries[1].len = 100;
+        assert!(WeightSet::load(&dir, "w.bin", &entries).is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Dynamic batcher: fuses queued requests into engine batches under a
+//! max-batch / max-wait policy (the vLLM-style continuous batch former).
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::ServingConfig;
+use crate::serving::engine::Engine;
+use crate::serving::queue::BoundedQueue;
+use crate::serving::request::{Request, Response};
+use crate::tensor::tensor::IdTensor;
+use crate::Result;
+
+/// Owns the batching loop; runs on its own thread via [`Batcher::run`].
+pub struct Batcher {
+    queue: Arc<BoundedQueue<Request>>,
+    engine: Arc<Mutex<Engine>>,
+    cfg: ServingConfig,
+}
+
+impl Batcher {
+    pub fn new(queue: Arc<BoundedQueue<Request>>, engine: Arc<Mutex<Engine>>,
+               cfg: ServingConfig) -> Self {
+        Batcher { queue, engine, cfg }
+    }
+
+    /// Form one batch: block for the first request (up to `idle_wait`),
+    /// then give stragglers `max_wait_ms` to fill the batch.
+    fn next_batch(&self, idle_wait: Duration) -> Vec<Request> {
+        let Some(first) = self.queue.pop_timeout(idle_wait) else {
+            return Vec::new();
+        };
+        let mut batch = vec![first];
+        let deadline = std::time::Instant::now()
+            + Duration::from_millis(self.cfg.max_wait_ms);
+        while batch.len() < self.cfg.max_batch {
+            let more = self.queue.drain_up_to(self.cfg.max_batch - batch.len());
+            if !more.is_empty() {
+                batch.extend(more);
+                continue;
+            }
+            if std::time::Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        batch
+    }
+
+    /// Execute one batch and reply to every request.
+    fn serve_batch(&self, batch: Vec<Request>) -> Result<()> {
+        let n = batch.len();
+        let seq = self.cfg.seq_len;
+        let mut data = Vec::with_capacity(n * seq);
+        for r in &batch {
+            debug_assert_eq!(r.ids.len(), seq);
+            data.extend_from_slice(&r.ids);
+        }
+        let ids = IdTensor::new(vec![n, seq], data)?;
+
+        let mut engine = self.engine.lock().unwrap();
+        let result = engine.infer(&ids)?;
+        for (i, req) in batch.into_iter().enumerate() {
+            let queue_seconds = req.arrived.elapsed().as_secs_f64()
+                - result.seconds;
+            let resp = Response {
+                id: req.id,
+                logits: result.logits.row(i).to_vec(),
+                label: result.labels[i],
+                memo_hits: result.memo_hits[i],
+                queue_seconds: queue_seconds.max(0.0),
+                compute_seconds: result.seconds,
+            };
+            engine
+                .metrics
+                .request_latency_ms
+                .record(req.arrived.elapsed().as_secs_f64() * 1e3);
+            engine.metrics.queue_wait_ms.record(resp.queue_seconds * 1e3);
+            let _ = req.reply.send(resp); // receiver may have gone away
+        }
+        Ok(())
+    }
+
+    /// Batch loop; returns when the queue is closed and drained.
+    pub fn run(&self) {
+        loop {
+            let batch = self.next_batch(Duration::from_millis(50));
+            if batch.is_empty() {
+                if self.queue.is_closed() && self.queue.is_empty() {
+                    return;
+                }
+                continue;
+            }
+            if let Err(e) = self.serve_batch(batch) {
+                log::error!("batcher: batch failed: {e}");
+            }
+        }
+    }
+}

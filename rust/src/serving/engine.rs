@@ -1,0 +1,343 @@
+//! The inference engine: the memoized forward pass (paper Fig. 5).
+//!
+//! Per batch, per layer:
+//! 1. the selective policy (Eq. 3) decides whether to attempt memoization;
+//! 2. if attempting — embed the hidden states (§5.2), query the layer's
+//!    index database, and accept entries whose estimated similarity clears
+//!    the level's threshold;
+//! 3. missing rows (if any) run `attn_scores` as a packed sub-batch; hit
+//!    rows are fetched from the attention database (memory-mapped window
+//!    or direct arena view);
+//! 4. the combined APM batch feeds `attn_apply`.
+//! Layers that skip memoization take the fused `layer_full` fast path.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::{MemoConfig, MemoLevel};
+use crate::memo::builder::BuiltDb;
+use crate::memo::gather::GatherWindow;
+use crate::memo::policy::SelectivePolicy;
+use crate::memo::stats::MemoStats;
+use crate::model::ModelRunner;
+use crate::serving::metrics::EngineMetrics;
+use crate::tensor::tensor::IdTensor;
+use crate::tensor::{ops, Tensor};
+use crate::Result;
+
+/// Engine construction options.
+pub struct EngineOptions {
+    pub memo: MemoConfig,
+    pub seq_len: usize,
+}
+
+/// Result of one batched inference.
+pub struct BatchResult {
+    /// Task logits: `[n, C]` (encoders) or `[n, V]` next-token (gpt).
+    pub logits: Tensor,
+    /// Predicted label per sequence.
+    pub labels: Vec<i32>,
+    /// Memoized layers per sequence.
+    pub memo_hits: Vec<u32>,
+    /// Engine wall-clock for this batch (seconds).
+    pub seconds: f64,
+}
+
+/// The memoizing inference engine for one model family.
+///
+/// SAFETY (Send): the engine owns `!Send` XLA literals transitively; it is
+/// moved once into the batcher thread and only ever accessed behind
+/// `Arc<Mutex<Engine>>`, so no two threads touch XLA state concurrently.
+pub struct Engine {
+    runner: ModelRunner,
+    built: Option<Arc<BuiltDb>>,
+    policy: SelectivePolicy,
+    threshold: f32,
+    opts: MemoConfig,
+    pub stats: MemoStats,
+    pub metrics: EngineMetrics,
+    gather: Option<GatherWindow>,
+    seq_len: usize,
+}
+
+// SAFETY: see the struct doc — single-owner moves plus `Mutex` sharing;
+// no concurrent access to the wrapped XLA objects is possible.
+unsafe impl Send for Engine {}
+
+impl Engine {
+    /// Build an engine. `built = None` serves the pure compute baseline.
+    pub fn new(runner: ModelRunner, built: Option<Arc<BuiltDb>>,
+               opts: EngineOptions) -> Result<Self> {
+        let layers = runner.config().layers;
+        let (policy, threshold) = match (&built, opts.memo.level) {
+            (Some(b), level) => {
+                let thr = opts
+                    .memo
+                    .threshold_override
+                    .map(|t| t as f32)
+                    .unwrap_or_else(|| b.thresholds.for_level(level));
+                (b.policy(thr, opts.memo.selective), thr)
+            }
+            (None, _) => (SelectivePolicy::always(layers), f32::INFINITY),
+        };
+        let gather = match &built {
+            Some(b) if opts.memo.mmap_gather
+                && b.db.layer(0).arena().dense_mappable() =>
+            {
+                Some(GatherWindow::new(b.db.apm_elems(), 64)?)
+            }
+            _ => None,
+        };
+        Ok(Engine {
+            stats: MemoStats::new(layers),
+            metrics: EngineMetrics::new(),
+            policy,
+            threshold,
+            opts: opts.memo,
+            built,
+            gather,
+            runner,
+            seq_len: opts.seq_len,
+        })
+    }
+
+    pub fn runner(&self) -> &ModelRunner {
+        &self.runner
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    pub fn threshold(&self) -> f32 {
+        self.threshold
+    }
+
+    pub fn built(&self) -> Option<&BuiltDb> {
+        self.built.as_deref()
+    }
+
+    /// Memoization active at all?
+    pub fn memo_enabled(&self) -> bool {
+        self.built.is_some() && self.opts.level != MemoLevel::Off
+    }
+
+    /// Run one batch of token id rows.
+    pub fn infer(&mut self, ids: &IdTensor) -> Result<BatchResult> {
+        let t0 = Instant::now();
+        let n = ids.shape[0];
+        let mut memo_hits = vec![0u32; n];
+
+        let mut h = self.runner.embed(ids)?;
+        let layers = self.runner.config().layers;
+        for li in 0..layers {
+            h = self.run_layer(li, h, &mut memo_hits)?;
+        }
+        let logits = self.head_logits(&h)?;
+
+        let labels = (0..n)
+            .map(|i| ops::argmax(logits.row(i)) as i32)
+            .collect();
+        let seconds = t0.elapsed().as_secs_f64();
+        self.metrics.batch_compute_ms.record(seconds * 1e3);
+        self.metrics.batch_size.record(n as f64);
+        self.metrics.batches += 1;
+        self.metrics.requests += n as u64;
+        Ok(BatchResult { logits, labels, memo_hits, seconds })
+    }
+
+    /// One layer with optional memoization.
+    fn run_layer(&mut self, li: usize, h: Tensor,
+                 memo_hits: &mut [u32]) -> Result<Tensor> {
+        let n = h.shape()[0];
+        let tokens = (n * self.seq_len) as u64;
+        self.stats.layers[li].total += n as u64;
+
+        let attempt = self.memo_enabled()
+            && self.built.as_ref().map_or(false, |b| !b.db.layer(li).is_empty())
+            && self.policy.attempt(li, tokens);
+        if !attempt {
+            self.stats.layers[li].skipped += n as u64;
+            return self.runner.layer_full(&h, li);
+        }
+
+        // Upload the (padded) hidden state once; the three executables a
+        // memoized layer touches share this device buffer (§Perf).
+        let (hbuf, b) = self.runner.upload_padded(&h, "attn_apply")?;
+        let seq = self.seq_len;
+
+        // 1. Embed + search (the memoization overhead, Table 4 rows 1-2).
+        let te = Instant::now();
+        let feats_t = self.runner.mlp_embed_from(&hbuf, b, seq)?;
+        let feats = crate::memo::embedder::Features::from_tensor(
+            &feats_t.slice0(0, n)?)?;
+        self.stats.stages.embedding_ms.record(te.elapsed().as_secs_f64() * 1e3);
+
+        let ts = Instant::now();
+        let built = self.built.as_ref().unwrap();
+        let mut hit_ids = Vec::new();
+        let mut hit_rows = Vec::new();
+        let mut miss_rows = Vec::new();
+        for i in 0..n {
+            match built.db.layer(li).lookup(feats.vector(i), self.opts.ef_search)
+            {
+                Some(hit) if hit.similarity >= self.threshold => {
+                    hit_ids.push(hit.id);
+                    hit_rows.push(i);
+                }
+                _ => miss_rows.push(i),
+            }
+        }
+        self.stats.stages.search_ms.record(ts.elapsed().as_secs_f64() * 1e3);
+        self.stats.layers[li].attempts += n as u64;
+        self.stats.layers[li].hits += hit_rows.len() as u64;
+        for &r in &hit_rows {
+            memo_hits[r] += 1;
+        }
+
+        if hit_rows.is_empty() {
+            // Total miss: the fused path is strictly cheaper.
+            return self.runner.layer_full(&h, li);
+        }
+
+        // §Perf quorum: memoization only pays when the miss sub-batch is
+        // *smaller after padding* than the full batch — otherwise computing
+        // scores for the misses costs the same as computing everything, and
+        // the fused path wins. Revert the optimistic hit accounting.
+        if !miss_rows.is_empty() {
+            let padded_miss = self
+                .runner
+                .fit_batch("attn_scores", seq, miss_rows.len())
+                .unwrap_or(b);
+            if padded_miss >= b {
+                self.stats.layers[li].hits -= hit_rows.len() as u64;
+                for &r in &hit_rows {
+                    memo_hits[r] -= 1;
+                }
+                return self.runner.layer_full(&h, li);
+            }
+        }
+
+        // 2. Compute scores only for the misses (packed sub-batch).
+        let miss_apm = if miss_rows.is_empty() {
+            None
+        } else {
+            let tsc = Instant::now();
+            let sub = gather_rows(&h, &miss_rows)?;
+            let apm = self.runner.attn_scores(&sub, li)?;
+            self.stats
+                .stages
+                .scores_ms
+                .record(tsc.elapsed().as_secs_f64() * 1e3);
+            Some(apm)
+        };
+
+        // 3. Assemble the batch APM: DB pages for hits, computed rows for
+        //    misses (Table 4 row 3: mapping time).
+        let tm = Instant::now();
+        let elems = built.db.apm_elems();
+        let mut apm_data = vec![0.0f32; n * elems];
+        {
+            // Mark reuse + fetch hit entries.
+            let built = self.built.as_ref().unwrap();
+            let layer_db = built.db.layer(li);
+            for &id in &hit_ids {
+                layer_db.mark_reused(id);
+            }
+            if let Some(win) = self.gather.as_mut() {
+                let mapped = win.map_batch(layer_db.arena(), &hit_ids)?;
+                for (k, &row) in hit_rows.iter().enumerate() {
+                    apm_data[row * elems..(row + 1) * elems]
+                        .copy_from_slice(&mapped[k * elems..(k + 1) * elems]);
+                }
+            } else {
+                for (&row, &id) in hit_rows.iter().zip(&hit_ids) {
+                    apm_data[row * elems..(row + 1) * elems]
+                        .copy_from_slice(layer_db.arena().get(id)?);
+                }
+            }
+        }
+        if let Some(m) = &miss_apm {
+            for (k, &row) in miss_rows.iter().enumerate() {
+                apm_data[row * elems..(row + 1) * elems]
+                    .copy_from_slice(&m.data()[k * elems..(k + 1) * elems]);
+            }
+        }
+        let cfg = self.runner.config();
+        let apm = Tensor::new(
+            vec![n, cfg.heads, self.seq_len, self.seq_len],
+            apm_data,
+        )?;
+        self.stats.stages.mapping_ms.record(tm.elapsed().as_secs_f64() * 1e3);
+
+        // 4. Remainder of the layer (reuses the shared hidden buffer).
+        let ta = Instant::now();
+        let out = self.runner.attn_apply_from(&hbuf, &apm, b, seq, li)?;
+        let out = if out.shape()[0] == n { out } else { out.slice0(0, n)? };
+        self.stats.stages.apply_ms.record(ta.elapsed().as_secs_f64() * 1e3);
+        Ok(out)
+    }
+
+    /// Task logits: classifier as-is; for gpt, next-token logits at each
+    /// sequence's last non-pad position.
+    fn head_logits(&self, h: &Tensor) -> Result<Tensor> {
+        let out = self.runner.head(h)?;
+        if !self.runner.config().causal {
+            return Ok(out);
+        }
+        // [n, L, V] → [n, V] at the final position (ids aren't visible here;
+        // position L-1 is used — serving sequences are fully packed).
+        let (n, l, v) = (out.shape()[0], out.shape()[1], out.shape()[2]);
+        let mut data = Vec::with_capacity(n * v);
+        for i in 0..n {
+            let base = i * l * v + (l - 1) * v;
+            data.extend_from_slice(&out.data()[base..base + v]);
+        }
+        Tensor::new(vec![n, v], data)
+    }
+
+    /// Baseline (fused, never memoized) for comparisons.
+    pub fn infer_baseline(&mut self, ids: &IdTensor) -> Result<BatchResult> {
+        let t0 = Instant::now();
+        let n = ids.shape[0];
+        let mut h = self.runner.embed(ids)?;
+        for li in 0..self.runner.config().layers {
+            h = self.runner.layer_full(&h, li)?;
+        }
+        let logits = self.head_logits(&h)?;
+        let labels = (0..n)
+            .map(|i| ops::argmax(logits.row(i)) as i32)
+            .collect();
+        Ok(BatchResult {
+            logits,
+            labels,
+            memo_hits: vec![0; n],
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Copy selected rows of a `[n, …]` tensor into a packed `[k, …]` tensor.
+fn gather_rows(t: &Tensor, rows: &[usize]) -> Result<Tensor> {
+    let stride: usize = t.shape()[1..].iter().product();
+    let mut data = Vec::with_capacity(rows.len() * stride);
+    for &r in rows {
+        data.extend_from_slice(&t.data()[r * stride..(r + 1) * stride]);
+    }
+    let mut shape = t.shape().to_vec();
+    shape[0] = rows.len();
+    Tensor::new(shape, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_rows_packs() {
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let g = gather_rows(&t, &[2, 0]).unwrap();
+        assert_eq!(g.shape(), &[2, 2]);
+        assert_eq!(g.data(), &[5., 6., 1., 2.]);
+    }
+}

@@ -1,0 +1,83 @@
+//! Engine-level metrics: request latency, batch occupancy, throughput, and
+//! the per-stage attention breakdown (paper Table 4 / Fig. 1).
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Aggregated serving metrics. Single-writer (the batcher thread); readers
+/// take snapshots through the engine's lock.
+#[derive(Debug)]
+pub struct EngineMetrics {
+    pub started: Instant,
+    pub requests: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub request_latency_ms: Summary,
+    pub queue_wait_ms: Summary,
+    pub batch_size: Summary,
+    pub batch_compute_ms: Summary,
+    /// Non-XLA coordinator time per batch (L3 overhead tracking).
+    pub coordinator_ms: Summary,
+}
+
+impl Default for EngineMetrics {
+    fn default() -> Self {
+        EngineMetrics {
+            started: Instant::now(),
+            requests: 0,
+            batches: 0,
+            rejected: 0,
+            request_latency_ms: Summary::new(),
+            queue_wait_ms: Summary::new(),
+            batch_size: Summary::new(),
+            batch_compute_ms: Summary::new(),
+            coordinator_ms: Summary::new(),
+        }
+    }
+}
+
+impl EngineMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Requests per second since start.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / secs
+        }
+    }
+
+    /// One-line human summary.
+    pub fn report(&mut self) -> String {
+        format!(
+            "requests={} batches={} rejected={} rps={:.1} \
+             lat(ms) p50={:.1} p99={:.1} mean_batch={:.1} compute_ms p50={:.1}",
+            self.requests,
+            self.batches,
+            self.rejected,
+            self.throughput(),
+            self.request_latency_ms.p50(),
+            self.request_latency_ms.p99(),
+            self.batch_size.mean(),
+            self.batch_compute_ms.p50(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_contains_counts() {
+        let mut m = EngineMetrics::new();
+        m.requests = 7;
+        m.request_latency_ms.record(4.0);
+        let r = m.report();
+        assert!(r.contains("requests=7"), "{r}");
+    }
+}

@@ -1,0 +1,20 @@
+//! The serving layer: vLLM-router-like request path with AttMemo as a
+//! first-class feature.
+//!
+//! Flow: client → TCP line protocol (`server`) or in-process handle →
+//! bounded queue (`queue`) → dynamic batcher (`batcher`) → inference
+//! engine (`engine`, where memoization happens) → response. `metrics`
+//! records per-stage latency for the paper's Table 4 breakdown.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod server;
+
+pub use batcher::Batcher;
+pub use engine::{Engine, EngineOptions};
+pub use metrics::EngineMetrics;
+pub use queue::BoundedQueue;
+pub use request::{Request, RequestId, Response};

@@ -1,0 +1,185 @@
+//! Bounded MPSC queue with blocking pop and timeout — the admission-control
+//! point of the serving path (backpressure beyond `depth`).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::{Error, Result};
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded queue shared between connection handlers and the batcher.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    depth: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(depth: usize) -> Self {
+        BoundedQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            depth: depth.max(1),
+        }
+    }
+
+    /// Non-blocking push; `Err` when full or closed (caller sheds load).
+    pub fn try_push(&self, item: T) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(Error::serving("queue closed"));
+        }
+        if g.items.len() >= self.depth {
+            return Err(Error::serving("queue full"));
+        }
+        g.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push (waits for space); `Err` when closed.
+    pub fn push(&self, item: T) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(Error::serving("queue closed"));
+            }
+            if g.items.len() < self.depth {
+                g.items.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Pop one item, waiting up to `timeout`; `None` on timeout or when
+    /// closed-and-drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, res) =
+                self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+            if res.timed_out() && g.items.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    /// Drain up to `max` items without blocking (after a first blocking pop,
+    /// the batcher uses this to fill the rest of a batch).
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let n = max.min(g.items.len());
+        let out = g.items.drain(..n).collect();
+        if n > 0 {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue; producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.try_push(i).unwrap();
+        }
+        let got = q.drain_up_to(10);
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn backpressure_when_full() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert!(q.try_push(3).is_err());
+        q.drain_up_to(1);
+        q.try_push(3).unwrap();
+    }
+
+    #[test]
+    fn pop_timeout_expires() {
+        let q: BoundedQueue<i32> = BoundedQueue::new(2);
+        let t0 = Instant::now();
+        assert!(q.pop_timeout(Duration::from_millis(30)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn close_unblocks_consumer() {
+        let q: Arc<BoundedQueue<i32>> = Arc::new(BoundedQueue::new(2));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            q2.pop_timeout(Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+        assert!(q.try_push(1).is_err());
+    }
+
+    #[test]
+    fn cross_thread_transfer() {
+        let q: Arc<BoundedQueue<usize>> = Arc::new(BoundedQueue::new(4));
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                q2.push(i).unwrap();
+            }
+        });
+        let mut got = Vec::new();
+        while got.len() < 100 {
+            if let Some(x) = q.pop_timeout(Duration::from_secs(1)) {
+                got.push(x);
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,49 @@
+//! Request/response types for the serving path.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Monotonically assigned request id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+/// One inference request: a pre-tokenized sequence (the server tokenizes
+/// text before enqueueing, keeping the engine allocation-free on strings).
+pub struct Request {
+    pub id: RequestId,
+    pub ids: Vec<i32>,
+    pub arrived: Instant,
+    /// Completion channel back to the submitter.
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// Engine answer for one request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    /// Class logits (encoder families) or final-position LM logits.
+    pub logits: Vec<f32>,
+    /// argmax class for convenience.
+    pub label: i32,
+    /// Layers where this sequence's APM came from the database.
+    pub memo_hits: u32,
+    /// Queue + batch wait (seconds).
+    pub queue_seconds: f64,
+    /// Engine execution time for the batch this request rode in.
+    pub compute_seconds: f64,
+}
+
+impl Request {
+    pub fn new(id: u64, ids: Vec<i32>) -> (Self, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                id: RequestId(id),
+                ids,
+                arrived: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+}

@@ -1,0 +1,213 @@
+//! TCP line-protocol server + client (the external request path).
+//!
+//! Protocol (one line per message, UTF-8):
+//!   client → `INFER <text…>`          classify a raw sentence
+//!   client → `STATS`                  engine metrics snapshot
+//!   client → `QUIT`                   close the connection
+//!   server → `OK <label> <memo_hits> <latency_ms>`
+//!   server → `ERR <reason>` / `STATS <report>` / `BYE`
+//!
+//! Connections are handled by a small thread pool; handlers tokenize and
+//! enqueue, the batcher thread owns the engine.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::ServingConfig;
+use crate::data::tokenizer::Vocab;
+use crate::serving::batcher::Batcher;
+use crate::serving::engine::Engine;
+use crate::serving::queue::BoundedQueue;
+use crate::serving::request::Request;
+use crate::Result;
+
+/// A running server: listener thread + batcher thread + handler pool.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    queue: Arc<BoundedQueue<Request>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving. Returns once the listener is live.
+    pub fn start(engine: Engine, vocab: Arc<Vocab>,
+                 cfg: ServingConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.bind)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let queue: Arc<BoundedQueue<Request>> =
+            Arc::new(BoundedQueue::new(cfg.queue_depth));
+        let engine = Arc::new(Mutex::new(engine));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut threads = Vec::new();
+
+        // Batcher thread.
+        {
+            let batcher =
+                Batcher::new(queue.clone(), engine.clone(), cfg.clone());
+            threads.push(
+                std::thread::Builder::new()
+                    .name("attmemo-batcher".into())
+                    .spawn(move || batcher.run())
+                    .expect("spawn batcher"),
+            );
+        }
+
+        // Accept loop.
+        {
+            let queue = queue.clone();
+            let stop2 = stop.clone();
+            let engine2 = engine.clone();
+            let seq_len = cfg.seq_len;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("attmemo-accept".into())
+                    .spawn(move || {
+                        let next_id = Arc::new(AtomicU64::new(0));
+                        let mut handlers: Vec<std::thread::JoinHandle<()>> =
+                            Vec::new();
+                        loop {
+                            if stop2.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            match listener.accept() {
+                                Ok((stream, _)) => {
+                                    let q = queue.clone();
+                                    let v = vocab.clone();
+                                    let e = engine2.clone();
+                                    let ids = next_id.clone();
+                                    handlers.push(std::thread::spawn(move || {
+                                        let _ = handle_conn(
+                                            stream, q, v, e, ids, seq_len,
+                                        );
+                                    }));
+                                }
+                                Err(ref e)
+                                    if e.kind()
+                                        == std::io::ErrorKind::WouldBlock =>
+                                {
+                                    std::thread::sleep(Duration::from_millis(
+                                        5,
+                                    ));
+                                }
+                                Err(e) => {
+                                    log::error!("accept: {e}");
+                                    break;
+                                }
+                            }
+                        }
+                        for h in handlers {
+                            let _ = h.join();
+                        }
+                    })
+                    .expect("spawn accept"),
+            );
+        }
+
+        log::info!("server listening on {addr}");
+        Ok(Server { addr, stop, queue, threads })
+    }
+
+    /// Stop accepting, drain, and join all threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.queue.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, queue: Arc<BoundedQueue<Request>>,
+               vocab: Arc<Vocab>, engine: Arc<Mutex<Engine>>,
+               next_id: Arc<AtomicU64>, seq_len: usize) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // connection closed
+        }
+        let msg = line.trim_end();
+        if let Some(text) = msg.strip_prefix("INFER ") {
+            let ids = vocab.encode(text, seq_len);
+            let (req, rx) =
+                Request::new(next_id.fetch_add(1, Ordering::SeqCst), ids);
+            let t0 = std::time::Instant::now();
+            if queue.try_push(req).is_err() {
+                engine.lock().unwrap().metrics.rejected += 1;
+                writeln!(out, "ERR overloaded")?;
+                continue;
+            }
+            match rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(resp) => writeln!(
+                    out,
+                    "OK {} {} {:.2}",
+                    resp.label,
+                    resp.memo_hits,
+                    t0.elapsed().as_secs_f64() * 1e3
+                )?,
+                Err(_) => writeln!(out, "ERR timeout")?,
+            }
+        } else if msg == "STATS" {
+            let report = engine.lock().unwrap().metrics.report();
+            writeln!(out, "STATS {report}")?;
+        } else if msg == "QUIT" {
+            writeln!(out, "BYE")?;
+            return Ok(());
+        } else {
+            writeln!(out, "ERR unknown command")?;
+        }
+    }
+}
+
+/// Minimal blocking client for examples/tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), stream })
+    }
+
+    fn roundtrip(&mut self, msg: &str) -> Result<String> {
+        writeln!(self.stream, "{msg}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(line.trim_end().to_string())
+    }
+
+    /// Returns (label, memo_hits, latency_ms).
+    pub fn infer(&mut self, text: &str) -> Result<(i32, u32, f64)> {
+        let line = self.roundtrip(&format!("INFER {text}"))?;
+        let mut parts = line.split_whitespace();
+        match parts.next() {
+            Some("OK") => {
+                let label = parts.next().unwrap_or("0").parse().unwrap_or(0);
+                let hits = parts.next().unwrap_or("0").parse().unwrap_or(0);
+                let ms = parts.next().unwrap_or("0").parse().unwrap_or(0.0);
+                Ok((label, hits, ms))
+            }
+            _ => Err(crate::Error::serving(format!("server said: {line}"))),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<String> {
+        self.roundtrip("STATS")
+    }
+
+    pub fn quit(mut self) -> Result<()> {
+        let _ = self.roundtrip("QUIT")?;
+        Ok(())
+    }
+}

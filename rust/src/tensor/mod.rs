@@ -1,0 +1,7 @@
+//! Host-side f32 tensors and the numeric helpers the coordinator needs.
+
+pub mod ops;
+#[allow(clippy::module_inception)]
+pub mod tensor;
+
+pub use tensor::Tensor;

@@ -1,0 +1,168 @@
+//! Host-side numeric kernels used by the coordinator.
+//!
+//! The Eq. 1 total-variation similarity score is the crate's hottest host
+//! loop (DB building compares thousands of APM pairs), so it gets an
+//! explicitly unrolled implementation; everything else is straightforward.
+
+/// Paper Eq. 1 over a single pair of attention matrices, flattened
+/// `[heads * rows, cols]`: `1 − mean_row(0.5 · ‖a_row − b_row‖₁)`.
+///
+/// Both inputs must hold row-stochastic rows (softmax outputs), which keeps
+/// the result in `[0, 1]`.
+pub fn similarity_score(a: &[f32], b: &[f32], rows: usize, cols: usize) -> f32 {
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert_eq!(b.len(), rows * cols);
+    let mut tv_sum = 0.0f64;
+    for r in 0..rows {
+        let ra = &a[r * cols..(r + 1) * cols];
+        let rb = &b[r * cols..(r + 1) * cols];
+        tv_sum += 0.5 * l1_distance(ra, rb) as f64;
+    }
+    (1.0 - tv_sum / rows as f64) as f32
+}
+
+/// L1 distance with 4-way unrolling (auto-vectorises well).
+#[inline]
+pub fn l1_distance(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += (a[j] - b[j]).abs();
+        s1 += (a[j + 1] - b[j + 1]).abs();
+        s2 += (a[j + 2] - b[j + 2]).abs();
+        s3 += (a[j + 3] - b[j + 3]).abs();
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        s += (a[j] - b[j]).abs();
+    }
+    s
+}
+
+/// Squared L2 distance, 4-way unrolled (HNSW hot loop).
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        let d0 = a[j] - b[j];
+        let d1 = a[j + 1] - b[j + 1];
+        let d2 = a[j + 2] - b[j + 2];
+        let d3 = a[j + 3] - b[j + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    s
+}
+
+/// Row-wise softmax in place over `[rows, cols]`.
+pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    for r in 0..rows {
+        let row = &mut x[r * cols..(r + 1) * cols];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Argmax of a slice.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+/// Check every row of `[rows, cols]` sums to ~1 (APM sanity).
+pub fn rows_stochastic(x: &[f32], rows: usize, cols: usize, tol: f32) -> bool {
+    (0..rows).all(|r| {
+        let s: f32 = x[r * cols..(r + 1) * cols].iter().sum();
+        (s - 1.0).abs() <= tol
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l1_and_l2_match_naive() {
+        let a: Vec<f32> = (0..13).map(|x| x as f32 * 0.3).collect();
+        let b: Vec<f32> = (0..13).map(|x| (13 - x) as f32 * 0.2).collect();
+        let naive1: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        let naive2: f32 =
+            a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!((l1_distance(&a, &b) - naive1).abs() < 1e-4);
+        assert!((l2_sq(&a, &b) - naive2).abs() < 1e-4);
+    }
+
+    #[test]
+    fn similarity_identity_is_one() {
+        let mut x = vec![0.2f32; 20];
+        softmax_rows(&mut x, 4, 5);
+        assert!((similarity_score(&x, &x, 4, 5) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn similarity_disjoint_is_zero() {
+        // Two one-hot distributions with disjoint support: TV = 1.
+        let a = vec![1.0, 0.0, 0.0, 1.0, 0.0, 0.0];
+        let b = vec![0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+        let s = similarity_score(&a, &b, 2, 3);
+        assert!(s.abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn similarity_in_unit_interval() {
+        let mut rng = crate::util::Pcg32::seeded(3);
+        for _ in 0..20 {
+            let mut a: Vec<f32> = (0..32).map(|_| rng.next_f32()).collect();
+            let mut b: Vec<f32> = (0..32).map(|_| rng.next_f32()).collect();
+            softmax_rows(&mut a, 4, 8);
+            softmax_rows(&mut b, 4, 8);
+            let s = similarity_score(&a, &b, 4, 8);
+            assert!((0.0..=1.0).contains(&s), "{s}");
+        }
+    }
+
+    #[test]
+    fn softmax_rows_are_stochastic() {
+        let mut x: Vec<f32> = (0..24).map(|i| (i % 7) as f32).collect();
+        softmax_rows(&mut x, 4, 6);
+        assert!(rows_stochastic(&x, 4, 6, 1e-5));
+    }
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[1.0, 5.0, 5.0, 2.0]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+    }
+}

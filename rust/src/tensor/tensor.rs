@@ -1,0 +1,250 @@
+//! A minimal dense row-major f32 tensor.
+//!
+//! The coordinator moves activations between artifacts, the attention
+//! database, and PJRT literals; it needs shapes, slicing along the leading
+//! axis, and conversion to/from `xla::Literal` — nothing close to a full
+//! ndarray.
+
+use crate::{Error, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from parts; validates element count.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::shape(format!(
+                "shape {shape:?} wants {n} elems, got {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// All-zero tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Filled with a PCG stream (tests / synthetic workloads).
+    pub fn random(shape: &[usize], rng: &mut crate::util::Pcg32) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.next_gaussian()).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::shape(format!(
+                "reshape {:?} -> {shape:?}",
+                self.shape
+            )));
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Slice `count` items starting at `start` along axis 0 (copying).
+    pub fn slice0(&self, start: usize, count: usize) -> Result<Tensor> {
+        if self.shape.is_empty() || start + count > self.shape[0] {
+            return Err(Error::shape(format!(
+                "slice0 [{start}, {}) of shape {:?}",
+                start + count,
+                self.shape
+            )));
+        }
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = count;
+        Ok(Tensor {
+            shape,
+            data: self.data[start * row..(start + count) * row].to_vec(),
+        })
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let cols = self.shape[self.shape.len() - 1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    /// Concatenate along axis 0; shapes beyond axis 0 must agree.
+    pub fn concat0(parts: &[&Tensor]) -> Result<Tensor> {
+        let first = parts
+            .first()
+            .ok_or_else(|| Error::shape("concat0 of nothing"))?;
+        let tail = &first.shape[1..];
+        let mut n0 = 0;
+        for p in parts {
+            if &p.shape[1..] != tail {
+                return Err(Error::shape(format!(
+                    "concat0 mismatch {:?} vs {:?}",
+                    p.shape, first.shape
+                )));
+            }
+            n0 += p.shape[0];
+        }
+        let mut shape = first.shape.clone();
+        shape[0] = n0;
+        let mut data = Vec::with_capacity(shape.iter().product());
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// Convert to an `xla::Literal` (f32).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Convert from an `xla::Literal` (f32, any rank).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Tensor::new(dims, data)
+    }
+
+    /// Maximum absolute difference against another tensor of equal shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            return Err(Error::shape(format!(
+                "diff {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max))
+    }
+}
+
+/// i32 ids tensor (token ids); kept separate from the f32 `Tensor`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IdTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl IdTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::shape(format!(
+                "ids shape {shape:?} wants {n}, got {}",
+                data.len()
+            )));
+        }
+        Ok(IdTensor { shape, data })
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Rows [start, start+count) of a [N, L] id matrix.
+    pub fn slice0(&self, start: usize, count: usize) -> Result<IdTensor> {
+        let row: usize = self.shape[1..].iter().product();
+        if start + count > self.shape[0] {
+            return Err(Error::shape("ids slice0 out of range"));
+        }
+        let mut shape = self.shape.clone();
+        shape[0] = count;
+        IdTensor::new(
+            shape,
+            self.data[start * row..(start + count) * row].to_vec(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn slice0_and_row() {
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let s = t.slice0(1, 2).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[3., 4., 5., 6.]);
+        assert_eq!(t.row(2), &[5., 6.]);
+        assert!(t.slice0(2, 2).is_err());
+    }
+
+    #[test]
+    fn concat0_roundtrip() {
+        let a = Tensor::new(vec![1, 2], vec![1., 2.]).unwrap();
+        let b = Tensor::new(vec![2, 2], vec![3., 4., 5., 6.]).unwrap();
+        let c = Tensor::concat0(&[&a, &b]).unwrap();
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.data(), &[1., 2., 3., 4., 5., 6.]);
+        let bad = Tensor::new(vec![1, 3], vec![0.; 3]).unwrap();
+        assert!(Tensor::concat0(&[&a, &bad]).is_err());
+    }
+
+    #[test]
+    fn reshape_checks() {
+        let t = Tensor::zeros(&[4, 2]);
+        assert!(t.clone().reshape(&[2, 4]).is_ok());
+        assert!(t.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![1.5, 1.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect())
+            .unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+}

@@ -1,0 +1,64 @@
+//! Minimal `log` facade backend (env_logger is not vendored).
+//!
+//! Level comes from `ATTMEMO_LOG` (error|warn|info|debug|trace), default
+//! `info`. Output is line-oriented on stderr with elapsed-seconds stamps.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::OnceCell;
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+    level: LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata<'_>) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record<'_>) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:10.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceCell<StderrLogger> = OnceCell::new();
+
+/// Install the logger once; later calls are no-ops. Returns the level used.
+pub fn init() -> LevelFilter {
+    let level = match std::env::var("ATTMEMO_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    };
+    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now(), level });
+    let _ = log::set_logger(logger);
+    log::set_max_level(logger.level);
+    logger.level
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        let a = super::init();
+        let b = super::init();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,14 @@
+//! Small self-contained substrates: PRNG, statistics, threadpool, logger.
+//!
+//! The build environment is offline (only the `xla` dependency closure is
+//! vendored), so these are implemented from scratch instead of pulling
+//! `rand`, `hdrhistogram`, `rayon` or `env_logger`.
+
+pub mod logger;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+pub use rng::Pcg32;
+pub use stats::Summary;
+pub use threadpool::ThreadPool;

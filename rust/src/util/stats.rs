@@ -1,0 +1,278 @@
+//! Latency/throughput statistics: streaming summaries and fixed-bucket
+//! histograms (an offline-friendly replacement for `hdrhistogram`).
+
+/// Streaming summary over f64 samples: count / mean / min / max / percentiles.
+///
+/// Samples are retained (benchmarks here are small: at most a few hundred
+/// thousand points), so percentiles are exact.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    /// Empty summary.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Arithmetic mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation (0 when fewer than two samples).
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64;
+        var.sqrt()
+    }
+
+    /// Minimum (0 when empty).
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min).min(f64::INFINITY)
+    }
+
+    /// Maximum (0 when empty).
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Exact percentile in `[0, 100]` by nearest-rank; 0 when empty.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let rank = ((p / 100.0) * (self.samples.len() as f64 - 1.0)).round() as usize;
+        self.samples[rank.min(self.samples.len() - 1)]
+    }
+
+    /// Median.
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// 99th percentile.
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Total of all samples.
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    /// Absorb another summary's samples.
+    pub fn merge(&mut self, other: &Summary) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+}
+
+/// Fixed-bucket histogram over `[lo, hi)` with uniform bucket width, plus
+/// overflow/underflow buckets. Used for similarity-score distributions
+/// (paper Figs. 3, 12, 15) and latency distributions.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    buckets: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl Histogram {
+    /// Histogram with `n` uniform buckets over `[lo, hi)`.
+    pub fn new(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(hi > lo && n > 0);
+        Histogram { lo, hi, buckets: vec![0; n], underflow: 0, overflow: 0 }
+    }
+
+    /// Record one observation.
+    pub fn record(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let idx = ((x - self.lo) / (self.hi - self.lo) * self.buckets.len() as f64) as usize;
+            let last = self.buckets.len() - 1;
+            self.buckets[idx.min(last)] += 1;
+        }
+    }
+
+    /// Bucket counts (excluding under/overflow).
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Total observations including under/overflow.
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// Fraction of observations with value >= `threshold`.
+    pub fn frac_at_least(&self, threshold: f64) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let width = (self.hi - self.lo) / self.buckets.len() as f64;
+        let mut cnt = self.overflow;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let lo_edge = self.lo + i as f64 * width;
+            if lo_edge >= threshold {
+                cnt += b;
+            }
+        }
+        cnt as f64 / total as f64
+    }
+
+    /// Render the bucket edges + counts as `(edge_lo, count)` rows.
+    pub fn rows(&self) -> Vec<(f64, u64)> {
+        let width = (self.hi - self.lo) / self.buckets.len() as f64;
+        self.buckets
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (self.lo + i as f64 * width, c))
+            .collect()
+    }
+
+    /// ASCII bar-chart (for bench output).
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.buckets.iter().copied().max().unwrap_or(1).max(1);
+        let bw = (self.hi - self.lo) / self.buckets.len() as f64;
+        let mut out = String::new();
+        for (i, &c) in self.buckets.iter().enumerate() {
+            let bar = "#".repeat((c as usize * width / max as usize).min(width));
+            out.push_str(&format!(
+                "  [{:6.3},{:6.3}) {:>7} |{}\n",
+                self.lo + i as f64 * bw,
+                self.lo + (i + 1) as f64 * bw,
+                c,
+                bar
+            ));
+        }
+        out
+    }
+}
+
+/// Monotonic stopwatch in seconds.
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    /// Start timing.
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    /// Elapsed milliseconds.
+    pub fn millis(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic_moments() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.record(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.sum() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let mut s = Summary::new();
+        for i in 0..101 {
+            s.record(i as f64);
+        }
+        assert_eq!(s.p50(), 50.0);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert_eq!(s.p99(), 99.0);
+    }
+
+    #[test]
+    fn summary_empty_is_zero() {
+        let mut s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+        assert_eq!(s.count(), 0);
+    }
+
+    #[test]
+    fn summary_stddev() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.record(x);
+        }
+        assert!((s.stddev() - 2.138).abs() < 0.01);
+    }
+
+    #[test]
+    fn histogram_counts_and_bounds() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        h.record(-0.1);
+        h.record(0.0);
+        h.record(0.05);
+        h.record(0.95);
+        h.record(1.0);
+        h.record(2.0);
+        assert_eq!(h.total(), 6);
+        assert_eq!(h.buckets()[0], 2);
+        assert_eq!(h.buckets()[9], 1);
+    }
+
+    #[test]
+    fn histogram_frac_at_least() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        for i in 0..10 {
+            h.record(i as f64 / 10.0 + 0.05);
+        }
+        let f = h.frac_at_least(0.5);
+        assert!((f - 0.5).abs() < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn histogram_rows_align_with_edges() {
+        let h = Histogram::new(0.0, 2.0, 4);
+        let rows = h.rows();
+        assert_eq!(rows.len(), 4);
+        assert!((rows[1].0 - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,170 @@
+//! Fixed-size threadpool with a shared injector queue.
+//!
+//! Tokio is not available offline, so the serving layer runs on this pool:
+//! worker threads pull boxed jobs from a `Mutex<VecDeque>` guarded by a
+//! condvar. `scoped` offers fork-join parallelism for the offline builders.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    in_flight: AtomicUsize,
+    done_cv: Condvar,
+    done_mu: Mutex<()>,
+}
+
+/// A fixed pool of worker threads executing submitted closures FIFO.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `n` workers (clamped to at least 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            done_cv: Condvar::new(),
+            done_mu: Mutex::new(()),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("attmemo-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job; panics if the pool is shut down.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        assert!(!self.shared.shutdown.load(Ordering::SeqCst), "pool shut down");
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.shared.queue.lock().unwrap().push_back(Box::new(f));
+        self.shared.cv.notify_one();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.done_mu.lock().unwrap();
+        while self.shared.in_flight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.done_cv.wait(guard).unwrap();
+        }
+    }
+
+    /// Fork-join: run `f(i)` for `i in 0..n` on the pool, blocking until all
+    /// complete. Panics in jobs are contained per-thread and reported.
+    pub fn scoped<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        for i in 0..n {
+            let f = f.clone();
+            self.execute(move || f(i));
+        }
+        self.wait_idle();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        // Contain panics so one bad job doesn't kill the worker.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        if shared.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _g = shared.done_mu.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scoped_covers_every_index() {
+        let pool = ThreadPool::new(3);
+        let hits = Arc::new(Mutex::new(vec![false; 50]));
+        let h2 = hits.clone();
+        pool.scoped(50, move |i| {
+            h2.lock().unwrap()[i] = true;
+        });
+        assert!(hits.lock().unwrap().iter().all(|&b| b));
+    }
+
+    #[test]
+    fn survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = counter.clone();
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(1);
+        pool.wait_idle();
+    }
+}

