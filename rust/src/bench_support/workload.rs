@@ -78,9 +78,32 @@ pub fn engine_with_shared_db(runtime: &Arc<Runtime>, family: &str,
                              seq_len: usize, level: MemoLevel,
                              built: Option<Arc<BuiltDb>>,
                              selective: bool) -> Result<Engine> {
-    let runner = ModelRunner::load(runtime.clone(), family)?;
     let memo = MemoConfig { level, selective, ..MemoConfig::default() };
+    engine_with_memo(runtime, family, seq_len, memo, built)
+}
+
+/// Engine with explicit memoization options (online-admission sweeps).
+pub fn engine_with_memo(runtime: &Arc<Runtime>, family: &str,
+                        seq_len: usize, memo: MemoConfig,
+                        built: Option<Arc<BuiltDb>>) -> Result<Engine> {
+    let runner = ModelRunner::load(runtime.clone(), family)?;
     Engine::new(runner, built, EngineOptions { memo, seq_len })
+}
+
+/// Cold-start engine: empty database, serve-time admission on. The hit
+/// rate starts at 0% and warms from live traffic.
+pub fn cold_engine(runtime: &Arc<Runtime>, family: &str, seq_len: usize,
+                   level: MemoLevel, capacity: usize,
+                   min_attempts: u64) -> Result<Engine> {
+    let memo = MemoConfig {
+        level,
+        selective: false,
+        online_admission: true,
+        max_db_entries: capacity,
+        admission_min_attempts: min_attempts,
+        ..MemoConfig::default()
+    };
+    engine_with_memo(runtime, family, seq_len, memo, None)
 }
 
 /// Test-set workload for a family.

@@ -14,7 +14,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::bench_support::workload;
-use crate::config::{MemoLevel, ServingConfig};
+use crate::config::{MemoConfig, MemoLevel, ServingConfig};
 use crate::data::tokenizer::Vocab;
 use crate::eval::evaluate;
 use crate::serving::server::{Client, Server};
@@ -109,6 +109,15 @@ COMMANDS
              (--family, --level off|conservative|moderate|aggressive,
               --batch N, --db-seqs N, --n N, --no-selective)
 
+ONLINE MEMOIZATION (serve/eval)
+  --online-admission    admit miss APMs into a serve-time database
+  --cold-db             start with an empty database (implies
+                        --online-admission; the engine warms from traffic)
+  --db-capacity N       per-layer entry budget for the online database
+                        (0 = unbounded; reuse-aware eviction at the cap)
+  --admission-warmup N  per-layer attempts before the Eq. 3 admission
+                        gate activates (default 64)
+
 COMMON FLAGS
   --artifacts DIR   artifacts directory (default ./artifacts or
                     $ATTMEMO_ARTIFACTS)
@@ -162,6 +171,44 @@ fn parse_level(args: &Args) -> Result<MemoLevel> {
     MemoLevel::parse(&args.opt_or("level", "moderate"))
 }
 
+/// Memoization options shared by `serve` and `eval`: level + selective
+/// policy + the online-admission knobs.
+fn parse_memo(args: &Args, level: MemoLevel) -> Result<MemoConfig> {
+    let defaults = MemoConfig::default();
+    Ok(MemoConfig {
+        level,
+        selective: !args.flag("no-selective"),
+        online_admission: args.flag("online-admission")
+            || args.flag("cold-db"),
+        max_db_entries: args.opt_usize("db-capacity",
+                                       defaults.max_db_entries)?,
+        admission_min_attempts: args.opt_usize(
+            "admission-warmup",
+            defaults.admission_min_attempts as usize,
+        )? as u64,
+        ..defaults
+    })
+}
+
+/// The offline database for `serve`/`eval`: none when cold or off,
+/// loaded from `--load-db`, or built from `--db-seqs` training sequences.
+fn load_or_build_db(args: &Args, rt: &Arc<crate::runtime::Runtime>,
+                    family: &str, seq_len: usize, level: MemoLevel)
+    -> Result<Option<Arc<crate::memo::builder::BuiltDb>>> {
+    if level == MemoLevel::Off || args.flag("cold-db") {
+        return Ok(None);
+    }
+    if let Some(path) = args.opt("load-db") {
+        let cfg = rt.artifacts().family(family)?.config.clone();
+        let built = crate::memo::persist::load(
+            std::path::Path::new(path), &cfg, Default::default())?;
+        return Ok(Some(Arc::new(built)));
+    }
+    let db_seqs = args.opt_usize("db-seqs", 256)?;
+    log::info!("building attention database ({db_seqs} seqs)…");
+    Ok(Some(Arc::new(workload::build_db(rt, family, seq_len, db_seqs)?)))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let rt = workload::open_runtime()?;
     let family = args.opt_or("family", "bert");
@@ -171,11 +218,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for (k, v) in &args.sets {
         cfg.set(k, v)?;
     }
-    let db_seqs = args.opt_usize("db-seqs", 256)?;
-    log::info!("building attention database ({db_seqs} seqs)…");
-    let engine = workload::engine_with_db(
-        &rt, &family, cfg.seq_len, level, db_seqs, !args.flag("no-selective"),
-    )?;
+    let memo = parse_memo(args, level)?;
+    let built = load_or_build_db(args, &rt, &family, cfg.seq_len, level)?;
+    let engine =
+        workload::engine_with_memo(&rt, &family, cfg.seq_len, memo, built)?;
     let vocab = Arc::new(Vocab::load(&rt.artifacts().root().join("vocab.json"))?);
     let server = Server::start(engine, vocab, cfg.clone())?;
     println!("serving {family} (level={}) on {}", level.name(), server.addr);
@@ -238,23 +284,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let level = parse_level(args)?;
     let seq_len = rt.artifacts().serving_seq_len;
     let batch = args.opt_usize("batch", 8)?;
-    let db_seqs = args.opt_usize("db-seqs", 256)?;
     let n = args.opt_usize("n", 64)?;
     let (ids, labels) = workload::test_workload(&rt, &family, seq_len, n)?;
-    let mut engine = match args.opt("load-db") {
-        Some(path) if level != MemoLevel::Off => {
-            let cfg = rt.artifacts().family(&family)?.config.clone();
-            let built = crate::memo::persist::load(
-                std::path::Path::new(path), &cfg, Default::default())?;
-            workload::engine_with_shared_db(
-                &rt, &family, seq_len, level,
-                Some(std::sync::Arc::new(built)),
-                !args.flag("no-selective"))?
-        }
-        _ => workload::engine_with_db(
-            &rt, &family, seq_len, level, db_seqs,
-            !args.flag("no-selective"))?,
-    };
+    let memo = parse_memo(args, level)?;
+    let built = load_or_build_db(args, &rt, &family, seq_len, level)?;
+    let mut engine =
+        workload::engine_with_memo(&rt, &family, seq_len, memo, built)?;
     let baseline = level == MemoLevel::Off;
     let r = evaluate(&mut engine, &ids, &labels, batch, baseline)?;
     println!(
@@ -280,8 +315,17 @@ fn cmd_eval(args: &Args) -> Result<()> {
         );
         for (li, l) in engine.stats.layers.iter().enumerate() {
             println!(
-                "  layer {li}: total={} attempts={} hits={} skipped={}",
-                l.total, l.attempts, l.hits, l.skipped
+                "  layer {li}: total={} attempts={} hits={} skipped={} \
+                 reverted={} admitted={} evicted={}",
+                l.total, l.attempts, l.hits, l.skipped, l.reverted,
+                l.admitted, l.evicted
+            );
+        }
+        if let Some(om) = engine.online() {
+            println!(
+                "  online db: entries={} capacity/layer={}",
+                om.db.total_entries(),
+                om.capacity
             );
         }
     }

@@ -5,7 +5,7 @@
 pub mod json;
 
 use crate::{Error, Result};
-use json::Json;
+use self::json::Json;
 
 /// Transformer family hyper-parameters (must match the python side; parsed
 /// from `manifest.json`, never hard-coded).
@@ -116,8 +116,17 @@ pub struct MemoConfig {
     pub mmap_gather: bool,
     /// HNSW search breadth.
     pub ef_search: usize,
-    /// Cap on attention-database entries (0 = unbounded).
+    /// Per-layer capacity of the *online* attention database (entries);
+    /// 0 = unbounded. When the budget is reached, admission evicts via the
+    /// reuse-aware clock.
     pub max_db_entries: usize,
+    /// Admit APMs computed on the miss path into a serve-time (online)
+    /// attention database, so cold or drifting workloads warm up instead
+    /// of staying at the offline database's hit rate forever.
+    pub online_admission: bool,
+    /// Per-layer attempts to observe before the Eq. 3 admission gate
+    /// activates (the warm-up window always admits).
+    pub admission_min_attempts: u64,
 }
 
 impl Default for MemoConfig {
@@ -129,6 +138,8 @@ impl Default for MemoConfig {
             mmap_gather: true,
             ef_search: 48,
             max_db_entries: 0,
+            online_admission: false,
+            admission_min_attempts: 64,
         }
     }
 }

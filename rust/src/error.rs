@@ -1,38 +1,70 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled — `thiserror` is not in the offline
+//! registry).
+
+use std::fmt;
 
 /// Convenience alias used across the crate.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Unified error for the AttMemo stack.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// PJRT / XLA runtime failures (compile, execute, literal conversion).
-    #[error("xla: {0}")]
-    Xla(#[from] xla::Error),
+    Xla(xla::Error),
 
     /// Filesystem and socket failures.
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Malformed artifacts, manifests or configs.
-    #[error("config: {0}")]
     Config(String),
 
     /// JSON parse errors from the hand-rolled codec.
-    #[error("json: {0}")]
     Json(String),
 
     /// Shape mismatches between tensors / literals / executables.
-    #[error("shape: {0}")]
     Shape(String),
 
     /// Attention/index database errors.
-    #[error("memo: {0}")]
     Memo(String),
 
     /// Serving-layer errors (queue closed, request rejected…).
-    #[error("serving: {0}")]
     Serving(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla: {e}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Json(m) => write!(f, "json: {m}"),
+            Error::Shape(m) => write!(f, "shape: {m}"),
+            Error::Memo(m) => write!(f, "memo: {m}"),
+            Error::Serving(m) => write!(f, "serving: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {

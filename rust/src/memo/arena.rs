@@ -7,14 +7,22 @@
 //! copying them. The arena is the "attention database memory" — on the
 //! paper's testbed it would live in Optane; here it is anonymous shared
 //! memory with the tier's latency modelled separately (`memtier`).
+//!
+//! Entries are addressed by a stable, monotonically assigned [`ApmId`];
+//! ids map to *physical page slots* through an indirection table so that
+//! serve-time eviction ([`ApmArena::remove`]) frees a slot for reuse by a
+//! later admission instead of growing the file forever. A removed id stays
+//! dead: `get`/`file_offset` on it error, and its slot's next tenant gets a
+//! fresh id.
 
 use std::os::fd::RawFd;
+use std::sync::OnceLock;
 
 use crate::{Error, Result};
 
 /// System page size (4096 on this platform; queried once).
 pub fn page_size() -> usize {
-    static PAGE: once_cell::sync::OnceCell<usize> = once_cell::sync::OnceCell::new();
+    static PAGE: OnceLock<usize> = OnceLock::new();
     *PAGE.get_or_init(|| unsafe { libc::sysconf(libc::_SC_PAGESIZE) as usize })
 }
 
@@ -28,16 +36,22 @@ pub fn page_align(n: usize) -> usize {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ApmId(pub u32);
 
-/// Fixed-stride, page-aligned entry store on a memfd.
+/// Fixed-stride, page-aligned entry store on a memfd with slot reuse.
 pub struct ApmArena {
     fd: RawFd,
     /// Bytes of payload per entry (f32 count × 4).
     entry_bytes: usize,
     /// Page-aligned stride between entries.
     stride: usize,
-    /// Entries stored.
-    len: usize,
-    /// Capacity in entries the file currently holds.
+    /// id → physical slot; `None` once evicted.
+    slots: Vec<Option<u32>>,
+    /// Physical slots freed by eviction, available for reuse.
+    free: Vec<u32>,
+    /// Live entries (`slots` entries that are `Some`).
+    live: usize,
+    /// Physical slots ever handed out (high-water mark).
+    phys_used: usize,
+    /// Physical slots the file currently holds.
     cap: usize,
     /// Persistent read-write mapping of the whole file.
     base: *mut u8,
@@ -69,7 +83,10 @@ impl ApmArena {
             fd,
             entry_bytes,
             stride,
-            len: 0,
+            slots: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            phys_used: 0,
             cap: 0,
             base: std::ptr::null_mut(),
             map_bytes: 0,
@@ -97,12 +114,35 @@ impl ApmArena {
         self.stride
     }
 
+    /// Live entries.
     pub fn len(&self) -> usize {
-        self.len
+        self.live
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.live == 0
+    }
+
+    /// Upper bound of the id space: ids in `[0, next_id)` have been issued
+    /// (some may since have been removed).
+    pub fn next_id(&self) -> u32 {
+        self.slots.len() as u32
+    }
+
+    /// Is `id` currently stored?
+    pub fn is_live(&self, id: ApmId) -> bool {
+        self.slots
+            .get(id.0 as usize)
+            .map_or(false, |s| s.is_some())
+    }
+
+    /// Ids of all live entries, ascending.
+    pub fn live_ids(&self) -> Vec<ApmId> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.map(|_| ApmId(i as u32)))
+            .collect()
     }
 
     pub(crate) fn fd(&self) -> RawFd {
@@ -116,10 +156,16 @@ impl ApmArena {
 
     /// Byte offset of an entry inside the file (for gather mappings).
     pub(crate) fn file_offset(&self, id: ApmId) -> Result<usize> {
-        if (id.0 as usize) < self.len {
-            Ok(id.0 as usize * self.stride)
-        } else {
-            Err(Error::memo(format!("ApmId {} out of range {}", id.0, self.len)))
+        match self.slots.get(id.0 as usize) {
+            Some(Some(slot)) => Ok(*slot as usize * self.stride),
+            Some(None) => {
+                Err(Error::memo(format!("ApmId {} was evicted", id.0)))
+            }
+            None => Err(Error::memo(format!(
+                "ApmId {} out of range {}",
+                id.0,
+                self.slots.len()
+            ))),
         }
     }
 
@@ -152,7 +198,8 @@ impl ApmArena {
         Ok(())
     }
 
-    /// Append one entry; returns its id.
+    /// Store one entry — into a freed slot when available, appending
+    /// otherwise; returns its (fresh) id.
     pub fn push(&mut self, data: &[f32]) -> Result<ApmId> {
         if data.len() * 4 != self.entry_bytes {
             return Err(Error::memo(format!(
@@ -161,10 +208,18 @@ impl ApmArena {
                 data.len()
             )));
         }
-        if self.len == self.cap {
-            self.grow(GROW_CHUNK.max(self.cap / 2))?;
-        }
-        let off = self.len * self.stride;
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                if self.phys_used == self.cap {
+                    self.grow(GROW_CHUNK.max(self.cap / 2))?;
+                }
+                let s = self.phys_used as u32;
+                self.phys_used += 1;
+                s
+            }
+        };
+        let off = slot as usize * self.stride;
         unsafe {
             std::ptr::copy_nonoverlapping(
                 data.as_ptr().cast::<u8>(),
@@ -172,8 +227,32 @@ impl ApmArena {
                 self.entry_bytes,
             );
         }
-        self.len += 1;
-        Ok(ApmId((self.len - 1) as u32))
+        self.slots.push(Some(slot));
+        self.live += 1;
+        Ok(ApmId((self.slots.len() - 1) as u32))
+    }
+
+    /// Evict an entry: its id goes dead and its physical slot becomes
+    /// reusable by a later `push`.
+    pub fn remove(&mut self, id: ApmId) -> Result<()> {
+        let i = id.0 as usize;
+        if i >= self.slots.len() {
+            return Err(Error::memo(format!(
+                "ApmId {} out of range {}",
+                id.0,
+                self.slots.len()
+            )));
+        }
+        match self.slots[i].take() {
+            Some(slot) => {
+                self.free.push(slot);
+                self.live -= 1;
+                Ok(())
+            }
+            None => {
+                Err(Error::memo(format!("ApmId {} already evicted", id.0)))
+            }
+        }
     }
 
     /// Read-only view of one entry.
@@ -249,5 +328,39 @@ mod tests {
         let page_elems = page_size() / 4;
         assert!(ApmArena::new(page_elems).unwrap().dense_mappable());
         assert!(!ApmArena::new(page_elems - 1).unwrap().dense_mappable());
+    }
+
+    #[test]
+    fn remove_kills_id_and_reuses_slot() {
+        let mut a = ApmArena::new(8).unwrap();
+        let i0 = a.push(&[0.0; 8]).unwrap();
+        let i1 = a.push(&[1.0; 8]).unwrap();
+        a.remove(i0).unwrap();
+        assert_eq!(a.len(), 1);
+        assert!(!a.is_live(i0));
+        assert!(a.get(i0).is_err());
+        assert!(a.remove(i0).is_err());
+        // The freed physical slot is reused: same file offset, fresh id.
+        let off0 = 0; // i0 was the first physical slot
+        let i2 = a.push(&[2.0; 8]).unwrap();
+        assert_eq!(i2, ApmId(2), "ids stay monotonic");
+        assert_eq!(a.file_offset(i2).unwrap(), off0, "slot reused");
+        assert_eq!(a.get(i2).unwrap(), &[2.0; 8]);
+        assert_eq!(a.get(i1).unwrap(), &[1.0; 8], "live entry untouched");
+        assert_eq!(a.live_ids(), vec![i1, i2]);
+        assert_eq!(a.next_id(), 3);
+    }
+
+    #[test]
+    fn bounded_slot_reuse_never_grows_file() {
+        let mut a = ApmArena::new(4).unwrap();
+        let mut id = a.push(&[0.0; 4]).unwrap();
+        let bytes = a.resident_bytes();
+        for i in 0..2 * GROW_CHUNK {
+            a.remove(id).unwrap();
+            id = a.push(&[i as f32; 4]).unwrap();
+        }
+        assert_eq!(a.resident_bytes(), bytes, "churn must not grow the file");
+        assert_eq!(a.len(), 1);
     }
 }

@@ -4,6 +4,13 @@
 //! granularity): an `ApmArena` holding the APM payloads `[heads, L, L]`,
 //! an HNSW index over the embedding feature-vectors of the hidden states
 //! that produced them, and reuse counters for the Fig. 11 analysis.
+//!
+//! Beyond the paper's offline pre-population, a `LayerDb` is writable at
+//! serve time: [`LayerDb::admit`] stores a freshly computed (feature, APM)
+//! pair under a capacity budget, evicting via a reuse-aware clock
+//! ([`LayerDb::evict_victim`]) when the budget is hit. Eviction frees the
+//! arena's page slot for reuse and tombstones the index entry, so retired
+//! ids stop matching without an index rebuild.
 
 use crate::config::ModelConfig;
 use crate::memo::arena::{ApmArena, ApmId};
@@ -19,14 +26,38 @@ pub struct Lookup {
     pub similarity: f32,
 }
 
+/// What one serve-time admission did.
+#[derive(Debug, Clone)]
+pub struct AdmitOutcome {
+    /// Id of the admitted entry.
+    pub id: ApmId,
+    /// Entries evicted to make room (empty below capacity).
+    pub evicted: Vec<ApmId>,
+}
+
+/// Per-entry reuse accounting, under one lock so engines sharing a built
+/// database read-only behind `Arc` can still record reuse through `&self`.
+#[derive(Debug, Default)]
+struct ReuseTrack {
+    /// Total reuses per entry (Fig. 11). Indexed by id; evicted entries
+    /// keep their final count.
+    counts: Vec<u32>,
+    /// Clock reference counters (second-chance bits, saturating at 3):
+    /// bumped on reuse, decayed by the eviction clock.
+    refs: Vec<u8>,
+}
+
+/// Don't bother compacting tombstones below this id-space size — small
+/// layers never pay enough sweep/search cost to justify a rebuild.
+const COMPACT_MIN_IDS: usize = 64;
+
 /// One layer's attention + index database.
 pub struct LayerDb {
     arena: ApmArena,
     index: Hnsw,
-    /// Reuse count per entry (Fig. 11). Interior mutability so engines can
-    /// share a built database read-only behind `Arc` and still account
-    /// reuse.
-    reuse: std::sync::Mutex<Vec<u32>>,
+    reuse: std::sync::Mutex<ReuseTrack>,
+    /// Eviction clock position (an id in `[0, arena.next_id())`).
+    hand: usize,
 }
 
 impl LayerDb {
@@ -35,7 +66,8 @@ impl LayerDb {
             arena: ApmArena::new(cfg.apm_elems(seq_len))
                 .expect("arena creation"),
             index: Hnsw::new(cfg.embed_dim, params),
-            reuse: std::sync::Mutex::new(Vec::new()),
+            reuse: std::sync::Mutex::new(ReuseTrack::default()),
+            hand: 0,
         }
     }
 
@@ -44,8 +76,115 @@ impl LayerDb {
         let id = self.arena.push(apm)?;
         let iid = self.index.add(feature);
         debug_assert_eq!(iid, id.0, "arena and index ids must stay aligned");
-        self.reuse.lock().unwrap().push(0);
+        let mut track = self.reuse.lock().unwrap();
+        track.counts.push(0);
+        track.refs.push(0);
         Ok(id)
+    }
+
+    /// Serve-time admission: insert under a `capacity` budget (0 =
+    /// unbounded), evicting clock victims first so occupancy never
+    /// exceeds the budget.
+    ///
+    /// Ids are stable only until the next `admit`: admission may trigger
+    /// a tombstone compaction (see [`LayerDb::compact`]), which renumbers
+    /// live entries — so the returned [`AdmitOutcome::id`] must be used
+    /// (or discarded) before admitting again.
+    pub fn admit(&mut self, feature: &[f32], apm: &[f32],
+                 capacity: usize) -> Result<AdmitOutcome> {
+        let mut evicted = Vec::new();
+        if capacity > 0 {
+            while self.len() >= capacity {
+                match self.evict_victim() {
+                    Some(id) => evicted.push(id),
+                    None => break,
+                }
+            }
+        }
+        let id = self.insert(feature, apm)?;
+        // Keep the id space bounded by the live set: once tombstones
+        // dominate (4× the live count), rebuild. Without this, churn
+        // grows the HNSW graph (and every search's `visited` bitmap, and
+        // the eviction clock's sweep span) linearly with total
+        // admissions ever made.
+        let span = self.arena.next_id() as usize;
+        if span >= COMPACT_MIN_IDS && span >= 4 * self.len() {
+            self.compact()?;
+        }
+        Ok(AdmitOutcome { id, evicted })
+    }
+
+    /// Rebuild the arena, index and reuse tracking from the live entries
+    /// only, compacting tombstoned ids away. Live entries are renumbered
+    /// densely (in prior-id order); reuse counts and clock state carry
+    /// over. Outstanding `ApmId`s from before the compaction are invalid
+    /// afterwards.
+    pub fn compact(&mut self) -> Result<()> {
+        let ids = self.arena.live_ids();
+        let mut arena = ApmArena::new(self.arena.entry_elems())?;
+        let mut index = Hnsw::new(self.index.dim(), *self.index.params());
+        let mut track = ReuseTrack::default();
+        {
+            let old = self.reuse.lock().unwrap();
+            for &id in &ids {
+                let nid = arena.push(self.arena.get(id)?)?;
+                let iid = index.add(self.index.vector(id.0));
+                debug_assert_eq!(iid, nid.0, "compaction id alignment");
+                let i = id.0 as usize;
+                track.counts.push(old.counts.get(i).copied().unwrap_or(0));
+                track.refs.push(old.refs.get(i).copied().unwrap_or(0));
+            }
+        }
+        self.arena = arena;
+        self.index = index;
+        self.reuse = std::sync::Mutex::new(track);
+        self.hand = 0;
+        Ok(())
+    }
+
+    /// Evict one entry: frees its arena slot and tombstones its index id.
+    pub fn evict(&mut self, id: ApmId) -> Result<()> {
+        self.arena.remove(id)?;
+        self.index.remove(id.0);
+        Ok(())
+    }
+
+    /// Pick and evict the clock victim: sweep ids from the hand, evicting
+    /// the first live entry whose reference counter has decayed to zero
+    /// and decaying the others — entries reused since the last sweeps
+    /// survive (reuse-aware LRU approximation). Falls back to the first
+    /// live entry after two full sweeps; `None` on an empty layer.
+    pub fn evict_victim(&mut self) -> Option<ApmId> {
+        let span = self.arena.next_id() as usize;
+        if span == 0 || self.arena.is_empty() {
+            return None;
+        }
+        let mut victim: Option<ApmId> = None;
+        {
+            let mut track = self.reuse.lock().unwrap();
+            let mut first_live: Option<u32> = None;
+            for step in 0..2 * span {
+                let id = ((self.hand + step) % span) as u32;
+                if !self.arena.is_live(ApmId(id)) {
+                    continue;
+                }
+                if first_live.is_none() {
+                    first_live = Some(id);
+                }
+                if track.refs[id as usize] == 0 {
+                    victim = Some(ApmId(id));
+                    break;
+                }
+                track.refs[id as usize] -= 1;
+            }
+            if victim.is_none() {
+                victim = first_live.map(ApmId);
+            }
+        }
+        let v = victim?;
+        self.hand = (v.0 as usize + 1) % span;
+        self.evict(v).ok()?;
+        Some(v)
     }
 
     /// Nearest entry for a query feature vector; `ef` overrides the beam.
@@ -59,8 +198,13 @@ impl LayerDb {
 
     /// Record that an entry was used for memoization.
     pub fn mark_reused(&self, id: ApmId) {
-        if let Some(c) = self.reuse.lock().unwrap().get_mut(id.0 as usize) {
+        let mut track = self.reuse.lock().unwrap();
+        let i = id.0 as usize;
+        if let Some(c) = track.counts.get_mut(i) {
             *c += 1;
+        }
+        if let Some(r) = track.refs.get_mut(i) {
+            *r = (*r + 1).min(3);
         }
     }
 
@@ -68,6 +212,7 @@ impl LayerDb {
         &self.arena
     }
 
+    /// Live entries.
     pub fn len(&self) -> usize {
         self.arena.len()
     }
@@ -76,8 +221,13 @@ impl LayerDb {
         self.arena.is_empty()
     }
 
+    /// Ids of all live entries, ascending.
+    pub fn live_ids(&self) -> Vec<ApmId> {
+        self.arena.live_ids()
+    }
+
     pub fn reuse_counts(&self) -> Vec<u32> {
-        self.reuse.lock().unwrap().clone()
+        self.reuse.lock().unwrap().counts.clone()
     }
 
     /// Stored feature vector for an entry (persistence).
@@ -129,7 +279,7 @@ impl AttentionDb {
         self.embed_dim
     }
 
-    /// Total entries across layers.
+    /// Total live entries across layers.
     pub fn total_entries(&self) -> usize {
         self.layers.iter().map(LayerDb::len).sum()
     }
@@ -241,5 +391,114 @@ mod tests {
         let c = cfg();
         let db = AttentionDb::new(&c, 16, HnswParams::default());
         assert!(db.layer(0).lookup(&vec![0.0; c.embed_dim], 16).is_none());
+    }
+
+    #[test]
+    fn admission_respects_capacity() {
+        let c = cfg();
+        let mut db = AttentionDb::new(&c, 16, HnswParams::default());
+        let mut rng = Pcg32::seeded(9);
+        let elems = c.apm_elems(16);
+        let cap = 5usize;
+        for i in 0..20 {
+            let f = unit(&mut rng, c.embed_dim);
+            let out = db
+                .layer_mut(0)
+                .admit(&f, &vec![i as f32; elems], cap)
+                .unwrap();
+            assert!(db.layer(0).len() <= cap, "occupancy over budget");
+            if i >= cap {
+                assert!(!out.evicted.is_empty(), "at capacity must evict");
+            }
+        }
+        assert_eq!(db.layer(0).len(), cap);
+        // Every live id resolves; every evicted id is dead.
+        for id in db.layer(0).live_ids() {
+            db.layer(0).arena().get(id).unwrap();
+        }
+        assert!(db.layer(0).arena().get(ApmId(0)).is_err());
+    }
+
+    #[test]
+    fn eviction_prefers_never_reused_entries() {
+        let c = cfg();
+        let mut db = AttentionDb::new(&c, 16, HnswParams::default());
+        let mut rng = Pcg32::seeded(11);
+        let elems = c.apm_elems(16);
+        let cap = 4usize;
+        let mut hot = None;
+        for i in 0..cap {
+            let f = unit(&mut rng, c.embed_dim);
+            let id = db.layer_mut(0).admit(&f, &vec![0.0; elems], cap)
+                .unwrap().id;
+            if i == 1 {
+                hot = Some(id);
+            }
+        }
+        // Heavily reuse one entry, then admit twice over budget: the cold
+        // entries must go first, the hot one must survive.
+        let hot = hot.unwrap();
+        for _ in 0..3 {
+            db.layer(0).mark_reused(hot);
+        }
+        let mut evicted = Vec::new();
+        for _ in 0..2 {
+            let f = unit(&mut rng, c.embed_dim);
+            evicted.extend(
+                db.layer_mut(0).admit(&f, &vec![1.0; elems], cap)
+                    .unwrap().evicted,
+            );
+        }
+        assert_eq!(evicted.len(), 2);
+        assert!(!evicted.contains(&hot), "reused entry evicted first");
+        assert!(db.layer(0).arena().is_live(hot));
+    }
+
+    #[test]
+    fn churn_compacts_id_space() {
+        let c = cfg();
+        let mut db = AttentionDb::new(&c, 16, HnswParams::default());
+        let mut rng = Pcg32::seeded(17);
+        let elems = c.apm_elems(16);
+        let cap = 8usize;
+        for i in 0..10 * COMPACT_MIN_IDS {
+            let f = unit(&mut rng, c.embed_dim);
+            db.layer_mut(0).admit(&f, &vec![i as f32; elems], cap).unwrap();
+        }
+        let layer = db.layer(0);
+        assert_eq!(layer.len(), cap);
+        // The id space stays bounded near the compaction threshold instead
+        // of growing with total admissions (640 here).
+        assert!((layer.arena().next_id() as usize) <= COMPACT_MIN_IDS + cap,
+                "id space {} not compacted", layer.arena().next_id());
+        // Entries stay self-consistent across rebuilds.
+        for id in layer.live_ids() {
+            layer.arena().get(id).unwrap();
+            let v = layer.index_vector(id).to_vec();
+            let hit = layer.lookup(&v, 48).unwrap();
+            assert_eq!(hit.id, id);
+        }
+    }
+
+    #[test]
+    fn evicted_ids_stop_matching_lookup() {
+        let c = cfg();
+        let mut db = AttentionDb::new(&c, 16, HnswParams::default());
+        let mut rng = Pcg32::seeded(13);
+        let elems = c.apm_elems(16);
+        let f0 = unit(&mut rng, c.embed_dim);
+        let id0 = db.layer_mut(0).insert(&f0, &vec![0.0; elems]).unwrap();
+        let f1 = unit(&mut rng, c.embed_dim);
+        db.layer_mut(0).insert(&f1, &vec![1.0; elems]).unwrap();
+        db.layer_mut(0).evict(id0).unwrap();
+        let hit = db.layer(0).lookup(&f0, 32).unwrap();
+        assert_ne!(hit.id, id0, "evicted id must not match");
+        // The freed slot's next tenant gets a fresh id and exact lookup.
+        let f2 = unit(&mut rng, c.embed_dim);
+        let id2 = db.layer_mut(0).insert(&f2, &vec![2.0; elems]).unwrap();
+        assert_eq!(id2, ApmId(2));
+        let hit2 = db.layer(0).lookup(&f2, 32).unwrap();
+        assert_eq!(hit2.id, id2);
+        assert_eq!(db.layer(0).arena().get(id2).unwrap(), &vec![2.0; elems][..]);
     }
 }

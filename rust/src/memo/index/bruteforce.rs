@@ -4,15 +4,17 @@ use crate::memo::index::{Hit, VectorIndex};
 use crate::tensor::ops::l2_sq;
 
 /// Flat store + linear scan. O(N·d) per query; used for Fig. 7 quality
-/// comparisons and as the recall oracle in property tests.
+/// comparisons and as the recall oracle in property tests. Deletion is by
+/// tombstone, mirroring [`crate::memo::index::Hnsw`].
 pub struct BruteForceIndex {
     dim: usize,
     data: Vec<f32>,
+    deleted: Vec<bool>,
 }
 
 impl BruteForceIndex {
     pub fn new(dim: usize) -> Self {
-        BruteForceIndex { dim, data: Vec::new() }
+        BruteForceIndex { dim, data: Vec::new(), deleted: Vec::new() }
     }
 
     pub fn vector(&self, id: u32) -> &[f32] {
@@ -26,12 +28,14 @@ impl VectorIndex for BruteForceIndex {
         assert_eq!(v.len(), self.dim, "dimension mismatch");
         let id = self.len() as u32;
         self.data.extend_from_slice(v);
+        self.deleted.push(false);
         id
     }
 
     fn search(&self, q: &[f32], k: usize) -> Vec<Hit> {
         let n = self.len();
         let mut hits: Vec<Hit> = (0..n)
+            .filter(|&i| !self.deleted[i])
             .map(|i| Hit {
                 id: i as u32,
                 dist_sq: l2_sq(q, &self.data[i * self.dim..(i + 1) * self.dim]),
@@ -44,6 +48,16 @@ impl VectorIndex for BruteForceIndex {
 
     fn len(&self) -> usize {
         self.data.len() / self.dim
+    }
+
+    fn remove(&mut self, id: u32) -> bool {
+        match self.deleted.get_mut(id as usize) {
+            Some(d) if !*d => {
+                *d = true;
+                true
+            }
+            _ => false,
+        }
     }
 }
 
@@ -68,5 +82,18 @@ mod tests {
         let mut idx = BruteForceIndex::new(2);
         idx.add(&[0.0, 0.0]);
         assert_eq!(idx.search(&[1.0, 1.0], 5).len(), 1);
+    }
+
+    #[test]
+    fn removed_entries_stop_matching() {
+        let mut idx = BruteForceIndex::new(2);
+        idx.add(&[0.0, 0.0]);
+        idx.add(&[1.0, 0.0]);
+        assert!(idx.remove(1));
+        assert!(!idx.remove(1));
+        assert!(!idx.remove(99));
+        let hits = idx.search(&[1.0, 0.0], 5);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].id, 0);
     }
 }

@@ -38,11 +38,19 @@ struct Node {
 }
 
 /// The index. Vectors are stored in one flat array.
+///
+/// Deletion is by tombstone (`remove`): the node keeps its vector and its
+/// links — so it still *routes* searches through the small world — but it
+/// is never returned as a hit and new nodes stop linking to it. This is
+/// the standard HNSW delete strategy and what lets the serve-time
+/// eviction path retire entries without rebuilding the graph.
 pub struct Hnsw {
     dim: usize,
     params: HnswParams,
     data: Vec<f32>,
     nodes: Vec<Node>,
+    deleted: Vec<bool>,
+    live: usize,
     entry: Option<u32>,
     max_level: usize,
     rng: Pcg32,
@@ -87,6 +95,8 @@ impl Hnsw {
             params,
             data: Vec::new(),
             nodes: Vec::new(),
+            deleted: Vec::new(),
+            live: 0,
             entry: None,
             max_level: 0,
             rng: Pcg32::seeded(params.seed),
@@ -94,8 +104,23 @@ impl Hnsw {
         }
     }
 
+    /// Vectors that are still searchable (not tombstoned).
+    pub fn live_len(&self) -> usize {
+        self.live
+    }
+
+    /// Has this id been tombstoned?
+    pub fn is_deleted(&self, id: u32) -> bool {
+        self.deleted.get(id as usize).copied().unwrap_or(false)
+    }
+
     pub fn params(&self) -> &HnswParams {
         &self.params
+    }
+
+    /// Vector dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
     }
 
     #[inline]
@@ -135,6 +160,9 @@ impl Hnsw {
     }
 
     /// Beam search on one level; returns up to `ef` closest as a max-heap.
+    ///
+    /// Tombstoned nodes participate in the frontier (they route) but are
+    /// never added to the result set.
     fn search_level(&self, q: &[f32], start: u32, level: usize,
                     ef: usize) -> Vec<Hit> {
         let mut visited = vec![false; self.nodes.len()];
@@ -143,7 +171,9 @@ impl Hnsw {
         let mut frontier = BinaryHeap::new(); // min-heap
         let mut results: BinaryHeap<Far> = BinaryHeap::new(); // max-heap
         frontier.push(Near(d0, start));
-        results.push(Far(d0, start));
+        if !self.deleted[start as usize] {
+            results.push(Far(d0, start));
+        }
         while let Some(Near(d, c)) = frontier.pop() {
             let worst = results.peek().map_or(f32::INFINITY, |f| f.0);
             if d > worst && results.len() >= ef {
@@ -158,9 +188,11 @@ impl Hnsw {
                 let worst = results.peek().map_or(f32::INFINITY, |f| f.0);
                 if results.len() < ef || dn < worst {
                     frontier.push(Near(dn, n));
-                    results.push(Far(dn, n));
-                    if results.len() > ef {
-                        results.pop();
+                    if !self.deleted[n as usize] {
+                        results.push(Far(dn, n));
+                        if results.len() > ef {
+                            results.pop();
+                        }
                     }
                 }
             }
@@ -218,6 +250,8 @@ impl VectorIndex for Hnsw {
         self.data.extend_from_slice(v);
         let level = self.rng.hnsw_level(self.level_mult);
         self.nodes.push(Node { links: vec![Vec::new(); level + 1] });
+        self.deleted.push(false);
+        self.live += 1;
 
         let Some(entry) = self.entry else {
             self.entry = Some(id);
@@ -232,11 +266,16 @@ impl VectorIndex for Hnsw {
         for l in (0..=level.min(self.max_level)).rev() {
             let hits = self.search_level(v, cur, l, self.params.ef_construction);
             cur = hits.first().map_or(cur, |h| h.id);
-            let neighbours = self.select(&hits, if l == 0 {
+            let mut neighbours = self.select(&hits, if l == 0 {
                 self.params.m * 2
             } else {
                 self.params.m
             });
+            if neighbours.is_empty() {
+                // Every beam candidate is tombstoned: bridge through the
+                // routing node anyway so the new vector stays reachable.
+                neighbours.push(cur);
+            }
             for &n in &neighbours {
                 self.nodes[id as usize].links[l].push(n);
                 self.nodes[n as usize].links[l].push(id);
@@ -256,6 +295,17 @@ impl VectorIndex for Hnsw {
 
     fn len(&self) -> usize {
         self.nodes.len()
+    }
+
+    fn remove(&mut self, id: u32) -> bool {
+        match self.deleted.get_mut(id as usize) {
+            Some(d) if !*d => {
+                *d = true;
+                self.live -= 1;
+                true
+            }
+            _ => false,
+        }
     }
 }
 
@@ -340,6 +390,54 @@ mod tests {
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), hits.len());
+    }
+
+    #[test]
+    fn removed_ids_stop_matching_but_keep_routing() {
+        let vecs = random_vecs(300, 8, 6);
+        let mut idx = Hnsw::new(8, HnswParams::default());
+        for v in &vecs {
+            idx.add(v);
+        }
+        // Tombstone every third vector (including, with high likelihood,
+        // routing hubs) and verify none of them is ever returned while
+        // recall on the survivors stays intact.
+        let mut removed = Vec::new();
+        for id in (0..300u32).step_by(3) {
+            assert!(idx.remove(id));
+            removed.push(id);
+        }
+        assert!(!idx.remove(removed[0]), "double remove must report false");
+        assert!(idx.is_deleted(removed[0]));
+        assert!(!idx.is_deleted(1));
+        assert_eq!(idx.live_len(), 200);
+        assert_eq!(idx.len(), 300);
+        for probe in [1usize, 50, 100, 250] {
+            let hits = idx.search_ef(&vecs[probe], 10, 128);
+            assert!(!hits.is_empty());
+            for h in &hits {
+                assert!(!removed.contains(&h.id), "tombstoned id {}", h.id);
+            }
+            if probe % 3 != 0 {
+                assert_eq!(hits[0].id, probe as u32, "live self-match");
+            }
+        }
+    }
+
+    #[test]
+    fn all_removed_returns_nothing() {
+        let mut idx = Hnsw::new(4, HnswParams::default());
+        for i in 0..10 {
+            idx.add(&[i as f32, 0.0, 0.0, 0.0]);
+        }
+        for id in 0..10 {
+            idx.remove(id);
+        }
+        assert!(idx.search(&[0.0; 4], 3).is_empty());
+        // Adding after a full purge works and is findable again.
+        let id = idx.add(&[1.0, 2.0, 3.0, 4.0]);
+        let hits = idx.search(&[1.0, 2.0, 3.0, 4.0], 1);
+        assert_eq!(hits[0].id, id);
     }
 
     #[test]

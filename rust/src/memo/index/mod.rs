@@ -22,8 +22,12 @@ pub trait VectorIndex {
     fn add(&mut self, v: &[f32]) -> u32;
     /// `k` nearest neighbours of `q`, nearest first.
     fn search(&self, q: &[f32], k: usize) -> Vec<Hit>;
-    /// Number of stored vectors.
+    /// Number of stored vectors (tombstoned ones included).
     fn len(&self) -> usize;
+    /// Tombstone a vector: it stops matching searches but keeps its id
+    /// (and, for graph indexes, keeps routing). Returns `false` when the
+    /// id is unknown or already removed.
+    fn remove(&mut self, id: u32) -> bool;
     fn is_empty(&self) -> bool {
         self.len() == 0
     }

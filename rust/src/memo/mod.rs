@@ -22,7 +22,7 @@ pub mod stats;
 pub mod thresholds;
 
 pub use arena::{ApmArena, ApmId};
-pub use attdb::AttentionDb;
+pub use attdb::{AdmitOutcome, AttentionDb};
 pub use builder::DbBuilder;
-pub use policy::{LayerProfile, SelectivePolicy};
+pub use policy::{AdmissionPolicy, LayerProfile, SelectivePolicy};
 pub use stats::MemoStats;

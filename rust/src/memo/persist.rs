@@ -98,10 +98,14 @@ pub fn save(built: &BuiltDb, path: &Path) -> Result<()> {
     }
     for li in 0..built.db.num_layers() {
         let layer = built.db.layer(li);
-        let n = layer.len();
-        w_u64(&mut w, n as u64)?;
-        for id in 0..n {
-            let f = layer.index_vector(ApmId(id as u32));
+        // Live ids only: a database warmed at serve time has holes where
+        // entries were evicted; persisting compacts them away (ids are
+        // reassigned densely on load, which is fine — the index is rebuilt
+        // from the stored features anyway).
+        let ids = layer.live_ids();
+        w_u64(&mut w, ids.len() as u64)?;
+        for &id in &ids {
+            let f = layer.index_vector(id);
             w.write_all(
                 unsafe {
                     std::slice::from_raw_parts(
@@ -111,8 +115,8 @@ pub fn save(built: &BuiltDb, path: &Path) -> Result<()> {
                 },
             )?;
         }
-        for id in 0..n {
-            let apm = layer.arena().get(ApmId(id as u32))?;
+        for &id in &ids {
+            let apm = layer.arena().get(id)?;
             w.write_all(
                 unsafe {
                     std::slice::from_raw_parts(

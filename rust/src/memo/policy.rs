@@ -98,6 +98,50 @@ impl SelectivePolicy {
     }
 }
 
+/// Serve-time admission gate for the online attention database.
+///
+/// Admission costs the split path (scores are computed for misses anyway,
+/// but the layer forgoes the cheaper fused kernel), so it is only worth
+/// doing on layers where memoization can eventually pay. The gate applies
+/// the paper's selective-memoization logic (Eq. 3) with an *optimistic*
+/// hit rate: during a per-layer warm-up window it always admits (there is
+/// no signal yet), after which it admits only when the layer's profiled
+/// benefit at `α = 1` — the best case a warmed database can reach — is
+/// positive. A layer whose overhead exceeds its attention saving can never
+/// profit, so it never grows a database.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionPolicy {
+    /// Master switch (mirrors `MemoConfig::online_admission`).
+    pub enabled: bool,
+    /// Per-layer attempts to observe before the Eq. 3 gate activates.
+    pub min_attempts: u64,
+}
+
+impl AdmissionPolicy {
+    pub fn new(enabled: bool, min_attempts: u64) -> Self {
+        AdmissionPolicy { enabled, min_attempts }
+    }
+
+    /// Should a layer admit its freshly computed miss APMs?
+    ///
+    /// `profile` is the layer's offline Eq. 3 profile (`None` for
+    /// profile-free engines, e.g. a cold start without a built database —
+    /// those always admit once enabled), `attempts` the layer's lookups so
+    /// far, `tokens` the batch token count for profile scaling.
+    pub fn should_admit(&self, profile: Option<&LayerProfile>, attempts: u64,
+                        tokens: u64) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        if attempts < self.min_attempts {
+            return true;
+        }
+        profile.map_or(true, |p| {
+            LayerProfile { alpha: 1.0, ..*p }.benefit(tokens) > 0.0
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,5 +202,31 @@ mod tests {
     fn out_of_range_layer_defaults_to_attempt() {
         let pol = SelectivePolicy::new(vec![], true);
         assert!(pol.attempt(5, 100));
+    }
+
+    #[test]
+    fn admission_disabled_never_admits() {
+        let gate = AdmissionPolicy::new(false, 10);
+        assert!(!gate.should_admit(None, 0, 100));
+    }
+
+    #[test]
+    fn admission_warmup_always_admits() {
+        let gate = AdmissionPolicy::new(true, 10);
+        // Even a hopeless profile admits inside the warm-up window.
+        let bad = prof(1.0, 5.0, 0.0);
+        assert!(gate.should_admit(Some(&bad), 9, 1000));
+        assert!(gate.should_admit(None, 0, 1000));
+    }
+
+    #[test]
+    fn admission_gates_on_optimistic_benefit() {
+        let gate = AdmissionPolicy::new(true, 0);
+        // benefit(alpha=1) = t_attn - t_overhead (with t_fused = t_attn +
+        // t_apply): positive overheads below t_attn admit, above never do.
+        assert!(gate.should_admit(Some(&prof(1.0, 0.5, 0.0)), 100, 1000));
+        assert!(!gate.should_admit(Some(&prof(1.0, 1.5, 0.9)), 100, 1000));
+        // Profile-free engines admit whenever enabled.
+        assert!(gate.should_admit(None, 100, 1000));
     }
 }

@@ -23,8 +23,15 @@ pub struct LayerCounters {
     pub hits: u64,
     /// Sequences that skipped the attempt entirely (selective policy).
     pub skipped: u64,
+    /// Sequences whose attempt was rolled back by the padded-batch quorum
+    /// (the fused path won; their `attempts`/`hits` were reverted).
+    pub reverted: u64,
     /// Sequences processed through this layer in total.
     pub total: u64,
+    /// APMs admitted into the online database at serve time.
+    pub admitted: u64,
+    /// Online-database entries evicted to make room for admissions.
+    pub evicted: u64,
 }
 
 /// Whole-engine memoization statistics.
@@ -73,6 +80,16 @@ impl MemoStats {
         } else {
             l.hits as f64 / l.attempts as f64
         }
+    }
+
+    /// Total serve-time admissions across layers.
+    pub fn total_admitted(&self) -> u64 {
+        self.layers.iter().map(|l| l.admitted).sum()
+    }
+
+    /// Total serve-time evictions across layers.
+    pub fn total_evicted(&self) -> u64 {
+        self.layers.iter().map(|l| l.evicted).sum()
     }
 }
 

@@ -3,22 +3,31 @@
 //! Per batch, per layer:
 //! 1. the selective policy (Eq. 3) decides whether to attempt memoization;
 //! 2. if attempting — embed the hidden states (§5.2), query the layer's
-//!    index database, and accept entries whose estimated similarity clears
-//!    the level's threshold;
+//!    index databases (the offline-built one and, when serve-time
+//!    admission is on, the online one), and accept entries whose estimated
+//!    similarity clears the level's threshold;
 //! 3. missing rows (if any) run `attn_scores` as a packed sub-batch; hit
 //!    rows are fetched from the attention database (memory-mapped window
 //!    or direct arena view);
-//! 4. the combined APM batch feeds `attn_apply`.
+//! 4. freshly computed miss APMs are admitted into the online database
+//!    (capacity-bounded, reuse-aware eviction) when the Eq. 3 admission
+//!    gate approves — this is how a cold or drifting workload warms from
+//!    0% to a steady-state hit rate;
+//! 5. the combined APM batch feeds `attn_apply`.
 //! Layers that skip memoization take the fused `layer_full` fast path.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::{MemoConfig, MemoLevel};
+use crate::memo::arena::ApmId;
+use crate::memo::attdb::AttentionDb;
 use crate::memo::builder::BuiltDb;
 use crate::memo::gather::GatherWindow;
-use crate::memo::policy::SelectivePolicy;
+use crate::memo::index::HnswParams;
+use crate::memo::policy::{AdmissionPolicy, SelectivePolicy};
 use crate::memo::stats::MemoStats;
+use crate::memo::thresholds::Thresholds;
 use crate::model::ModelRunner;
 use crate::serving::metrics::EngineMetrics;
 use crate::tensor::tensor::IdTensor;
@@ -43,6 +52,26 @@ pub struct BatchResult {
     pub seconds: f64,
 }
 
+/// The serve-time (online) attention database: a writable overlay in front
+/// of the immutable offline `BuiltDb`. The engine owns it exclusively (the
+/// engine already runs behind `Arc<Mutex<Engine>>`), so admission needs no
+/// extra locking and sharing semantics of the built database are
+/// unchanged.
+pub struct OnlineMemo {
+    pub db: AttentionDb,
+    /// Per-layer entry budget (0 = unbounded).
+    pub capacity: usize,
+    /// Eq. 3-based admission gate.
+    pub policy: AdmissionPolicy,
+}
+
+/// Which database tier a hit came from.
+#[derive(Debug, Clone, Copy)]
+enum HitSrc {
+    Static(ApmId),
+    Online(ApmId),
+}
+
 /// The memoizing inference engine for one model family.
 ///
 /// SAFETY (Send): the engine owns `!Send` XLA literals transitively; it is
@@ -51,6 +80,7 @@ pub struct BatchResult {
 pub struct Engine {
     runner: ModelRunner,
     built: Option<Arc<BuiltDb>>,
+    online: Option<OnlineMemo>,
     policy: SelectivePolicy,
     threshold: f32,
     opts: MemoConfig,
@@ -65,10 +95,25 @@ pub struct Engine {
 unsafe impl Send for Engine {}
 
 impl Engine {
-    /// Build an engine. `built = None` serves the pure compute baseline.
+    /// Build an engine. `built = None` serves the pure compute baseline —
+    /// unless online admission is on, in which case the engine starts cold
+    /// and warms its own database from live traffic.
     pub fn new(runner: ModelRunner, built: Option<Arc<BuiltDb>>,
                opts: EngineOptions) -> Result<Self> {
         let layers = runner.config().layers;
+        let online = if opts.memo.online_admission
+            && opts.memo.level != MemoLevel::Off
+        {
+            Some(OnlineMemo {
+                db: AttentionDb::new(runner.config(), opts.seq_len,
+                                     HnswParams::default()),
+                capacity: opts.memo.max_db_entries,
+                policy: AdmissionPolicy::new(
+                    true, opts.memo.admission_min_attempts),
+            })
+        } else {
+            None
+        };
         let (policy, threshold) = match (&built, opts.memo.level) {
             (Some(b), level) => {
                 let thr = opts
@@ -77,6 +122,17 @@ impl Engine {
                     .map(|t| t as f32)
                     .unwrap_or_else(|| b.thresholds.for_level(level));
                 (b.policy(thr, opts.memo.selective), thr)
+            }
+            (None, level) if online.is_some() => {
+                // Cold start: no offline profiles, default thresholds.
+                let thr = opts
+                    .memo
+                    .threshold_override
+                    .map(|t| t as f32)
+                    .unwrap_or_else(|| {
+                        Thresholds::calibrate(Vec::new()).for_level(level)
+                    });
+                (SelectivePolicy::always(layers), thr)
             }
             (None, _) => (SelectivePolicy::always(layers), f32::INFINITY),
         };
@@ -95,6 +151,7 @@ impl Engine {
             threshold,
             opts: opts.memo,
             built,
+            online,
             gather,
             runner,
             seq_len: opts.seq_len,
@@ -117,9 +174,15 @@ impl Engine {
         self.built.as_deref()
     }
 
+    /// The serve-time database overlay, when admission is enabled.
+    pub fn online(&self) -> Option<&OnlineMemo> {
+        self.online.as_ref()
+    }
+
     /// Memoization active at all?
     pub fn memo_enabled(&self) -> bool {
-        self.built.is_some() && self.opts.level != MemoLevel::Off
+        (self.built.is_some() || self.online.is_some())
+            && self.opts.level != MemoLevel::Off
     }
 
     /// Run one batch of token id rows.
@@ -127,13 +190,14 @@ impl Engine {
         let t0 = Instant::now();
         let n = ids.shape[0];
         let mut memo_hits = vec![0u32; n];
+        let last_pos = last_nonpad_positions(ids);
 
         let mut h = self.runner.embed(ids)?;
         let layers = self.runner.config().layers;
         for li in 0..layers {
             h = self.run_layer(li, h, &mut memo_hits)?;
         }
-        let logits = self.head_logits(&h)?;
+        let logits = self.head_logits(&h, &last_pos)?;
 
         let labels = (0..n)
             .map(|i| ops::argmax(logits.row(i)) as i32)
@@ -143,6 +207,9 @@ impl Engine {
         self.metrics.batch_size.record(n as f64);
         self.metrics.batches += 1;
         self.metrics.requests += n as u64;
+        if let Some(om) = &self.online {
+            self.metrics.online_entries = om.db.total_entries() as u64;
+        }
         Ok(BatchResult { logits, labels, memo_hits, seconds })
     }
 
@@ -153,8 +220,25 @@ impl Engine {
         let tokens = (n * self.seq_len) as u64;
         self.stats.layers[li].total += n as u64;
 
+        let static_ready = self
+            .built
+            .as_ref()
+            .map_or(false, |b| !b.db.layer(li).is_empty());
+        let online_ready = self
+            .online
+            .as_ref()
+            .map_or(false, |o| !o.db.layer(li).is_empty());
+        // Admission gate: is this layer allowed to invest in warming its
+        // online database this batch?
+        let admission_open = self.online.as_ref().map_or(false, |o| {
+            o.policy.should_admit(
+                self.policy.profiles().get(li),
+                self.stats.layers[li].attempts,
+                tokens,
+            )
+        });
         let attempt = self.memo_enabled()
-            && self.built.as_ref().map_or(false, |b| !b.db.layer(li).is_empty())
+            && (static_ready || online_ready || admission_open)
             && self.policy.attempt(li, tokens);
         if !attempt {
             self.stats.layers[li].skipped += n as u64;
@@ -165,6 +249,7 @@ impl Engine {
         // memoized layer touches share this device buffer (§Perf).
         let (hbuf, b) = self.runner.upload_padded(&h, "attn_apply")?;
         let seq = self.seq_len;
+        let elems = self.runner.config().apm_elems(seq);
 
         // 1. Embed + search (the memoization overhead, Table 4 rows 1-2).
         let te = Instant::now();
@@ -174,44 +259,70 @@ impl Engine {
         self.stats.stages.embedding_ms.record(te.elapsed().as_secs_f64() * 1e3);
 
         let ts = Instant::now();
-        let built = self.built.as_ref().unwrap();
-        let mut hit_ids = Vec::new();
-        let mut hit_rows = Vec::new();
-        let mut miss_rows = Vec::new();
+        let mut hits: Vec<(usize, HitSrc)> = Vec::new();
+        let mut miss_rows: Vec<usize> = Vec::new();
         for i in 0..n {
-            match built.db.layer(li).lookup(feats.vector(i), self.opts.ef_search)
-            {
-                Some(hit) if hit.similarity >= self.threshold => {
-                    hit_ids.push(hit.id);
-                    hit_rows.push(i);
+            let q = feats.vector(i);
+            let mut best: Option<(f32, HitSrc)> = None;
+            if let Some(bdb) = self.built.as_ref() {
+                if let Some(hit) =
+                    bdb.db.layer(li).lookup(q, self.opts.ef_search)
+                {
+                    if hit.similarity >= self.threshold {
+                        best = Some((hit.similarity, HitSrc::Static(hit.id)));
+                    }
                 }
-                _ => miss_rows.push(i),
+            }
+            if let Some(om) = self.online.as_ref() {
+                if let Some(hit) =
+                    om.db.layer(li).lookup(q, self.opts.ef_search)
+                {
+                    if hit.similarity >= self.threshold
+                        && best.map_or(true, |(s, _)| hit.similarity > s)
+                    {
+                        best = Some((hit.similarity, HitSrc::Online(hit.id)));
+                    }
+                }
+            }
+            match best {
+                Some((_, src)) => hits.push((i, src)),
+                None => miss_rows.push(i),
             }
         }
         self.stats.stages.search_ms.record(ts.elapsed().as_secs_f64() * 1e3);
         self.stats.layers[li].attempts += n as u64;
-        self.stats.layers[li].hits += hit_rows.len() as u64;
-        for &r in &hit_rows {
+        self.stats.layers[li].hits += hits.len() as u64;
+        for &(r, _) in &hits {
             memo_hits[r] += 1;
         }
 
-        if hit_rows.is_empty() {
-            // Total miss: the fused path is strictly cheaper.
+        // Admit this batch's misses? (Gate approved and there is material.)
+        let admit_now = admission_open && !miss_rows.is_empty();
+
+        if hits.is_empty() && !admit_now {
+            // Total miss with nothing to warm: the fused path is strictly
+            // cheaper.
             return self.runner.layer_full(&h, li);
         }
 
         // §Perf quorum: memoization only pays when the miss sub-batch is
         // *smaller after padding* than the full batch — otherwise computing
         // scores for the misses costs the same as computing everything, and
-        // the fused path wins. Revert the optimistic hit accounting.
-        if !miss_rows.is_empty() {
+        // the fused path wins. Revert the optimistic hit accounting (the
+        // attempt happened, but its counters must stay consistent:
+        // attempts/hits go back, the rows are tallied as `reverted`).
+        // While admitting, the split path runs regardless — computing the
+        // scores is the warm-up investment the admission gate approved.
+        if !hits.is_empty() && !miss_rows.is_empty() && !admit_now {
             let padded_miss = self
                 .runner
                 .fit_batch("attn_scores", seq, miss_rows.len())
-                .unwrap_or(b);
+                .unwrap_or(miss_rows.len());
             if padded_miss >= b {
-                self.stats.layers[li].hits -= hit_rows.len() as u64;
-                for &r in &hit_rows {
+                self.stats.layers[li].attempts -= n as u64;
+                self.stats.layers[li].hits -= hits.len() as u64;
+                self.stats.layers[li].reverted += n as u64;
+                for &(r, _) in &hits {
                     memo_hits[r] -= 1;
                 }
                 return self.runner.layer_full(&h, li);
@@ -235,32 +346,50 @@ impl Engine {
         // 3. Assemble the batch APM: DB pages for hits, computed rows for
         //    misses (Table 4 row 3: mapping time).
         let tm = Instant::now();
-        let elems = built.db.apm_elems();
         let mut apm_data = vec![0.0f32; n * elems];
-        {
-            // Mark reuse + fetch hit entries.
+        let stat_hits: Vec<(usize, ApmId)> = hits
+            .iter()
+            .filter_map(|&(r, src)| match src {
+                HitSrc::Static(id) => Some((r, id)),
+                HitSrc::Online(_) => None,
+            })
+            .collect();
+        if !stat_hits.is_empty() {
+            // Mark reuse + fetch static-tier entries.
             let built = self.built.as_ref().unwrap();
             let layer_db = built.db.layer(li);
-            for &id in &hit_ids {
+            for &(_, id) in &stat_hits {
                 layer_db.mark_reused(id);
             }
             if let Some(win) = self.gather.as_mut() {
-                let mapped = win.map_batch(layer_db.arena(), &hit_ids)?;
-                for (k, &row) in hit_rows.iter().enumerate() {
-                    apm_data[row * elems..(row + 1) * elems]
-                        .copy_from_slice(&mapped[k * elems..(k + 1) * elems]);
+                let ids: Vec<ApmId> =
+                    stat_hits.iter().map(|&(_, id)| id).collect();
+                let mapped = win.map_batch(layer_db.arena(), &ids)?;
+                for (k, &(row, _)) in stat_hits.iter().enumerate() {
+                    put_row(&mut apm_data, elems, row, mapped, k);
                 }
             } else {
-                for (&row, &id) in hit_rows.iter().zip(&hit_ids) {
-                    apm_data[row * elems..(row + 1) * elems]
-                        .copy_from_slice(layer_db.arena().get(id)?);
+                for &(row, id) in &stat_hits {
+                    put_row(&mut apm_data, elems, row,
+                            layer_db.arena().get(id)?, 0);
+                }
+            }
+        }
+        // Online-tier hits are copy-gathered (the mapping window is bound
+        // to the static arena).
+        if let Some(om) = self.online.as_ref() {
+            let layer_db = om.db.layer(li);
+            for &(row, src) in &hits {
+                if let HitSrc::Online(id) = src {
+                    layer_db.mark_reused(id);
+                    put_row(&mut apm_data, elems, row,
+                            layer_db.arena().get(id)?, 0);
                 }
             }
         }
         if let Some(m) = &miss_apm {
             for (k, &row) in miss_rows.iter().enumerate() {
-                apm_data[row * elems..(row + 1) * elems]
-                    .copy_from_slice(&m.data()[k * elems..(k + 1) * elems]);
+                put_row(&mut apm_data, elems, row, m.data(), k);
             }
         }
         let cfg = self.runner.config();
@@ -269,6 +398,40 @@ impl Engine {
             apm_data,
         )?;
         self.stats.stages.mapping_ms.record(tm.elapsed().as_secs_f64() * 1e3);
+
+        // 3b. Admission — after assembly, so an eviction can never
+        // invalidate an online hit whose payload this batch just gathered.
+        // At most `capacity` admissions per batch: beyond that the clock
+        // would evict entries admitted moments earlier in the same loop,
+        // wasting every earlier insert.
+        if admit_now {
+            if let (Some(om), Some(m)) =
+                (self.online.as_mut(), miss_apm.as_ref())
+            {
+                let cap = om.capacity;
+                let quota = if cap == 0 {
+                    miss_rows.len()
+                } else {
+                    cap.min(miss_rows.len())
+                };
+                let ldb = om.db.layer_mut(li);
+                let mut admitted = 0u64;
+                let mut evicted = 0u64;
+                for (k, &row) in miss_rows.iter().enumerate().take(quota) {
+                    let out = ldb.admit(
+                        feats.vector(row),
+                        &m.data()[k * elems..(k + 1) * elems],
+                        cap,
+                    )?;
+                    admitted += 1;
+                    evicted += out.evicted.len() as u64;
+                }
+                self.stats.layers[li].admitted += admitted;
+                self.stats.layers[li].evicted += evicted;
+                self.metrics.admissions += admitted;
+                self.metrics.evictions += evicted;
+            }
+        }
 
         // 4. Remainder of the layer (reuses the shared hidden buffer).
         let ta = Instant::now();
@@ -279,32 +442,26 @@ impl Engine {
     }
 
     /// Task logits: classifier as-is; for gpt, next-token logits at each
-    /// sequence's last non-pad position.
-    fn head_logits(&self, h: &Tensor) -> Result<Tensor> {
+    /// sequence's last non-pad position (reading a fixed `L-1` would
+    /// condition padded rows' predictions on PAD tokens).
+    fn head_logits(&self, h: &Tensor, last_pos: &[usize]) -> Result<Tensor> {
         let out = self.runner.head(h)?;
         if !self.runner.config().causal {
             return Ok(out);
         }
-        // [n, L, V] → [n, V] at the final position (ids aren't visible here;
-        // position L-1 is used — serving sequences are fully packed).
-        let (n, l, v) = (out.shape()[0], out.shape()[1], out.shape()[2]);
-        let mut data = Vec::with_capacity(n * v);
-        for i in 0..n {
-            let base = i * l * v + (l - 1) * v;
-            data.extend_from_slice(&out.data()[base..base + v]);
-        }
-        Tensor::new(vec![n, v], data)
+        take_positions(&out, last_pos)
     }
 
     /// Baseline (fused, never memoized) for comparisons.
     pub fn infer_baseline(&mut self, ids: &IdTensor) -> Result<BatchResult> {
         let t0 = Instant::now();
         let n = ids.shape[0];
+        let last_pos = last_nonpad_positions(ids);
         let mut h = self.runner.embed(ids)?;
         for li in 0..self.runner.config().layers {
             h = self.runner.layer_full(&h, li)?;
         }
-        let logits = self.head_logits(&h)?;
+        let logits = self.head_logits(&h, &last_pos)?;
         let labels = (0..n)
             .map(|i| ops::argmax(logits.row(i)) as i32)
             .collect();
@@ -329,9 +486,44 @@ fn gather_rows(t: &Tensor, rows: &[usize]) -> Result<Tensor> {
     Tensor::new(shape, data)
 }
 
+/// Copy `src`'s `k`-th row of `elems` values into `dst`'s row `row` — the
+/// one primitive the APM assembly uses for every source (arena view,
+/// mapped window, computed scores).
+fn put_row(dst: &mut [f32], elems: usize, row: usize, src: &[f32], k: usize) {
+    dst[row * elems..(row + 1) * elems]
+        .copy_from_slice(&src[k * elems..(k + 1) * elems]);
+}
+
+/// Gather `[n, V]` rows at per-sequence positions from `[n, L, V]` logits.
+fn take_positions(out: &Tensor, pos: &[usize]) -> Result<Tensor> {
+    let (n, l, v) = (out.shape()[0], out.shape()[1], out.shape()[2]);
+    let mut data = Vec::with_capacity(n * v);
+    for i in 0..n {
+        let p = pos.get(i).copied().unwrap_or(l - 1).min(l - 1);
+        let base = i * l * v + p * v;
+        data.extend_from_slice(&out.data()[base..base + v]);
+    }
+    Tensor::new(vec![n, v], data)
+}
+
+/// Per-row index of the last non-PAD token of a `[n, L]` id batch (0 for
+/// an all-pad row).
+pub fn last_nonpad_positions(ids: &IdTensor) -> Vec<usize> {
+    let (n, l) = (ids.shape[0], ids.shape[1]);
+    (0..n)
+        .map(|i| {
+            ids.data[i * l..(i + 1) * l]
+                .iter()
+                .rposition(|&t| t != crate::data::tokenizer::PAD)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::memo::arena::ApmArena;
 
     #[test]
     fn gather_rows_packs() {
@@ -339,5 +531,65 @@ mod tests {
         let g = gather_rows(&t, &[2, 0]).unwrap();
         assert_eq!(g.shape(), &[2, 2]);
         assert_eq!(g.data(), &[5., 6., 1., 2.]);
+    }
+
+    #[test]
+    fn last_nonpad_positions_respects_padding() {
+        // Rows: fully packed / padded tail / all-pad.
+        let ids = IdTensor::new(
+            vec![3, 4],
+            vec![1, 5, 6, 2, /**/ 1, 5, 2, 0, /**/ 0, 0, 0, 0],
+        )
+        .unwrap();
+        assert_eq!(last_nonpad_positions(&ids), vec![3, 2, 0]);
+    }
+
+    #[test]
+    fn take_positions_reads_per_row_offsets() {
+        // [2, 3, 2] logits: row 0 position 1, row 1 position 2.
+        let out = Tensor::new(
+            vec![2, 3, 2],
+            (0..12).map(|x| x as f32).collect(),
+        )
+        .unwrap();
+        let t = take_positions(&out, &[1, 2]).unwrap();
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.data(), &[2.0, 3.0, 10.0, 11.0]);
+        // Out-of-range positions clamp to L-1 instead of panicking.
+        let t = take_positions(&out, &[9, 0]).unwrap();
+        assert_eq!(t.data(), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    /// The run_layer assembly invariant (regression for the mixed-batch
+    /// path): hit rows must be byte-for-byte the arena payloads, miss rows
+    /// byte-for-byte the freshly computed scores.
+    #[test]
+    fn apm_assembly_mixes_arena_and_computed_rows() {
+        let elems = 16usize;
+        let n = 4usize;
+        let mut arena = ApmArena::new(elems).unwrap();
+        let hit_a: Vec<f32> = (0..elems).map(|j| j as f32 + 0.25).collect();
+        let hit_b: Vec<f32> = (0..elems).map(|j| -(j as f32) - 0.5).collect();
+        let ia = arena.push(&hit_a).unwrap();
+        let ib = arena.push(&hit_b).unwrap();
+
+        // Rows 1 and 3 hit (ids b, a); rows 0 and 2 miss.
+        let hit_rows = [(1usize, ib), (3usize, ia)];
+        let miss_rows = [0usize, 2];
+        let miss_apm: Vec<f32> =
+            (0..2 * elems).map(|j| 1000.0 + j as f32).collect();
+
+        let mut apm_data = vec![0.0f32; n * elems];
+        for &(row, id) in &hit_rows {
+            put_row(&mut apm_data, elems, row, arena.get(id).unwrap(), 0);
+        }
+        for (k, &row) in miss_rows.iter().enumerate() {
+            put_row(&mut apm_data, elems, row, &miss_apm, k);
+        }
+
+        assert_eq!(&apm_data[elems..2 * elems], &hit_b[..]);
+        assert_eq!(&apm_data[3 * elems..4 * elems], &hit_a[..]);
+        assert_eq!(&apm_data[..elems], &miss_apm[..elems]);
+        assert_eq!(&apm_data[2 * elems..3 * elems], &miss_apm[elems..]);
     }
 }

@@ -12,6 +12,12 @@ pub struct EngineMetrics {
     pub requests: u64,
     pub batches: u64,
     pub rejected: u64,
+    /// Serve-time APM admissions into the online attention database.
+    pub admissions: u64,
+    /// Online-database evictions forced by the capacity budget.
+    pub evictions: u64,
+    /// Live entries across the online database's layers (occupancy gauge).
+    pub online_entries: u64,
     pub request_latency_ms: Summary,
     pub queue_wait_ms: Summary,
     pub batch_size: Summary,
@@ -27,6 +33,9 @@ impl Default for EngineMetrics {
             requests: 0,
             batches: 0,
             rejected: 0,
+            admissions: 0,
+            evictions: 0,
+            online_entries: 0,
             request_latency_ms: Summary::new(),
             queue_wait_ms: Summary::new(),
             batch_size: Summary::new(),
@@ -55,7 +64,8 @@ impl EngineMetrics {
     pub fn report(&mut self) -> String {
         format!(
             "requests={} batches={} rejected={} rps={:.1} \
-             lat(ms) p50={:.1} p99={:.1} mean_batch={:.1} compute_ms p50={:.1}",
+             lat(ms) p50={:.1} p99={:.1} mean_batch={:.1} compute_ms p50={:.1} \
+             online(admit={} evict={} entries={})",
             self.requests,
             self.batches,
             self.rejected,
@@ -64,6 +74,9 @@ impl EngineMetrics {
             self.request_latency_ms.p99(),
             self.batch_size.mean(),
             self.batch_compute_ms.p50(),
+            self.admissions,
+            self.evictions,
+            self.online_entries,
         )
     }
 }

@@ -4,7 +4,7 @@
 //! `info`. Output is line-oriented on stderr with elapsed-seconds stamps.
 
 use log::{Level, LevelFilter, Metadata, Record};
-use once_cell::sync::OnceCell;
+use std::sync::OnceLock;
 use std::time::Instant;
 
 struct StderrLogger {
@@ -35,7 +35,7 @@ impl log::Log for StderrLogger {
     fn flush(&self) {}
 }
 
-static LOGGER: OnceCell<StderrLogger> = OnceCell::new();
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
 
 /// Install the logger once; later calls are no-ops. Returns the level used.
 pub fn init() -> LevelFilter {

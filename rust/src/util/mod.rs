@@ -1,8 +1,9 @@
 //! Small self-contained substrates: PRNG, statistics, threadpool, logger.
 //!
-//! The build environment is offline (only the `xla` dependency closure is
-//! vendored), so these are implemented from scratch instead of pulling
-//! `rand`, `hdrhistogram`, `rayon` or `env_logger`.
+//! The build environment is offline (the only dependencies are the small
+//! crates vendored under `rust/vendor/`), so these are implemented from
+//! scratch instead of pulling `rand`, `hdrhistogram`, `rayon` or
+//! `env_logger`.
 
 pub mod logger;
 pub mod rng;

@@ -1,0 +1,189 @@
+//! Online-memoization tests: a cold database warms from live traffic to a
+//! steady-state hit rate while occupancy respects the capacity budget.
+//!
+//! The serve loop is simulated at the memoization layer (embedding
+//! vectors drawn from a clustered workload — repeated-similarity traffic,
+//! exactly what AttMEMO exploits), so these tests are hermetic: no
+//! artifacts, no PJRT. The final test drives the real engine end-to-end
+//! and is skipped without artifacts, like every runtime-gated test.
+
+use attmemo::config::{MemoLevel, ModelConfig};
+use attmemo::memo::index::HnswParams;
+use attmemo::memo::policy::AdmissionPolicy;
+use attmemo::memo::AttentionDb;
+use attmemo::util::Pcg32;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        family: "bert".into(),
+        vocab_size: 256,
+        hidden: 32,
+        layers: 1,
+        heads: 2,
+        ffn: 64,
+        max_len: 16,
+        num_classes: 2,
+        rel_pos_buckets: 8,
+        embed_dim: 16,
+        embed_hidden: 32,
+        embed_segments: 4,
+        causal: false,
+    }
+}
+
+fn normalize(v: &mut [f32]) {
+    let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+    v.iter_mut().for_each(|x| *x /= n);
+}
+
+/// `k` unit-vector cluster centres.
+fn centres(rng: &mut Pcg32, k: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..k)
+        .map(|_| {
+            let mut v: Vec<f32> =
+                (0..dim).map(|_| rng.next_gaussian()).collect();
+            normalize(&mut v);
+            v
+        })
+        .collect()
+}
+
+/// A query near one centre (repeated-similarity traffic).
+fn query_near(rng: &mut Pcg32, centre: &[f32], noise: f32) -> Vec<f32> {
+    let mut v: Vec<f32> = centre
+        .iter()
+        .map(|&c| c + noise * rng.next_gaussian())
+        .collect();
+    normalize(&mut v);
+    v
+}
+
+/// Run `epochs × queries_per_epoch` lookups against one layer with
+/// admission on; returns (per-epoch hit rates, total evictions, max
+/// occupancy seen).
+fn simulate(db: &mut AttentionDb, capacity: usize, epochs: usize,
+            queries_per_epoch: usize, threshold: f32)
+    -> (Vec<f64>, u64, usize) {
+    let c = cfg();
+    let mut rng = Pcg32::seeded(42);
+    let cents = centres(&mut rng, 8, c.embed_dim);
+    let gate = AdmissionPolicy::new(true, 0);
+    let elems = c.apm_elems(16);
+    let mut rates = Vec::new();
+    let mut evictions = 0u64;
+    let mut max_occupancy = 0usize;
+    let mut attempts = 0u64;
+    for _ in 0..epochs {
+        let mut hits = 0usize;
+        for q in 0..queries_per_epoch {
+            let centre = &cents[q % cents.len()];
+            let query = query_near(&mut rng, centre, 0.02);
+            attempts += 1;
+            let hit = db
+                .layer(0)
+                .lookup(&query, 48)
+                .filter(|h| h.similarity >= threshold);
+            match hit {
+                Some(h) => {
+                    hits += 1;
+                    db.layer(0).mark_reused(h.id);
+                }
+                None => {
+                    if gate.should_admit(None, attempts, 128) {
+                        // The miss path computed this APM anyway; admit it.
+                        let apm = vec![q as f32; elems];
+                        let out = db
+                            .layer_mut(0)
+                            .admit(&query, &apm, capacity)
+                            .unwrap();
+                        evictions += out.evicted.len() as u64;
+                    }
+                }
+            }
+            max_occupancy = max_occupancy.max(db.layer(0).len());
+        }
+        rates.push(hits as f64 / queries_per_epoch as f64);
+    }
+    (rates, evictions, max_occupancy)
+}
+
+#[test]
+fn cold_db_warms_to_steady_state_within_capacity() {
+    let c = cfg();
+    let mut db = AttentionDb::new(&c, 16, HnswParams::default());
+    assert_eq!(db.total_entries(), 0, "starts cold");
+    let capacity = 32;
+    let (rates, _evictions, max_occupancy) =
+        simulate(&mut db, capacity, 5, 64, 0.8);
+
+    // Cold start: the very first epoch cannot beat the warmed ones...
+    assert!(rates[0] < *rates.last().unwrap(),
+            "no warm-up visible: {rates:?}");
+    // ...and after warm-up the repeated-similarity workload mostly hits.
+    assert!(rates.last().unwrap() > &0.8, "steady state too low: {rates:?}");
+    let warm_hits: f64 = rates[1..].iter().sum();
+    assert!(warm_hits > 0.0, "hits after warm-up");
+    // The capacity budget holds at every step.
+    assert!(max_occupancy <= capacity,
+            "occupancy {max_occupancy} > capacity {capacity}");
+    assert!(db.layer(0).len() <= capacity);
+    assert!(db.total_entries() > 0, "database actually warmed");
+}
+
+#[test]
+fn capacity_pressure_evicts_but_never_overflows() {
+    let c = cfg();
+    let mut db = AttentionDb::new(&c, 16, HnswParams::default());
+    // Budget below the working set (8 clusters): constant churn.
+    let capacity = 4;
+    let (_rates, evictions, max_occupancy) =
+        simulate(&mut db, capacity, 4, 64, 0.8);
+    assert!(evictions > 0, "under-provisioned cache must evict");
+    assert!(max_occupancy <= capacity,
+            "occupancy {max_occupancy} > capacity {capacity}");
+    assert_eq!(db.layer(0).len(), capacity);
+}
+
+#[test]
+fn disabled_gate_never_admits() {
+    let c = cfg();
+    let db = AttentionDb::new(&c, 16, HnswParams::default());
+    let gate = AdmissionPolicy::new(false, 0);
+    assert!(!gate.should_admit(None, 0, 128));
+    assert_eq!(db.total_entries(), 0);
+}
+
+/// Real-engine cold start (skips without artifacts): an engine with no
+/// built database and admission on must raise its hit rate over repeated
+/// traffic, with occupancy within budget.
+#[test]
+fn engine_cold_start_warms_with_artifacts() {
+    use attmemo::bench_support::workload;
+
+    let Ok(rt) = workload::open_runtime() else {
+        eprintln!("SKIP (no artifacts)");
+        return;
+    };
+    let seq_len = rt.artifacts().serving_seq_len;
+    let capacity = 64;
+    let mut engine = workload::cold_engine(
+        &rt, "bert", seq_len, MemoLevel::Aggressive, capacity, 0)
+        .expect("cold engine");
+    let (ids, _) = workload::test_workload(&rt, "bert", seq_len, 8).unwrap();
+
+    // First pass: everything misses (cold), APMs get admitted.
+    let first = engine.infer(&ids).unwrap();
+    assert!(first.memo_hits.iter().all(|&h| h == 0),
+            "cold engine cannot hit");
+    assert!(engine.stats.total_admitted() > 0, "misses must be admitted");
+
+    // Replay the same batch: the warmed database must hit now.
+    let second = engine.infer(&ids).unwrap();
+    let hits: u32 = second.memo_hits.iter().sum();
+    assert!(hits > 0, "no hits after warm-up");
+    let om = engine.online().unwrap();
+    for li in 0..om.db.num_layers() {
+        assert!(om.db.layer(li).len() <= capacity,
+                "layer {li} over capacity");
+    }
+}

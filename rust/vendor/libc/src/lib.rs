@@ -1,0 +1,72 @@
+//! Minimal libc shim for offline builds.
+//!
+//! The real `libc` crate is not available in this registry-free
+//! environment, so this crate declares exactly the glibc symbols and
+//! constants the attmemo arena/gather layer uses (`memfd_create`, `mmap`
+//! and friends), for Linux. Types follow the LP64 ABI used by every Linux
+//! target this project runs on (x86_64, aarch64).
+
+#![allow(non_camel_case_types)]
+
+pub use core::ffi::c_void;
+
+pub type c_char = i8;
+pub type c_int = i32;
+pub type c_uint = u32;
+pub type c_long = i64;
+pub type size_t = usize;
+pub type off_t = i64;
+
+// --- mmap protection / flag constants (Linux) ------------------------------
+pub const PROT_NONE: c_int = 0x0;
+pub const PROT_READ: c_int = 0x1;
+pub const PROT_WRITE: c_int = 0x2;
+
+pub const MAP_SHARED: c_int = 0x01;
+pub const MAP_PRIVATE: c_int = 0x02;
+pub const MAP_FIXED: c_int = 0x10;
+pub const MAP_ANONYMOUS: c_int = 0x20;
+
+pub const MAP_FAILED: *mut c_void = !0 as *mut c_void;
+
+/// `sysconf` name for the page size (Linux).
+pub const _SC_PAGESIZE: c_int = 30;
+
+extern "C" {
+    pub fn memfd_create(name: *const c_char, flags: c_uint) -> c_int;
+    pub fn ftruncate(fd: c_int, length: off_t) -> c_int;
+    pub fn mmap(addr: *mut c_void, len: size_t, prot: c_int, flags: c_int,
+                fd: c_int, offset: off_t) -> *mut c_void;
+    pub fn munmap(addr: *mut c_void, len: size_t) -> c_int;
+    pub fn close(fd: c_int) -> c_int;
+    pub fn sysconf(name: c_int) -> c_long;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_size_queryable() {
+        let p = unsafe { sysconf(_SC_PAGESIZE) };
+        assert!(p >= 4096, "page size {p}");
+    }
+
+    #[test]
+    fn memfd_mmap_roundtrip() {
+        unsafe {
+            let fd = memfd_create(b"libc-shim-test\0".as_ptr().cast(), 0);
+            assert!(fd >= 0);
+            let len = 4096usize;
+            assert_eq!(ftruncate(fd, len as off_t), 0);
+            let p = mmap(core::ptr::null_mut(), len, PROT_READ | PROT_WRITE,
+                         MAP_SHARED, fd, 0);
+            assert_ne!(p, MAP_FAILED);
+            let bytes = p.cast::<u8>();
+            bytes.write(42);
+            assert_eq!(bytes.read(), 42);
+            assert_eq!(munmap(p, len), 0);
+            assert_eq!(close(fd), 0);
+        }
+    }
+}

@@ -1,0 +1,284 @@
+//! Host-side stand-in for the `xla` (PJRT) bindings.
+//!
+//! The real crate links libxla/PJRT, which cannot be fetched in this
+//! offline environment. This stand-in keeps the same API surface so the
+//! whole coordinator compiles and its host-side tests run:
+//!
+//! * [`Literal`] is a **real** host tensor container (f32/i32/tuple) —
+//!   weight loading, tensor round-trips and fixtures work unchanged;
+//! * [`PjRtClient::cpu`] returns an error, so anything that would need a
+//!   real PJRT runtime (graph compilation/execution) reports a clear
+//!   "runtime unavailable" instead of wrong numbers. Artifact-gated tests
+//!   and benches skip exactly as they do on a checkout without artifacts.
+
+use std::fmt;
+
+/// Stub error type mirroring `xla::Error`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime unavailable (built with the vendored \
+         host-side xla stub; graph execution needs the real xla crate)"
+    ))
+}
+
+// --- literals --------------------------------------------------------------
+
+/// Host storage for one literal.
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(d: &Data) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Host tensor literal (f32 / i32 / tuple), shape in i64 dims.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Array shape of a non-tuple literal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    /// Tuple literal.
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { dims: Vec::new(), data: Data::Tuple(elems) }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(_) => 0,
+        }
+    }
+
+    /// Reinterpret with new dims of equal element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error("reshape of a tuple literal".into()));
+        }
+        if want as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Shape of an array (non-tuple) literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.data {
+            Data::Tuple(_) => Err(Error("array_shape of a tuple".into())),
+            _ => Ok(ArrayShape { dims: self.dims.clone() }),
+        }
+    }
+
+    /// Copy the elements out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .map(<[T]>::to_vec)
+            .ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(elems) => Ok(elems),
+            _ => Err(Error("to_tuple of a non-tuple literal".into())),
+        }
+    }
+}
+
+// --- HLO / computation handles --------------------------------------------
+
+/// Parsed HLO module handle (the stub only records the source path).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    path: String,
+}
+
+impl HloModuleProto {
+    /// The stub validates that the file exists, but cannot parse HLO.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if !std::path::Path::new(path).exists() {
+            return Err(Error(format!("no HLO file at {path}")));
+        }
+        Ok(HloModuleProto { path: path.to_string() })
+    }
+}
+
+/// Computation wrapper.
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    proto: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: () }
+    }
+}
+
+// --- PJRT client / buffers / executables ----------------------------------
+
+/// One PJRT device (never constructed by the stub).
+pub struct PjRtDevice {
+    _private: (),
+}
+
+/// PJRT client handle. The stub cannot create one: [`PjRtClient::cpu`]
+/// fails, so every caller degrades to its documented "no runtime" path.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self, _data: &[T], _dims: &[usize], _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("buffer_from_host_buffer"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+}
+
+/// Device buffer handle (never constructed by the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+/// Argument types accepted by [`PjRtLoadedExecutable::execute`].
+pub trait BufferArg {}
+
+impl BufferArg for Literal {}
+impl BufferArg for PjRtBuffer {}
+
+/// Compiled executable handle (never constructed by the stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: BufferArg>(&self, _args: &[T])
+        -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute"))
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer])
+        -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute_b"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(lit.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1i32]),
+                                    Literal::vec1(&[2.0f32])]);
+        assert!(t.array_shape().is_err());
+        let elems = t.to_tuple().unwrap();
+        assert_eq!(elems.len(), 2);
+        assert_eq!(elems[0].to_vec::<i32>().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("unavailable"), "{e}");
+    }
+}
