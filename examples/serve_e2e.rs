@@ -86,7 +86,7 @@ fn serve_once(level: MemoLevel, requests: usize, clients: usize)
     cfg.seq_len = seq_len;
     cfg.bind = "127.0.0.1:0".into(); // ephemeral port
     cfg.max_batch = 8;
-    let server = Server::start(engine, vocab.clone(), cfg)?;
+    let server = Server::start(vec![engine], vocab.clone(), cfg)?;
     let addr = server.addr.to_string();
 
     let sw = Stopwatch::start();

@@ -134,19 +134,83 @@ fn run_engine_section() -> attmemo::Result<()> {
             engine.stats.total_evicted().to_string(),
             engine
                 .online()
-                .map_or(0, |o| o.db.total_entries())
+                .map_or(0, |t| t.total_entries())
                 .to_string(),
         ]);
     }
     table.emit(Some(std::path::Path::new(
         "bench_results/online_memo_engine.csv")));
-    if let Some(om) = engine.online() {
-        for li in 0..om.db.num_layers() {
-            assert!(om.db.layer(li).len() <= capacity,
+    if let Some(tier) = engine.online() {
+        for li in 0..tier.num_layers() {
+            assert!(tier.layer_len(li) <= capacity,
                     "layer {li} over capacity");
         }
     }
     Ok(())
+}
+
+/// Shared-tier read scaling: one warmed `MemoTier`, 1..=4 reader threads
+/// doing lookup+fetch concurrently. Under the old engine-mutex design
+/// these lookups serialized; on the shard `RwLock` they run in parallel,
+/// so aggregate lookups/sec should grow with the thread count.
+fn shared_tier_section(table: &mut TableWriter) {
+    use attmemo::config::MemoConfig;
+    use attmemo::memo::MemoTier;
+    use std::sync::Arc;
+
+    let cfg = sim_cfg();
+    let seq = 32usize;
+    let elems = cfg.apm_elems(seq);
+    let memo = MemoConfig {
+        online_admission: true,
+        max_db_entries: 0,
+        admission_min_attempts: 0,
+        intra_batch_dedup: false, // fill the tier, duplicates welcome
+        ..MemoConfig::default()
+    };
+    let tier = Arc::new(MemoTier::new(&cfg, seq, Default::default(), &memo));
+    let mut rng = Pcg32::seeded(21);
+    let entries: Vec<Vec<f32>> =
+        (0..256).map(|_| unit_vec(&mut rng, cfg.embed_dim)).collect();
+    let apm = vec![1.0f32; elems];
+    let rows: Vec<(&[f32], &[f32])> = entries
+        .iter()
+        .map(|f| (f.as_slice(), apm.as_slice()))
+        .collect();
+    tier.admit_batch(0, &rows, 2.0, 48).unwrap();
+
+    const LOOKUPS_PER_THREAD: usize = 2000;
+    for threads in [1usize, 2, 4] {
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let tier = tier.clone();
+            let entries = entries.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut dst = vec![0.0f32; elems];
+                let mut hits = 0usize;
+                for i in 0..LOOKUPS_PER_THREAD {
+                    let q = &entries[(i * (t + 1)) % entries.len()];
+                    if tier.lookup_fetch(0, q, 48, 0.9, &mut dst).is_some()
+                    {
+                        hits += 1;
+                    }
+                }
+                hits
+            }));
+        }
+        let hits: usize =
+            handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let secs = t0.elapsed().as_secs_f64();
+        let total = threads * LOOKUPS_PER_THREAD;
+        table.row(&[
+            threads.to_string(),
+            total.to_string(),
+            format!("{:.3}", hits as f64 / total as f64),
+            format!("{:.1}", secs * 1e3),
+            format!("{:.0}", total as f64 / secs),
+        ]);
+    }
 }
 
 fn main() {
@@ -165,6 +229,15 @@ fn main() {
     simulate(4, 8, 5, 256, 0.8, &mut table);
     table.emit(Some(std::path::Path::new(
         "bench_results/online_memo_sim.csv")));
+
+    let mut shared = TableWriter::new(
+        "Shared memo tier — concurrent readers on one warmed tier \
+         (256 entries, exact-match queries)",
+        &["threads", "lookups", "hit_rate", "wall_ms", "lookups_per_s"],
+    );
+    shared_tier_section(&mut shared);
+    shared.emit(Some(std::path::Path::new(
+        "bench_results/online_memo_shared_tier.csv")));
 
     match run_engine_section() {
         Ok(()) => {}

@@ -6,6 +6,8 @@ use std::sync::Arc;
 
 use crate::config::{MemoConfig, MemoLevel};
 use crate::memo::builder::{BuiltDb, DbBuilder};
+use crate::memo::index::HnswParams;
+use crate::memo::tier::MemoTier;
 use crate::model::ModelRunner;
 use crate::runtime::Runtime;
 use crate::serving::engine::{Engine, EngineOptions};
@@ -88,6 +90,25 @@ pub fn engine_with_memo(runtime: &Arc<Runtime>, family: &str,
                         built: Option<Arc<BuiltDb>>) -> Result<Engine> {
     let runner = ModelRunner::load(runtime.clone(), family)?;
     Engine::new(runner, built, EngineOptions { memo, seq_len })
+}
+
+/// A fresh shared online tier for a family (to be cloned into several
+/// replicas via [`engine_with_tier`]).
+pub fn online_tier(runtime: &Arc<Runtime>, family: &str, seq_len: usize,
+                   memo: &MemoConfig) -> Result<Arc<MemoTier>> {
+    let cfg = runtime.artifacts().family(family)?.config.clone();
+    Ok(Arc::new(MemoTier::new(&cfg, seq_len, HnswParams::default(), memo)))
+}
+
+/// Engine replica over a shared online tier: N such engines form the
+/// multi-replica serving fleet, all warming/consulting one database.
+pub fn engine_with_tier(runtime: &Arc<Runtime>, family: &str,
+                        seq_len: usize, memo: MemoConfig,
+                        built: Option<Arc<BuiltDb>>,
+                        tier: Arc<MemoTier>) -> Result<Engine> {
+    let runner = ModelRunner::load(runtime.clone(), family)?;
+    Engine::with_shared_tier(runner, built, tier,
+                             EngineOptions { memo, seq_len })
 }
 
 /// Cold-start engine: empty database, serve-time admission on. The hit

@@ -17,6 +17,7 @@ use crate::bench_support::workload;
 use crate::config::{MemoConfig, MemoLevel, ServingConfig};
 use crate::data::tokenizer::Vocab;
 use crate::eval::evaluate;
+use crate::memo::tier::MemoTier;
 use crate::serving::server::{Client, Server};
 use crate::{Error, Result};
 
@@ -117,6 +118,21 @@ ONLINE MEMOIZATION (serve/eval)
                         (0 = unbounded; reuse-aware eviction at the cap)
   --admission-warmup N  per-layer attempts before the Eq. 3 admission
                         gate activates (default 64)
+  --no-dedup            disable intra-batch dedup on the admission path
+                        (near-identical rows in one batch then all admit)
+
+SHARED MEMO TIER (serve/eval)
+  --replicas N          engine replicas pulling from one request queue;
+                        all replicas share one online memo tier, so a
+                        miss warmed by one is a hit for every other
+                        (serve only; also settable via --set replicas=N)
+  --load-warm FILE      restore the online tier's warm state from an
+                        ATWM snapshot before serving (see
+                        docs/PERSISTENCE.md)
+  --save-warm FILE      persist the online tier's warm state: eval saves
+                        once after the run; serve snapshots periodically
+  --warm-snapshot-secs N  interval between periodic serve snapshots
+                        (default 60; needs --save-warm)
 
 COMMON FLAGS
   --artifacts DIR   artifacts directory (default ./artifacts or
@@ -178,16 +194,47 @@ fn parse_memo(args: &Args, level: MemoLevel) -> Result<MemoConfig> {
     Ok(MemoConfig {
         level,
         selective: !args.flag("no-selective"),
+        // The warm-state flags imply an online tier: loading restores into
+        // one, and saving without one would silently write nothing.
         online_admission: args.flag("online-admission")
-            || args.flag("cold-db"),
+            || args.flag("cold-db")
+            || args.opt("load-warm").is_some()
+            || args.opt("save-warm").is_some(),
         max_db_entries: args.opt_usize("db-capacity",
                                        defaults.max_db_entries)?,
         admission_min_attempts: args.opt_usize(
             "admission-warmup",
             defaults.admission_min_attempts as usize,
         )? as u64,
+        intra_batch_dedup: !args.flag("no-dedup"),
         ..defaults
     })
+}
+
+/// The shared online tier for `serve`/`eval`: `None` when online
+/// memoization is off, a warm-state restore when `--load-warm` is given,
+/// a cold tier otherwise.
+fn parse_online_tier(args: &Args, rt: &Arc<crate::runtime::Runtime>,
+                     family: &str, seq_len: usize, level: MemoLevel,
+                     memo: &MemoConfig) -> Result<Option<Arc<MemoTier>>> {
+    if !memo.online_admission || level == MemoLevel::Off {
+        return Ok(None);
+    }
+    let cfg = rt.artifacts().family(family)?.config.clone();
+    let tier = match args.opt("load-warm") {
+        Some(path) => {
+            let (tier, saved_thr) = crate::memo::persist::load_warm(
+                std::path::Path::new(path), &cfg, memo, Default::default())?;
+            println!(
+                "loaded warm state from {path}: {} entries \
+                 (saved at threshold {saved_thr:.4})",
+                tier.total_entries()
+            );
+            tier
+        }
+        None => MemoTier::new(&cfg, seq_len, Default::default(), memo),
+    };
+    Ok(Some(Arc::new(tier)))
 }
 
 /// The offline database for `serve`/`eval`: none when cold or off,
@@ -218,13 +265,55 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for (k, v) in &args.sets {
         cfg.set(k, v)?;
     }
+    cfg.replicas = args.opt_usize("replicas", cfg.replicas)?.max(1);
     let memo = parse_memo(args, level)?;
     let built = load_or_build_db(args, &rt, &family, cfg.seq_len, level)?;
-    let engine =
-        workload::engine_with_memo(&rt, &family, cfg.seq_len, memo, built)?;
+    let tier =
+        parse_online_tier(args, &rt, &family, cfg.seq_len, level, &memo)?;
+
+    // N engine replicas: one model runner each, one shared memo tier.
+    let mut engines = Vec::with_capacity(cfg.replicas);
+    for _ in 0..cfg.replicas {
+        engines.push(match &tier {
+            Some(t) => workload::engine_with_tier(
+                &rt, &family, cfg.seq_len, memo.clone(), built.clone(),
+                t.clone())?,
+            None => workload::engine_with_memo(
+                &rt, &family, cfg.seq_len, memo.clone(), built.clone())?,
+        });
+    }
+    let threshold = engines[0].threshold();
+
+    // Periodic warm snapshots keep restarts warm even without a clean
+    // shutdown path (the serve loop runs until killed).
+    if let (Some(t), Some(path)) = (&tier, args.opt("save-warm")) {
+        let every = args.opt_usize("warm-snapshot-secs", 60)?.max(1) as u64;
+        let t = t.clone();
+        let path = std::path::PathBuf::from(path);
+        std::thread::Builder::new()
+            .name("attmemo-warm-snapshot".into())
+            .spawn(move || loop {
+                std::thread::sleep(std::time::Duration::from_secs(every));
+                match crate::memo::persist::save_warm(&t, threshold, &path) {
+                    Ok(()) => log::info!(
+                        "warm snapshot: {} entries → {}",
+                        t.total_entries(),
+                        path.display()
+                    ),
+                    Err(e) => log::error!("warm snapshot failed: {e}"),
+                }
+            })
+            .expect("spawn warm-snapshot thread");
+    }
+
     let vocab = Arc::new(Vocab::load(&rt.artifacts().root().join("vocab.json"))?);
-    let server = Server::start(engine, vocab, cfg.clone())?;
-    println!("serving {family} (level={}) on {}", level.name(), server.addr);
+    let server = Server::start(engines, vocab, cfg.clone())?;
+    println!(
+        "serving {family} (level={}, replicas={}) on {}",
+        level.name(),
+        cfg.replicas,
+        server.addr
+    );
     println!("press ctrl-c to stop");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -288,10 +377,21 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let (ids, labels) = workload::test_workload(&rt, &family, seq_len, n)?;
     let memo = parse_memo(args, level)?;
     let built = load_or_build_db(args, &rt, &family, seq_len, level)?;
-    let mut engine =
-        workload::engine_with_memo(&rt, &family, seq_len, memo, built)?;
+    let tier = parse_online_tier(args, &rt, &family, seq_len, level, &memo)?;
+    let mut engine = match &tier {
+        Some(t) => workload::engine_with_tier(
+            &rt, &family, seq_len, memo.clone(), built, t.clone())?,
+        None => workload::engine_with_memo(&rt, &family, seq_len, memo,
+                                           built)?,
+    };
     let baseline = level == MemoLevel::Off;
     let r = evaluate(&mut engine, &ids, &labels, batch, baseline)?;
+    if let (Some(t), Some(path)) = (&tier, args.opt("save-warm")) {
+        crate::memo::persist::save_warm(
+            t, engine.threshold(), std::path::Path::new(path))?;
+        println!("saved warm state ({} entries) to {path}",
+                 t.total_entries());
+    }
     println!(
         "family={family} level={} n={} acc={:.4} time={:.2}s \
          throughput={:.2} seq/s memo_rate={:.3}",
@@ -316,16 +416,17 @@ fn cmd_eval(args: &Args) -> Result<()> {
         for (li, l) in engine.stats.layers.iter().enumerate() {
             println!(
                 "  layer {li}: total={} attempts={} hits={} skipped={} \
-                 reverted={} admitted={} evicted={}",
+                 reverted={} admitted={} evicted={} deduped={}",
                 l.total, l.attempts, l.hits, l.skipped, l.reverted,
-                l.admitted, l.evicted
+                l.admitted, l.evicted, l.deduped
             );
         }
-        if let Some(om) = engine.online() {
+        if let Some(t) = engine.online() {
             println!(
-                "  online db: entries={} capacity/layer={}",
-                om.db.total_entries(),
-                om.capacity
+                "  online tier: entries={} capacity/layer={} deduped={}",
+                t.total_entries(),
+                t.capacity(),
+                t.deduped()
             );
         }
     }

@@ -127,6 +127,10 @@ pub struct MemoConfig {
     /// Per-layer attempts to observe before the Eq. 3 admission gate
     /// activates (the warm-up window always admits).
     pub admission_min_attempts: u64,
+    /// Skip admitting a miss row whose nearest stored neighbour (including
+    /// rows admitted earlier in the same batch) already clears the
+    /// similarity threshold — near-identical rows in one batch admit once.
+    pub intra_batch_dedup: bool,
 }
 
 impl Default for MemoConfig {
@@ -140,6 +144,7 @@ impl Default for MemoConfig {
             max_db_entries: 0,
             online_admission: false,
             admission_min_attempts: 64,
+            intra_batch_dedup: true,
         }
     }
 }
@@ -160,6 +165,10 @@ pub struct ServingConfig {
     pub bind: String,
     /// Worker threads handling connections.
     pub io_threads: usize,
+    /// Engine replicas pulling from the shared request queue. Replicas
+    /// share one online `MemoTier`, so warm-ups are visible across all of
+    /// them while their forward passes run in parallel.
+    pub replicas: usize,
 }
 
 impl Default for ServingConfig {
@@ -171,6 +180,7 @@ impl Default for ServingConfig {
             seq_len: 128,
             bind: "127.0.0.1:7191".into(),
             io_threads: 2,
+            replicas: 1,
         }
     }
 }
@@ -185,6 +195,7 @@ impl ServingConfig {
             "seq_len" => self.seq_len = parse_num(key, value)?,
             "bind" => self.bind = value.to_string(),
             "io_threads" => self.io_threads = parse_num(key, value)?,
+            "replicas" => self.replicas = parse_num(key, value)?.max(1),
             other => {
                 return Err(Error::config(format!(
                     "unknown serving option {other:?}"
@@ -243,8 +254,12 @@ mod tests {
         let mut s = ServingConfig::default();
         s.set("max_batch", "8").unwrap();
         s.set("bind", "0.0.0.0:1").unwrap();
+        s.set("replicas", "3").unwrap();
         assert_eq!(s.max_batch, 8);
         assert_eq!(s.bind, "0.0.0.0:1");
+        assert_eq!(s.replicas, 3);
+        s.set("replicas", "0").unwrap();
+        assert_eq!(s.replicas, 1, "replica count clamps to at least one");
         assert!(s.set("nope", "1").is_err());
         assert!(s.set("max_batch", "x").is_err());
     }

@@ -34,9 +34,19 @@ pub fn page_align(n: usize) -> usize {
 
 /// Identifier of one stored APM entry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct ApmId(pub u32);
+pub struct ApmId(
+    /// Raw id value (dense per layer, monotonically assigned).
+    pub u32,
+);
 
 /// Fixed-stride, page-aligned entry store on a memfd with slot reuse.
+///
+/// ```
+/// use attmemo::memo::ApmArena;
+/// let mut arena = ApmArena::new(8).unwrap();
+/// let id = arena.push(&[1.0; 8]).unwrap();
+/// assert_eq!(arena.get(id).unwrap(), &[1.0; 8]);
+/// ```
 pub struct ApmArena {
     fd: RawFd,
     /// Bytes of payload per entry (f32 count × 4).
@@ -56,6 +66,13 @@ pub struct ApmArena {
     /// Persistent read-write mapping of the whole file.
     base: *mut u8,
     map_bytes: usize,
+    /// Arena generation: bumped by the owner (`LayerDb::compact`) whenever
+    /// the id space is renumbered, so pre-compaction epoch stamps can never
+    /// validate against the rebuilt arena.
+    generation: u32,
+    /// Per-physical-slot reuse epoch, bumped on every `remove`. One slot's
+    /// epoch identifies which *tenant* a stamp was taken against.
+    slot_epochs: Vec<u32>,
 }
 
 // The raw pointer is only dereferenced through &self/&mut self with range
@@ -90,6 +107,8 @@ impl ApmArena {
             cap: 0,
             base: std::ptr::null_mut(),
             map_bytes: 0,
+            generation: 0,
+            slot_epochs: Vec::new(),
         };
         arena.grow(GROW_CHUNK)?;
         Ok(arena)
@@ -102,16 +121,68 @@ impl ApmArena {
         self.entry_bytes == self.stride
     }
 
+    /// Bytes of payload per entry.
     pub fn entry_bytes(&self) -> usize {
         self.entry_bytes
     }
 
+    /// f32 values per entry.
     pub fn entry_elems(&self) -> usize {
         self.entry_bytes / 4
     }
 
+    /// Page-aligned byte stride between entries in the file.
     pub fn stride(&self) -> usize {
         self.stride
+    }
+
+    /// Arena generation (see [`ApmArena::epoch`]); bumped when the id space
+    /// is renumbered by a compaction.
+    pub fn generation(&self) -> u32 {
+        self.generation
+    }
+
+    /// Stamp the arena with a generation. Used by compaction to mark the
+    /// rebuilt arena as a different id universe than its predecessor.
+    pub(crate) fn set_generation(&mut self, generation: u32) {
+        self.generation = generation;
+    }
+
+    /// Epoch stamp of a live entry: encodes the arena generation and the
+    /// entry's physical-slot reuse counter. A stamp taken at lookup time
+    /// and passed back to [`ApmArena::get_checked`] guarantees the bytes
+    /// read belong to the *same tenant* the lookup matched — a concurrent
+    /// eviction that frees and reuses the slot (or a compaction that
+    /// renumbers ids) invalidates the stamp instead of silently serving
+    /// stale or foreign bytes. Errors on dead/unknown ids.
+    pub fn epoch(&self, id: ApmId) -> Result<u64> {
+        match self.slots.get(id.0 as usize) {
+            Some(Some(slot)) => Ok(((self.generation as u64) << 32)
+                | self.slot_epochs[*slot as usize] as u64),
+            Some(None) => {
+                Err(Error::memo(format!("ApmId {} was evicted", id.0)))
+            }
+            None => Err(Error::memo(format!(
+                "ApmId {} out of range {}",
+                id.0,
+                self.slots.len()
+            ))),
+        }
+    }
+
+    /// Read-only view of one entry, validated against an epoch stamp taken
+    /// when the entry was looked up (see [`ApmArena::epoch`]). Errors if
+    /// the id has died, its slot was reused, or the arena was compacted
+    /// since the stamp — never returns another tenant's bytes.
+    pub fn get_checked(&self, id: ApmId, epoch: u64) -> Result<&[f32]> {
+        if self.epoch(id)? != epoch {
+            return Err(Error::memo(format!(
+                "ApmId {} is stale: slot reused or arena compacted since \
+                 lookup",
+                id.0
+            )));
+        }
+        self.get(id)
     }
 
     /// Live entries.
@@ -119,6 +190,7 @@ impl ApmArena {
         self.live
     }
 
+    /// Whether no entries are live.
     pub fn is_empty(&self) -> bool {
         self.live == 0
     }
@@ -216,6 +288,7 @@ impl ApmArena {
                 }
                 let s = self.phys_used as u32;
                 self.phys_used += 1;
+                self.slot_epochs.push(0);
                 s
             }
         };
@@ -245,6 +318,10 @@ impl ApmArena {
         }
         match self.slots[i].take() {
             Some(slot) => {
+                // Epoch-check support: the slot's next tenant must be
+                // distinguishable from this one, even at the same offset.
+                let e = &mut self.slot_epochs[slot as usize];
+                *e = e.wrapping_add(1);
                 self.free.push(slot);
                 self.live -= 1;
                 Ok(())
@@ -349,6 +426,36 @@ mod tests {
         assert_eq!(a.get(i1).unwrap(), &[1.0; 8], "live entry untouched");
         assert_eq!(a.live_ids(), vec![i1, i2]);
         assert_eq!(a.next_id(), 3);
+    }
+
+    #[test]
+    fn epoch_invalidates_reused_slot() {
+        let mut a = ApmArena::new(8).unwrap();
+        let i0 = a.push(&[0.0; 8]).unwrap();
+        let e0 = a.epoch(i0).unwrap();
+        assert_eq!(a.get_checked(i0, e0).unwrap(), &[0.0; 8]);
+        a.remove(i0).unwrap();
+        // Same physical slot, new tenant: the old stamp must not validate.
+        let i1 = a.push(&[1.0; 8]).unwrap();
+        assert_eq!(a.file_offset(i1).unwrap(), 0, "slot reused");
+        assert!(a.epoch(i0).is_err(), "dead id has no epoch");
+        assert!(a.get_checked(i0, e0).is_err());
+        let e1 = a.epoch(i1).unwrap();
+        assert_ne!(e1, e0, "reused slot must change epoch");
+        assert!(a.get_checked(i1, e0).is_err(), "stale stamp rejected");
+        assert_eq!(a.get_checked(i1, e1).unwrap(), &[1.0; 8]);
+    }
+
+    #[test]
+    fn generation_invalidates_old_stamps() {
+        let mut a = ApmArena::new(4).unwrap();
+        let id = a.push(&[7.0; 4]).unwrap();
+        let stamp = a.epoch(id).unwrap();
+        a.set_generation(a.generation() + 1);
+        assert!(a.get_checked(id, stamp).is_err(),
+                "stamps from another generation must not validate");
+        assert_eq!(a.get_checked(id, a.epoch(id).unwrap()).unwrap(),
+                   &[7.0; 4]);
     }
 
     #[test]

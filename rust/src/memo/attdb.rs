@@ -20,10 +20,16 @@ use crate::{Error, Result};
 /// Result of a lookup: nearest stored entry + similarity estimate.
 #[derive(Debug, Clone, Copy)]
 pub struct Lookup {
+    /// Id of the matched entry.
     pub id: ApmId,
     /// Estimated similarity `1 − ‖e(q) − e(x)‖₂` (embeddings are
     /// L2-normalised, so the distance lives in [0, 2]).
     pub similarity: f32,
+    /// Epoch stamp of the entry at lookup time. Fetching through
+    /// [`crate::memo::ApmArena::get_checked`] with this stamp can never
+    /// observe a reused slot's stale bytes, even if an eviction or
+    /// compaction raced in between (see `ApmArena::epoch`).
+    pub epoch: u64,
 }
 
 /// What one serve-time admission did.
@@ -61,6 +67,7 @@ pub struct LayerDb {
 }
 
 impl LayerDb {
+    /// Empty layer database sized for `cfg`'s APM shape at `seq_len`.
     pub fn new(cfg: &ModelConfig, seq_len: usize, params: HnswParams) -> Self {
         LayerDb {
             arena: ApmArena::new(cfg.apm_elems(seq_len))
@@ -79,6 +86,17 @@ impl LayerDb {
         let mut track = self.reuse.lock().unwrap();
         track.counts.push(0);
         track.refs.push(0);
+        Ok(id)
+    }
+
+    /// Insert an entry restored from a warm snapshot, carrying over its
+    /// reuse count and clock reference bits (see `memo::persist`).
+    pub fn insert_restored(&mut self, feature: &[f32], apm: &[f32],
+                           count: u32, refs: u8) -> Result<ApmId> {
+        let id = self.insert(feature, apm)?;
+        let mut track = self.reuse.lock().unwrap();
+        track.counts[id.0 as usize] = count;
+        track.refs[id.0 as usize] = refs.min(3);
         Ok(id)
     }
 
@@ -122,6 +140,9 @@ impl LayerDb {
     pub fn compact(&mut self) -> Result<()> {
         let ids = self.arena.live_ids();
         let mut arena = ApmArena::new(self.arena.entry_elems())?;
+        // The rebuilt arena is a new id universe: epoch stamps taken before
+        // the compaction must not validate against renumbered entries.
+        arena.set_generation(self.arena.generation().wrapping_add(1));
         let mut index = Hnsw::new(self.index.dim(), *self.index.params());
         let mut track = ReuseTrack::default();
         {
@@ -190,9 +211,12 @@ impl LayerDb {
     /// Nearest entry for a query feature vector; `ef` overrides the beam.
     pub fn lookup(&self, feature: &[f32], ef: usize) -> Option<Lookup> {
         let hit = self.index.search_ef(feature, 1, ef).into_iter().next()?;
+        let id = ApmId(hit.id);
+        let epoch = self.arena.epoch(id).ok()?;
         Some(Lookup {
-            id: ApmId(hit.id),
+            id,
             similarity: 1.0 - hit.dist_sq.sqrt(),
+            epoch,
         })
     }
 
@@ -208,6 +232,7 @@ impl LayerDb {
         }
     }
 
+    /// The layer's APM payload arena.
     pub fn arena(&self) -> &ApmArena {
         &self.arena
     }
@@ -217,6 +242,7 @@ impl LayerDb {
         self.arena.len()
     }
 
+    /// Whether no entries are live.
     pub fn is_empty(&self) -> bool {
         self.arena.is_empty()
     }
@@ -226,8 +252,15 @@ impl LayerDb {
         self.arena.live_ids()
     }
 
+    /// Per-id reuse counts (Fig. 11); evicted ids keep their final count.
     pub fn reuse_counts(&self) -> Vec<u32> {
         self.reuse.lock().unwrap().counts.clone()
+    }
+
+    /// Per-id clock reference bits (persistence carries these over so a
+    /// reloaded snapshot keeps its eviction ordering).
+    pub fn reuse_refs(&self) -> Vec<u8> {
+        self.reuse.lock().unwrap().refs.clone()
     }
 
     /// Stored feature vector for an entry (persistence).
@@ -238,7 +271,9 @@ impl LayerDb {
 
 /// The full multi-layer database for one model family.
 pub struct AttentionDb {
+    /// Model family the database serves (e.g. `"bert"`).
     pub family: String,
+    /// Sequence length the APM entries were computed at.
     pub seq_len: usize,
     layers: Vec<LayerDb>,
     apm_elems: usize,
@@ -246,6 +281,7 @@ pub struct AttentionDb {
 }
 
 impl AttentionDb {
+    /// Empty database with one [`LayerDb`] per self-attention layer.
     pub fn new(cfg: &ModelConfig, seq_len: usize, params: HnswParams) -> Self {
         AttentionDb {
             family: cfg.family.clone(),
@@ -258,14 +294,17 @@ impl AttentionDb {
         }
     }
 
+    /// One layer's database (immutable).
     pub fn layer(&self, i: usize) -> &LayerDb {
         &self.layers[i]
     }
 
+    /// One layer's database (mutable: inserts, admissions, eviction).
     pub fn layer_mut(&mut self, i: usize) -> &mut LayerDb {
         &mut self.layers[i]
     }
 
+    /// Number of per-layer databases.
     pub fn num_layers(&self) -> usize {
         self.layers.len()
     }
@@ -275,6 +314,7 @@ impl AttentionDb {
         self.apm_elems
     }
 
+    /// Dimensionality of the embedding feature vectors.
     pub fn embed_dim(&self) -> usize {
         self.embed_dim
     }
@@ -478,6 +518,62 @@ mod tests {
             let hit = layer.lookup(&v, 48).unwrap();
             assert_eq!(hit.id, id);
         }
+    }
+
+    /// The concurrent-eviction regression (satellite fix): a lookup result
+    /// held across an eviction/compaction in the same shard must never
+    /// resolve to a reused slot's fresh bytes — the epoch stamp must turn
+    /// the fetch into an error instead.
+    #[test]
+    fn stale_lookup_stamp_never_reads_reused_slot() {
+        let c = cfg();
+        let mut db = AttentionDb::new(&c, 16, HnswParams::default());
+        let mut rng = Pcg32::seeded(23);
+        let elems = c.apm_elems(16);
+        let mut feats = Vec::new();
+        for i in 0..4 {
+            let f = unit(&mut rng, c.embed_dim);
+            db.layer_mut(0).insert(&f, &vec![i as f32; elems]).unwrap();
+            feats.push(f);
+        }
+        let stale = db.layer(0).lookup(&feats[3], 32).unwrap();
+        assert_eq!(stale.id, ApmId(3));
+
+        // Evict everything else, compact (renumber), then refill: the old
+        // id 3 becomes live again with a *different* entry's payload.
+        for id in [0, 1, 2] {
+            db.layer_mut(0).evict(ApmId(id)).unwrap();
+        }
+        db.layer_mut(0).compact().unwrap();
+        for i in 0..3 {
+            let f = unit(&mut rng, c.embed_dim);
+            db.layer_mut(0)
+                .insert(&f, &vec![100.0 + i as f32; elems])
+                .unwrap();
+        }
+        let layer = db.layer(0);
+        assert!(layer.arena().is_live(stale.id),
+                "id renumbered onto a different live entry");
+        // Unchecked read would serve foreign bytes; the checked read errs.
+        assert_ne!(layer.arena().get(stale.id).unwrap()[0], 3.0);
+        assert!(layer.arena().get_checked(stale.id, stale.epoch).is_err());
+        // A fresh lookup fetches consistently.
+        let fresh = layer.lookup(&feats[3], 32).unwrap();
+        assert_eq!(
+            layer.arena().get_checked(fresh.id, fresh.epoch).unwrap()[0],
+            3.0
+        );
+    }
+
+    #[test]
+    fn restored_entries_carry_reuse_state() {
+        let c = cfg();
+        let mut db = AttentionDb::new(&c, 16, HnswParams::default());
+        let f = vec![0.5; c.embed_dim];
+        let apm = vec![0.0; c.apm_elems(16)];
+        db.layer_mut(0).insert_restored(&f, &apm, 7, 9).unwrap();
+        assert_eq!(db.layer(0).reuse_counts(), vec![7]);
+        assert_eq!(db.layer(0).reuse_refs(), vec![3], "refs saturate at 3");
     }
 
     #[test]

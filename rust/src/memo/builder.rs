@@ -21,7 +21,9 @@ use crate::Result;
 
 /// Everything the engine needs, produced by one offline build.
 pub struct BuiltDb {
+    /// The populated per-layer attention + index database.
     pub db: AttentionDb,
+    /// Calibrated similarity thresholds (Table 2 levels).
     pub thresholds: Thresholds,
     /// Per-layer similarity samples observed while building (threshold
     /// sweeps and the Fig. 3/12 distributions reuse these).
@@ -64,6 +66,7 @@ pub fn alpha_at(samples: &[f32], threshold: f32) -> f64 {
 /// Offline builder.
 pub struct DbBuilder<'a> {
     runner: &'a ModelRunner,
+    /// HNSW construction parameters for the per-layer indexes.
     pub hnsw: HnswParams,
     /// Chunk size for replaying the training set.
     pub chunk: usize,
@@ -72,6 +75,7 @@ pub struct DbBuilder<'a> {
 }
 
 impl<'a> DbBuilder<'a> {
+    /// Builder over a loaded model runner, with default parameters.
     pub fn new(runner: &'a ModelRunner) -> Self {
         DbBuilder { runner, hnsw: HnswParams::default(), chunk: 8, ef: 48 }
     }

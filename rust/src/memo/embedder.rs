@@ -15,6 +15,7 @@ pub struct Features {
 }
 
 impl Features {
+    /// Wrap a `[n, d]` feature tensor.
     pub fn from_tensor(t: &Tensor) -> Result<Features> {
         if t.shape().len() != 2 {
             return Err(Error::shape(format!(
@@ -25,22 +26,27 @@ impl Features {
         Ok(Features { dim: t.shape()[1], data: t.data().to_vec() })
     }
 
+    /// Number of per-sequence feature vectors.
     pub fn len(&self) -> usize {
         if self.dim == 0 { 0 } else { self.data.len() / self.dim }
     }
 
+    /// Whether there are no vectors at all.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Feature dimensionality.
     pub fn dim(&self) -> usize {
         self.dim
     }
 
+    /// Feature vector of sequence `i`.
     pub fn vector(&self, i: usize) -> &[f32] {
         &self.data[i * self.dim..(i + 1) * self.dim]
     }
 
+    /// The flat `[n × d]` data.
     pub fn raw(&self) -> &[f32] {
         &self.data
     }
@@ -52,6 +58,7 @@ pub struct Embedder<'a> {
 }
 
 impl<'a> Embedder<'a> {
+    /// Embedder over a loaded model runner.
     pub fn new(runner: &'a ModelRunner) -> Self {
         Embedder { runner }
     }

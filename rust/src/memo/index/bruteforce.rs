@@ -13,10 +13,12 @@ pub struct BruteForceIndex {
 }
 
 impl BruteForceIndex {
+    /// Empty index over `dim`-dimensional vectors.
     pub fn new(dim: usize) -> Self {
         BruteForceIndex { dim, data: Vec::new(), deleted: Vec::new() }
     }
 
+    /// Stored vector by id.
     pub fn vector(&self, id: u32) -> &[f32] {
         let i = id as usize * self.dim;
         &self.data[i..i + self.dim]

@@ -88,6 +88,7 @@ impl Ord for Near {
 }
 
 impl Hnsw {
+    /// Empty index over `dim`-dimensional vectors.
     pub fn new(dim: usize, params: HnswParams) -> Self {
         let level_mult = 1.0 / (params.m as f64).ln();
         Hnsw {
@@ -114,6 +115,7 @@ impl Hnsw {
         self.deleted.get(id as usize).copied().unwrap_or(false)
     }
 
+    /// Construction/search parameters the index was built with.
     pub fn params(&self) -> &HnswParams {
         &self.params
     }

@@ -12,7 +12,9 @@ pub use hnsw::{Hnsw, HnswParams};
 /// A (vector id, squared-L2 distance) search hit.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Hit {
+    /// Id of the stored vector (insertion order, dense).
     pub id: u32,
+    /// Squared L2 distance from the query.
     pub dist_sq: f32,
 }
 
@@ -28,6 +30,7 @@ pub trait VectorIndex {
     /// (and, for graph indexes, keeps routing). Returns `false` when the
     /// id is unknown or already removed.
     fn remove(&mut self, id: u32) -> bool;
+    /// Whether the index stores no vectors at all.
     fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -2,13 +2,18 @@
 //!
 //! * [`arena`] / [`attdb`] — the attention database (pre-computed APMs in
 //!   page-aligned big memory, per layer).
+//! * [`tier`] — the shared online tier: per-layer `RwLock` shards admit
+//!   and serve concurrently across engine replicas.
 //! * [`gather`] — copy vs memory-mapped APM batch gathering (§5.3).
 //! * [`index`] — the index database: HNSW over hidden-state embeddings.
 //! * [`embedder`] — runs the MLP embedding executable (§5.2).
 //! * [`thresholds`] — conservative/moderate/aggressive levels (Table 2).
 //! * [`policy`] — selective memoization performance model (Eq. 3, §5.4).
 //! * [`builder`] — offline DB population from the training set.
+//! * [`persist`] — offline database + warm-state snapshot files.
 //! * [`stats`] — reuse counters and hit-rate accounting (Fig. 11).
+
+#![warn(missing_docs)]
 
 pub mod arena;
 pub mod attdb;
@@ -20,9 +25,11 @@ pub mod persist;
 pub mod policy;
 pub mod stats;
 pub mod thresholds;
+pub mod tier;
 
 pub use arena::{ApmArena, ApmId};
 pub use attdb::{AdmitOutcome, AttentionDb};
 pub use builder::DbBuilder;
 pub use policy::{AdmissionPolicy, LayerProfile, SelectivePolicy};
 pub use stats::MemoStats;
+pub use tier::{MemoTier, TierAdmitOutcome};

@@ -1,4 +1,5 @@
-//! Attention-database persistence.
+//! Attention-database persistence: the offline `BuiltDb` file and the
+//! serve-time warm-state snapshot.
 //!
 //! The paper's database is pre-populated once during training and then
 //! served from big memory; rebuilding it per process (replaying the
@@ -13,21 +14,36 @@
 //! Format (little-endian): magic `ATDB`, u32 version, header numbers,
 //! then per layer: entry count, features `[n, dim]` f32, APMs
 //! `[n, elems]` f32, similarity samples, profile, reuse counters.
+//!
+//! [`save_warm`]/[`load_warm`] do the same for the *online*
+//! [`MemoTier`]: the compacted live entries of every layer shard plus
+//! their reuse counters and clock bits, so a restarted process starts at
+//! the pre-restart warm hit rate instead of re-paying the cold start.
+//! The warm format (magic `ATWM`) is documented in `docs/PERSISTENCE.md`
+//! together with its versioning/compat policy.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use crate::config::ModelConfig;
+use crate::config::{MemoConfig, ModelConfig};
 use crate::memo::attdb::AttentionDb;
 use crate::memo::builder::BuiltDb;
 use crate::memo::index::HnswParams;
 use crate::memo::policy::LayerProfile;
 use crate::memo::thresholds::Thresholds;
+use crate::memo::tier::MemoTier;
 use crate::memo::ApmId;
 use crate::{Error, Result};
 
 const MAGIC: &[u8; 4] = b"ATDB";
 const VERSION: u32 = 2;
+
+const WARM_MAGIC: &[u8; 4] = b"ATWM";
+/// Current warm-snapshot format version. Compat policy: loaders accept
+/// exactly the versions they know how to parse (currently only 1) and
+/// reject anything newer with a clear error — a snapshot is a cache, so
+/// "rebuild by serving traffic" is always a safe fallback.
+pub const WARM_VERSION: u32 = 1;
 
 fn w_u32(w: &mut impl Write, x: u32) -> Result<()> {
     w.write_all(&x.to_le_bytes())?;
@@ -72,6 +88,27 @@ fn r_f64(r: &mut impl Read) -> Result<f64> {
 
 fn r_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
     let n = r_u64(r)? as usize;
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Write a raw f32 slice (no length prefix; the caller's header carries
+/// the counts), explicitly little-endian so the on-disk format matches
+/// its spec on any host.
+fn w_f32_raw(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+fn r_f32_raw(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
     let mut bytes = vec![0u8; n * 4];
     r.read_exact(&mut bytes)?;
     Ok(bytes
@@ -220,6 +257,145 @@ pub fn load(path: &Path, cfg: &ModelConfig,
     })
 }
 
+/// Save a [`MemoTier`]'s warm state to `path`: per layer shard, the
+/// compacted live entries (feature + APM payload) with their reuse counts
+/// and clock reference bits, plus the similarity `threshold` the engine
+/// served at (informational, echoed back by [`load_warm`]).
+///
+/// Each shard is serialized under its read lock, so snapshots can be
+/// taken while replicas keep serving; shards are serialized one at a
+/// time, so a snapshot is per-shard (not cross-shard) consistent — fine
+/// for a cache, where the worst case is re-missing a handful of entries.
+///
+/// The snapshot is written to a sibling temp file, flushed, and renamed
+/// over `path`, so a crash mid-write (or a full disk) can never destroy
+/// the previous good snapshot — crucial for the periodic serve-loop
+/// snapshots, which rewrite the same file until the process is killed.
+pub fn save_warm(tier: &MemoTier, threshold: f32, path: &Path) -> Result<()> {
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    write_warm(tier, threshold, &tmp)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+fn write_warm(tier: &MemoTier, threshold: f32, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(WARM_MAGIC)?;
+    w_u32(&mut w, WARM_VERSION)?;
+    w_u32(&mut w, tier.num_layers() as u32)?;
+    w_u32(&mut w, tier.seq_len() as u32)?;
+    w_u32(&mut w, tier.apm_elems() as u32)?;
+    w_u32(&mut w, tier.embed_dim() as u32)?;
+    w_u64(&mut w, tier.capacity() as u64)?;
+    w.write_all(&threshold.to_le_bytes())?;
+    for li in 0..tier.num_layers() {
+        tier.read_layer(li, |layer| -> Result<()> {
+            // Live ids only: eviction holes compact away in the file and
+            // ids are reassigned densely on load.
+            let ids = layer.live_ids();
+            let counts = layer.reuse_counts();
+            let refs = layer.reuse_refs();
+            w_u64(&mut w, ids.len() as u64)?;
+            for &id in &ids {
+                w_f32_raw(&mut w, layer.index_vector(id))?;
+            }
+            for &id in &ids {
+                w_f32_raw(&mut w, layer.arena().get(id)?)?;
+            }
+            for &id in &ids {
+                w_u32(&mut w,
+                      counts.get(id.0 as usize).copied().unwrap_or(0))?;
+            }
+            for &id in &ids {
+                w.write_all(&[refs.get(id.0 as usize).copied().unwrap_or(0)])?;
+            }
+            Ok(())
+        })?;
+    }
+    // Surface write errors here instead of swallowing them in the
+    // BufWriter's Drop — a partial temp file must never be renamed live.
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a warm snapshot saved by [`save_warm`] into a fresh [`MemoTier`]
+/// configured from `memo`; returns the tier and the threshold recorded at
+/// save time. Dimensions are validated against `cfg`; an unknown (newer)
+/// format version is rejected — see `docs/PERSISTENCE.md`.
+///
+/// If `memo.max_db_entries` is tighter than the snapshot, the
+/// most-reused entries are kept up to the new budget.
+pub fn load_warm(path: &Path, cfg: &ModelConfig, memo: &MemoConfig,
+                 hnsw: HnswParams) -> Result<(MemoTier, f32)> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != WARM_MAGIC {
+        return Err(Error::memo(format!("{}: not an ATWM warm snapshot",
+                                       path.display())));
+    }
+    let version = r_u32(&mut r)?;
+    if version != WARM_VERSION {
+        return Err(Error::memo(format!(
+            "ATWM version {version} unsupported (this build reads \
+             {WARM_VERSION}); re-warm from traffic or re-save"
+        )));
+    }
+    let layers = r_u32(&mut r)? as usize;
+    let seq_len = r_u32(&mut r)? as usize;
+    let apm_elems = r_u32(&mut r)? as usize;
+    let embed_dim = r_u32(&mut r)? as usize;
+    if layers != cfg.layers || apm_elems != cfg.apm_elems(seq_len)
+        || embed_dim != cfg.embed_dim
+    {
+        return Err(Error::memo(format!(
+            "ATWM dims (layers {layers}, elems {apm_elems}, dim {embed_dim}) \
+             do not match family {:?}",
+            cfg.family
+        )));
+    }
+    let _saved_capacity = r_u64(&mut r)?;
+    let mut thr_bytes = [0u8; 4];
+    r.read_exact(&mut thr_bytes)?;
+    let threshold = f32::from_le_bytes(thr_bytes);
+
+    let tier = MemoTier::new(cfg, seq_len, hnsw, memo);
+    for li in 0..layers {
+        let n = r_u64(&mut r)? as usize;
+        let feats = r_f32_raw(&mut r, n * embed_dim)?;
+        let apms = r_f32_raw(&mut r, n * apm_elems)?;
+        let mut counts = Vec::with_capacity(n);
+        for _ in 0..n {
+            counts.push(r_u32(&mut r)?);
+        }
+        let mut refs = vec![0u8; n];
+        r.read_exact(&mut refs)?;
+
+        // Restore in reuse order when the new budget is tighter than the
+        // snapshot: the hottest entries are the ones worth keeping.
+        let mut order: Vec<usize> = (0..n).collect();
+        let cap = memo.max_db_entries;
+        if cap > 0 && n > cap {
+            order.sort_by(|&a, &b| counts[b].cmp(&counts[a]));
+            order.truncate(cap);
+        }
+        tier.write_layer(li, |layer| -> Result<()> {
+            for &i in &order {
+                layer.insert_restored(
+                    &feats[i * embed_dim..(i + 1) * embed_dim],
+                    &apms[i * apm_elems..(i + 1) * apm_elems],
+                    counts[i],
+                    refs[i],
+                )?;
+            }
+            Ok(())
+        })?;
+    }
+    Ok((tier, threshold))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -328,5 +504,120 @@ mod tests {
         let path = dir.join("bad.atdb");
         std::fs::write(&path, b"not a database").unwrap();
         assert!(load(&path, &cfg(), HnswParams::default()).is_err());
+    }
+
+    fn warm_memo(capacity: usize) -> MemoConfig {
+        MemoConfig {
+            online_admission: true,
+            max_db_entries: capacity,
+            admission_min_attempts: 0,
+            ..MemoConfig::default()
+        }
+    }
+
+    #[test]
+    fn warm_roundtrip_preserves_entries_and_reuse() {
+        let c = cfg();
+        let memo = warm_memo(16);
+        let tier = MemoTier::new(&c, 8, HnswParams::default(), &memo);
+        let mut rng = Pcg32::seeded(31);
+        let elems = c.apm_elems(8);
+        for li in 0..c.layers {
+            for i in 0..5 {
+                let f: Vec<f32> =
+                    (0..c.embed_dim).map(|_| rng.next_gaussian()).collect();
+                let apm = vec![(li * 10 + i) as f32; elems];
+                tier.admit_batch(li, &[(f.as_slice(), apm.as_slice())],
+                                 2.0, 32)
+                    .unwrap();
+            }
+        }
+        // Mark some reuse so the counters have something to carry.
+        let probe = tier.read_layer(0, |l| {
+            l.index_vector(l.live_ids()[2]).to_vec()
+        });
+        let mut dst = vec![0.0f32; elems];
+        for _ in 0..3 {
+            tier.lookup_fetch(0, &probe, 32, -10.0, &mut dst).unwrap();
+        }
+
+        let dir = std::env::temp_dir().join("attmemo_warm1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("warm.atwm");
+        save_warm(&tier, 0.8, &path).unwrap();
+        let (loaded, thr) =
+            load_warm(&path, &c, &memo, HnswParams::default()).unwrap();
+        assert_eq!(thr, 0.8);
+        assert_eq!(loaded.total_entries(), tier.total_entries());
+        // Payload + reuse state survive byte-exactly (insertion order is
+        // live-id order, so ids line up on a hole-free tier).
+        for li in 0..c.layers {
+            let want = tier.read_layer(li, |l| {
+                (l.reuse_counts(), l.reuse_refs())
+            });
+            let got = loaded.read_layer(li, |l| {
+                (l.reuse_counts(), l.reuse_refs())
+            });
+            assert_eq!(want, got, "layer {li} reuse state");
+        }
+        // A probe that hit before the save still hits after the load.
+        let hit = loaded.lookup_fetch(0, &probe, 32, 0.99, &mut dst);
+        assert!(hit.is_some(), "warm entry lost in the roundtrip");
+    }
+
+    #[test]
+    fn warm_load_respects_tighter_budget() {
+        let c = cfg();
+        let tier =
+            MemoTier::new(&c, 8, HnswParams::default(), &warm_memo(0));
+        let mut rng = Pcg32::seeded(37);
+        let elems = c.apm_elems(8);
+        for _ in 0..6 {
+            let f: Vec<f32> =
+                (0..c.embed_dim).map(|_| rng.next_gaussian()).collect();
+            tier.admit_batch(0, &[(f.as_slice(), &vec![0.0; elems][..])],
+                             2.0, 32)
+                .unwrap();
+        }
+        // Heat up entry 4 so the truncated load must keep it.
+        let hot = tier.read_layer(0, |l| {
+            l.index_vector(l.live_ids()[4]).to_vec()
+        });
+        let mut dst = vec![0.0f32; elems];
+        for _ in 0..4 {
+            tier.lookup_fetch(0, &hot, 32, -10.0, &mut dst).unwrap();
+        }
+        let dir = std::env::temp_dir().join("attmemo_warm2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("warm.atwm");
+        save_warm(&tier, 0.9, &path).unwrap();
+        let (loaded, _) =
+            load_warm(&path, &c, &warm_memo(2), HnswParams::default())
+                .unwrap();
+        assert_eq!(loaded.layer_len(0), 2, "budget respected on load");
+        let hit = loaded.lookup_fetch(0, &hot, 32, 0.99, &mut dst);
+        assert!(hit.is_some(), "hottest entry must survive truncation");
+    }
+
+    #[test]
+    fn warm_load_rejects_future_version_and_garbage() {
+        let c = cfg();
+        let dir = std::env::temp_dir().join("attmemo_warm3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let garbage = dir.join("bad.atwm");
+        std::fs::write(&garbage, b"not a snapshot").unwrap();
+        assert!(load_warm(&garbage, &c, &warm_memo(0),
+                          HnswParams::default())
+            .is_err());
+        // A future version must be rejected, not mis-parsed.
+        let future = dir.join("future.atwm");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(WARM_MAGIC);
+        bytes.extend_from_slice(&(WARM_VERSION + 1).to_le_bytes());
+        std::fs::write(&future, &bytes).unwrap();
+        let err = load_warm(&future, &c, &warm_memo(0),
+                            HnswParams::default())
+            .unwrap_err();
+        assert!(format!("{err}").contains("unsupported"), "{err}");
     }
 }

@@ -54,6 +54,7 @@ pub struct SelectivePolicy {
 }
 
 impl SelectivePolicy {
+    /// Policy over explicit per-layer profiles.
     pub fn new(layers: Vec<LayerProfile>, enabled: bool) -> Self {
         SelectivePolicy { layers, enabled }
     }
@@ -76,6 +77,7 @@ impl SelectivePolicy {
         }
     }
 
+    /// The per-layer Eq. 3 profiles backing the decisions.
     pub fn profiles(&self) -> &[LayerProfile] {
         &self.layers
     }
@@ -118,6 +120,16 @@ pub struct AdmissionPolicy {
 }
 
 impl AdmissionPolicy {
+    /// Gate with an explicit switch and warm-up window.
+    ///
+    /// ```
+    /// use attmemo::memo::AdmissionPolicy;
+    /// let gate = AdmissionPolicy::new(true, 10);
+    /// // Inside the warm-up window every layer admits…
+    /// assert!(gate.should_admit(None, 5, 128));
+    /// // …and a disabled gate never does.
+    /// assert!(!AdmissionPolicy::new(false, 0).should_admit(None, 0, 128));
+    /// ```
     pub fn new(enabled: bool, min_attempts: u64) -> Self {
         AdmissionPolicy { enabled, min_attempts }
     }

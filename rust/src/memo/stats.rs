@@ -7,10 +7,15 @@ use crate::util::stats::Summary;
 /// Table 4 rows).
 #[derive(Debug, Default)]
 pub struct StageTimes {
+    /// Hidden-state embedding (§5.2) per batch-layer.
     pub embedding_ms: Summary,
+    /// Index search + online-tier fetch per batch-layer.
     pub search_ms: Summary,
+    /// APM batch assembly (mapped or copied) per batch-layer.
     pub mapping_ms: Summary,
+    /// Attention-score computation for miss rows per batch-layer.
     pub scores_ms: Summary,
+    /// Post-APM remainder of the layer (`attn_apply`) per batch-layer.
     pub apply_ms: Summary,
 }
 
@@ -32,16 +37,22 @@ pub struct LayerCounters {
     pub admitted: u64,
     /// Online-database entries evicted to make room for admissions.
     pub evicted: u64,
+    /// Miss rows skipped by intra-batch dedup (a near-identical entry —
+    /// often from the same batch — was already stored).
+    pub deduped: u64,
 }
 
 /// Whole-engine memoization statistics.
 #[derive(Debug, Default)]
 pub struct MemoStats {
+    /// Per-layer counters, indexed by layer.
     pub layers: Vec<LayerCounters>,
+    /// Per-stage latency summaries.
     pub stages: StageTimes,
 }
 
 impl MemoStats {
+    /// Zeroed statistics for `num_layers` layers.
     pub fn new(num_layers: usize) -> Self {
         MemoStats {
             layers: vec![LayerCounters::default(); num_layers],
@@ -90,6 +101,11 @@ impl MemoStats {
     /// Total serve-time evictions across layers.
     pub fn total_evicted(&self) -> u64 {
         self.layers.iter().map(|l| l.evicted).sum()
+    }
+
+    /// Total intra-batch-dedup skips across layers.
+    pub fn total_deduped(&self) -> u64 {
+        self.layers.iter().map(|l| l.deduped).sum()
     }
 }
 

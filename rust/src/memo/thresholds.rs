@@ -14,8 +14,11 @@ use crate::config::MemoLevel;
 /// Calibrated thresholds for one family.
 #[derive(Debug, Clone, Copy)]
 pub struct Thresholds {
+    /// Strictest level: admits only the most similar lookups.
     pub conservative: f32,
+    /// The default middle ground.
     pub moderate: f32,
+    /// Loosest level: maximum memoization rate, most accuracy risk.
     pub aggressive: f32,
 }
 

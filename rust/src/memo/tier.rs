@@ -1,0 +1,412 @@
+//! The shared online memoization tier: per-layer sharded, concurrently
+//! readable, writable at serve time.
+//!
+//! PR 1's online overlay lived inside the engine behind one
+//! `Arc<Mutex<Engine>>`, so every lookup and admission serialized on a
+//! single lock and the warmed state died with the process. [`MemoTier`]
+//! extracts that overlay into a standalone subsystem shaped like the
+//! paper's big-memory attention database:
+//!
+//! * **Per-layer shards** — one [`LayerDb`] per self-attention layer, each
+//!   behind its own `RwLock`. The request path is read-mostly (lookups +
+//!   payload fetches take a shard *read* lock, so any number of engine
+//!   replicas search the same layer in parallel); only admission and
+//!   eviction take the *write* lock, and only for their own layer.
+//! * **Shared ownership** — the tier is `Sync` and meant to be shared as
+//!   `Arc<MemoTier>` across engine replicas (`serving::Server` runs one
+//!   batcher thread per replica against one tier), so a miss warmed by one
+//!   replica is a hit for every other.
+//! * **Race-free fetches** — [`MemoTier::lookup_fetch`] performs the index
+//!   search, reuse marking and payload copy under a single read lock, and
+//!   the payload read is epoch-checked (`ApmArena::get_checked`), so a
+//!   concurrent eviction in the same shard can never be observed as a
+//!   reused slot with stale bytes.
+//! * **Intra-batch dedup** — [`MemoTier::admit_batch`] admits a batch of
+//!   miss-path rows under one write lock, skipping rows whose nearest
+//!   neighbour (including rows admitted earlier in the *same batch*)
+//!   already clears the similarity threshold, so near-identical rows admit
+//!   once instead of flooding the capacity budget with duplicates.
+//!
+//! Warm state survives restarts through `memo::persist::{save_warm,
+//! load_warm}` (see `docs/PERSISTENCE.md` for the file format).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::config::{MemoConfig, ModelConfig};
+use crate::memo::attdb::{LayerDb, Lookup};
+use crate::memo::index::HnswParams;
+use crate::memo::policy::{AdmissionPolicy, LayerProfile};
+use crate::Result;
+
+/// What one batched admission did (per layer shard).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TierAdmitOutcome {
+    /// Rows stored in the shard.
+    pub admitted: u64,
+    /// Entries evicted by the capacity budget to make room.
+    pub evicted: u64,
+    /// Rows skipped because a near-identical entry (often from the same
+    /// batch) was already stored.
+    pub deduped: u64,
+}
+
+/// The serve-time attention database shared by all engine replicas.
+///
+/// ```
+/// use attmemo::config::{MemoConfig, ModelConfig};
+/// use attmemo::memo::index::HnswParams;
+/// use attmemo::memo::MemoTier;
+///
+/// let cfg = ModelConfig {
+///     family: "bert".into(), vocab_size: 64, hidden: 16, layers: 1,
+///     heads: 2, ffn: 32, max_len: 8, num_classes: 2, rel_pos_buckets: 4,
+///     embed_dim: 4, embed_hidden: 8, embed_segments: 2, causal: false,
+/// };
+/// let memo = MemoConfig {
+///     online_admission: true,
+///     max_db_entries: 8,
+///     ..MemoConfig::default()
+/// };
+/// let tier = MemoTier::new(&cfg, 8, HnswParams::default(), &memo);
+/// let apm = vec![0.5f32; cfg.apm_elems(8)];
+/// let feature: &[f32] = &[1.0, 0.0, 0.0, 0.0];
+/// let out = tier
+///     .admit_batch(0, &[(feature, apm.as_slice())], 0.9, 16)
+///     .unwrap();
+/// assert_eq!(out.admitted, 1);
+/// let mut fetched = vec![0.0f32; apm.len()];
+/// let hit = tier
+///     .lookup_fetch(0, &[1.0, 0.0, 0.0, 0.0], 16, 0.9, &mut fetched)
+///     .unwrap();
+/// assert!(hit.similarity > 0.999);
+/// assert_eq!(fetched, apm);
+/// ```
+pub struct MemoTier {
+    shards: Vec<RwLock<LayerDb>>,
+    capacity: usize,
+    policy: AdmissionPolicy,
+    dedup: bool,
+    seq_len: usize,
+    apm_elems: usize,
+    embed_dim: usize,
+    admissions: AtomicU64,
+    evictions: AtomicU64,
+    deduped: AtomicU64,
+}
+
+impl MemoTier {
+    /// Empty tier with one shard per self-attention layer. Capacity,
+    /// admission gating and dedup behaviour come from `memo`
+    /// (`max_db_entries`, `online_admission`/`admission_min_attempts`,
+    /// `intra_batch_dedup`).
+    pub fn new(cfg: &ModelConfig, seq_len: usize, params: HnswParams,
+               memo: &MemoConfig) -> Self {
+        MemoTier {
+            shards: (0..cfg.layers)
+                .map(|_| RwLock::new(LayerDb::new(cfg, seq_len, params)))
+                .collect(),
+            capacity: memo.max_db_entries,
+            policy: AdmissionPolicy::new(
+                memo.online_admission, memo.admission_min_attempts),
+            dedup: memo.intra_batch_dedup,
+            seq_len,
+            apm_elems: cfg.apm_elems(seq_len),
+            embed_dim: cfg.embed_dim,
+            admissions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            deduped: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of layer shards.
+    pub fn num_layers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-layer entry budget (0 = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Sequence length the stored APMs were computed at.
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    /// f32 values per stored APM payload.
+    pub fn apm_elems(&self) -> usize {
+        self.apm_elems
+    }
+
+    /// Dimensionality of the embedding feature vectors.
+    pub fn embed_dim(&self) -> usize {
+        self.embed_dim
+    }
+
+    /// The Eq. 3 admission gate shared by every replica.
+    pub fn policy(&self) -> &AdmissionPolicy {
+        &self.policy
+    }
+
+    /// Should a layer invest in admitting this batch's misses? Delegates
+    /// to the tier's [`AdmissionPolicy`] with the caller's layer profile
+    /// and attempt count.
+    pub fn should_admit(&self, profile: Option<&LayerProfile>,
+                        attempts: u64, tokens: u64) -> bool {
+        self.policy.should_admit(profile, attempts, tokens)
+    }
+
+    /// Live entries in one layer shard.
+    pub fn layer_len(&self, layer: usize) -> usize {
+        self.shards[layer].read().unwrap().len()
+    }
+
+    /// Whether a layer shard holds no entries.
+    pub fn is_layer_empty(&self, layer: usize) -> bool {
+        self.shards[layer].read().unwrap().is_empty()
+    }
+
+    /// Total live entries across layers.
+    pub fn total_entries(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    /// Total resident payload bytes across layer arenas.
+    pub fn resident_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.read().unwrap().arena().resident_bytes())
+            .sum()
+    }
+
+    /// Total serve-time admissions since creation (all layers).
+    pub fn admissions(&self) -> u64 {
+        self.admissions.load(Ordering::Relaxed)
+    }
+
+    /// Total capacity evictions since creation (all layers).
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Total rows skipped by intra-batch dedup since creation.
+    pub fn deduped(&self) -> u64 {
+        self.deduped.load(Ordering::Relaxed)
+    }
+
+    /// Nearest stored entry for a query (shard read lock; runs in
+    /// parallel with other lookups). The returned id is only guaranteed
+    /// stable while no admission runs — use [`MemoTier::lookup_fetch`] to
+    /// atomically obtain the payload.
+    pub fn lookup(&self, layer: usize, feature: &[f32],
+                  ef: usize) -> Option<Lookup> {
+        self.shards[layer].read().unwrap().lookup(feature, ef)
+    }
+
+    /// Atomic lookup + payload fetch: under one shard read lock, search
+    /// for the nearest entry, reject it if its similarity is below
+    /// `min_similarity`, otherwise mark it reused and copy its APM payload
+    /// into `dst` (which must hold [`MemoTier::apm_elems`] values).
+    ///
+    /// Because search, epoch-checked read and copy share the lock, a
+    /// concurrent admission/eviction in the same shard can never be
+    /// observed as a reused arena slot with stale bytes.
+    pub fn lookup_fetch(&self, layer: usize, feature: &[f32], ef: usize,
+                        min_similarity: f32,
+                        dst: &mut [f32]) -> Option<Lookup> {
+        let shard = self.shards[layer].read().unwrap();
+        let hit = shard.lookup(feature, ef)?;
+        if hit.similarity < min_similarity {
+            return None;
+        }
+        let apm = shard.arena().get_checked(hit.id, hit.epoch).ok()?;
+        dst.copy_from_slice(apm);
+        shard.mark_reused(hit.id);
+        Some(hit)
+    }
+
+    /// Admit one batch of miss-path `(feature, apm)` rows into a layer
+    /// shard under a single write lock.
+    ///
+    /// Rows whose nearest stored neighbour already clears
+    /// `dedup_threshold` are skipped (and the surviving twin is marked
+    /// reused): since earlier rows of the *same call* are visible to later
+    /// ones, near-identical rows within one batch admit once — the
+    /// intra-batch dedup the ROADMAP called for. At most `capacity` rows
+    /// are admitted per call (more would evict entries admitted moments
+    /// earlier in the same loop).
+    pub fn admit_batch(&self, layer: usize, rows: &[(&[f32], &[f32])],
+                       dedup_threshold: f32,
+                       ef: usize) -> Result<TierAdmitOutcome> {
+        let mut shard = self.shards[layer].write().unwrap();
+        let quota = if self.capacity == 0 {
+            rows.len()
+        } else {
+            self.capacity.min(rows.len())
+        };
+        let mut out = TierAdmitOutcome::default();
+        for &(feature, apm) in rows {
+            if out.admitted as usize >= quota {
+                break;
+            }
+            if self.dedup {
+                if let Some(hit) = shard.lookup(feature, ef) {
+                    if hit.similarity >= dedup_threshold {
+                        shard.mark_reused(hit.id);
+                        out.deduped += 1;
+                        continue;
+                    }
+                }
+            }
+            let admitted = shard.admit(feature, apm, self.capacity)?;
+            out.admitted += 1;
+            out.evicted += admitted.evicted.len() as u64;
+        }
+        self.admissions.fetch_add(out.admitted, Ordering::Relaxed);
+        self.evictions.fetch_add(out.evicted, Ordering::Relaxed);
+        self.deduped.fetch_add(out.deduped, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Run `f` against one layer shard under the read lock (persistence,
+    /// tests, diagnostics).
+    pub fn read_layer<R>(&self, layer: usize,
+                         f: impl FnOnce(&LayerDb) -> R) -> R {
+        f(&self.shards[layer].read().unwrap())
+    }
+
+    /// Run `f` against one layer shard under the write lock (warm-state
+    /// restore).
+    pub fn write_layer<R>(&self, layer: usize,
+                          f: impl FnOnce(&mut LayerDb) -> R) -> R {
+        f(&mut self.shards[layer].write().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn cfg(layers: usize) -> ModelConfig {
+        ModelConfig {
+            family: "bert".into(),
+            vocab_size: 256,
+            hidden: 32,
+            layers,
+            heads: 2,
+            ffn: 64,
+            max_len: 16,
+            num_classes: 2,
+            rel_pos_buckets: 8,
+            embed_dim: 8,
+            embed_hidden: 16,
+            embed_segments: 4,
+            causal: false,
+        }
+    }
+
+    fn memo(capacity: usize, dedup: bool) -> MemoConfig {
+        MemoConfig {
+            online_admission: true,
+            max_db_entries: capacity,
+            admission_min_attempts: 0,
+            intra_batch_dedup: dedup,
+            ..MemoConfig::default()
+        }
+    }
+
+    fn unit(rng: &mut Pcg32, d: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+        v.iter_mut().for_each(|x| *x /= n);
+        v
+    }
+
+    #[test]
+    fn near_identical_rows_admit_once() {
+        let c = cfg(1);
+        let tier = MemoTier::new(&c, 16, HnswParams::default(),
+                                 &memo(32, true));
+        let mut rng = Pcg32::seeded(3);
+        let base = unit(&mut rng, c.embed_dim);
+        let elems = c.apm_elems(16);
+        let apm = vec![1.0f32; elems];
+        // Eight copies of (almost) the same row in one batch.
+        let jittered: Vec<Vec<f32>> = (0..8)
+            .map(|_| {
+                let mut v: Vec<f32> = base
+                    .iter()
+                    .map(|&x| x + 0.001 * rng.next_gaussian())
+                    .collect();
+                let n = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+                v.iter_mut().for_each(|x| *x /= n);
+                v
+            })
+            .collect();
+        let rows: Vec<(&[f32], &[f32])> =
+            jittered.iter().map(|f| (f.as_slice(), apm.as_slice())).collect();
+        let out = tier.admit_batch(0, &rows, 0.9, 32).unwrap();
+        assert_eq!(out.admitted, 1, "duplicates must collapse");
+        assert_eq!(out.deduped, 7);
+        assert_eq!(tier.layer_len(0), 1);
+        assert_eq!(tier.deduped(), 7);
+    }
+
+    #[test]
+    fn dedup_disabled_admits_every_row() {
+        let c = cfg(1);
+        let tier = MemoTier::new(&c, 16, HnswParams::default(),
+                                 &memo(32, false));
+        let mut rng = Pcg32::seeded(3);
+        let base = unit(&mut rng, c.embed_dim);
+        let elems = c.apm_elems(16);
+        let apm = vec![1.0f32; elems];
+        let rows: Vec<(&[f32], &[f32])> =
+            (0..4).map(|_| (base.as_slice(), apm.as_slice())).collect();
+        let out = tier.admit_batch(0, &rows, 0.9, 32).unwrap();
+        assert_eq!(out.admitted, 4);
+        assert_eq!(out.deduped, 0);
+    }
+
+    #[test]
+    fn admission_quota_is_one_capacity_per_batch() {
+        let c = cfg(1);
+        let cap = 4;
+        let tier = MemoTier::new(&c, 16, HnswParams::default(),
+                                 &memo(cap, false));
+        let mut rng = Pcg32::seeded(5);
+        let elems = c.apm_elems(16);
+        let feats: Vec<Vec<f32>> =
+            (0..10).map(|_| unit(&mut rng, c.embed_dim)).collect();
+        let apm = vec![0.0f32; elems];
+        let rows: Vec<(&[f32], &[f32])> =
+            feats.iter().map(|f| (f.as_slice(), apm.as_slice())).collect();
+        let out = tier.admit_batch(0, &rows, 0.99, 32).unwrap();
+        assert_eq!(out.admitted as usize, cap);
+        assert!(tier.layer_len(0) <= cap);
+    }
+
+    #[test]
+    fn lookup_fetch_respects_similarity_floor() {
+        let c = cfg(2);
+        let tier = MemoTier::new(&c, 16, HnswParams::default(),
+                                 &memo(8, true));
+        let mut rng = Pcg32::seeded(9);
+        let f = unit(&mut rng, c.embed_dim);
+        let elems = c.apm_elems(16);
+        let apm: Vec<f32> = (0..elems).map(|i| i as f32).collect();
+        tier.admit_batch(1, &[(f.as_slice(), apm.as_slice())], 0.9, 32)
+            .unwrap();
+        let mut dst = vec![0.0f32; elems];
+        // A floor above the achievable similarity rejects without copying.
+        let far = unit(&mut rng, c.embed_dim);
+        assert!(tier.lookup_fetch(1, &far, 32, 1.5, &mut dst).is_none());
+        assert!(tier.lookup_fetch(1, &f, 32, 0.9, &mut dst).is_some());
+        assert_eq!(dst, apm);
+        // Layer 0 stayed untouched.
+        assert!(tier.is_layer_empty(0));
+        assert_eq!(tier.layer_len(1), 1);
+    }
+}

@@ -1,5 +1,12 @@
 //! Dynamic batcher: fuses queued requests into engine batches under a
 //! max-batch / max-wait policy (the vLLM-style continuous batch former).
+//!
+//! The server runs one batcher per engine replica, all popping from the
+//! same bounded queue — the queue is the only point of contention between
+//! replicas, and each pop hands a whole batch to exactly one replica. The
+//! engines themselves are never locked by another replica's batcher; the
+//! shared state (the online `MemoTier`) synchronizes internally per layer
+//! shard.
 
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -16,12 +23,14 @@ pub struct Batcher {
     queue: Arc<BoundedQueue<Request>>,
     engine: Arc<Mutex<Engine>>,
     cfg: ServingConfig,
+    /// Replica index, for logging/thread naming in multi-replica servers.
+    replica: usize,
 }
 
 impl Batcher {
     pub fn new(queue: Arc<BoundedQueue<Request>>, engine: Arc<Mutex<Engine>>,
-               cfg: ServingConfig) -> Self {
-        Batcher { queue, engine, cfg }
+               cfg: ServingConfig, replica: usize) -> Self {
+        Batcher { queue, engine, cfg, replica }
     }
 
     /// Form one batch: block for the first request (up to `idle_wait`),
@@ -92,7 +101,7 @@ impl Batcher {
                 continue;
             }
             if let Err(e) = self.serve_batch(batch) {
-                log::error!("batcher: batch failed: {e}");
+                log::error!("batcher[{}]: batch failed: {e}", self.replica);
             }
         }
     }

@@ -4,30 +4,37 @@
 //! 1. the selective policy (Eq. 3) decides whether to attempt memoization;
 //! 2. if attempting — embed the hidden states (§5.2), query the layer's
 //!    index databases (the offline-built one and, when serve-time
-//!    admission is on, the online one), and accept entries whose estimated
-//!    similarity clears the level's threshold;
+//!    admission is on, the shared online `MemoTier`), and accept entries
+//!    whose estimated similarity clears the level's threshold; online-tier
+//!    payloads are fetched atomically under the shard's read lock;
 //! 3. missing rows (if any) run `attn_scores` as a packed sub-batch; hit
 //!    rows are fetched from the attention database (memory-mapped window
 //!    or direct arena view);
-//! 4. freshly computed miss APMs are admitted into the online database
-//!    (capacity-bounded, reuse-aware eviction) when the Eq. 3 admission
-//!    gate approves — this is how a cold or drifting workload warms from
-//!    0% to a steady-state hit rate;
+//! 4. freshly computed miss APMs are admitted into the online tier
+//!    (capacity-bounded, reuse-aware eviction, intra-batch dedup) when the
+//!    Eq. 3 admission gate approves — this is how a cold or drifting
+//!    workload warms from 0% to a steady-state hit rate;
 //! 5. the combined APM batch feeds `attn_apply`.
 //! Layers that skip memoization take the fused `layer_full` fast path.
+//!
+//! The online tier is an `Arc<MemoTier>`: several engine replicas (one
+//! batcher thread each, see `serving::server`) can share it, so lookups
+//! proceed in parallel across replicas with no global engine mutex on the
+//! lookup path — admissions by one replica become hits for all.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::{MemoConfig, MemoLevel};
 use crate::memo::arena::ApmId;
-use crate::memo::attdb::AttentionDb;
+use crate::memo::attdb::Lookup;
 use crate::memo::builder::BuiltDb;
 use crate::memo::gather::GatherWindow;
 use crate::memo::index::HnswParams;
-use crate::memo::policy::{AdmissionPolicy, SelectivePolicy};
+use crate::memo::policy::SelectivePolicy;
 use crate::memo::stats::MemoStats;
 use crate::memo::thresholds::Thresholds;
+use crate::memo::tier::MemoTier;
 use crate::model::ModelRunner;
 use crate::serving::metrics::EngineMetrics;
 use crate::tensor::tensor::IdTensor;
@@ -52,39 +59,24 @@ pub struct BatchResult {
     pub seconds: f64,
 }
 
-/// The serve-time (online) attention database: a writable overlay in front
-/// of the immutable offline `BuiltDb`. The engine owns it exclusively (the
-/// engine already runs behind `Arc<Mutex<Engine>>`), so admission needs no
-/// extra locking and sharing semantics of the built database are
-/// unchanged.
-pub struct OnlineMemo {
-    pub db: AttentionDb,
-    /// Per-layer entry budget (0 = unbounded).
-    pub capacity: usize,
-    /// Eq. 3-based admission gate.
-    pub policy: AdmissionPolicy,
-}
-
-/// Which database tier a hit came from.
-#[derive(Debug, Clone, Copy)]
-enum HitSrc {
-    Static(ApmId),
-    Online(ApmId),
-}
-
 /// The memoizing inference engine for one model family.
 ///
-/// SAFETY (Send): the engine owns `!Send` XLA literals transitively; it is
-/// moved once into the batcher thread and only ever accessed behind
-/// `Arc<Mutex<Engine>>`, so no two threads touch XLA state concurrently.
+/// SAFETY (Send): the engine owns `!Send` XLA literals transitively; each
+/// replica is moved once into its batcher thread and only ever accessed
+/// behind its own `Arc<Mutex<Engine>>`, so no two threads touch one
+/// engine's XLA state concurrently. The only state replicas *share* is
+/// the online `Arc<MemoTier>`, which is `Sync` by construction (per-layer
+/// `RwLock` shards).
 pub struct Engine {
     runner: ModelRunner,
     built: Option<Arc<BuiltDb>>,
-    online: Option<OnlineMemo>,
+    online: Option<Arc<MemoTier>>,
     policy: SelectivePolicy,
     threshold: f32,
     opts: MemoConfig,
+    /// Memoization counters (hits, admissions, dedup skips, stage times).
     pub stats: MemoStats,
+    /// Serving metrics (latency, batch occupancy, online-tier gauges).
     pub metrics: EngineMetrics,
     gather: Option<GatherWindow>,
     seq_len: usize,
@@ -97,23 +89,63 @@ unsafe impl Send for Engine {}
 impl Engine {
     /// Build an engine. `built = None` serves the pure compute baseline —
     /// unless online admission is on, in which case the engine starts cold
-    /// and warms its own database from live traffic.
+    /// and warms its own private tier from live traffic.
     pub fn new(runner: ModelRunner, built: Option<Arc<BuiltDb>>,
                opts: EngineOptions) -> Result<Self> {
-        let layers = runner.config().layers;
         let online = if opts.memo.online_admission
             && opts.memo.level != MemoLevel::Off
         {
-            Some(OnlineMemo {
-                db: AttentionDb::new(runner.config(), opts.seq_len,
-                                     HnswParams::default()),
-                capacity: opts.memo.max_db_entries,
-                policy: AdmissionPolicy::new(
-                    true, opts.memo.admission_min_attempts),
-            })
+            Some(Arc::new(MemoTier::new(
+                runner.config(),
+                opts.seq_len,
+                HnswParams::default(),
+                &opts.memo,
+            )))
         } else {
             None
         };
+        Self::build(runner, built, online, opts)
+    }
+
+    /// Build an engine replica over a *shared* online tier: N replicas
+    /// constructed with clones of one `Arc<MemoTier>` serve one attention
+    /// database — lookups run in parallel (shard read locks), and entries
+    /// admitted by any replica are hits for all of them.
+    pub fn with_shared_tier(runner: ModelRunner, built: Option<Arc<BuiltDb>>,
+                            tier: Arc<MemoTier>,
+                            opts: EngineOptions) -> Result<Self> {
+        // A mismatched tier (e.g. a warm snapshot saved at another seq_len)
+        // would make every payload fetch copy the wrong entry size.
+        let want = runner.config().apm_elems(opts.seq_len);
+        if tier.seq_len() != opts.seq_len || tier.apm_elems() != want
+            || tier.embed_dim() != runner.config().embed_dim
+            || tier.num_layers() != runner.config().layers
+        {
+            return Err(crate::Error::serving(format!(
+                "shared tier shape (layers {}, seq {}, elems {}, dim {}) \
+                 does not match engine (layers {}, seq {}, elems {want}, \
+                 dim {})",
+                tier.num_layers(),
+                tier.seq_len(),
+                tier.apm_elems(),
+                tier.embed_dim(),
+                runner.config().layers,
+                opts.seq_len,
+                runner.config().embed_dim,
+            )));
+        }
+        let online = if opts.memo.level != MemoLevel::Off {
+            Some(tier)
+        } else {
+            None
+        };
+        Self::build(runner, built, online, opts)
+    }
+
+    fn build(runner: ModelRunner, built: Option<Arc<BuiltDb>>,
+             online: Option<Arc<MemoTier>>,
+             opts: EngineOptions) -> Result<Self> {
+        let layers = runner.config().layers;
         let (policy, threshold) = match (&built, opts.memo.level) {
             (Some(b), level) => {
                 let thr = opts
@@ -174,8 +206,9 @@ impl Engine {
         self.built.as_deref()
     }
 
-    /// The serve-time database overlay, when admission is enabled.
-    pub fn online(&self) -> Option<&OnlineMemo> {
+    /// The serve-time attention tier (possibly shared with other engine
+    /// replicas), when online memoization is enabled.
+    pub fn online(&self) -> Option<&Arc<MemoTier>> {
         self.online.as_ref()
     }
 
@@ -207,8 +240,8 @@ impl Engine {
         self.metrics.batch_size.record(n as f64);
         self.metrics.batches += 1;
         self.metrics.requests += n as u64;
-        if let Some(om) = &self.online {
-            self.metrics.online_entries = om.db.total_entries() as u64;
+        if let Some(tier) = &self.online {
+            self.metrics.online_entries = tier.total_entries() as u64;
         }
         Ok(BatchResult { logits, labels, memo_hits, seconds })
     }
@@ -220,18 +253,19 @@ impl Engine {
         let tokens = (n * self.seq_len) as u64;
         self.stats.layers[li].total += n as u64;
 
+        // Cheap Arc clone so the shared tier can be used without borrowing
+        // `self` across the mutable accounting below.
+        let online = self.online.clone();
         let static_ready = self
             .built
             .as_ref()
             .map_or(false, |b| !b.db.layer(li).is_empty());
-        let online_ready = self
-            .online
-            .as_ref()
-            .map_or(false, |o| !o.db.layer(li).is_empty());
-        // Admission gate: is this layer allowed to invest in warming its
-        // online database this batch?
-        let admission_open = self.online.as_ref().map_or(false, |o| {
-            o.policy.should_admit(
+        let online_ready =
+            online.as_ref().map_or(false, |t| !t.is_layer_empty(li));
+        // Admission gate: is this layer allowed to invest in warming the
+        // shared online tier this batch?
+        let admission_open = online.as_ref().map_or(false, |t| {
+            t.should_admit(
                 self.policy.profiles().get(li),
                 self.stats.layers[li].attempts,
                 tokens,
@@ -258,48 +292,62 @@ impl Engine {
             &feats_t.slice0(0, n)?)?;
         self.stats.stages.embedding_ms.record(te.elapsed().as_secs_f64() * 1e3);
 
+        // Per-row two-tier search. Online-tier payloads are copied into
+        // the batch APM immediately, inside the shard's read lock
+        // (`MemoTier::lookup_fetch`): between a bare lookup and a later
+        // fetch another replica could admit/evict in the same shard, so
+        // id-then-fetch is only race-free when fused like this.
         let ts = Instant::now();
-        let mut hits: Vec<(usize, HitSrc)> = Vec::new();
+        // With no online tier, nothing writes into the batch APM until
+        // after the early-return checks below — defer the (multi-MB)
+        // allocation so total-miss/quorum-reverted layers never pay it.
+        let mut apm_data = if online.is_some() {
+            vec![0.0f32; n * elems]
+        } else {
+            Vec::new()
+        };
+        let mut stat_hits: Vec<(usize, ApmId)> = Vec::new();
+        let mut online_rows: Vec<usize> = Vec::new();
         let mut miss_rows: Vec<usize> = Vec::new();
         for i in 0..n {
             let q = feats.vector(i);
-            let mut best: Option<(f32, HitSrc)> = None;
+            let mut best_static: Option<Lookup> = None;
             if let Some(bdb) = self.built.as_ref() {
                 if let Some(hit) =
                     bdb.db.layer(li).lookup(q, self.opts.ef_search)
                 {
                     if hit.similarity >= self.threshold {
-                        best = Some((hit.similarity, HitSrc::Static(hit.id)));
+                        best_static = Some(hit);
                     }
                 }
             }
-            if let Some(om) = self.online.as_ref() {
-                if let Some(hit) =
-                    om.db.layer(li).lookup(q, self.opts.ef_search)
-                {
-                    if hit.similarity >= self.threshold
-                        && best.map_or(true, |(s, _)| hit.similarity > s)
-                    {
-                        best = Some((hit.similarity, HitSrc::Online(hit.id)));
-                    }
-                }
-            }
-            match best {
-                Some((_, src)) => hits.push((i, src)),
-                None => miss_rows.push(i),
+            // The online tier wins the row when it at least matches the
+            // static tier's similarity (ties prefer the warmer entry).
+            let floor =
+                best_static.map_or(self.threshold, |s| s.similarity);
+            let online_hit = online.as_ref().and_then(|t| {
+                t.lookup_fetch(li, q, self.opts.ef_search, floor,
+                               &mut apm_data[i * elems..(i + 1) * elems])
+            });
+            if online_hit.is_some() {
+                online_rows.push(i);
+                memo_hits[i] += 1;
+            } else if let Some(s) = best_static {
+                stat_hits.push((i, s.id));
+                memo_hits[i] += 1;
+            } else {
+                miss_rows.push(i);
             }
         }
+        let hit_count = stat_hits.len() + online_rows.len();
         self.stats.stages.search_ms.record(ts.elapsed().as_secs_f64() * 1e3);
         self.stats.layers[li].attempts += n as u64;
-        self.stats.layers[li].hits += hits.len() as u64;
-        for &(r, _) in &hits {
-            memo_hits[r] += 1;
-        }
+        self.stats.layers[li].hits += hit_count as u64;
 
         // Admit this batch's misses? (Gate approved and there is material.)
         let admit_now = admission_open && !miss_rows.is_empty();
 
-        if hits.is_empty() && !admit_now {
+        if hit_count == 0 && !admit_now {
             // Total miss with nothing to warm: the fused path is strictly
             // cheaper.
             return self.runner.layer_full(&h, li);
@@ -311,18 +359,23 @@ impl Engine {
         // the fused path wins. Revert the optimistic hit accounting (the
         // attempt happened, but its counters must stay consistent:
         // attempts/hits go back, the rows are tallied as `reverted`).
+        // Online reuse marks made during the fetch stand — the entries
+        // *were* matched; keeping them hot is the honest clock signal.
         // While admitting, the split path runs regardless — computing the
         // scores is the warm-up investment the admission gate approved.
-        if !hits.is_empty() && !miss_rows.is_empty() && !admit_now {
+        if hit_count > 0 && !miss_rows.is_empty() && !admit_now {
             let padded_miss = self
                 .runner
                 .fit_batch("attn_scores", seq, miss_rows.len())
                 .unwrap_or(miss_rows.len());
             if padded_miss >= b {
                 self.stats.layers[li].attempts -= n as u64;
-                self.stats.layers[li].hits -= hits.len() as u64;
+                self.stats.layers[li].hits -= hit_count as u64;
                 self.stats.layers[li].reverted += n as u64;
-                for &(r, _) in &hits {
+                for &(r, _) in &stat_hits {
+                    memo_hits[r] -= 1;
+                }
+                for &r in &online_rows {
                     memo_hits[r] -= 1;
                 }
                 return self.runner.layer_full(&h, li);
@@ -343,17 +396,13 @@ impl Engine {
             Some(apm)
         };
 
-        // 3. Assemble the batch APM: DB pages for hits, computed rows for
-        //    misses (Table 4 row 3: mapping time).
+        // 3. Assemble the batch APM: DB pages for static hits, computed
+        //    rows for misses (Table 4 row 3: mapping time); online rows
+        //    were already filled during the locked fetch above.
         let tm = Instant::now();
-        let mut apm_data = vec![0.0f32; n * elems];
-        let stat_hits: Vec<(usize, ApmId)> = hits
-            .iter()
-            .filter_map(|&(r, src)| match src {
-                HitSrc::Static(id) => Some((r, id)),
-                HitSrc::Online(_) => None,
-            })
-            .collect();
+        if apm_data.is_empty() {
+            apm_data = vec![0.0f32; n * elems];
+        }
         if !stat_hits.is_empty() {
             // Mark reuse + fetch static-tier entries.
             let built = self.built.as_ref().unwrap();
@@ -375,18 +424,6 @@ impl Engine {
                 }
             }
         }
-        // Online-tier hits are copy-gathered (the mapping window is bound
-        // to the static arena).
-        if let Some(om) = self.online.as_ref() {
-            let layer_db = om.db.layer(li);
-            for &(row, src) in &hits {
-                if let HitSrc::Online(id) = src {
-                    layer_db.mark_reused(id);
-                    put_row(&mut apm_data, elems, row,
-                            layer_db.arena().get(id)?, 0);
-                }
-            }
-        }
         if let Some(m) = &miss_apm {
             for (k, &row) in miss_rows.iter().enumerate() {
                 put_row(&mut apm_data, elems, row, m.data(), k);
@@ -399,37 +436,29 @@ impl Engine {
         )?;
         self.stats.stages.mapping_ms.record(tm.elapsed().as_secs_f64() * 1e3);
 
-        // 3b. Admission — after assembly, so an eviction can never
-        // invalidate an online hit whose payload this batch just gathered.
-        // At most `capacity` admissions per batch: beyond that the clock
-        // would evict entries admitted moments earlier in the same loop,
-        // wasting every earlier insert.
+        // 3b. Admission — after assembly, so this batch's gathered
+        // payloads are complete before any eviction churn. One write lock
+        // per layer shard for the whole batch; near-identical rows are
+        // deduplicated inside `admit_batch`.
         if admit_now {
-            if let (Some(om), Some(m)) =
-                (self.online.as_mut(), miss_apm.as_ref())
+            if let (Some(tier), Some(m)) = (online.as_ref(), miss_apm.as_ref())
             {
-                let cap = om.capacity;
-                let quota = if cap == 0 {
-                    miss_rows.len()
-                } else {
-                    cap.min(miss_rows.len())
-                };
-                let ldb = om.db.layer_mut(li);
-                let mut admitted = 0u64;
-                let mut evicted = 0u64;
-                for (k, &row) in miss_rows.iter().enumerate().take(quota) {
-                    let out = ldb.admit(
-                        feats.vector(row),
-                        &m.data()[k * elems..(k + 1) * elems],
-                        cap,
-                    )?;
-                    admitted += 1;
-                    evicted += out.evicted.len() as u64;
-                }
-                self.stats.layers[li].admitted += admitted;
-                self.stats.layers[li].evicted += evicted;
-                self.metrics.admissions += admitted;
-                self.metrics.evictions += evicted;
+                let rows: Vec<(&[f32], &[f32])> = miss_rows
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &row)| {
+                        (feats.vector(row),
+                         &m.data()[k * elems..(k + 1) * elems])
+                    })
+                    .collect();
+                let out = tier.admit_batch(li, &rows, self.threshold,
+                                           self.opts.ef_search)?;
+                self.stats.layers[li].admitted += out.admitted;
+                self.stats.layers[li].evicted += out.evicted;
+                self.stats.layers[li].deduped += out.deduped;
+                self.metrics.admissions += out.admitted;
+                self.metrics.evictions += out.evicted;
+                self.metrics.dedup_skips += out.deduped;
             }
         }
 

@@ -4,9 +4,10 @@
 use crate::util::stats::Summary;
 use std::time::Instant;
 
-/// Aggregated serving metrics. Single-writer (the batcher thread); readers
-/// take snapshots through the engine's lock.
-#[derive(Debug)]
+/// Aggregated serving metrics. Single-writer (each replica's batcher
+/// thread); readers take snapshots through the replica's lock and can
+/// [`EngineMetrics::absorb`] several replicas into one fleet view.
+#[derive(Debug, Clone)]
 pub struct EngineMetrics {
     pub started: Instant,
     pub requests: u64,
@@ -16,6 +17,8 @@ pub struct EngineMetrics {
     pub admissions: u64,
     /// Online-database evictions forced by the capacity budget.
     pub evictions: u64,
+    /// Miss rows skipped by intra-batch dedup on the admission path.
+    pub dedup_skips: u64,
     /// Live entries across the online database's layers (occupancy gauge).
     pub online_entries: u64,
     pub request_latency_ms: Summary,
@@ -35,6 +38,7 @@ impl Default for EngineMetrics {
             rejected: 0,
             admissions: 0,
             evictions: 0,
+            dedup_skips: 0,
             online_entries: 0,
             request_latency_ms: Summary::new(),
             queue_wait_ms: Summary::new(),
@@ -65,7 +69,7 @@ impl EngineMetrics {
         format!(
             "requests={} batches={} rejected={} rps={:.1} \
              lat(ms) p50={:.1} p99={:.1} mean_batch={:.1} compute_ms p50={:.1} \
-             online(admit={} evict={} entries={})",
+             online(admit={} evict={} dedup={} entries={})",
             self.requests,
             self.batches,
             self.rejected,
@@ -76,8 +80,30 @@ impl EngineMetrics {
             self.batch_compute_ms.p50(),
             self.admissions,
             self.evictions,
+            self.dedup_skips,
             self.online_entries,
         )
+    }
+
+    /// Fold another replica's metrics into this one: counters add,
+    /// latency summaries merge, the start time takes the earliest (so
+    /// fleet throughput divides by the true serving window), and the
+    /// shared-tier occupancy gauge takes the max (every replica reports
+    /// the same tier).
+    pub fn absorb(&mut self, other: &EngineMetrics) {
+        self.started = self.started.min(other.started);
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.rejected += other.rejected;
+        self.admissions += other.admissions;
+        self.evictions += other.evictions;
+        self.dedup_skips += other.dedup_skips;
+        self.online_entries = self.online_entries.max(other.online_entries);
+        self.request_latency_ms.merge(&other.request_latency_ms);
+        self.queue_wait_ms.merge(&other.queue_wait_ms);
+        self.batch_size.merge(&other.batch_size);
+        self.batch_compute_ms.merge(&other.batch_compute_ms);
+        self.coordinator_ms.merge(&other.coordinator_ms);
     }
 }
 
@@ -92,5 +118,23 @@ mod tests {
         m.request_latency_ms.record(4.0);
         let r = m.report();
         assert!(r.contains("requests=7"), "{r}");
+    }
+
+    #[test]
+    fn absorb_aggregates_replicas() {
+        let mut a = EngineMetrics::new();
+        a.requests = 3;
+        a.dedup_skips = 1;
+        a.online_entries = 10;
+        a.request_latency_ms.record(1.0);
+        let mut b = EngineMetrics::new();
+        b.requests = 4;
+        b.online_entries = 10;
+        b.request_latency_ms.record(3.0);
+        a.absorb(&b);
+        assert_eq!(a.requests, 7);
+        assert_eq!(a.dedup_skips, 1);
+        assert_eq!(a.online_entries, 10, "shared gauge must not double");
+        assert_eq!(a.request_latency_ms.count(), 2);
     }
 }

@@ -1,5 +1,7 @@
-//! Bounded MPSC queue with blocking pop and timeout — the admission-control
-//! point of the serving path (backpressure beyond `depth`).
+//! Bounded MPMC queue with blocking pop and timeout — the admission-control
+//! point of the serving path (backpressure beyond `depth`). Producers are
+//! the connection handlers; consumers are the per-replica batcher threads
+//! (every operation runs under one mutex, so any number of each is safe).
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};

@@ -8,7 +8,12 @@
 //!   server → `ERR <reason>` / `STATS <report>` / `BYE`
 //!
 //! Connections are handled by a small thread pool; handlers tokenize and
-//! enqueue, the batcher thread owns the engine.
+//! enqueue. The server runs one batcher thread per engine *replica*, all
+//! pulling from the shared request queue. Replicas are expected to share
+//! one online `MemoTier` (`Engine::with_shared_tier`): each replica's
+//! forward pass runs behind its own mutex, while tier lookups from all
+//! replicas proceed in parallel on the shards' read locks — there is no
+//! global engine mutex on the lookup path. `STATS` aggregates the fleet.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -20,11 +25,13 @@ use crate::config::ServingConfig;
 use crate::data::tokenizer::Vocab;
 use crate::serving::batcher::Batcher;
 use crate::serving::engine::Engine;
+use crate::serving::metrics::EngineMetrics;
 use crate::serving::queue::BoundedQueue;
 use crate::serving::request::Request;
-use crate::Result;
+use crate::{Error, Result};
 
-/// A running server: listener thread + batcher thread + handler pool.
+/// A running server: listener thread + per-replica batcher threads +
+/// handler pool.
 pub struct Server {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
@@ -33,35 +40,59 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind and start serving. Returns once the listener is live.
-    pub fn start(engine: Engine, vocab: Arc<Vocab>,
+    /// Bind and start serving with one batcher thread per engine replica.
+    /// Returns once the listener is live. Pass a single-element vector for
+    /// the classic one-engine server.
+    pub fn start(engines: Vec<Engine>, vocab: Arc<Vocab>,
                  cfg: ServingConfig) -> Result<Server> {
+        if engines.is_empty() {
+            return Err(Error::serving(
+                "server needs at least one engine replica",
+            ));
+        }
+        if engines.len() != cfg.replicas {
+            return Err(Error::serving(format!(
+                "cfg.replicas = {} but {} engines were supplied",
+                cfg.replicas,
+                engines.len()
+            )));
+        }
         let listener = TcpListener::bind(&cfg.bind)?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let queue: Arc<BoundedQueue<Request>> =
             Arc::new(BoundedQueue::new(cfg.queue_depth));
-        let engine = Arc::new(Mutex::new(engine));
+        let engines: Arc<Vec<Arc<Mutex<Engine>>>> = Arc::new(
+            engines
+                .into_iter()
+                .map(|e| Arc::new(Mutex::new(e)))
+                .collect(),
+        );
         let stop = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();
 
-        // Batcher thread.
-        {
-            let batcher =
-                Batcher::new(queue.clone(), engine.clone(), cfg.clone());
+        // One batcher thread per replica, all competing for the queue.
+        for (replica, engine) in engines.iter().enumerate() {
+            let batcher = Batcher::new(queue.clone(), engine.clone(),
+                                       cfg.clone(), replica);
             threads.push(
                 std::thread::Builder::new()
-                    .name("attmemo-batcher".into())
+                    .name(format!("attmemo-batcher-{replica}"))
                     .spawn(move || batcher.run())
                     .expect("spawn batcher"),
             );
         }
 
+        // Rejections are counted lock-free: the overload path must never
+        // wait on an engine mutex held across a forward pass.
+        let rejected = Arc::new(AtomicU64::new(0));
+
         // Accept loop.
         {
             let queue = queue.clone();
             let stop2 = stop.clone();
-            let engine2 = engine.clone();
+            let engines2 = engines.clone();
+            let rejected2 = rejected.clone();
             let seq_len = cfg.seq_len;
             threads.push(
                 std::thread::Builder::new()
@@ -78,11 +109,13 @@ impl Server {
                                 Ok((stream, _)) => {
                                     let q = queue.clone();
                                     let v = vocab.clone();
-                                    let e = engine2.clone();
+                                    let e = engines2.clone();
+                                    let rej = rejected2.clone();
                                     let ids = next_id.clone();
                                     handlers.push(std::thread::spawn(move || {
                                         let _ = handle_conn(
-                                            stream, q, v, e, ids, seq_len,
+                                            stream, q, v, e, rej, ids,
+                                            seq_len,
                                         );
                                     }));
                                 }
@@ -123,8 +156,9 @@ impl Server {
 }
 
 fn handle_conn(stream: TcpStream, queue: Arc<BoundedQueue<Request>>,
-               vocab: Arc<Vocab>, engine: Arc<Mutex<Engine>>,
-               next_id: Arc<AtomicU64>, seq_len: usize) -> Result<()> {
+               vocab: Arc<Vocab>, engines: Arc<Vec<Arc<Mutex<Engine>>>>,
+               rejected: Arc<AtomicU64>, next_id: Arc<AtomicU64>,
+               seq_len: usize) -> Result<()> {
     stream.set_nodelay(true)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
@@ -141,7 +175,7 @@ fn handle_conn(stream: TcpStream, queue: Arc<BoundedQueue<Request>>,
                 Request::new(next_id.fetch_add(1, Ordering::SeqCst), ids);
             let t0 = std::time::Instant::now();
             if queue.try_push(req).is_err() {
-                engine.lock().unwrap().metrics.rejected += 1;
+                rejected.fetch_add(1, Ordering::Relaxed);
                 writeln!(out, "ERR overloaded")?;
                 continue;
             }
@@ -156,8 +190,13 @@ fn handle_conn(stream: TcpStream, queue: Arc<BoundedQueue<Request>>,
                 Err(_) => writeln!(out, "ERR timeout")?,
             }
         } else if msg == "STATS" {
-            let report = engine.lock().unwrap().metrics.report();
-            writeln!(out, "STATS {report}")?;
+            // Aggregate the replica fleet into one report.
+            let mut agg = EngineMetrics::new();
+            for engine in engines.iter() {
+                agg.absorb(&engine.lock().unwrap().metrics);
+            }
+            agg.rejected += rejected.load(Ordering::Relaxed);
+            writeln!(out, "STATS {}", agg.report())?;
         } else if msg == "QUIT" {
             writeln!(out, "BYE")?;
             return Ok(());

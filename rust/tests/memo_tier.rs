@@ -1,0 +1,347 @@
+//! MemoTier concurrency + persistence tests.
+//!
+//! The hermetic tests exercise the shared tier directly (no artifacts, no
+//! PJRT): reader threads look up concurrently with an admitter per layer,
+//! proving the shard `RwLock` scheme loses no hits and never overflows
+//! the capacity budget; a save→load round trip proves the warm hit rate
+//! survives a "restart". The final tests drive real engine replicas and
+//! skip without artifacts, like every runtime-gated test.
+
+use std::sync::Arc;
+
+use attmemo::config::{MemoConfig, MemoLevel, ModelConfig};
+use attmemo::memo::index::HnswParams;
+use attmemo::memo::MemoTier;
+use attmemo::util::Pcg32;
+
+const LAYERS: usize = 2;
+const SEQ: usize = 16;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        family: "bert".into(),
+        vocab_size: 256,
+        hidden: 32,
+        layers: LAYERS,
+        heads: 2,
+        ffn: 64,
+        max_len: 16,
+        num_classes: 2,
+        rel_pos_buckets: 8,
+        embed_dim: 16,
+        embed_hidden: 32,
+        embed_segments: 4,
+        causal: false,
+    }
+}
+
+fn memo(capacity: usize) -> MemoConfig {
+    MemoConfig {
+        level: MemoLevel::Aggressive,
+        online_admission: true,
+        max_db_entries: capacity,
+        admission_min_attempts: 0,
+        ..MemoConfig::default()
+    }
+}
+
+fn normalize(v: &mut [f32]) {
+    let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+    v.iter_mut().for_each(|x| *x /= n);
+}
+
+/// `k` unit-vector cluster centres.
+fn centres(seed: u64, k: usize, dim: usize) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..k)
+        .map(|_| {
+            let mut v: Vec<f32> =
+                (0..dim).map(|_| rng.next_gaussian()).collect();
+            normalize(&mut v);
+            v
+        })
+        .collect()
+}
+
+fn near(rng: &mut Pcg32, centre: &[f32], noise: f32) -> Vec<f32> {
+    let mut v: Vec<f32> = centre
+        .iter()
+        .map(|&c| c + noise * rng.next_gaussian())
+        .collect();
+    normalize(&mut v);
+    v
+}
+
+/// N reader threads + 1 admitter thread per layer, all against one tier:
+/// readers run on the shard read locks while admissions churn the write
+/// side. Afterwards, every cluster the admitters warmed must be a hit
+/// (no lost hits) and occupancy must respect the budget throughout.
+#[test]
+fn concurrent_readers_and_admitters_lose_no_hits() {
+    const CLUSTERS: usize = 16;
+    const CAPACITY: usize = 32; // comfortably above the working set
+    const READERS_PER_LAYER: usize = 3;
+    const THRESHOLD: f32 = 0.8;
+
+    let c = cfg();
+    let elems = c.apm_elems(SEQ);
+    let tier = Arc::new(MemoTier::new(&c, SEQ, HnswParams::default(),
+                                      &memo(CAPACITY)));
+    let cents = Arc::new(centres(42, CLUSTERS, c.embed_dim));
+
+    let mut threads = Vec::new();
+    for li in 0..LAYERS {
+        // One admitter per layer: feeds clustered rows in small batches.
+        {
+            let tier = tier.clone();
+            let cents = cents.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut rng = Pcg32::seeded(100 + li as u64);
+                for round in 0..12 {
+                    let feats: Vec<Vec<f32>> = (0..CLUSTERS)
+                        .map(|k| near(&mut rng, &cents[k], 0.02))
+                        .collect();
+                    let apm = vec![round as f32; elems];
+                    let rows: Vec<(&[f32], &[f32])> = feats
+                        .iter()
+                        .map(|f| (f.as_slice(), apm.as_slice()))
+                        .collect();
+                    tier.admit_batch(li, &rows, THRESHOLD, 48).unwrap();
+                    assert!(tier.layer_len(li) <= CAPACITY,
+                            "occupancy exceeded budget mid-run");
+                }
+            }));
+        }
+        // Reader threads: concurrent lookups + fetches on the same shard.
+        for r in 0..READERS_PER_LAYER {
+            let tier = tier.clone();
+            let cents = cents.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut rng = Pcg32::seeded(1000 + (li * 10 + r) as u64);
+                let mut dst = vec![0.0f32; elems];
+                for i in 0..400 {
+                    let q = near(&mut rng, &cents[i % CLUSTERS], 0.02);
+                    // Hit or miss both fine mid-churn; what matters is
+                    // that fetched payloads are always internally
+                    // consistent (epoch-checked under the read lock).
+                    let _ = tier.lookup_fetch(li, &q, 48, THRESHOLD,
+                                              &mut dst);
+                }
+            }));
+        }
+    }
+    for t in threads {
+        t.join().expect("worker thread");
+    }
+
+    assert!(tier.admissions() > 0, "admitters must have stored entries");
+    let mut dst = vec![0.0f32; elems];
+    for li in 0..LAYERS {
+        assert!(tier.layer_len(li) <= CAPACITY,
+                "layer {li} over capacity");
+        assert!(tier.layer_len(li) > 0, "layer {li} never warmed");
+        // No lost hits: with capacity above the working set, every centre
+        // the admitter fed must now resolve on a fresh lookup.
+        let mut rng = Pcg32::seeded(7);
+        for (k, centre) in cents.iter().enumerate() {
+            let q = near(&mut rng, centre, 0.01);
+            let hit = tier.lookup_fetch(li, &q, 64, THRESHOLD, &mut dst);
+            assert!(hit.is_some(),
+                    "layer {li} lost cluster {k} despite spare capacity");
+        }
+        // Every live entry is self-consistent after the churn.
+        tier.read_layer(li, |layer| {
+            for id in layer.live_ids() {
+                layer.arena().get(id).unwrap();
+                let v = layer.index_vector(id).to_vec();
+                let hit = layer.lookup(&v, 64).unwrap();
+                assert_eq!(hit.id, id, "layer {li} index/arena misaligned");
+            }
+        });
+    }
+}
+
+/// Warm-state persistence: hit rate immediately after a load must be at
+/// least the hit rate at save time (the acceptance criterion's
+/// save→restart→load run starting warm instead of at 0%).
+#[test]
+fn warm_state_survives_restart_at_full_hit_rate() {
+    const CLUSTERS: usize = 8;
+    const THRESHOLD: f32 = 0.8;
+    let c = cfg();
+    let elems = c.apm_elems(SEQ);
+    let m = memo(64);
+    let tier = MemoTier::new(&c, SEQ, HnswParams::default(), &m);
+    let cents = centres(5, CLUSTERS, c.embed_dim);
+
+    // Warm from clustered traffic (the serve loop at the memo layer).
+    let mut rng = Pcg32::seeded(11);
+    let mut dst = vec![0.0f32; elems];
+    for li in 0..LAYERS {
+        for i in 0..128 {
+            let q = near(&mut rng, &cents[i % CLUSTERS], 0.02);
+            if tier.lookup_fetch(li, &q, 48, THRESHOLD, &mut dst).is_none() {
+                let apm = vec![i as f32; elems];
+                tier.admit_batch(li, &[(q.as_slice(), apm.as_slice())],
+                                 THRESHOLD, 48)
+                    .unwrap();
+            }
+        }
+    }
+
+    // Deterministic probe set → hit rate at save time.
+    let probes: Vec<(usize, Vec<f32>)> = {
+        let mut rng = Pcg32::seeded(99);
+        (0..64)
+            .map(|i| (i % LAYERS, near(&mut rng, &cents[i % CLUSTERS], 0.02)))
+            .collect()
+    };
+    let rate = |t: &MemoTier| {
+        let mut dst = vec![0.0f32; elems];
+        let hits = probes
+            .iter()
+            .filter(|(li, q)| {
+                t.lookup_fetch(*li, q, 48, THRESHOLD, &mut dst).is_some()
+            })
+            .count();
+        hits as f64 / probes.len() as f64
+    };
+    let rate_at_save = rate(&tier);
+    assert!(rate_at_save > 0.9, "tier failed to warm: {rate_at_save}");
+
+    let dir = std::env::temp_dir().join("attmemo_memo_tier");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tier.atwm");
+    attmemo::memo::persist::save_warm(&tier, THRESHOLD, &path).unwrap();
+    drop(tier); // the "restart"
+
+    let (reloaded, thr) =
+        attmemo::memo::persist::load_warm(&path, &c, &m,
+                                          HnswParams::default())
+            .unwrap();
+    assert_eq!(thr, THRESHOLD);
+    let rate_after_load = rate(&reloaded);
+    assert!(
+        rate_after_load >= rate_at_save,
+        "reload lost warmth: {rate_after_load} < {rate_at_save}"
+    );
+}
+
+/// Two real engine replicas over one shared tier (skips without
+/// artifacts): replica B must start hot from entries replica A admitted,
+/// and both replicas must be able to infer concurrently.
+#[test]
+fn engine_replicas_share_warm_state_with_artifacts() {
+    use attmemo::bench_support::workload;
+
+    let Ok(rt) = workload::open_runtime() else {
+        eprintln!("SKIP (no artifacts)");
+        return;
+    };
+    let seq_len = rt.artifacts().serving_seq_len;
+    let memo = MemoConfig {
+        level: MemoLevel::Aggressive,
+        selective: false,
+        online_admission: true,
+        max_db_entries: 64,
+        admission_min_attempts: 0,
+        ..MemoConfig::default()
+    };
+    let tier = workload::online_tier(&rt, "bert", seq_len, &memo).unwrap();
+    let mut a = workload::engine_with_tier(&rt, "bert", seq_len,
+                                           memo.clone(), None, tier.clone())
+        .unwrap();
+    let (ids, _) = workload::test_workload(&rt, "bert", seq_len, 8).unwrap();
+
+    // Replica A warms the shared tier.
+    let first = a.infer(&ids).unwrap();
+    assert!(first.memo_hits.iter().all(|&h| h == 0), "cold start");
+    assert!(tier.admissions() > 0, "replica A must admit");
+
+    // A brand-new replica B hits immediately — the warmth lives in the
+    // tier, not in any engine.
+    let mut b = workload::engine_with_tier(&rt, "bert", seq_len,
+                                           memo.clone(), None, tier.clone())
+        .unwrap();
+    let warm = b.infer(&ids).unwrap();
+    let warm_hits: u32 = warm.memo_hits.iter().sum();
+    assert!(warm_hits > 0, "replica B saw none of replica A's warm-up");
+
+    // Both replicas infer concurrently against the shared tier: shard
+    // read locks serve parallel lookups; no engine-level mutex involved.
+    let ids2 = ids.clone();
+    let ta = std::thread::spawn(move || {
+        let mut hits = 0u32;
+        for _ in 0..3 {
+            hits += a.infer(&ids2).unwrap().memo_hits.iter().sum::<u32>();
+        }
+        hits
+    });
+    let ids3 = ids.clone();
+    let tb = std::thread::spawn(move || {
+        let mut hits = 0u32;
+        for _ in 0..3 {
+            hits += b.infer(&ids3).unwrap().memo_hits.iter().sum::<u32>();
+        }
+        hits
+    });
+    let ha = ta.join().expect("replica A thread");
+    let hb = tb.join().expect("replica B thread");
+    assert!(ha > 0 && hb > 0, "both replicas must hit concurrently");
+    for li in 0..tier.num_layers() {
+        assert!(tier.layer_len(li) <= 64, "layer {li} over budget");
+    }
+}
+
+/// Real-engine warm restart (skips without artifacts): save the warmed
+/// tier, rebuild everything from the snapshot, and verify the very first
+/// batch hits at least as much as the pre-restart warm pass.
+#[test]
+fn engine_restart_starts_warm_with_artifacts() {
+    use attmemo::bench_support::workload;
+
+    let Ok(rt) = workload::open_runtime() else {
+        eprintln!("SKIP (no artifacts)");
+        return;
+    };
+    let seq_len = rt.artifacts().serving_seq_len;
+    let memo = MemoConfig {
+        level: MemoLevel::Aggressive,
+        selective: false,
+        online_admission: true,
+        max_db_entries: 64,
+        admission_min_attempts: 0,
+        ..MemoConfig::default()
+    };
+    let tier = workload::online_tier(&rt, "bert", seq_len, &memo).unwrap();
+    let mut engine = workload::engine_with_tier(
+        &rt, "bert", seq_len, memo.clone(), None, tier.clone()).unwrap();
+    let (ids, _) = workload::test_workload(&rt, "bert", seq_len, 8).unwrap();
+
+    engine.infer(&ids).unwrap(); // cold pass: admit
+    let warm = engine.infer(&ids).unwrap(); // warm pass: hit
+    let warm_hits: u32 = warm.memo_hits.iter().sum();
+    assert!(warm_hits > 0, "engine never warmed");
+
+    let dir = std::env::temp_dir().join("attmemo_memo_tier_engine");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("engine.atwm");
+    attmemo::memo::persist::save_warm(&tier, engine.threshold(), &path)
+        .unwrap();
+    drop(engine);
+    drop(tier); // the restart: all serving state gone
+
+    let fam_cfg = rt.artifacts().family("bert").unwrap().config.clone();
+    let (reloaded, _) = attmemo::memo::persist::load_warm(
+        &path, &fam_cfg, &memo, HnswParams::default()).unwrap();
+    let reloaded = Arc::new(reloaded);
+    let mut engine2 = workload::engine_with_tier(
+        &rt, "bert", seq_len, memo, None, reloaded.clone()).unwrap();
+    let restarted = engine2.infer(&ids).unwrap();
+    let restart_hits: u32 = restarted.memo_hits.iter().sum();
+    assert!(
+        restart_hits >= warm_hits,
+        "restart lost warmth: first batch hit {restart_hits} layers vs \
+         {warm_hits} before the restart"
+    );
+}

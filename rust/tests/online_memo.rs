@@ -181,9 +181,9 @@ fn engine_cold_start_warms_with_artifacts() {
     let second = engine.infer(&ids).unwrap();
     let hits: u32 = second.memo_hits.iter().sum();
     assert!(hits > 0, "no hits after warm-up");
-    let om = engine.online().unwrap();
-    for li in 0..om.db.num_layers() {
-        assert!(om.db.layer(li).len() <= capacity,
+    let tier = engine.online().unwrap();
+    for li in 0..tier.num_layers() {
+        assert!(tier.layer_len(li) <= capacity,
                 "layer {li} over capacity");
     }
 }

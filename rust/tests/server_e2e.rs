@@ -1,10 +1,10 @@
 //! End-to-end server test: real TCP server + dynamic batcher + memoizing
-//! engine, driven by concurrent clients. Skips without artifacts.
+//! engine(s), driven by concurrent clients. Skips without artifacts.
 
 use std::sync::Arc;
 
 use attmemo::bench_support::workload;
-use attmemo::config::{MemoLevel, ServingConfig};
+use attmemo::config::{MemoConfig, MemoLevel, ServingConfig};
 use attmemo::data::tokenizer::Vocab;
 use attmemo::serving::server::{Client, Server};
 
@@ -26,7 +26,8 @@ fn server_round_trip_with_concurrent_clients() {
     cfg.seq_len = seq_len;
     cfg.max_batch = 4;
     cfg.max_wait_ms = 10;
-    let server = Server::start(engine, vocab, cfg).expect("server start");
+    let server =
+        Server::start(vec![engine], vocab, cfg).expect("server start");
     let addr = server.addr.to_string();
 
     let mut handles = Vec::new();
@@ -77,7 +78,7 @@ fn server_sheds_load_when_queue_full() {
     cfg.seq_len = seq_len;
     cfg.queue_depth = 2; // tiny queue: floods must be rejected, not hang
     cfg.max_batch = 2;
-    let server = Server::start(engine, vocab, cfg).unwrap();
+    let server = Server::start(vec![engine], vocab, cfg).unwrap();
     let addr = server.addr.to_string();
 
     // Sequential requests always succeed (queue never overflows).
@@ -86,5 +87,85 @@ fn server_sheds_load_when_queue_full() {
         client.infer("the film was great").unwrap();
     }
     client.quit().unwrap();
+    server.shutdown();
+}
+
+/// Two engine replicas behind one server, sharing one online `MemoTier`:
+/// both batcher threads serve from the shared queue, lookups hit the
+/// tier's shard read locks in parallel (no global engine mutex on the
+/// lookup path), and warm-ups made by either replica count for both.
+#[test]
+fn two_replicas_share_one_memo_tier() {
+    let Ok(rt) = workload::open_runtime() else {
+        eprintln!("SKIP (no artifacts)");
+        return;
+    };
+    let seq_len = rt.artifacts().serving_seq_len;
+    let memo = MemoConfig {
+        level: MemoLevel::Aggressive,
+        selective: false,
+        online_admission: true,
+        max_db_entries: 128,
+        admission_min_attempts: 0,
+        ..MemoConfig::default()
+    };
+    let tier = workload::online_tier(&rt, "bert", seq_len, &memo).unwrap();
+    let engines = (0..2)
+        .map(|_| {
+            workload::engine_with_tier(&rt, "bert", seq_len, memo.clone(),
+                                       None, tier.clone())
+                .expect("replica engine")
+        })
+        .collect::<Vec<_>>();
+    let vocab = Arc::new(
+        Vocab::load(&rt.artifacts().root().join("vocab.json")).unwrap());
+    let mut cfg = ServingConfig::default();
+    cfg.bind = "127.0.0.1:0".into();
+    cfg.seq_len = seq_len;
+    cfg.max_batch = 2;
+    cfg.max_wait_ms = 5;
+    cfg.replicas = 2;
+    let server = Server::start(engines, vocab, cfg).expect("server start");
+    let addr = server.addr.to_string();
+
+    // Concurrent clients repeating a tiny phrase set: the first pass
+    // misses and admits; repeats must hit the tier regardless of which
+    // replica serves them.
+    let mut handles = Vec::new();
+    for c in 0..4 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("connect");
+            let mut hits = 0u64;
+            for i in 0..8 {
+                let text = if (c + i) % 2 == 0 {
+                    "the film was wonderful and superb"
+                } else {
+                    "a dreadful boring lifeless plot"
+                };
+                let (_, memo_hits, _) = client.infer(text).expect("infer");
+                hits += memo_hits as u64;
+            }
+            client.quit().expect("quit");
+            hits
+        }));
+    }
+    let total_hits: u64 =
+        handles.into_iter().map(|h| h.join().expect("client")).sum();
+    assert!(total_hits > 0,
+            "replicas sharing one tier must hit after warm-up");
+    assert!(tier.total_entries() > 0, "tier warmed from traffic");
+    assert!(tier.admissions() > 0);
+    for li in 0..tier.num_layers() {
+        assert!(tier.layer_len(li) <= 128, "layer {li} over budget");
+    }
+
+    // The aggregate STATS line reports the fleet.
+    let mut c = Client::connect(&addr).unwrap();
+    let stats = c.stats().unwrap();
+    assert!(stats.starts_with("STATS"), "{stats}");
+    assert!(stats.contains("requests=32"),
+            "fleet STATS must sum both replicas: {stats}");
+    c.quit().unwrap();
     server.shutdown();
 }
