@@ -82,10 +82,12 @@ fn serve_once(level: MemoLevel, requests: usize, clients: usize)
     let engine = workload::engine_with_db(
         &rt, "bert", seq_len, level, db_seqs, true)?;
 
-    let mut cfg = ServingConfig::default();
-    cfg.seq_len = seq_len;
-    cfg.bind = "127.0.0.1:0".into(); // ephemeral port
-    cfg.max_batch = 8;
+    let cfg = ServingConfig {
+        seq_len,
+        bind: "127.0.0.1:0".into(), // ephemeral port
+        max_batch: 8,
+        ..ServingConfig::default()
+    };
     let server = Server::start(vec![engine], vocab.clone(), cfg)?;
     let addr = server.addr.to_string();
 

@@ -213,6 +213,172 @@ fn shared_tier_section(table: &mut TableWriter) {
     }
 }
 
+/// Outcome of one affinity A/B arm over the full run.
+struct AbOutcome {
+    /// dedup_skips / rows offered to admission (the affinity payoff).
+    dedup_yield: f64,
+    /// Hit rate over the warm epochs (every epoch after the first).
+    steady_hit_rate: f64,
+    offered: u64,
+    dedup: u64,
+    steals: u64,
+}
+
+/// One A/B arm: a clustered token+embedding workload pushed through a
+/// real `AffinityRouter` (`buckets = 1` ⇒ the no-affinity baseline),
+/// drained by two alternating replica batchers via `form_batch`, each
+/// batch looked up against — and its misses admitted into — one shared
+/// `MemoTier` with intra-batch dedup on.
+fn run_affinity_arm(buckets: usize, table: &mut TableWriter) -> AbOutcome {
+    use attmemo::config::MemoConfig;
+    use attmemo::memo::MemoTier;
+    use attmemo::serving::affinity::{bucket_for, AffinityRouter};
+    use attmemo::serving::batcher::form_batch;
+    use std::time::Duration;
+
+    const CLUSTERS: usize = 8;
+    const PER_CLUSTER: usize = 16; // requests per cluster per epoch
+    const EPOCHS: usize = 4;
+    const REPLICAS: usize = 2;
+    const MAX_BATCH: usize = 16;
+    const THRESHOLD: f32 = 0.8;
+    // Tight jitter so every same-cluster pair clears THRESHOLD: one stored
+    // row per cluster serves the whole cluster, making the steady state
+    // identical across arms — the A/B then isolates the dedup yield.
+    const NOISE: f32 = 0.005;
+
+    let cfg = sim_cfg();
+    let seq = 32usize;
+    let elems = cfg.apm_elems(seq);
+    let memo = MemoConfig {
+        online_admission: true,
+        max_db_entries: 0,
+        admission_min_attempts: 0,
+        intra_batch_dedup: true,
+        ..MemoConfig::default()
+    };
+    let tier = MemoTier::new(&cfg, seq, Default::default(), &memo);
+    let router: AffinityRouter<(usize, Vec<f32>)> =
+        AffinityRouter::new(buckets, REPLICAS, 8192);
+
+    let mut rng = Pcg32::seeded(61);
+    let centres: Vec<Vec<f32>> =
+        (0..CLUSTERS).map(|_| unit_vec(&mut rng, cfg.embed_dim)).collect();
+    // Each cluster's token prefix: what the signature sketches on.
+    let prefixes: Vec<Vec<i32>> = (0..CLUSTERS)
+        .map(|_| (0..seq).map(|_| 4 + (rng.next_u32() % 250) as i32).collect())
+        .collect();
+
+    let apm = vec![1.0f32; elems];
+    let (mut offered, mut dedup) = (0u64, 0u64);
+    let (mut steady_hits, mut steady_attempts) = (0u64, 0u64);
+    for epoch in 0..EPOCHS {
+        // Arrival order interleaves the clusters, so the no-affinity
+        // baseline forms mixed batches (the scatter the router fixes).
+        for _wave in 0..PER_CLUSTER {
+            for c in 0..CLUSTERS {
+                let mut ids = prefixes[c].clone();
+                let last = ids.len() - 1;
+                ids[last] = 4 + (rng.next_u32() % 250) as i32; // tail edit
+                let mut f = centres[c].clone();
+                for x in f.iter_mut() {
+                    *x += NOISE * rng.next_gaussian();
+                }
+                normalize(&mut f);
+                router.push(bucket_for(&ids, buckets), (c, f)).unwrap();
+            }
+        }
+        let (mut ep_hits, mut ep_attempts) = (0u64, 0u64);
+        let (mut ep_offered, mut ep_dedup) = (0u64, 0u64);
+        while !router.is_empty() {
+            for replica in 0..REPLICAS {
+                let batch = form_batch(&router, replica, MAX_BATCH,
+                                       Duration::from_millis(1),
+                                       Duration::from_millis(1));
+                if batch.is_empty() {
+                    continue;
+                }
+                let mut buf = vec![0.0f32; elems];
+                let mut miss: Vec<usize> = Vec::new();
+                for (k, (_, f)) in batch.iter().enumerate() {
+                    ep_attempts += 1;
+                    if tier.lookup_fetch(0, f, 48, THRESHOLD, &mut buf)
+                        .is_some()
+                    {
+                        ep_hits += 1;
+                    } else {
+                        miss.push(k);
+                    }
+                }
+                if !miss.is_empty() {
+                    ep_offered += miss.len() as u64;
+                    let rows: Vec<(&[f32], &[f32])> = miss
+                        .iter()
+                        .map(|&k| (batch[k].1.as_slice(), apm.as_slice()))
+                        .collect();
+                    let out =
+                        tier.admit_batch(0, &rows, THRESHOLD, 48).unwrap();
+                    ep_dedup += out.deduped;
+                }
+            }
+        }
+        offered += ep_offered;
+        dedup += ep_dedup;
+        if epoch > 0 {
+            steady_hits += ep_hits;
+            steady_attempts += ep_attempts;
+        }
+        table.row(&[
+            if buckets > 1 { "on" } else { "off" }.to_string(),
+            buckets.to_string(),
+            epoch.to_string(),
+            format!("{:.3}", ep_hits as f64 / ep_attempts.max(1) as f64),
+            ep_offered.to_string(),
+            ep_dedup.to_string(),
+            format!("{:.3}",
+                    ep_dedup as f64 / ep_offered.max(1) as f64),
+            router.steals().to_string(),
+        ]);
+    }
+    AbOutcome {
+        dedup_yield: dedup as f64 / offered.max(1) as f64,
+        steady_hit_rate: steady_hits as f64 / steady_attempts.max(1) as f64,
+        offered,
+        dedup,
+        steals: router.steals(),
+    }
+}
+
+/// A/B: affinity routing on (8 buckets) vs off (1 bucket) over the same
+/// clustered workload. With affinity, a cluster's requests ride in one
+/// batch, so nearly every offered miss row dedups against its same-batch
+/// twin; the scattered baseline spends admissions on every batch instead.
+/// Steady-state hit rate must not regress — one stored row per cluster
+/// serves either arm.
+fn affinity_ab_section(table: &mut TableWriter) {
+    let on = run_affinity_arm(8, table);
+    let off = run_affinity_arm(1, table);
+    println!(
+        "affinity A/B: yield on={:.3} ({}/{} rows, steals={}) \
+         off={:.3} ({}/{} rows, steals={}); steady hit rate on={:.3} \
+         off={:.3}",
+        on.dedup_yield, on.dedup, on.offered, on.steals,
+        off.dedup_yield, off.dedup, off.offered, off.steals,
+        on.steady_hit_rate, off.steady_hit_rate,
+    );
+    assert!(
+        on.dedup_yield > off.dedup_yield,
+        "affinity must raise the intra-batch dedup yield: \
+         on {:.3} vs off {:.3}",
+        on.dedup_yield, off.dedup_yield
+    );
+    assert!(
+        on.steady_hit_rate >= off.steady_hit_rate,
+        "affinity must not lower the warm hit rate: on {:.3} vs off {:.3}",
+        on.steady_hit_rate, off.steady_hit_rate
+    );
+}
+
 fn main() {
     attmemo::util::logger::init();
 
@@ -238,6 +404,16 @@ fn main() {
     shared_tier_section(&mut shared);
     shared.emit(Some(std::path::Path::new(
         "bench_results/online_memo_shared_tier.csv")));
+
+    let mut ab = TableWriter::new(
+        "Affinity routing A/B — clustered workload, 2 replicas, \
+         shared tier (dedup on)",
+        &["affinity", "buckets", "epoch", "hit_rate", "offered",
+          "dedup_skips", "dedup_yield", "steals"],
+    );
+    affinity_ab_section(&mut ab);
+    ab.emit(Some(std::path::Path::new(
+        "bench_results/online_memo_affinity_ab.csv")));
 
     match run_engine_section() {
         Ok(()) => {}

@@ -121,6 +121,16 @@ ONLINE MEMOIZATION (serve/eval)
   --no-dedup            disable intra-batch dedup on the admission path
                         (near-identical rows in one batch then all admit)
 
+AFFINITY ROUTING (serve)
+  --affinity-buckets N  similarity-affinity buckets in front of the
+                        batchers (default 8; also --set
+                        affinity_buckets=N): requests with similar token
+                        prefixes land in one bucket and batch together,
+                        raising the intra-batch dedup yield; idle
+                        batchers steal from the fullest bucket so skewed
+                        traffic starves no replica
+  --no-affinity         single FIFO bucket (affinity routing off)
+
 SHARED MEMO TIER (serve/eval)
   --replicas N          engine replicas pulling from one request queue;
                         all replicas share one online memo tier, so a
@@ -260,12 +270,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rt = workload::open_runtime()?;
     let family = args.opt_or("family", "bert");
     let level = parse_level(args)?;
-    let mut cfg = ServingConfig::default();
-    cfg.seq_len = rt.artifacts().serving_seq_len;
+    let mut cfg = ServingConfig {
+        seq_len: rt.artifacts().serving_seq_len,
+        ..ServingConfig::default()
+    };
     for (k, v) in &args.sets {
         cfg.set(k, v)?;
     }
     cfg.replicas = args.opt_usize("replicas", cfg.replicas)?.max(1);
+    cfg.affinity_buckets = args
+        .opt_usize("affinity-buckets", cfg.affinity_buckets)?
+        .max(1);
+    if args.flag("no-affinity") {
+        cfg.affinity_buckets = 1;
+    }
     let memo = parse_memo(args, level)?;
     let built = load_or_build_db(args, &rt, &family, cfg.seq_len, level)?;
     let tier =
@@ -461,6 +479,16 @@ mod tests {
         assert!(a.opt_usize("n", 0).is_err());
         assert!(Args::parse(&argv(&["eval", "stray"])).is_err());
         assert!(Args::parse(&argv(&["x", "--set", "novalue"])).is_err());
+    }
+
+    #[test]
+    fn affinity_flags_parse() {
+        let a = Args::parse(&argv(&[
+            "serve", "--affinity-buckets", "4", "--no-affinity",
+        ]))
+        .unwrap();
+        assert_eq!(a.opt_usize("affinity-buckets", 8).unwrap(), 4);
+        assert!(a.flag("no-affinity"));
     }
 
     #[test]

@@ -169,6 +169,13 @@ pub struct ServingConfig {
     /// share one online `MemoTier`, so warm-ups are visible across all of
     /// them while their forward passes run in parallel.
     pub replicas: usize,
+    /// Affinity buckets in front of the batchers: requests whose token
+    /// prefixes sketch alike land in the same bucket, each batcher
+    /// prefers draining its home buckets (stealing from the fullest
+    /// bucket when idle), so similar requests batch together and raise
+    /// the intra-batch dedup yield. `1` = a single FIFO bucket, i.e.
+    /// affinity routing off (`--no-affinity`).
+    pub affinity_buckets: usize,
 }
 
 impl Default for ServingConfig {
@@ -181,6 +188,7 @@ impl Default for ServingConfig {
             bind: "127.0.0.1:7191".into(),
             io_threads: 2,
             replicas: 1,
+            affinity_buckets: 8,
         }
     }
 }
@@ -196,6 +204,9 @@ impl ServingConfig {
             "bind" => self.bind = value.to_string(),
             "io_threads" => self.io_threads = parse_num(key, value)?,
             "replicas" => self.replicas = parse_num(key, value)?.max(1),
+            "affinity_buckets" => {
+                self.affinity_buckets = parse_num(key, value)?.max(1)
+            }
             other => {
                 return Err(Error::config(format!(
                     "unknown serving option {other:?}"
@@ -260,6 +271,11 @@ mod tests {
         assert_eq!(s.replicas, 3);
         s.set("replicas", "0").unwrap();
         assert_eq!(s.replicas, 1, "replica count clamps to at least one");
+        s.set("affinity_buckets", "4").unwrap();
+        assert_eq!(s.affinity_buckets, 4);
+        s.set("affinity_buckets", "0").unwrap();
+        assert_eq!(s.affinity_buckets, 1,
+                   "bucket count clamps to at least one");
         assert!(s.set("nope", "1").is_err());
         assert!(s.set("max_batch", "x").is_err());
     }

@@ -226,6 +226,35 @@ impl MemoTier {
         Some(hit)
     }
 
+    /// [`MemoTier::lookup_fetch`] into a *lazily allocated* whole-batch
+    /// buffer: `buf` holds `rows` rows of [`MemoTier::apm_elems`] values
+    /// but may still be empty; it is zero-filled to full size only when
+    /// this lookup actually hits, and the payload lands in row `row`.
+    ///
+    /// This keeps the engine's total-miss fast path allocation-free: a
+    /// batch whose rows all miss (the common case on a cold tier) never
+    /// pays the multi-MB batch-APM allocation just because an online tier
+    /// exists. Same atomicity as `lookup_fetch` — search, epoch-checked
+    /// read, copy and reuse-mark all run under one shard read lock.
+    pub fn lookup_fetch_lazy(&self, layer: usize, feature: &[f32],
+                             ef: usize, min_similarity: f32,
+                             buf: &mut Vec<f32>, rows: usize,
+                             row: usize) -> Option<Lookup> {
+        let shard = self.shards[layer].read().unwrap();
+        let hit = shard.lookup(feature, ef)?;
+        if hit.similarity < min_similarity {
+            return None;
+        }
+        let apm = shard.arena().get_checked(hit.id, hit.epoch).ok()?;
+        if buf.is_empty() {
+            buf.resize(rows * self.apm_elems, 0.0);
+        }
+        buf[row * self.apm_elems..(row + 1) * self.apm_elems]
+            .copy_from_slice(apm);
+        shard.mark_reused(hit.id);
+        Some(hit)
+    }
+
     /// Admit one batch of miss-path `(feature, apm)` rows into a layer
     /// shard under a single write lock.
     ///
@@ -386,6 +415,112 @@ mod tests {
         let out = tier.admit_batch(0, &rows, 0.99, 32).unwrap();
         assert_eq!(out.admitted as usize, cap);
         assert!(tier.layer_len(0) <= cap);
+    }
+
+    /// Satellite regression: admitting a batch of `capacity` fresh rows
+    /// into an already-full shard must evict only the pre-existing
+    /// entries, never its own same-batch admissions.
+    #[test]
+    fn full_shard_batch_keeps_its_own_admissions() {
+        let c = cfg(1);
+        let cap = 8usize;
+        let tier = MemoTier::new(&c, 16, HnswParams::default(),
+                                 &memo(cap, true));
+        let mut rng = Pcg32::seeded(31);
+        let elems = c.apm_elems(16);
+        let apm = vec![0.5f32; elems];
+        let old: Vec<Vec<f32>> =
+            (0..cap).map(|_| unit(&mut rng, c.embed_dim)).collect();
+        let rows: Vec<(&[f32], &[f32])> =
+            old.iter().map(|f| (f.as_slice(), apm.as_slice())).collect();
+        let out = tier.admit_batch(0, &rows, 0.99, 32).unwrap();
+        assert_eq!(out.admitted as usize, cap);
+        assert_eq!(out.evicted, 0, "filling an empty shard evicts nothing");
+        assert_eq!(tier.layer_len(0), cap, "shard is now full");
+
+        let fresh: Vec<Vec<f32>> =
+            (0..cap).map(|_| unit(&mut rng, c.embed_dim)).collect();
+        let rows: Vec<(&[f32], &[f32])> =
+            fresh.iter().map(|f| (f.as_slice(), apm.as_slice())).collect();
+        let out = tier.admit_batch(0, &rows, 0.99, 32).unwrap();
+        assert_eq!(out.admitted as usize, cap);
+        assert_eq!(out.evicted as usize, cap,
+                   "exactly the pre-existing entries make room");
+        assert_eq!(tier.layer_len(0), cap);
+        // Every same-batch admission survived the churn it caused.
+        for (k, f) in fresh.iter().enumerate() {
+            let hit = tier.lookup(0, f, 32).unwrap();
+            assert!(hit.similarity > 0.999,
+                    "same-batch admission {k} was evicted by its own batch");
+        }
+    }
+
+    /// Satellite regression: `deduped` rows must never count against the
+    /// per-call admission quota — later fresh rows in the same batch still
+    /// get their slots.
+    #[test]
+    fn deduped_rows_do_not_consume_admission_quota() {
+        let c = cfg(1);
+        let cap = 4usize;
+        let tier = MemoTier::new(&c, 16, HnswParams::default(),
+                                 &memo(cap, true));
+        let mut rng = Pcg32::seeded(37);
+        let elems = c.apm_elems(16);
+        let apm = vec![1.0f32; elems];
+        let base: Vec<Vec<f32>> =
+            (0..cap).map(|_| unit(&mut rng, c.embed_dim)).collect();
+        // Duplicates interleaved *before* the later fresh rows: if dedup
+        // skips consumed quota, the final fresh row would be cut off.
+        let order = [0usize, 0, 1, 1, 2, 3];
+        let rows: Vec<(&[f32], &[f32])> = order
+            .iter()
+            .map(|&k| (base[k].as_slice(), apm.as_slice()))
+            .collect();
+        let out = tier.admit_batch(0, &rows, 0.99, 32).unwrap();
+        assert_eq!(out.admitted as usize, cap,
+                   "every distinct row must admit");
+        assert_eq!(out.deduped, 2);
+        assert_eq!(out.evicted, 0);
+        assert_eq!(tier.layer_len(0), cap);
+        for f in &base {
+            assert!(tier.lookup(0, f, 32).unwrap().similarity > 0.999);
+        }
+    }
+
+    #[test]
+    fn lookup_fetch_lazy_allocates_only_on_hit() {
+        let c = cfg(1);
+        let tier = MemoTier::new(&c, 16, HnswParams::default(),
+                                 &memo(8, true));
+        let mut rng = Pcg32::seeded(41);
+        let elems = c.apm_elems(16);
+        let f = unit(&mut rng, c.embed_dim);
+        let apm: Vec<f32> = (0..elems).map(|i| i as f32).collect();
+        let rows = 3usize;
+
+        // Empty tier: misses leave the batch buffer unallocated.
+        let mut buf: Vec<f32> = Vec::new();
+        assert!(tier
+            .lookup_fetch_lazy(0, &f, 32, 0.9, &mut buf, rows, 1)
+            .is_none());
+        assert!(buf.is_empty(), "a miss must not allocate the batch APM");
+
+        tier.admit_batch(0, &[(f.as_slice(), apm.as_slice())], 0.9, 32)
+            .unwrap();
+        // Below-floor lookups still don't allocate.
+        let far = unit(&mut rng, c.embed_dim);
+        assert!(tier
+            .lookup_fetch_lazy(0, &far, 32, 1.5, &mut buf, rows, 1)
+            .is_none());
+        assert!(buf.is_empty(), "a rejected hit must not allocate");
+        // First real hit allocates the whole batch buffer and fills its row.
+        assert!(tier
+            .lookup_fetch_lazy(0, &f, 32, 0.9, &mut buf, rows, 1)
+            .is_some());
+        assert_eq!(buf.len(), rows * elems);
+        assert_eq!(&buf[elems..2 * elems], &apm[..]);
+        assert!(buf[..elems].iter().all(|&x| x == 0.0));
+        assert!(buf[2 * elems..].iter().all(|&x| x == 0.0));
     }
 
     #[test]

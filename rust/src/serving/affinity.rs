@@ -1,0 +1,543 @@
+//! Similarity-affinity request routing: bucketed sub-queues in front of
+//! the batchers, so semantically similar requests land in the *same*
+//! batch instead of being scattered across replicas by a single MPMC
+//! queue.
+//!
+//! The paper's core observation (and AttnCache's, at LLM-prefill scale)
+//! is that inference traffic is semantically clustered. PR 2's
+//! intra-batch dedup and the online tier's locality only pay off when a
+//! cluster's requests actually ride in one batch — this module makes that
+//! happen without any model forward:
+//!
+//! * [`signature`] — a cheap min-hash sketch over token-bigram n-grams of
+//!   the request's non-pad prefix. Two requests sharing most of their
+//!   prefix bigrams share the minimum with high probability (classic
+//!   min-wise LSH), so near-duplicate prompts sketch to the same value
+//!   while unrelated prompts scatter uniformly.
+//! * [`bucket_for`] — signature → bucket index (re-mixed so the min-hash
+//!   skew doesn't bias low buckets).
+//! * [`AffinityRouter`] — a bounded set of per-bucket FIFO sub-queues
+//!   behind one mutex/condvar pair. Bucket `b` is *home* to replica
+//!   `b % replicas`; a batcher round-robins over its non-empty home
+//!   buckets (so a hot bucket cannot starve a sparse sibling) and, when
+//!   it has no home work, **steals** from the fullest bucket overall so
+//!   skewed traffic never starves a replica (or leaves one idle).
+//!   Capacity is global across buckets — the admission-control semantics
+//!   of the old `BoundedQueue` are preserved.
+//!
+//! With `buckets = 1` the router degenerates to the plain shared FIFO
+//! queue (`--no-affinity`): bucket 0 is home to replica 0 and every other
+//! replica's pop counts as a steal, which is exactly what "no affinity"
+//! means operationally.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::{Error, Result};
+
+/// Non-pad prefix tokens fed into the signature sketch. Long enough to
+/// tell topics apart, short enough that signing is O(1) per request.
+const SIG_PREFIX: usize = 32;
+
+/// SplitMix64 finalizer: cheap, well-distributed 64-bit mixing.
+fn mix(h: u64) -> u64 {
+    let mut z = h.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Cheap request signature: the min-hash of the token-bigram set of the
+/// first `SIG_PREFIX` (32) non-pad tokens. No model forward, no float
+/// math — O(prefix) integer hashing at enqueue time.
+///
+/// Property (min-wise hashing): for two requests the probability that
+/// their signatures collide equals the Jaccard similarity of their bigram
+/// sets, so small edits (a word changed near the tail) usually preserve
+/// the signature while unrelated prompts diverge.
+pub fn signature(ids: &[i32]) -> u64 {
+    let mut prev: Option<u64> = None;
+    let mut min = u64::MAX;
+    let mut taken = 0usize;
+    for &t in ids {
+        if t == crate::data::tokenizer::PAD {
+            continue;
+        }
+        let tok = t as u32 as u64;
+        if let Some(p) = prev {
+            min = min.min(mix((p << 32) | tok));
+        }
+        prev = Some(tok);
+        taken += 1;
+        if taken >= SIG_PREFIX {
+            break;
+        }
+    }
+    match (min, prev) {
+        (u64::MAX, Some(only)) => mix(only), // single-token request
+        (u64::MAX, None) => 0,               // all-pad request
+        (m, _) => m,
+    }
+}
+
+/// Affinity bucket for a request's token ids: `signature` re-mixed modulo
+/// the bucket count (a raw min-hash is a minimum, hence skewed small —
+/// the extra mix spreads it uniformly over buckets).
+pub fn bucket_for(ids: &[i32], buckets: usize) -> usize {
+    if buckets <= 1 {
+        return 0;
+    }
+    (mix(signature(ids)) % buckets as u64) as usize
+}
+
+struct Inner<T> {
+    buckets: Vec<VecDeque<T>>,
+    len: usize,
+    closed: bool,
+    /// Per-replica rotation cursor over home buckets: the next pop scans
+    /// from here, so every non-empty home bucket gets a turn (a deepest-
+    /// first policy would let one hot bucket starve a sparse sibling
+    /// indefinitely under sustained skew).
+    next_home: Vec<usize>,
+}
+
+/// Snapshot of the router's observable state (for STATS reporting).
+#[derive(Debug, Clone)]
+pub struct RouterStats {
+    /// Queue depth per bucket at snapshot time.
+    pub depths: Vec<usize>,
+    /// Total pops that took a request from a non-home bucket.
+    pub steals: u64,
+}
+
+/// Bounded affinity-bucketed request queue shared between connection
+/// handlers (producers) and the per-replica batcher threads (consumers).
+///
+/// All operations run under one mutex, so any number of producers and
+/// consumers is safe; the capacity (`depth`) is global across buckets, so
+/// backpressure behaves exactly like the old single `BoundedQueue`.
+pub struct AffinityRouter<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    depth: usize,
+    replicas: usize,
+    num_buckets: usize,
+    steals: AtomicU64,
+}
+
+impl<T> AffinityRouter<T> {
+    /// Router with `buckets` sub-queues serving `replicas` batchers and a
+    /// global capacity of `depth` requests (each clamped to at least 1).
+    pub fn new(buckets: usize, replicas: usize, depth: usize) -> Self {
+        let buckets = buckets.max(1);
+        let replicas = replicas.max(1);
+        AffinityRouter {
+            inner: Mutex::new(Inner {
+                buckets: (0..buckets).map(|_| VecDeque::new()).collect(),
+                len: 0,
+                closed: false,
+                next_home: vec![0; replicas],
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            depth: depth.max(1),
+            replicas,
+            num_buckets: buckets,
+            steals: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of affinity buckets (fixed at construction; lock-free —
+    /// the request handlers read it on every enqueue).
+    pub fn num_buckets(&self) -> usize {
+        self.num_buckets
+    }
+
+    /// Is `bucket` one of `replica`'s home buckets?
+    fn is_home(&self, bucket: usize, replica: usize) -> bool {
+        bucket % self.replicas == replica % self.replicas
+    }
+
+    /// Non-blocking push into `bucket` (modulo the bucket count); `Err`
+    /// when the router is full or closed (caller sheds load).
+    pub fn try_push(&self, bucket: usize, item: T) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(Error::serving("queue closed"));
+        }
+        if g.len >= self.depth {
+            return Err(Error::serving("queue full"));
+        }
+        let nb = g.buckets.len();
+        g.buckets[bucket % nb].push_back(item);
+        g.len += 1;
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push into `bucket` (waits for space); `Err` when closed.
+    pub fn push(&self, bucket: usize, item: T) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(Error::serving("queue closed"));
+            }
+            if g.len < self.depth {
+                let nb = g.buckets.len();
+                g.buckets[bucket % nb].push_back(item);
+                g.len += 1;
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Take one request for `replica` under the lock: the next non-empty
+    /// home bucket in rotation order first (round-robin, so a sparse home
+    /// bucket cannot be starved by a hot sibling that keeps refilling);
+    /// otherwise steal from the fullest bucket overall (the replica is
+    /// idle — leaving work queued would strand it under skewed traffic;
+    /// the stolen bucket's own home replica round-robins over it, so
+    /// fullest-first is safe here). Returns the source bucket with the
+    /// item.
+    fn take_locked(&self, g: &mut Inner<T>, replica: usize)
+        -> Option<(usize, T)> {
+        let nb = g.buckets.len();
+        let r = replica % self.replicas;
+        let start = g.next_home[r];
+        let mut home: Option<usize> = None;
+        for k in 0..nb {
+            let b = (start + k) % nb;
+            if self.is_home(b, replica) && !g.buckets[b].is_empty() {
+                home = Some(b);
+                break;
+            }
+        }
+        let (bucket, stolen) = match home {
+            Some(b) => {
+                g.next_home[r] = (b + 1) % nb;
+                (b, false)
+            }
+            None => {
+                let mut best: Option<usize> = None;
+                for b in 0..nb {
+                    if !g.buckets[b].is_empty()
+                        && best.map_or(true, |x| {
+                            g.buckets[b].len() > g.buckets[x].len()
+                        })
+                    {
+                        best = Some(b);
+                    }
+                }
+                (best?, true)
+            }
+        };
+        let item = g.buckets[bucket].pop_front()?;
+        g.len -= 1;
+        if stolen {
+            self.steals.fetch_add(1, Ordering::Relaxed);
+        }
+        Some((bucket, item))
+    }
+
+    /// Pop one request for `replica`, waiting up to `timeout`; `None` on
+    /// timeout or when closed-and-drained. Returns the bucket the request
+    /// came from so the batcher can keep draining it (bucket-homogeneous
+    /// batches are the whole point).
+    pub fn pop_timeout(&self, replica: usize, timeout: Duration)
+        -> Option<(usize, T)> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(hit) = self.take_locked(&mut g, replica) {
+                self.not_full.notify_one();
+                return Some(hit);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) =
+                self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Drain up to `max` requests for `replica` without blocking,
+    /// preferring `bucket` (the batch's affinity bucket — also drained
+    /// when stolen, so a stolen batch stays bucket-homogeneous) and then
+    /// the replica's other home buckets. Never steals: stealing is an
+    /// idle-time decision made in [`AffinityRouter::pop_timeout`].
+    pub fn drain_affine(&self, replica: usize, bucket: usize,
+                        max: usize) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let bucket = bucket % g.buckets.len();
+        let order: Vec<usize> = std::iter::once(bucket)
+            .chain(
+                (0..g.buckets.len())
+                    .filter(|&b| b != bucket && self.is_home(b, replica)),
+            )
+            .collect();
+        let mut out = Vec::new();
+        for b in order {
+            while out.len() < max {
+                match g.buckets[b].pop_front() {
+                    Some(x) => {
+                        g.len -= 1;
+                        out.push(x);
+                    }
+                    None => break,
+                }
+            }
+            if out.len() >= max {
+                break;
+            }
+        }
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    /// Total queued requests across buckets.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len
+    }
+
+    /// Whether no requests are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Per-bucket depths + steal count (the STATS affinity section).
+    pub fn stats(&self) -> RouterStats {
+        let g = self.inner.lock().unwrap();
+        RouterStats {
+            depths: g.buckets.iter().map(VecDeque::len).collect(),
+            steals: self.steals.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Total pops that took a request from a non-home bucket.
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    /// Close the router; producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Whether [`AffinityRouter::close`] has been called.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn signature_ignores_padding_and_is_stable() {
+        let a = [1, 5, 6, 9, 2, 0, 0, 0];
+        let b = [1, 5, 6, 9, 2, 0, 0, 0, 0, 0, 0, 0];
+        assert_eq!(signature(&a), signature(&b),
+                   "pad tail must not change the signature");
+        assert_eq!(signature(&a), signature(&a));
+        assert_eq!(signature(&[0, 0, 0]), 0, "all-pad sketches to 0");
+        // Single-token requests still get a well-defined sketch.
+        assert_ne!(signature(&[7, 0, 0]), signature(&[9, 0, 0]));
+    }
+
+    #[test]
+    fn signature_separates_unrelated_prefixes() {
+        let a: Vec<i32> = (10..30).collect();
+        let b: Vec<i32> = (200..220).collect();
+        assert_ne!(signature(&a), signature(&b));
+        assert_eq!(bucket_for(&a, 1), 0);
+        // Unrelated prefixes spread over the bucket space instead of
+        // piling into one bucket.
+        let used: std::collections::HashSet<usize> = (0..64)
+            .map(|k| {
+                let seq: Vec<i32> = (0..20).map(|j| 10 + 40 * k + j).collect();
+                bucket_for(&seq, 8)
+            })
+            .collect();
+        assert!(used.len() >= 3, "64 topics landed in {} bucket(s)",
+                used.len());
+    }
+
+    #[test]
+    fn signature_survives_small_tail_edits() {
+        // Min-hash over 30 shared bigrams: editing the last token changes
+        // one bigram, so the minimum (hence the signature) survives with
+        // probability ≈ 29/30 per sequence. Demand a large majority across
+        // many bases rather than betting on any single fixture.
+        let survived = (0..16)
+            .filter(|&k| {
+                let a: Vec<i32> = (0..31).map(|j| 10 + 97 * k + j).collect();
+                let mut b = a.clone();
+                *b.last_mut().unwrap() = 7;
+                signature(&a) == signature(&b)
+            })
+            .count();
+        assert!(survived >= 10,
+                "tail edits changed the signature in {}/16 cases",
+                16 - survived);
+    }
+
+    #[test]
+    fn home_bucket_preferred_over_fuller_foreign_bucket() {
+        // Buckets 0/2 are home to replica 0, buckets 1/3 to replica 1.
+        let r: AffinityRouter<u32> = AffinityRouter::new(4, 2, 64);
+        r.try_push(1, 10).unwrap();
+        r.try_push(1, 11).unwrap();
+        r.try_push(2, 20).unwrap();
+        // Replica 0 has home work in bucket 2 — no steal, even though
+        // bucket 1 is fuller.
+        let (b, x) = r.pop_timeout(0, Duration::from_millis(10)).unwrap();
+        assert_eq!((b, x), (2, 20));
+        assert_eq!(r.steals(), 0);
+        // Replica 1 drains its own bucket.
+        let (b, x) = r.pop_timeout(1, Duration::from_millis(10)).unwrap();
+        assert_eq!((b, x), (1, 10));
+        assert_eq!(r.steals(), 0);
+    }
+
+    #[test]
+    fn home_buckets_rotate_so_none_starves() {
+        // One replica, two home buckets: a deep bucket 0 must not starve
+        // the single request in bucket 1 — pops alternate between them.
+        let r: AffinityRouter<u32> = AffinityRouter::new(2, 1, 64);
+        for i in 0..8 {
+            r.try_push(0, i).unwrap();
+        }
+        r.try_push(1, 100).unwrap();
+        let (b1, x1) = r.pop_timeout(0, Duration::from_millis(10)).unwrap();
+        let (b2, x2) = r.pop_timeout(0, Duration::from_millis(10)).unwrap();
+        assert_eq!((b1, x1), (0, 0), "rotation starts at bucket 0");
+        assert_eq!((b2, x2), (1, 100),
+                   "the sparse bucket gets its turn next, not after 8 pops");
+        let (b3, _) = r.pop_timeout(0, Duration::from_millis(10)).unwrap();
+        assert_eq!(b3, 0);
+        assert_eq!(r.steals(), 0);
+    }
+
+    #[test]
+    fn idle_replica_steals_fullest_bucket() {
+        let r: AffinityRouter<u32> = AffinityRouter::new(4, 2, 64);
+        r.try_push(0, 1).unwrap(); // home of replica 0
+        r.try_push(0, 2).unwrap();
+        // Replica 1 has no home work: it must steal rather than starve.
+        let (b, x) = r.pop_timeout(1, Duration::from_millis(10)).unwrap();
+        assert_eq!((b, x), (0, 1));
+        assert_eq!(r.steals(), 1);
+    }
+
+    #[test]
+    fn drain_affine_prefers_hint_then_home_and_never_steals() {
+        let r: AffinityRouter<u32> = AffinityRouter::new(4, 2, 64);
+        r.try_push(0, 1).unwrap();
+        r.try_push(0, 2).unwrap();
+        r.try_push(2, 3).unwrap(); // replica 0's other home bucket
+        r.try_push(1, 9).unwrap(); // replica 1's bucket: must stay queued
+        let got = r.drain_affine(0, 0, 10);
+        assert_eq!(got, vec![1, 2, 3], "hint bucket first, then home");
+        assert_eq!(r.len(), 1, "foreign bucket must not be drained");
+        assert_eq!(r.steals(), 0);
+        // max is respected mid-bucket.
+        r.try_push(2, 4).unwrap();
+        r.try_push(2, 5).unwrap();
+        assert_eq!(r.drain_affine(0, 2, 1), vec![4]);
+    }
+
+    #[test]
+    fn global_backpressure_across_buckets() {
+        let r: AffinityRouter<u32> = AffinityRouter::new(4, 2, 2);
+        r.try_push(0, 1).unwrap();
+        r.try_push(3, 2).unwrap();
+        assert!(r.try_push(1, 3).is_err(), "capacity is global");
+        r.drain_affine(0, 0, 1);
+        r.try_push(1, 3).unwrap();
+    }
+
+    #[test]
+    fn close_unblocks_and_rejects() {
+        let r: Arc<AffinityRouter<u32>> = Arc::new(AffinityRouter::new(2, 1, 4));
+        let r2 = r.clone();
+        let h = std::thread::spawn(move || {
+            r2.pop_timeout(0, Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        r.close();
+        assert!(h.join().unwrap().is_none());
+        assert!(r.try_push(0, 1).is_err());
+        assert!(r.is_closed());
+    }
+
+    #[test]
+    fn pop_timeout_expires() {
+        let r: AffinityRouter<u32> = AffinityRouter::new(2, 2, 4);
+        let t0 = Instant::now();
+        assert!(r.pop_timeout(0, Duration::from_millis(30)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn skewed_traffic_starves_no_consumer() {
+        // Everything lands in one bucket (home to replica 0 only); two
+        // concurrent consumers must still drain the router completely —
+        // anything replica 1 receives can only arrive via the steal path.
+        let r: Arc<AffinityRouter<usize>> =
+            Arc::new(AffinityRouter::new(4, 2, 1024));
+        let mut handles = Vec::new();
+        for replica in 0..2usize {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = 0usize;
+                while r.pop_timeout(replica, Duration::from_millis(500))
+                    .is_some()
+                {
+                    got += 1;
+                }
+                got
+            }));
+        }
+        // Produce gradually so both consumers engage while items flow.
+        for i in 0..200 {
+            r.push(0, i).unwrap();
+            if i % 16 == 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        r.close();
+        let counts: Vec<usize> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(counts.iter().sum::<usize>(), 200, "all items consumed");
+        assert!(r.is_empty());
+        assert!(r.steals() as usize >= counts[1],
+                "replica 1 can only be fed by steals");
+    }
+
+    #[test]
+    fn stats_snapshot_reports_depths() {
+        let r: AffinityRouter<u32> = AffinityRouter::new(3, 1, 16);
+        r.try_push(0, 1).unwrap();
+        r.try_push(2, 2).unwrap();
+        r.try_push(2, 3).unwrap();
+        let s = r.stats();
+        assert_eq!(s.depths, vec![1, 0, 2]);
+        assert_eq!(s.steals, 0);
+    }
+}

@@ -2,58 +2,80 @@
 //! max-batch / max-wait policy (the vLLM-style continuous batch former).
 //!
 //! The server runs one batcher per engine replica, all popping from the
-//! same bounded queue — the queue is the only point of contention between
-//! replicas, and each pop hands a whole batch to exactly one replica. The
+//! same [`AffinityRouter`]: each batcher prefers its *home* affinity
+//! buckets (similar requests share a bucket, so batches come out
+//! bucket-homogeneous — that's what makes intra-batch dedup and
+//! online-tier locality pay), and steals from the fullest bucket when it
+//! has no home work so skewed traffic never strands a replica. The
 //! engines themselves are never locked by another replica's batcher; the
 //! shared state (the online `MemoTier`) synchronizes internally per layer
 //! shard.
 
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config::ServingConfig;
+use crate::serving::affinity::AffinityRouter;
 use crate::serving::engine::Engine;
-use crate::serving::queue::BoundedQueue;
 use crate::serving::request::{Request, Response};
 use crate::tensor::tensor::IdTensor;
 use crate::Result;
 
+/// Form one batch for `replica`: block up to `idle_wait` for the first
+/// request, then give stragglers up to `max_wait` to fill the batch,
+/// draining the first request's affinity bucket (then the replica's other
+/// home buckets) in preference.
+///
+/// The deadline is re-checked on **every** loop iteration — after a
+/// non-blocking drain, so already-queued work is always taken (even with
+/// `max_wait = 0`), but a continuous trickle of single requests still
+/// closes the batch at `max_wait` like any other straggler pattern (the
+/// old loop only checked the deadline when a drain came back empty, so a
+/// steady trickle could hold a batch open until `max_batch` filled —
+/// unbounded latency for the first request).
+pub fn form_batch<T>(queue: &AffinityRouter<T>, replica: usize,
+                     max_batch: usize, max_wait: Duration,
+                     idle_wait: Duration) -> Vec<T> {
+    let Some((bucket, first)) = queue.pop_timeout(replica, idle_wait) else {
+        return Vec::new();
+    };
+    let mut batch = vec![first];
+    let deadline = Instant::now() + max_wait;
+    while batch.len() < max_batch {
+        let more = queue.drain_affine(replica, bucket,
+                                      max_batch - batch.len());
+        let idle = more.is_empty();
+        batch.extend(more);
+        if batch.len() >= max_batch || Instant::now() >= deadline {
+            break;
+        }
+        if idle {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    batch
+}
+
 /// Owns the batching loop; runs on its own thread via [`Batcher::run`].
 pub struct Batcher {
-    queue: Arc<BoundedQueue<Request>>,
+    queue: Arc<AffinityRouter<Request>>,
     engine: Arc<Mutex<Engine>>,
     cfg: ServingConfig,
-    /// Replica index, for logging/thread naming in multi-replica servers.
+    /// Replica index: selects this batcher's home affinity buckets and
+    /// names its thread in multi-replica servers.
     replica: usize,
 }
 
 impl Batcher {
-    pub fn new(queue: Arc<BoundedQueue<Request>>, engine: Arc<Mutex<Engine>>,
-               cfg: ServingConfig, replica: usize) -> Self {
+    pub fn new(queue: Arc<AffinityRouter<Request>>,
+               engine: Arc<Mutex<Engine>>, cfg: ServingConfig,
+               replica: usize) -> Self {
         Batcher { queue, engine, cfg, replica }
     }
 
-    /// Form one batch: block for the first request (up to `idle_wait`),
-    /// then give stragglers `max_wait_ms` to fill the batch.
     fn next_batch(&self, idle_wait: Duration) -> Vec<Request> {
-        let Some(first) = self.queue.pop_timeout(idle_wait) else {
-            return Vec::new();
-        };
-        let mut batch = vec![first];
-        let deadline = std::time::Instant::now()
-            + Duration::from_millis(self.cfg.max_wait_ms);
-        while batch.len() < self.cfg.max_batch {
-            let more = self.queue.drain_up_to(self.cfg.max_batch - batch.len());
-            if !more.is_empty() {
-                batch.extend(more);
-                continue;
-            }
-            if std::time::Instant::now() >= deadline {
-                break;
-            }
-            std::thread::sleep(Duration::from_micros(200));
-        }
-        batch
+        form_batch(&self.queue, self.replica, self.cfg.max_batch,
+                   Duration::from_millis(self.cfg.max_wait_ms), idle_wait)
     }
 
     /// Execute one batch and reply to every request.
@@ -104,5 +126,99 @@ impl Batcher {
                 log::error!("batcher[{}]: batch failed: {e}", self.replica);
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    /// Regression: a continuous trickle of single requests must not hold
+    /// the batch open past `max_wait` — the old loop `continue`d past the
+    /// deadline check whenever a drain returned something, so a 2 ms
+    /// trickle with a large `max_batch` kept the first request waiting
+    /// for seconds.
+    #[test]
+    fn trickle_closes_batch_at_deadline() {
+        let q: Arc<AffinityRouter<u32>> =
+            Arc::new(AffinityRouter::new(1, 1, 4096));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (q2, stop2) = (q.clone(), stop.clone());
+        let producer = std::thread::spawn(move || {
+            let mut i = 0u32;
+            while !stop2.load(Ordering::Relaxed) {
+                let _ = q2.try_push(0, i);
+                i += 1;
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        });
+        let t0 = Instant::now();
+        let batch = form_batch(&*q, 0, 1000, Duration::from_millis(40),
+                               Duration::from_secs(2));
+        let took = t0.elapsed();
+        stop.store(true, Ordering::Relaxed);
+        producer.join().unwrap();
+        assert!(!batch.is_empty());
+        assert!(batch.len() < 1000,
+                "a 2 ms trickle cannot legitimately fill 1000 slots");
+        // Old behaviour: ~2 s (1000 × 2 ms). Fixed behaviour: ~40 ms plus
+        // scheduling slack; 400 ms cleanly separates the two.
+        assert!(took < Duration::from_millis(400),
+                "batch held open past the deadline: {took:?}");
+    }
+
+    #[test]
+    fn batch_fills_up_to_max_batch_when_queue_is_deep() {
+        let q: AffinityRouter<u32> = AffinityRouter::new(2, 1, 64);
+        for i in 0..32 {
+            q.try_push((i % 2) as usize, i).unwrap();
+        }
+        let batch = form_batch(&q, 0, 8, Duration::from_millis(50),
+                               Duration::from_millis(50));
+        assert_eq!(batch.len(), 8, "deep queue must fill the batch");
+        assert_eq!(q.len(), 24);
+    }
+
+    #[test]
+    fn zero_wait_still_takes_queued_work() {
+        // max_wait_ms = 0 is a legal config: the deadline is expired from
+        // the start, but already-queued work must still fill the batch
+        // (the drain runs before the deadline check).
+        let q: AffinityRouter<u32> = AffinityRouter::new(1, 1, 64);
+        for i in 0..8 {
+            q.try_push(0, i).unwrap();
+        }
+        let batch = form_batch(&q, 0, 8, Duration::from_millis(0),
+                               Duration::from_millis(10));
+        assert_eq!(batch.len(), 8,
+                   "queued work must be taken even with a zero wait");
+    }
+
+    #[test]
+    fn idle_queue_returns_empty_batch() {
+        let q: AffinityRouter<u32> = AffinityRouter::new(2, 1, 8);
+        let batch = form_batch(&q, 0, 8, Duration::from_millis(5),
+                               Duration::from_millis(5));
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn batch_prefers_the_popped_bucket() {
+        // Two buckets, one replica (both home): the batch should drain
+        // the first request's bucket before touching the other, keeping
+        // batches bucket-homogeneous.
+        let q: AffinityRouter<u32> = AffinityRouter::new(2, 1, 64);
+        for i in 0..4 {
+            q.try_push(0, 100 + i).unwrap();
+        }
+        q.try_push(1, 7).unwrap();
+        let batch = form_batch(&q, 0, 3, Duration::from_millis(20),
+                               Duration::from_millis(20));
+        // Rotation starts at bucket 0; the drain stays in that bucket
+        // until the batch fills, leaving bucket 1 (and bucket 0's tail)
+        // for the next batch.
+        assert_eq!(batch, vec![100, 101, 102]);
+        assert_eq!(q.len(), 2);
     }
 }

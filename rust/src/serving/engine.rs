@@ -115,12 +115,24 @@ impl Engine {
                             tier: Arc<MemoTier>,
                             opts: EngineOptions) -> Result<Self> {
         // A mismatched tier (e.g. a warm snapshot saved at another seq_len)
-        // would make every payload fetch copy the wrong entry size.
+        // would make every payload fetch copy the wrong entry size — but
+        // only if the tier is actually used. `level = off` discards it, so
+        // a baseline run over a foreign snapshot must not be rejected.
         let want = runner.config().apm_elems(opts.seq_len);
-        if tier.seq_len() != opts.seq_len || tier.apm_elems() != want
+        let mismatch = tier.seq_len() != opts.seq_len
+            || tier.apm_elems() != want
             || tier.embed_dim() != runner.config().embed_dim
-            || tier.num_layers() != runner.config().layers
-        {
+            || tier.num_layers() != runner.config().layers;
+        if opts.memo.level == MemoLevel::Off {
+            if mismatch {
+                log::warn!(
+                    "shared tier shape mismatch ignored: memo level is off, \
+                     the tier will not be used"
+                );
+            }
+            return Self::build(runner, built, None, opts);
+        }
+        if mismatch {
             return Err(crate::Error::serving(format!(
                 "shared tier shape (layers {}, seq {}, elems {}, dim {}) \
                  does not match engine (layers {}, seq {}, elems {want}, \
@@ -134,12 +146,7 @@ impl Engine {
                 runner.config().embed_dim,
             )));
         }
-        let online = if opts.memo.level != MemoLevel::Off {
-            Some(tier)
-        } else {
-            None
-        };
-        Self::build(runner, built, online, opts)
+        Self::build(runner, built, Some(tier), opts)
     }
 
     fn build(runner: ModelRunner, built: Option<Arc<BuiltDb>>,
@@ -294,18 +301,17 @@ impl Engine {
 
         // Per-row two-tier search. Online-tier payloads are copied into
         // the batch APM immediately, inside the shard's read lock
-        // (`MemoTier::lookup_fetch`): between a bare lookup and a later
-        // fetch another replica could admit/evict in the same shard, so
-        // id-then-fetch is only race-free when fused like this.
+        // (`MemoTier::lookup_fetch_lazy`): between a bare lookup and a
+        // later fetch another replica could admit/evict in the same shard,
+        // so id-then-fetch is only race-free when fused like this.
         let ts = Instant::now();
-        // With no online tier, nothing writes into the batch APM until
-        // after the early-return checks below — defer the (multi-MB)
-        // allocation so total-miss/quorum-reverted layers never pay it.
-        let mut apm_data = if online.is_some() {
-            vec![0.0f32; n * elems]
-        } else {
-            Vec::new()
-        };
+        // The batch APM is allocated lazily: nothing writes into it until
+        // either the first *online hit* (`lookup_fetch_lazy` zero-fills it
+        // under the shard lock just before copying the payload in) or the
+        // post-early-return assembly below — so total-miss and
+        // quorum-reverted layers never pay the multi-MB allocation, with
+        // or without an online tier.
+        let mut apm_data: Vec<f32> = Vec::new();
         let mut stat_hits: Vec<(usize, ApmId)> = Vec::new();
         let mut online_rows: Vec<usize> = Vec::new();
         let mut miss_rows: Vec<usize> = Vec::new();
@@ -326,8 +332,8 @@ impl Engine {
             let floor =
                 best_static.map_or(self.threshold, |s| s.similarity);
             let online_hit = online.as_ref().and_then(|t| {
-                t.lookup_fetch(li, q, self.opts.ef_search, floor,
-                               &mut apm_data[i * elems..(i + 1) * elems])
+                t.lookup_fetch_lazy(li, q, self.opts.ef_search, floor,
+                                    &mut apm_data, n, i)
             });
             if online_hit.is_some() {
                 online_rows.push(i);
@@ -456,6 +462,7 @@ impl Engine {
                 self.stats.layers[li].admitted += out.admitted;
                 self.stats.layers[li].evicted += out.evicted;
                 self.stats.layers[li].deduped += out.deduped;
+                self.metrics.admit_offered += rows.len() as u64;
                 self.metrics.admissions += out.admitted;
                 self.metrics.evictions += out.evicted;
                 self.metrics.dedup_skips += out.deduped;

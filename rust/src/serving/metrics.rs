@@ -19,6 +19,17 @@ pub struct EngineMetrics {
     pub evictions: u64,
     /// Miss rows skipped by intra-batch dedup on the admission path.
     pub dedup_skips: u64,
+    /// Miss rows *offered* to online admission — the denominator of the
+    /// dedup yield (`dedup_skips / admit_offered`), the metric affinity
+    /// routing exists to raise.
+    pub admit_offered: u64,
+    /// Requests taken from a non-home affinity bucket (work stealing).
+    /// Router-level: zero on per-replica metrics, stamped onto the
+    /// aggregated fleet view by the server's STATS path.
+    pub steals: u64,
+    /// Per-affinity-bucket queue depth at report time. Router-level like
+    /// `steals`; empty on per-replica metrics.
+    pub queue_depths: Vec<usize>,
     /// Live entries across the online database's layers (occupancy gauge).
     pub online_entries: u64,
     pub request_latency_ms: Summary,
@@ -39,6 +50,9 @@ impl Default for EngineMetrics {
             admissions: 0,
             evictions: 0,
             dedup_skips: 0,
+            admit_offered: 0,
+            steals: 0,
+            queue_depths: Vec::new(),
             online_entries: 0,
             request_latency_ms: Summary::new(),
             queue_wait_ms: Summary::new(),
@@ -64,12 +78,24 @@ impl EngineMetrics {
         }
     }
 
+    /// Intra-batch dedup yield: dedup skips per miss row offered to
+    /// admission. Higher means similar rows reached the admission path
+    /// together — the observable benefit of affinity routing.
+    pub fn dedup_yield(&self) -> f64 {
+        if self.admit_offered == 0 {
+            0.0
+        } else {
+            self.dedup_skips as f64 / self.admit_offered as f64
+        }
+    }
+
     /// One-line human summary.
     pub fn report(&mut self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} batches={} rejected={} rps={:.1} \
              lat(ms) p50={:.1} p99={:.1} mean_batch={:.1} compute_ms p50={:.1} \
-             online(admit={} evict={} dedup={} entries={})",
+             online(admit={} evict={} dedup={} offered={} yield={:.3} \
+             entries={})",
             self.requests,
             self.batches,
             self.rejected,
@@ -81,8 +107,21 @@ impl EngineMetrics {
             self.admissions,
             self.evictions,
             self.dedup_skips,
+            self.admit_offered,
+            self.dedup_yield(),
             self.online_entries,
-        )
+        );
+        if !self.queue_depths.is_empty() {
+            let depths: Vec<String> =
+                self.queue_depths.iter().map(|d| d.to_string()).collect();
+            s.push_str(&format!(
+                " affinity(buckets={} steals={} depths=[{}])",
+                self.queue_depths.len(),
+                self.steals,
+                depths.join(",")
+            ));
+        }
+        s
     }
 
     /// Fold another replica's metrics into this one: counters add,
@@ -98,6 +137,13 @@ impl EngineMetrics {
         self.admissions += other.admissions;
         self.evictions += other.evictions;
         self.dedup_skips += other.dedup_skips;
+        self.admit_offered += other.admit_offered;
+        self.steals += other.steals;
+        // Replicas share one router, so bucket depths are a router-level
+        // gauge: keep whichever side carries them rather than summing.
+        if self.queue_depths.is_empty() {
+            self.queue_depths.clone_from(&other.queue_depths);
+        }
         self.online_entries = self.online_entries.max(other.online_entries);
         self.request_latency_ms.merge(&other.request_latency_ms);
         self.queue_wait_ms.merge(&other.queue_wait_ms);
@@ -121,19 +167,43 @@ mod tests {
     }
 
     #[test]
+    fn dedup_yield_and_affinity_section() {
+        let mut m = EngineMetrics::new();
+        assert_eq!(m.dedup_yield(), 0.0, "no offers, no yield");
+        m.admit_offered = 8;
+        m.dedup_skips = 6;
+        assert!((m.dedup_yield() - 0.75).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("offered=8"), "{r}");
+        assert!(r.contains("yield=0.750"), "{r}");
+        assert!(!r.contains("affinity("), "no router gauges, no section");
+        m.steals = 3;
+        m.queue_depths = vec![2, 0, 1];
+        let r = m.report();
+        assert!(r.contains("affinity(buckets=3 steals=3 depths=[2,0,1])"),
+                "{r}");
+    }
+
+    #[test]
     fn absorb_aggregates_replicas() {
         let mut a = EngineMetrics::new();
         a.requests = 3;
         a.dedup_skips = 1;
+        a.admit_offered = 2;
         a.online_entries = 10;
         a.request_latency_ms.record(1.0);
         let mut b = EngineMetrics::new();
         b.requests = 4;
+        b.admit_offered = 3;
         b.online_entries = 10;
+        b.queue_depths = vec![1, 2];
         b.request_latency_ms.record(3.0);
         a.absorb(&b);
         assert_eq!(a.requests, 7);
         assert_eq!(a.dedup_skips, 1);
+        assert_eq!(a.admit_offered, 5);
+        assert_eq!(a.queue_depths, vec![1, 2],
+                   "router gauge carries over, not summed");
         assert_eq!(a.online_entries, 10, "shared gauge must not double");
         assert_eq!(a.request_latency_ms.count(), 2);
     }

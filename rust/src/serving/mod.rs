@@ -2,10 +2,14 @@
 //! first-class feature.
 //!
 //! Flow: client → TCP line protocol (`server`) or in-process handle →
-//! bounded queue (`queue`) → dynamic batcher (`batcher`) → inference
-//! engine (`engine`, where memoization happens) → response. `metrics`
-//! records per-stage latency for the paper's Table 4 breakdown.
+//! affinity-bucketed request router (`affinity`: similar token prefixes
+//! share a bucket; batchers prefer home buckets and work-steal when
+//! idle) → dynamic batcher (`batcher`) → inference engine (`engine`,
+//! where memoization happens) → response. `metrics` records per-stage
+//! latency for the paper's Table 4 breakdown plus the affinity/dedup
+//! gauges. `queue` keeps the plain single-FIFO `BoundedQueue` primitive.
 
+pub mod affinity;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
@@ -13,7 +17,8 @@ pub mod queue;
 pub mod request;
 pub mod server;
 
-pub use batcher::Batcher;
+pub use affinity::{bucket_for, signature, AffinityRouter};
+pub use batcher::{form_batch, Batcher};
 pub use engine::{Engine, EngineOptions};
 pub use metrics::EngineMetrics;
 pub use queue::BoundedQueue;

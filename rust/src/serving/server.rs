@@ -7,13 +7,17 @@
 //!   server → `OK <label> <memo_hits> <latency_ms>`
 //!   server → `ERR <reason>` / `STATS <report>` / `BYE`
 //!
-//! Connections are handled by a small thread pool; handlers tokenize and
-//! enqueue. The server runs one batcher thread per engine *replica*, all
-//! pulling from the shared request queue. Replicas are expected to share
-//! one online `MemoTier` (`Engine::with_shared_tier`): each replica's
-//! forward pass runs behind its own mutex, while tier lookups from all
-//! replicas proceed in parallel on the shards' read locks — there is no
-//! global engine mutex on the lookup path. `STATS` aggregates the fleet.
+//! Connections are handled by a small thread pool; handlers tokenize,
+//! compute the request's affinity signature, and enqueue into the
+//! signature's bucket of the shared [`AffinityRouter`]. The server runs
+//! one batcher thread per engine *replica*; each prefers its home
+//! buckets (similar requests batch together) and steals from the fullest
+//! bucket when idle. Replicas are expected to share one online `MemoTier`
+//! (`Engine::with_shared_tier`): each replica's forward pass runs behind
+//! its own mutex, while tier lookups from all replicas proceed in
+//! parallel on the shards' read locks — there is no global engine mutex
+//! on the lookup path. `STATS` aggregates the fleet and appends the
+//! router's affinity gauges (per-bucket depth, steal count).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -23,10 +27,10 @@ use std::time::Duration;
 
 use crate::config::ServingConfig;
 use crate::data::tokenizer::Vocab;
+use crate::serving::affinity::{bucket_for, AffinityRouter};
 use crate::serving::batcher::Batcher;
 use crate::serving::engine::Engine;
 use crate::serving::metrics::EngineMetrics;
-use crate::serving::queue::BoundedQueue;
 use crate::serving::request::Request;
 use crate::{Error, Result};
 
@@ -35,7 +39,7 @@ use crate::{Error, Result};
 pub struct Server {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    queue: Arc<BoundedQueue<Request>>,
+    queue: Arc<AffinityRouter<Request>>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -60,8 +64,10 @@ impl Server {
         let listener = TcpListener::bind(&cfg.bind)?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
-        let queue: Arc<BoundedQueue<Request>> =
-            Arc::new(BoundedQueue::new(cfg.queue_depth));
+        let queue: Arc<AffinityRouter<Request>> = Arc::new(
+            AffinityRouter::new(cfg.affinity_buckets, cfg.replicas,
+                                cfg.queue_depth),
+        );
         let engines: Arc<Vec<Arc<Mutex<Engine>>>> = Arc::new(
             engines
                 .into_iter()
@@ -155,7 +161,7 @@ impl Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, queue: Arc<BoundedQueue<Request>>,
+fn handle_conn(stream: TcpStream, queue: Arc<AffinityRouter<Request>>,
                vocab: Arc<Vocab>, engines: Arc<Vec<Arc<Mutex<Engine>>>>,
                rejected: Arc<AtomicU64>, next_id: Arc<AtomicU64>,
                seq_len: usize) -> Result<()> {
@@ -171,10 +177,13 @@ fn handle_conn(stream: TcpStream, queue: Arc<BoundedQueue<Request>>,
         let msg = line.trim_end();
         if let Some(text) = msg.strip_prefix("INFER ") {
             let ids = vocab.encode(text, seq_len);
+            // Affinity routing: similar token prefixes sketch to the same
+            // bucket, so they meet in the same batch downstream.
+            let bucket = bucket_for(&ids, queue.num_buckets());
             let (req, rx) =
                 Request::new(next_id.fetch_add(1, Ordering::SeqCst), ids);
             let t0 = std::time::Instant::now();
-            if queue.try_push(req).is_err() {
+            if queue.try_push(bucket, req).is_err() {
                 rejected.fetch_add(1, Ordering::Relaxed);
                 writeln!(out, "ERR overloaded")?;
                 continue;
@@ -190,12 +199,16 @@ fn handle_conn(stream: TcpStream, queue: Arc<BoundedQueue<Request>>,
                 Err(_) => writeln!(out, "ERR timeout")?,
             }
         } else if msg == "STATS" {
-            // Aggregate the replica fleet into one report.
+            // Aggregate the replica fleet into one report, then stamp on
+            // the router-level affinity gauges (shared, not per-replica).
             let mut agg = EngineMetrics::new();
             for engine in engines.iter() {
                 agg.absorb(&engine.lock().unwrap().metrics);
             }
             agg.rejected += rejected.load(Ordering::Relaxed);
+            let router = queue.stats();
+            agg.steals = router.steals;
+            agg.queue_depths = router.depths;
             writeln!(out, "STATS {}", agg.report())?;
         } else if msg == "QUIT" {
             writeln!(out, "BYE")?;

@@ -227,6 +227,53 @@ fn warm_state_survives_restart_at_full_hit_rate() {
     );
 }
 
+/// Satellite regression (skips without artifacts): a shape-mismatched
+/// shared tier must not be rejected when `level = off` discards the tier
+/// anyway — a baseline A/B run over a foreign warm snapshot has to come
+/// up, it just must not consult (or mutate) the tier.
+#[test]
+fn off_level_accepts_mismatched_tier_with_artifacts() {
+    use attmemo::bench_support::workload;
+
+    let Ok(rt) = workload::open_runtime() else {
+        eprintln!("SKIP (no artifacts)");
+        return;
+    };
+    let seq_len = rt.artifacts().serving_seq_len;
+    let memo_on = MemoConfig {
+        level: MemoLevel::Aggressive,
+        online_admission: true,
+        ..MemoConfig::default()
+    };
+    // A tier built for a *different* model shape (our hermetic cfg(), not
+    // the artifact family): wrong layer count, seq_len and embed dim.
+    let foreign = Arc::new(MemoTier::new(&cfg(), SEQ, HnswParams::default(),
+                                         &memo_on));
+
+    // With memoization on, the mismatch must still be rejected loudly.
+    let memo_live = MemoConfig { level: MemoLevel::Aggressive,
+                                 ..MemoConfig::default() };
+    assert!(
+        workload::engine_with_tier(&rt, "bert", seq_len, memo_live, None,
+                                   foreign.clone())
+            .is_err(),
+        "a used tier with the wrong shape must not be accepted"
+    );
+
+    // With level = off the tier is unused: construction must succeed and
+    // inference must run the pure baseline.
+    let memo_off = MemoConfig { level: MemoLevel::Off,
+                                ..MemoConfig::default() };
+    let mut engine = workload::engine_with_tier(
+        &rt, "bert", seq_len, memo_off, None, foreign.clone())
+        .expect("level=off must ignore the unused tier's shape");
+    assert!(engine.online().is_none(), "off level must drop the tier");
+    let (ids, _) = workload::test_workload(&rt, "bert", seq_len, 4).unwrap();
+    let out = engine.infer(&ids).unwrap();
+    assert!(out.memo_hits.iter().all(|&h| h == 0));
+    assert_eq!(foreign.total_entries(), 0, "tier must stay untouched");
+}
+
 /// Two real engine replicas over one shared tier (skips without
 /// artifacts): replica B must start hot from entries replica A admitted,
 /// and both replicas must be able to infer concurrently.
