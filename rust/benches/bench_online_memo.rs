@@ -10,15 +10,28 @@
 //!   runs, no artifacts needed: per-epoch hit rate from 0% to steady
 //!   state, occupancy vs the budget, eviction churn, and lookup+admit
 //!   latency;
+//! * a **shared-tier read-scaling** section (1→4 reader threads on one
+//!   warmed tier);
+//! * an **affinity A/B** (8 buckets vs 1 on a clustered workload) and a
+//!   **signature A/B** (semantic SimHash vs prefix min-hash on a
+//!   *paraphrase-clustered* workload, where word order scatters the
+//!   min-hash but not the meaning) — both through the real router +
+//!   `form_batch` + shared tier;
 //! * an **end-to-end cold engine** over the real test workload when
 //!   artifacts are present (skipped otherwise, like every runtime bench).
+//!
+//! With `BENCH_SMOKE=1` every section runs a capped short mode and the
+//! headline numbers (latency, hit rate, dedup yields) land in
+//! `BENCH_smoke.json` — the artifact CI uploads on every PR.
 
 use attmemo::bench_support::harness::time_ms;
-use attmemo::bench_support::TableWriter;
+use attmemo::bench_support::{smoke, SmokeSummary, TableWriter};
 use attmemo::config::{MemoLevel, ModelConfig};
 use attmemo::memo::index::HnswParams;
 use attmemo::memo::policy::AdmissionPolicy;
+use attmemo::memo::semhash::SemanticSketcher;
 use attmemo::memo::AttentionDb;
+use attmemo::serving::affinity::Signer;
 use attmemo::util::Pcg32;
 
 fn sim_cfg() -> ModelConfig {
@@ -51,9 +64,11 @@ fn unit_vec(rng: &mut Pcg32, dim: usize) -> Vec<f32> {
 }
 
 /// Simulated serve loop at the memoization layer: clustered queries, a
-/// threshold, admission with a per-layer budget.
+/// threshold, admission with a per-layer budget. Returns the final
+/// epoch's hit rate and the mean lookup latency for the smoke summary.
 fn simulate(capacity: usize, clusters: usize, epochs: usize,
-            queries: usize, threshold: f32, table: &mut TableWriter) {
+            queries: usize, threshold: f32,
+            table: &mut TableWriter) -> (f64, f64) {
     let cfg = sim_cfg();
     let seq = 32usize;
     let elems = cfg.apm_elems(seq);
@@ -65,6 +80,8 @@ fn simulate(capacity: usize, clusters: usize, epochs: usize,
 
     let mut attempts = 0u64;
     let mut evictions = 0u64;
+    let mut last_rate = 0.0f64;
+    let mut mean_lookup_ms = 0.0f64;
     for epoch in 0..epochs {
         let mut hits = 0usize;
         let mut lookup_ms = 0.0f64;
@@ -98,16 +115,19 @@ fn simulate(capacity: usize, clusters: usize, epochs: usize,
             assert!(capacity == 0 || db.layer(0).len() <= capacity,
                     "occupancy exceeded the budget");
         }
+        last_rate = hits as f64 / queries as f64;
+        mean_lookup_ms = lookup_ms / queries as f64;
         table.row(&[
             capacity.to_string(),
             epoch.to_string(),
-            format!("{:.3}", hits as f64 / queries as f64),
+            format!("{last_rate:.3}"),
             db.layer(0).len().to_string(),
             evictions.to_string(),
-            format!("{:.4}", lookup_ms / queries as f64),
+            format!("{mean_lookup_ms:.4}"),
             format!("{:.4}", admit_ms / queries.max(1) as f64),
         ]);
     }
+    (last_rate, mean_lookup_ms)
 }
 
 fn run_engine_section() -> attmemo::Result<()> {
@@ -125,7 +145,7 @@ fn run_engine_section() -> attmemo::Result<()> {
     let capacity = 128;
     let mut engine = workload::cold_engine(
         &rt, "bert", seq_len, MemoLevel::Aggressive, capacity, 0)?;
-    for epoch in 0..4 {
+    for epoch in 0..smoke::iters(4, 2) {
         let r = evaluate(&mut engine, &ids, &labels, 8, false)?;
         table.row(&[
             epoch.to_string(),
@@ -152,8 +172,9 @@ fn run_engine_section() -> attmemo::Result<()> {
 /// Shared-tier read scaling: one warmed `MemoTier`, 1..=4 reader threads
 /// doing lookup+fetch concurrently. Under the old engine-mutex design
 /// these lookups serialized; on the shard `RwLock` they run in parallel,
-/// so aggregate lookups/sec should grow with the thread count.
-fn shared_tier_section(table: &mut TableWriter) {
+/// so aggregate lookups/sec should grow with the thread count. Returns
+/// the 4-thread lookups/sec for the smoke summary.
+fn shared_tier_section(table: &mut TableWriter) -> f64 {
     use attmemo::config::MemoConfig;
     use attmemo::memo::MemoTier;
     use std::sync::Arc;
@@ -179,7 +200,8 @@ fn shared_tier_section(table: &mut TableWriter) {
         .collect();
     tier.admit_batch(0, &rows, 2.0, 48).unwrap();
 
-    const LOOKUPS_PER_THREAD: usize = 2000;
+    let lookups_per_thread = smoke::iters(2000, 200);
+    let mut last_rate = 0.0f64;
     for threads in [1usize, 2, 4] {
         let t0 = std::time::Instant::now();
         let mut handles = Vec::new();
@@ -189,7 +211,7 @@ fn shared_tier_section(table: &mut TableWriter) {
             handles.push(std::thread::spawn(move || {
                 let mut dst = vec![0.0f32; elems];
                 let mut hits = 0usize;
-                for i in 0..LOOKUPS_PER_THREAD {
+                for i in 0..lookups_per_thread {
                     let q = &entries[(i * (t + 1)) % entries.len()];
                     if tier.lookup_fetch(0, q, 48, 0.9, &mut dst).is_some()
                     {
@@ -202,15 +224,17 @@ fn shared_tier_section(table: &mut TableWriter) {
         let hits: usize =
             handles.into_iter().map(|h| h.join().unwrap()).sum();
         let secs = t0.elapsed().as_secs_f64();
-        let total = threads * LOOKUPS_PER_THREAD;
+        let total = threads * lookups_per_thread;
+        last_rate = total as f64 / secs;
         table.row(&[
             threads.to_string(),
             total.to_string(),
             format!("{:.3}", hits as f64 / total as f64),
             format!("{:.1}", secs * 1e3),
-            format!("{:.0}", total as f64 / secs),
+            format!("{last_rate:.0}"),
         ]);
     }
+    last_rate
 }
 
 /// Outcome of one affinity A/B arm over the full run.
@@ -229,16 +253,24 @@ struct AbOutcome {
 /// drained by two alternating replica batchers via `form_batch`, each
 /// batch looked up against — and its misses admitted into — one shared
 /// `MemoTier` with intra-batch dedup on.
-fn run_affinity_arm(buckets: usize, table: &mut TableWriter) -> AbOutcome {
+///
+/// Two workload shapes share the machinery:
+/// * `paraphrase = false` — every cluster has one fixed token prefix;
+///   requests edit the tail token (the near-duplicate workload the
+///   min-hash was built for);
+/// * `paraphrase = true` — every cluster is a *bag* of tokens and each
+///   request is a fresh permutation of it (same meaning, new word
+///   order): the workload where only a feature-space signature keeps a
+///   cluster in one bucket.
+fn run_affinity_arm(label: &str, signer: &Signer, buckets: usize,
+                    paraphrase: bool, table: &mut TableWriter) -> AbOutcome {
     use attmemo::config::MemoConfig;
     use attmemo::memo::MemoTier;
-    use attmemo::serving::affinity::{bucket_for, AffinityRouter};
+    use attmemo::serving::affinity::AffinityRouter;
     use attmemo::serving::batcher::form_batch;
     use std::time::Duration;
 
     const CLUSTERS: usize = 8;
-    const PER_CLUSTER: usize = 16; // requests per cluster per epoch
-    const EPOCHS: usize = 4;
     const REPLICAS: usize = 2;
     const MAX_BATCH: usize = 16;
     const THRESHOLD: f32 = 0.8;
@@ -246,6 +278,8 @@ fn run_affinity_arm(buckets: usize, table: &mut TableWriter) -> AbOutcome {
     // row per cluster serves the whole cluster, making the steady state
     // identical across arms — the A/B then isolates the dedup yield.
     const NOISE: f32 = 0.005;
+    let per_cluster = smoke::iters(16, 8); // requests per cluster per epoch
+    let epochs = smoke::iters(4, 2);
 
     let cfg = sim_cfg();
     let seq = 32usize;
@@ -264,28 +298,42 @@ fn run_affinity_arm(buckets: usize, table: &mut TableWriter) -> AbOutcome {
     let mut rng = Pcg32::seeded(61);
     let centres: Vec<Vec<f32>> =
         (0..CLUSTERS).map(|_| unit_vec(&mut rng, cfg.embed_dim)).collect();
-    // Each cluster's token prefix: what the signature sketches on.
+    // Each cluster's tokens: a fixed prefix (tail-edit workload) or a
+    // disjoint 24-token bag (paraphrase workload; the bags stay inside
+    // the 256-token vocab the semantic sketcher is built for).
     let prefixes: Vec<Vec<i32>> = (0..CLUSTERS)
-        .map(|_| (0..seq).map(|_| 4 + (rng.next_u32() % 250) as i32).collect())
+        .map(|c| {
+            if paraphrase {
+                (0..24).map(|j| 4 + (c as i32) * 24 + j).collect()
+            } else {
+                (0..seq)
+                    .map(|_| 4 + (rng.next_u32() % 250) as i32)
+                    .collect()
+            }
+        })
         .collect();
 
     let apm = vec![1.0f32; elems];
     let (mut offered, mut dedup) = (0u64, 0u64);
     let (mut steady_hits, mut steady_attempts) = (0u64, 0u64);
-    for epoch in 0..EPOCHS {
+    for epoch in 0..epochs {
         // Arrival order interleaves the clusters, so the no-affinity
         // baseline forms mixed batches (the scatter the router fixes).
-        for _wave in 0..PER_CLUSTER {
+        for _wave in 0..per_cluster {
             for c in 0..CLUSTERS {
                 let mut ids = prefixes[c].clone();
-                let last = ids.len() - 1;
-                ids[last] = 4 + (rng.next_u32() % 250) as i32; // tail edit
+                if paraphrase {
+                    rng.shuffle(&mut ids); // same words, new order
+                } else {
+                    let last = ids.len() - 1;
+                    ids[last] = 4 + (rng.next_u32() % 250) as i32;
+                }
                 let mut f = centres[c].clone();
                 for x in f.iter_mut() {
                     *x += NOISE * rng.next_gaussian();
                 }
                 normalize(&mut f);
-                router.push(bucket_for(&ids, buckets), (c, f)).unwrap();
+                router.push(signer.sign(&ids), (c, f)).unwrap();
             }
         }
         let (mut ep_hits, mut ep_attempts) = (0u64, 0u64);
@@ -329,7 +377,7 @@ fn run_affinity_arm(buckets: usize, table: &mut TableWriter) -> AbOutcome {
             steady_attempts += ep_attempts;
         }
         table.row(&[
-            if buckets > 1 { "on" } else { "off" }.to_string(),
+            label.to_string(),
             buckets.to_string(),
             epoch.to_string(),
             format!("{:.3}", ep_hits as f64 / ep_attempts.max(1) as f64),
@@ -355,9 +403,10 @@ fn run_affinity_arm(buckets: usize, table: &mut TableWriter) -> AbOutcome {
 /// twin; the scattered baseline spends admissions on every batch instead.
 /// Steady-state hit rate must not regress — one stored row per cluster
 /// serves either arm.
-fn affinity_ab_section(table: &mut TableWriter) {
-    let on = run_affinity_arm(8, table);
-    let off = run_affinity_arm(1, table);
+fn affinity_ab_section(table: &mut TableWriter) -> (AbOutcome, AbOutcome) {
+    let signer = Signer::prefix(32);
+    let on = run_affinity_arm("on", &signer, 8, false, table);
+    let off = run_affinity_arm("off", &signer, 1, false, table);
     println!(
         "affinity A/B: yield on={:.3} ({}/{} rows, steals={}) \
          off={:.3} ({}/{} rows, steals={}); steady hit rate on={:.3} \
@@ -377,10 +426,56 @@ fn affinity_ab_section(table: &mut TableWriter) {
         "affinity must not lower the warm hit rate: on {:.3} vs off {:.3}",
         on.steady_hit_rate, off.steady_hit_rate
     );
+    (on, off)
+}
+
+/// A/B: semantic vs prefix signatures, same 8-bucket router, over the
+/// *paraphrase* workload (every request permutes its cluster's token
+/// bag). The min-hash sketches word order, so paraphrases scatter across
+/// buckets and batches come out mixed; the semantic SimHash sketches the
+/// bag through the embedding table, so a cluster stays in one bucket —
+/// strictly more of the offered miss rows dedup against a same-batch
+/// twin, with no warm hit-rate regression (the tier serves both arms
+/// from one stored row per cluster either way).
+fn signature_ab_section(table: &mut TableWriter) -> (AbOutcome, AbOutcome) {
+    // A synthetic embedding table standing in for the model's `tok_emb`
+    // (the bench runs hermetically, with no artifacts).
+    let mut rng = Pcg32::seeded(97);
+    let (vocab, dim) = (256usize, 32usize);
+    let emb: Vec<f32> =
+        (0..vocab * dim).map(|_| rng.next_gaussian()).collect();
+    let semantic = Signer::semantic(
+        SemanticSketcher::new(&emb, vocab, dim, 32).unwrap());
+    let prefix = Signer::prefix(32);
+
+    let sem = run_affinity_arm("semantic", &semantic, 8, true, table);
+    let pre = run_affinity_arm("prefix", &prefix, 8, true, table);
+    println!(
+        "signature A/B (paraphrase workload): yield semantic={:.3} \
+         ({}/{} rows) prefix={:.3} ({}/{} rows); steady hit rate \
+         semantic={:.3} prefix={:.3}",
+        sem.dedup_yield, sem.dedup, sem.offered,
+        pre.dedup_yield, pre.dedup, pre.offered,
+        sem.steady_hit_rate, pre.steady_hit_rate,
+    );
+    assert!(
+        sem.dedup_yield > pre.dedup_yield,
+        "semantic signatures must raise the paraphrase dedup yield: \
+         semantic {:.3} vs prefix {:.3}",
+        sem.dedup_yield, pre.dedup_yield
+    );
+    assert!(
+        sem.steady_hit_rate >= pre.steady_hit_rate,
+        "semantic signatures must not lower the warm hit rate: \
+         semantic {:.3} vs prefix {:.3}",
+        sem.steady_hit_rate, pre.steady_hit_rate
+    );
+    (sem, pre)
 }
 
 fn main() {
     attmemo::util::logger::init();
+    let mut summary = SmokeSummary::new();
 
     let mut table = TableWriter::new(
         "Online memoization warm-up — memo-layer simulation \
@@ -388,32 +483,56 @@ fn main() {
         &["capacity", "epoch", "hit_rate", "occupancy", "evictions",
           "lookup_ms", "admit_ms"],
     );
+    let epochs = smoke::iters(5, 2);
+    let queries = smoke::iters(256, 64);
     // Comfortable budget: warms to ~100% hits, no churn.
-    simulate(64, 8, 5, 256, 0.8, &mut table);
+    let (warm_rate, lookup_ms) =
+        simulate(64, 8, epochs, queries, 0.8, &mut table);
     // Tight budget (below the working set): bounded occupancy, eviction
     // churn, degraded steady state — the knob's failure mode, quantified.
-    simulate(4, 8, 5, 256, 0.8, &mut table);
+    simulate(4, 8, epochs, queries, 0.8, &mut table);
     table.emit(Some(std::path::Path::new(
         "bench_results/online_memo_sim.csv")));
+    summary.push("sim_warm_hit_rate", warm_rate);
+    summary.push("sim_lookup_ms_mean", lookup_ms);
 
     let mut shared = TableWriter::new(
         "Shared memo tier — concurrent readers on one warmed tier \
          (256 entries, exact-match queries)",
         &["threads", "lookups", "hit_rate", "wall_ms", "lookups_per_s"],
     );
-    shared_tier_section(&mut shared);
+    let lookups_per_s = shared_tier_section(&mut shared);
     shared.emit(Some(std::path::Path::new(
         "bench_results/online_memo_shared_tier.csv")));
+    summary.push("shared_tier_lookups_per_s_4t", lookups_per_s);
 
     let mut ab = TableWriter::new(
         "Affinity routing A/B — clustered workload, 2 replicas, \
          shared tier (dedup on)",
-        &["affinity", "buckets", "epoch", "hit_rate", "offered",
+        &["arm", "buckets", "epoch", "hit_rate", "offered",
           "dedup_skips", "dedup_yield", "steals"],
     );
-    affinity_ab_section(&mut ab);
+    let (aff_on, aff_off) = affinity_ab_section(&mut ab);
     ab.emit(Some(std::path::Path::new(
         "bench_results/online_memo_affinity_ab.csv")));
+    summary.push("dedup_yield_affinity_on", aff_on.dedup_yield);
+    summary.push("dedup_yield_affinity_off", aff_off.dedup_yield);
+
+    let mut sig_ab = TableWriter::new(
+        "Signature A/B — semantic vs prefix on the paraphrase-clustered \
+         workload (8 buckets, 2 replicas, dedup on)",
+        &["arm", "buckets", "epoch", "hit_rate", "offered",
+          "dedup_skips", "dedup_yield", "steals"],
+    );
+    let (sem, pre) = signature_ab_section(&mut sig_ab);
+    sig_ab.emit(Some(std::path::Path::new(
+        "bench_results/online_memo_signature_ab.csv")));
+    summary.push("dedup_yield_semantic", sem.dedup_yield);
+    summary.push("dedup_yield_prefix", pre.dedup_yield);
+    summary.push("steady_hit_rate_semantic", sem.steady_hit_rate);
+    summary.push("steady_hit_rate_prefix", pre.steady_hit_rate);
+
+    summary.emit(std::path::Path::new("BENCH_smoke.json"));
 
     match run_engine_section() {
         Ok(()) => {}

@@ -32,11 +32,16 @@ pub fn bench_fn<F: FnMut()>(name: &str, warmup: usize, budget_ms: f64,
     for _ in 0..warmup {
         f();
     }
-    // Pilot run to size the iteration count.
+    // Pilot run to size the iteration count. BENCH_SMOKE caps it so the
+    // CI smoke job touches every case without paying full budgets.
     let t0 = Instant::now();
     f();
     let pilot_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let iters = ((budget_ms / pilot_ms.max(1e-6)) as usize).clamp(3, 1000);
+    let iters = if crate::bench_support::smoke::smoke() {
+        3
+    } else {
+        ((budget_ms / pilot_ms.max(1e-6)) as usize).clamp(3, 1000)
+    };
 
     let mut s = Summary::new();
     s.record(pilot_ms);

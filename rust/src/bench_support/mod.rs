@@ -1,10 +1,13 @@
 //! Benchmark scaffolding: a criterion-free timing harness, aligned table
-//! printing (paper-table style output), and shared workload setup used by
-//! every `benches/bench_*.rs` target.
+//! printing (paper-table style output), shared workload setup used by
+//! every `benches/bench_*.rs` target, and the `BENCH_SMOKE` short mode
+//! CI runs to seed the perf trajectory (`BENCH_smoke.json`).
 
 pub mod harness;
+pub mod smoke;
 pub mod tables;
 pub mod workload;
 
 pub use harness::{bench_fn, BenchResult};
+pub use smoke::SmokeSummary;
 pub use tables::TableWriter;

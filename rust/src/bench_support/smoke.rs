@@ -1,0 +1,97 @@
+//! `BENCH_SMOKE` support: the short CI bench mode and its JSON summary.
+//!
+//! CI's `bench-smoke` job runs the bench binaries with `BENCH_SMOKE=1`,
+//! which caps iteration counts (via [`iters`] and the harness) so the
+//! whole suite finishes in seconds, and uploads the [`SmokeSummary`]
+//! emitted as `BENCH_smoke.json` — the per-PR perf trajectory (latency,
+//! hit-rate and dedup-yield headline numbers) that full local runs also
+//! refresh.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Whether the `BENCH_SMOKE` env var asks for the short smoke mode
+/// (any non-empty value other than `0`).
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+/// Pick `full` normally, `short` under `BENCH_SMOKE`.
+pub fn iters(full: usize, short: usize) -> usize {
+    if smoke() { short } else { full }
+}
+
+/// Flat key → number summary collected by a bench run and emitted as
+/// `BENCH_smoke.json`.
+#[derive(Default)]
+pub struct SmokeSummary {
+    entries: Vec<(String, f64)>,
+}
+
+impl SmokeSummary {
+    /// Empty summary.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one headline metric.
+    pub fn push(&mut self, key: &str, value: f64) {
+        self.entries.push((key.to_string(), value));
+    }
+
+    /// Render the summary as a flat JSON object.
+    pub fn json(&self) -> String {
+        let mut out = String::from("{\n");
+        let head_comma = if self.entries.is_empty() { "" } else { "," };
+        let _ = writeln!(out, "  \"smoke\": {}{head_comma}", smoke());
+        for (i, (k, v)) in self.entries.iter().enumerate() {
+            let comma = if i + 1 == self.entries.len() { "" } else { "," };
+            if v.is_finite() {
+                let _ = writeln!(out, "  \"{k}\": {v:.6}{comma}");
+            } else {
+                let _ = writeln!(out, "  \"{k}\": null{comma}");
+            }
+        }
+        out.push('}');
+        out.push('\n');
+        out
+    }
+
+    /// Write the JSON summary to `path` (warns instead of failing — a
+    /// bench run must not die on an unwritable results file).
+    pub fn emit(&self, path: &Path) {
+        if let Err(e) = std::fs::write(path, self.json()) {
+            eprintln!("warn: could not write {}: {e}", path.display());
+        } else {
+            println!("smoke summary → {}", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_renders_flat_json() {
+        let mut s = SmokeSummary::new();
+        s.push("warm_hit_rate", 0.9375);
+        s.push("dedup_yield_semantic", 0.5);
+        let j = s.json();
+        assert!(j.contains("\"warm_hit_rate\": 0.937500"), "{j}");
+        assert!(j.contains("\"dedup_yield_semantic\": 0.500000"), "{j}");
+        assert!(j.trim_start().starts_with('{'));
+        assert!(j.trim_end().ends_with('}'));
+        // The last metric line carries no trailing comma.
+        assert!(j.contains("0.500000\n}"), "{j}");
+    }
+
+    #[test]
+    fn non_finite_values_become_null() {
+        let mut s = SmokeSummary::new();
+        s.push("bad", f64::NAN);
+        assert!(s.json().contains("\"bad\": null"));
+    }
+}

@@ -14,7 +14,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::bench_support::workload;
-use crate::config::{MemoConfig, MemoLevel, ServingConfig};
+use crate::config::{MemoConfig, MemoLevel, ServingConfig, SignatureMode};
 use crate::data::tokenizer::Vocab;
 use crate::eval::evaluate;
 use crate::memo::tier::MemoTier;
@@ -124,12 +124,29 @@ ONLINE MEMOIZATION (serve/eval)
 AFFINITY ROUTING (serve)
   --affinity-buckets N  similarity-affinity buckets in front of the
                         batchers (default 8; also --set
-                        affinity_buckets=N): requests with similar token
-                        prefixes land in one bucket and batch together,
-                        raising the intra-batch dedup yield; idle
-                        batchers steal from the fullest bucket so skewed
-                        traffic starves no replica
-  --no-affinity         single FIFO bucket (affinity routing off)
+                        affinity_buckets=N): requests that sketch alike
+                        land in one bucket and batch together, raising
+                        the intra-batch dedup yield; idle batchers steal
+                        from the fullest bucket so skewed traffic
+                        starves no replica
+  --no-affinity         single FIFO bucket (affinity routing off; also
+                        pins the bucket count — overrides
+                        --adaptive-buckets)
+  --signature-mode M    how requests sketch into buckets: `prefix`
+                        (token min-hash, the default) or `semantic`
+                        (SimHash over mean-pooled embedding-table rows,
+                        so paraphrases share a bucket; falls back to
+                        prefix when no embedding table is loaded)
+  --signature-prefix-len N
+                        non-pad prefix tokens both signature modes
+                        sketch over (default 32; also --set
+                        signature_prefix_len=N)
+  --adaptive-buckets    let the router grow/shrink the bucket space
+                        (power-of-two, drain-and-requeue epochs) when
+                        the steal rate or occupancy skew shows the
+                        partition fighting the traffic
+                        (--set affinity_max_buckets=N caps growth,
+                        default 64)
 
 SHARED MEMO TIER (serve/eval)
   --replicas N          engine replicas pulling from one request queue;
@@ -281,8 +298,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.affinity_buckets = args
         .opt_usize("affinity-buckets", cfg.affinity_buckets)?
         .max(1);
+    if let Some(mode) = args.opt("signature-mode") {
+        cfg.signature_mode = SignatureMode::parse(mode)?;
+    }
+    cfg.signature_prefix_len = args
+        .opt_usize("signature-prefix-len", cfg.signature_prefix_len)?
+        .max(1);
+    if args.flag("adaptive-buckets") {
+        cfg.affinity_adaptive = true;
+    }
     if args.flag("no-affinity") {
+        // The documented contract is a single shared FIFO: pin the
+        // bucket count too, or adaptive growth would quietly re-enable
+        // affinity routing after one steal-heavy window.
         cfg.affinity_buckets = 1;
+        cfg.affinity_adaptive = false;
     }
     let memo = parse_memo(args, level)?;
     let built = load_or_build_db(args, &rt, &family, cfg.seq_len, level)?;
@@ -489,6 +519,22 @@ mod tests {
         .unwrap();
         assert_eq!(a.opt_usize("affinity-buckets", 8).unwrap(), 4);
         assert!(a.flag("no-affinity"));
+    }
+
+    #[test]
+    fn signature_flags_parse() {
+        let a = Args::parse(&argv(&[
+            "serve", "--signature-mode", "semantic",
+            "--signature-prefix-len", "16", "--adaptive-buckets",
+        ]))
+        .unwrap();
+        assert_eq!(a.opt("signature-mode"), Some("semantic"));
+        assert_eq!(
+            SignatureMode::parse(a.opt("signature-mode").unwrap()).unwrap(),
+            SignatureMode::Semantic
+        );
+        assert_eq!(a.opt_usize("signature-prefix-len", 32).unwrap(), 16);
+        assert!(a.flag("adaptive-buckets"));
     }
 
     #[test]

@@ -103,6 +103,44 @@ impl MemoLevel {
         [MemoLevel::Conservative, MemoLevel::Moderate, MemoLevel::Aggressive];
 }
 
+/// How serving requests are sketched into affinity signatures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SignatureMode {
+    /// Min-hash over token-bigram sets of the non-pad prefix. Cheap and
+    /// model-free, but order-sensitive: paraphrases (same words, new
+    /// order) sketch to unrelated signatures.
+    Prefix,
+    /// SimHash over the mean-pooled embedding-table rows of the non-pad
+    /// prefix: a bag-of-words sketch in the model's own embedding space,
+    /// so word-order variants and near-paraphrases share a bucket. Falls
+    /// back to `Prefix` when no embedding table is loaded.
+    Semantic,
+}
+
+impl SignatureMode {
+    /// Parse a CLI/`--set` value.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "prefix" | "minhash" => SignatureMode::Prefix,
+            "semantic" | "embedding" => SignatureMode::Semantic,
+            other => {
+                return Err(Error::config(format!(
+                    "unknown signature mode {other:?} \
+                     (want prefix|semantic)"
+                )))
+            }
+        })
+    }
+
+    /// Canonical name (round-trips through [`SignatureMode::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SignatureMode::Prefix => "prefix",
+            SignatureMode::Semantic => "semantic",
+        }
+    }
+}
+
 /// Memoization options for the engine.
 #[derive(Debug, Clone)]
 pub struct MemoConfig {
@@ -176,6 +214,22 @@ pub struct ServingConfig {
     /// the intra-batch dedup yield. `1` = a single FIFO bucket, i.e.
     /// affinity routing off (`--no-affinity`).
     pub affinity_buckets: usize,
+    /// How requests are sketched into affinity signatures
+    /// (`--signature-mode prefix|semantic`). Semantic mode buckets by
+    /// meaning through the model's embedding table and falls back to the
+    /// prefix min-hash when no table is loaded.
+    pub signature_mode: SignatureMode,
+    /// Non-pad prefix tokens both signature modes sketch over
+    /// (`--signature-prefix-len`, `--set signature_prefix_len=N`).
+    pub signature_prefix_len: usize,
+    /// Let the router adaptively grow/shrink the bucket space
+    /// (power-of-two, drain-and-requeue) when the observed steal rate or
+    /// bucket-occupancy skew shows the partition fighting the traffic
+    /// (`--adaptive-buckets`).
+    pub affinity_adaptive: bool,
+    /// Upper bound on adaptive bucket growth
+    /// (`--set affinity_max_buckets=N`).
+    pub affinity_max_buckets: usize,
 }
 
 impl Default for ServingConfig {
@@ -189,6 +243,10 @@ impl Default for ServingConfig {
             io_threads: 2,
             replicas: 1,
             affinity_buckets: 8,
+            signature_mode: SignatureMode::Prefix,
+            signature_prefix_len: 32,
+            affinity_adaptive: false,
+            affinity_max_buckets: 64,
         }
     }
 }
@@ -207,6 +265,18 @@ impl ServingConfig {
             "affinity_buckets" => {
                 self.affinity_buckets = parse_num(key, value)?.max(1)
             }
+            "signature_mode" => {
+                self.signature_mode = SignatureMode::parse(value)?
+            }
+            "signature_prefix_len" => {
+                self.signature_prefix_len = parse_num(key, value)?.max(1)
+            }
+            "affinity_adaptive" => {
+                self.affinity_adaptive = parse_bool(key, value)?
+            }
+            "affinity_max_buckets" => {
+                self.affinity_max_buckets = parse_num(key, value)?.max(1)
+            }
             other => {
                 return Err(Error::config(format!(
                     "unknown serving option {other:?}"
@@ -221,6 +291,16 @@ fn parse_num(key: &str, value: &str) -> Result<usize> {
     value
         .parse()
         .map_err(|_| Error::config(format!("{key}: bad number {value:?}")))
+}
+
+fn parse_bool(key: &str, value: &str) -> Result<bool> {
+    match value {
+        "1" | "true" | "on" | "yes" => Ok(true),
+        "0" | "false" | "off" | "no" => Ok(false),
+        other => {
+            Err(Error::config(format!("{key}: bad bool {other:?}")))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -278,5 +358,37 @@ mod tests {
                    "bucket count clamps to at least one");
         assert!(s.set("nope", "1").is_err());
         assert!(s.set("max_batch", "x").is_err());
+    }
+
+    #[test]
+    fn signature_and_adaptive_overrides() {
+        let mut s = ServingConfig::default();
+        assert_eq!(s.signature_mode, SignatureMode::Prefix);
+        assert_eq!(s.signature_prefix_len, 32);
+        assert!(!s.affinity_adaptive);
+        s.set("signature_mode", "semantic").unwrap();
+        assert_eq!(s.signature_mode, SignatureMode::Semantic);
+        s.set("signature_mode", "minhash").unwrap();
+        assert_eq!(s.signature_mode, SignatureMode::Prefix);
+        assert!(s.set("signature_mode", "quantum").is_err());
+        s.set("signature_prefix_len", "0").unwrap();
+        assert_eq!(s.signature_prefix_len, 1, "prefix length clamps to 1");
+        s.set("signature_prefix_len", "48").unwrap();
+        assert_eq!(s.signature_prefix_len, 48);
+        s.set("affinity_adaptive", "true").unwrap();
+        assert!(s.affinity_adaptive);
+        s.set("affinity_adaptive", "0").unwrap();
+        assert!(!s.affinity_adaptive);
+        assert!(s.set("affinity_adaptive", "maybe").is_err());
+        s.set("affinity_max_buckets", "128").unwrap();
+        assert_eq!(s.affinity_max_buckets, 128);
+    }
+
+    #[test]
+    fn signature_mode_roundtrip() {
+        for m in [SignatureMode::Prefix, SignatureMode::Semantic] {
+            assert_eq!(SignatureMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(SignatureMode::parse("bogus").is_err());
     }
 }

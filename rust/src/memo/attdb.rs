@@ -51,6 +51,10 @@ struct ReuseTrack {
     /// Clock reference counters (second-chance bits, saturating at 3):
     /// bumped on reuse, decayed by the eviction clock.
     refs: Vec<u8>,
+    /// 1 when the entry was admitted or reused since the last warm
+    /// snapshot; `save_warm` persists only warm entries and clears the
+    /// bits afterwards (the snapshot compaction policy).
+    warm: Vec<u8>,
 }
 
 /// Don't bother compacting tombstones below this id-space size — small
@@ -86,6 +90,7 @@ impl LayerDb {
         let mut track = self.reuse.lock().unwrap();
         track.counts.push(0);
         track.refs.push(0);
+        track.warm.push(1); // fresh entries survive their first snapshot
         Ok(id)
     }
 
@@ -154,6 +159,7 @@ impl LayerDb {
                 let i = id.0 as usize;
                 track.counts.push(old.counts.get(i).copied().unwrap_or(0));
                 track.refs.push(old.refs.get(i).copied().unwrap_or(0));
+                track.warm.push(old.warm.get(i).copied().unwrap_or(1));
             }
         }
         self.arena = arena;
@@ -230,6 +236,9 @@ impl LayerDb {
         if let Some(r) = track.refs.get_mut(i) {
             *r = (*r + 1).min(3);
         }
+        if let Some(w) = track.warm.get_mut(i) {
+            *w = 1;
+        }
     }
 
     /// The layer's APM payload arena.
@@ -261,6 +270,36 @@ impl LayerDb {
     /// reloaded snapshot keeps its eviction ordering).
     pub fn reuse_refs(&self) -> Vec<u8> {
         self.reuse.lock().unwrap().refs.clone()
+    }
+
+    /// Per-id "admitted or reused since the last warm snapshot" bits —
+    /// the snapshot compaction signal: `save_warm` skips entries whose
+    /// bit is 0 (idle since the previous snapshot) instead of persisting
+    /// them.
+    pub fn warm_bits(&self) -> Vec<u8> {
+        self.reuse.lock().unwrap().warm.clone()
+    }
+
+    /// Start a new snapshot epoch: clear every since-last-snapshot bit.
+    /// Takes `&self` so it runs under the shard read lock like
+    /// `mark_reused`.
+    pub fn clear_warm_bits(&self) {
+        self.reuse.lock().unwrap().warm.fill(0);
+    }
+
+    /// Clear the since-last-snapshot bits of exactly `ids` — the entries
+    /// a snapshot just serialized. `save_warm` calls this under the same
+    /// shard read lock it serialized under, so an entry admitted or
+    /// re-warmed concurrently (which never appears in `ids`) keeps its
+    /// bit and survives into the *next* snapshot — preserving the
+    /// one-snapshot grace period.
+    pub fn clear_warm_bits_for(&self, ids: &[ApmId]) {
+        let mut track = self.reuse.lock().unwrap();
+        for id in ids {
+            if let Some(w) = track.warm.get_mut(id.0 as usize) {
+                *w = 0;
+            }
+        }
     }
 
     /// Stored feature vector for an entry (persistence).
@@ -563,6 +602,27 @@ mod tests {
             layer.arena().get_checked(fresh.id, fresh.epoch).unwrap()[0],
             3.0
         );
+    }
+
+    #[test]
+    fn warm_bits_track_snapshot_epochs() {
+        let c = cfg();
+        let mut db = AttentionDb::new(&c, 16, HnswParams::default());
+        let f = vec![0.5; c.embed_dim];
+        let apm = vec![0.0; c.apm_elems(16)];
+        let a = db.layer_mut(0).insert(&f, &apm).unwrap();
+        let b = db.layer_mut(0).insert(&f, &apm).unwrap();
+        assert_eq!(db.layer(0).warm_bits(), vec![1, 1],
+                   "fresh entries start warm");
+        // A snapshot epoch clears the bits; only touched entries re-warm.
+        db.layer(0).clear_warm_bits();
+        assert_eq!(db.layer(0).warm_bits(), vec![0, 0]);
+        db.layer(0).mark_reused(a);
+        assert_eq!(db.layer(0).warm_bits(), vec![1, 0]);
+        let _ = b;
+        // Compaction carries the bits over with the surviving entries.
+        db.layer_mut(0).compact().unwrap();
+        assert_eq!(db.layer(0).warm_bits(), vec![1, 0]);
     }
 
     #[test]

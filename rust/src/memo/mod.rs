@@ -7,6 +7,8 @@
 //! * [`gather`] — copy vs memory-mapped APM batch gathering (§5.3).
 //! * [`index`] — the index database: HNSW over hidden-state embeddings.
 //! * [`embedder`] — runs the MLP embedding executable (§5.2).
+//! * [`semhash`] — request-time SimHash over mean-pooled embedding-table
+//!   rows (the serving router's semantic affinity signature).
 //! * [`thresholds`] — conservative/moderate/aggressive levels (Table 2).
 //! * [`policy`] — selective memoization performance model (Eq. 3, §5.4).
 //! * [`builder`] — offline DB population from the training set.
@@ -23,6 +25,7 @@ pub mod gather;
 pub mod index;
 pub mod persist;
 pub mod policy;
+pub mod semhash;
 pub mod stats;
 pub mod thresholds;
 pub mod tier;
@@ -31,5 +34,6 @@ pub use arena::{ApmArena, ApmId};
 pub use attdb::{AdmitOutcome, AttentionDb};
 pub use builder::DbBuilder;
 pub use policy::{AdmissionPolicy, LayerProfile, SelectivePolicy};
+pub use semhash::SemanticSketcher;
 pub use stats::MemoStats;
 pub use tier::{MemoTier, TierAdmitOutcome};

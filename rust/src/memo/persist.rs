@@ -39,11 +39,19 @@ const MAGIC: &[u8; 4] = b"ATDB";
 const VERSION: u32 = 2;
 
 const WARM_MAGIC: &[u8; 4] = b"ATWM";
-/// Current warm-snapshot format version. Compat policy: loaders accept
-/// exactly the versions they know how to parse (currently only 1) and
-/// reject anything newer with a clear error — a snapshot is a cache, so
+/// Current warm-snapshot format version. Version 2 kept version 1's
+/// layout byte-for-byte but changed the producer: `save_warm` now ages
+/// out entries that saw no admission or reuse since the previous
+/// snapshot (the compaction policy), so the version records which policy
+/// wrote the file. Compat policy: loaders accept exactly the versions
+/// they know how to parse (see [`WARM_COMPAT_VERSIONS`]) and reject
+/// anything newer with a clear error — a snapshot is a cache, so
 /// "rebuild by serving traffic" is always a safe fallback.
-pub const WARM_VERSION: u32 = 1;
+pub const WARM_VERSION: u32 = 2;
+
+/// Warm-snapshot versions this build can load (v1 and v2 share a
+/// layout; see `docs/PERSISTENCE.md`).
+pub const WARM_COMPAT_VERSIONS: [u32; 2] = [1, 2];
 
 fn w_u32(w: &mut impl Write, x: u32) -> Result<()> {
     w.write_all(&x.to_le_bytes())?;
@@ -262,6 +270,19 @@ pub fn load(path: &Path, cfg: &ModelConfig,
 /// and clock reference bits, plus the similarity `threshold` the engine
 /// served at (informational, echoed back by [`load_warm`]).
 ///
+/// **Compaction policy (format v2):** entries that saw no admission or
+/// reuse since the previous snapshot are aged out of the file instead of
+/// persisted — a snapshot carries the working set, not the tier's cold
+/// tail. The live tier keeps the aged-out entries (they can still hit
+/// and re-warm into the next snapshot); only the file compacts. The
+/// since-snapshot bits of exactly the serialized entries are cleared
+/// under the same shard read lock the shard was serialized under, so an
+/// entry admitted or re-warmed while *other* shards serialize keeps its
+/// bit and gets its grace period in the next snapshot. The rare loss
+/// case is a failed rename after the bits cleared (disk full): the
+/// serialized entries may then age out of the next file unless reused —
+/// sound for a cache.
+///
 /// Each shard is serialized under its read lock, so snapshots can be
 /// taken while replicas keep serving; shards are serialized one at a
 /// time, so a snapshot is per-shard (not cross-shard) consistent — fine
@@ -275,12 +296,19 @@ pub fn save_warm(tier: &MemoTier, threshold: f32, path: &Path) -> Result<()> {
     let mut tmp = path.as_os_str().to_owned();
     tmp.push(".tmp");
     let tmp = std::path::PathBuf::from(tmp);
-    write_warm(tier, threshold, &tmp)?;
+    let aged_out = write_warm(tier, threshold, &tmp)?;
     std::fs::rename(&tmp, path)?;
+    if aged_out > 0 {
+        log::info!(
+            "warm snapshot aged out {aged_out} idle entries \
+             (no reuse since the previous snapshot)"
+        );
+    }
     Ok(())
 }
 
-fn write_warm(tier: &MemoTier, threshold: f32, path: &Path) -> Result<()> {
+/// Returns how many live entries the compaction policy aged out.
+fn write_warm(tier: &MemoTier, threshold: f32, path: &Path) -> Result<u64> {
     let mut w = BufWriter::new(std::fs::File::create(path)?);
     w.write_all(WARM_MAGIC)?;
     w_u32(&mut w, WARM_VERSION)?;
@@ -290,11 +318,21 @@ fn write_warm(tier: &MemoTier, threshold: f32, path: &Path) -> Result<()> {
     w_u32(&mut w, tier.embed_dim() as u32)?;
     w_u64(&mut w, tier.capacity() as u64)?;
     w.write_all(&threshold.to_le_bytes())?;
+    let mut aged_out = 0u64;
     for li in 0..tier.num_layers() {
-        tier.read_layer(li, |layer| -> Result<()> {
-            // Live ids only: eviction holes compact away in the file and
-            // ids are reassigned densely on load.
-            let ids = layer.live_ids();
+        aged_out += tier.read_layer(li, |layer| -> Result<u64> {
+            // Live ids only (eviction holes compact away in the file and
+            // ids are reassigned densely on load), filtered by the
+            // since-last-snapshot bits: idle entries age out of the file.
+            let warm = layer.warm_bits();
+            let live = layer.live_ids();
+            let total = live.len();
+            let ids: Vec<ApmId> = live
+                .into_iter()
+                .filter(|id| {
+                    warm.get(id.0 as usize).copied().unwrap_or(1) != 0
+                })
+                .collect();
             let counts = layer.reuse_counts();
             let refs = layer.reuse_refs();
             w_u64(&mut w, ids.len() as u64)?;
@@ -311,13 +349,18 @@ fn write_warm(tier: &MemoTier, threshold: f32, path: &Path) -> Result<()> {
             for &id in &ids {
                 w.write_all(&[refs.get(id.0 as usize).copied().unwrap_or(0)])?;
             }
-            Ok(())
+            // Start the next since-snapshot epoch for exactly the
+            // serialized entries, still under this shard's read lock:
+            // concurrent reuses marked on *other* entries keep their
+            // bits (and their grace period in the next snapshot).
+            layer.clear_warm_bits_for(&ids);
+            Ok((total - ids.len()) as u64)
         })?;
     }
     // Surface write errors here instead of swallowing them in the
     // BufWriter's Drop — a partial temp file must never be renamed live.
     w.flush()?;
-    Ok(())
+    Ok(aged_out)
 }
 
 /// Load a warm snapshot saved by [`save_warm`] into a fresh [`MemoTier`]
@@ -337,10 +380,10 @@ pub fn load_warm(path: &Path, cfg: &ModelConfig, memo: &MemoConfig,
                                        path.display())));
     }
     let version = r_u32(&mut r)?;
-    if version != WARM_VERSION {
+    if !WARM_COMPAT_VERSIONS.contains(&version) {
         return Err(Error::memo(format!(
             "ATWM version {version} unsupported (this build reads \
-             {WARM_VERSION}); re-warm from traffic or re-save"
+             {WARM_COMPAT_VERSIONS:?}); re-warm from traffic or re-save"
         )));
     }
     let layers = r_u32(&mut r)? as usize;
@@ -597,6 +640,89 @@ mod tests {
         assert_eq!(loaded.layer_len(0), 2, "budget respected on load");
         let hit = loaded.lookup_fetch(0, &hot, 32, 0.99, &mut dst);
         assert!(hit.is_some(), "hottest entry must survive truncation");
+    }
+
+    /// Satellite: the second snapshot ages out entries with zero reuses
+    /// since the first one; fresh admissions and reused entries persist.
+    #[test]
+    fn save_warm_ages_out_idle_entries() {
+        let c = cfg();
+        let memo = warm_memo(16);
+        let tier = MemoTier::new(&c, 8, HnswParams::default(), &memo);
+        let mut rng = Pcg32::seeded(43);
+        let elems = c.apm_elems(8);
+        let feats: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..c.embed_dim).map(|_| rng.next_gaussian()).collect())
+            .collect();
+        for f in &feats {
+            let apm = vec![1.0f32; elems];
+            tier.admit_batch(0, &[(f.as_slice(), apm.as_slice())], 2.0, 32)
+                .unwrap();
+        }
+
+        let dir = std::env::temp_dir().join("attmemo_warm_age");
+        std::fs::create_dir_all(&dir).unwrap();
+        let first = dir.join("first.atwm");
+        save_warm(&tier, 0.8, &first).unwrap();
+        let (loaded, _) =
+            load_warm(&first, &c, &memo, HnswParams::default()).unwrap();
+        assert_eq!(loaded.total_entries(), 4,
+                   "every fresh entry survives its first snapshot");
+
+        // Between snapshots: one entry is reused, one fresh entry admits,
+        // the other three stay idle.
+        let mut dst = vec![0.0f32; elems];
+        assert!(tier
+            .lookup_fetch(0, &feats[2], 32, -10.0, &mut dst)
+            .is_some());
+        let fresh: Vec<f32> =
+            (0..c.embed_dim).map(|_| rng.next_gaussian()).collect();
+        tier.admit_batch(
+            0, &[(fresh.as_slice(), &vec![2.0f32; elems][..])], 2.0, 32)
+            .unwrap();
+
+        let second = dir.join("second.atwm");
+        save_warm(&tier, 0.8, &second).unwrap();
+        let (loaded, _) =
+            load_warm(&second, &c, &memo, HnswParams::default()).unwrap();
+        assert_eq!(loaded.total_entries(), 2,
+                   "idle entries must age out of the second snapshot");
+        // The live tier keeps everything — only the file compacts.
+        assert_eq!(tier.layer_len(0), 5);
+        // Exactly the reused and the freshly admitted entries survive.
+        assert!(loaded
+            .lookup_fetch(0, &feats[2], 32, 0.99, &mut dst)
+            .is_some());
+        assert!(loaded
+            .lookup_fetch(0, &fresh, 32, 0.99, &mut dst)
+            .is_some());
+        assert!(loaded
+            .lookup_fetch(0, &feats[0], 32, 0.99, &mut dst)
+            .is_none());
+    }
+
+    #[test]
+    fn warm_load_accepts_version_one() {
+        // v1 and v2 share a layout; a v1 file (older producer) must load.
+        let c = cfg();
+        let memo = warm_memo(8);
+        let tier = MemoTier::new(&c, 8, HnswParams::default(), &memo);
+        let elems = c.apm_elems(8);
+        let f = vec![0.5f32; c.embed_dim];
+        tier.admit_batch(0, &[(f.as_slice(), &vec![1.0f32; elems][..])],
+                         2.0, 32)
+            .unwrap();
+        let dir = std::env::temp_dir().join("attmemo_warm_v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.atwm");
+        save_warm(&tier, 0.7, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let (loaded, thr) =
+            load_warm(&path, &c, &memo, HnswParams::default()).unwrap();
+        assert_eq!(thr, 0.7);
+        assert_eq!(loaded.total_entries(), 1);
     }
 
     #[test]

@@ -1,0 +1,225 @@
+//! Semantic request signatures: SimHash over mean-pooled embedding rows.
+//!
+//! The paper's central observation is that *semantically* similar inputs
+//! produce similar attention computation, found through an embedding of
+//! the input — and AttnCache applies the same feature-space-lookup idea at
+//! LLM-prefill scale. The serving router wants that property at *enqueue*
+//! time, before any model forward exists: two paraphrases of one prompt
+//! should land in the same affinity bucket so they meet in one batch.
+//!
+//! [`SemanticSketcher`] delivers a request-time approximation with no
+//! graph execution:
+//!
+//! 1. **Mean-pool** the model's token-embedding-table rows for the first
+//!    `prefix_len` non-pad tokens — a bag-of-words point in the model's
+//!    own embedding space (`model/forward.rs::embed`'s `tok_emb` table,
+//!    read host-side; the pooling is order-invariant by construction).
+//! 2. **Project** through a fixed, seeded random matrix onto
+//!    [`SIG_BITS`] Gaussian hyperplanes.
+//! 3. **Sign-quantize** into a [`SIG_BITS`]-bit SimHash: requests whose
+//!    pooled embeddings are close in cosine agree on most bits (classic
+//!    SimHash LSH), so near-paraphrases share the low bits the router
+//!    buckets by, while unrelated prompts differ in ~half the bits.
+//!
+//! Because pooling and projection commute, the sketcher precomputes each
+//! token's projected row once (`vocab × SIG_BITS` floats); a request
+//! sketch is then `O(prefix_len × SIG_BITS)` additions — comparable to
+//! the min-hash it replaces.
+//!
+//! ```
+//! use attmemo::memo::semhash::SemanticSketcher;
+//!
+//! // A tiny synthetic embedding table: 8 tokens × 4 dims.
+//! let table: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+//! let sk = SemanticSketcher::new(&table, 8, 4, 16).unwrap();
+//! // Word order does not change the bag, hence not the sketch.
+//! assert_eq!(sk.sketch(&[3, 5, 1, 6, 0, 0]), sk.sketch(&[6, 1, 5, 3, 0]));
+//! ```
+
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+use crate::{Error, Result};
+
+/// Bits in a semantic signature (one random hyperplane per bit).
+pub const SIG_BITS: usize = 64;
+
+/// Fixed projection seed: every process sketches identically, so replicas
+/// (and a restarted server) agree on bucket assignments.
+const PROJECTION_SEED: u64 = 0x5e3a_11c0_a77e_1105;
+
+/// Request-time semantic sketcher over a token-embedding table.
+pub struct SemanticSketcher {
+    /// Per-token projected rows, `vocab × SIG_BITS`.
+    proj: Vec<f32>,
+    vocab: usize,
+    prefix_len: usize,
+}
+
+impl SemanticSketcher {
+    /// Build a sketcher from a flat `[vocab, dim]` embedding table.
+    ///
+    /// Construction projects every vocabulary row once
+    /// (`O(vocab × dim × SIG_BITS)` — a startup cost, amortized over all
+    /// requests); sketching is `O(prefix_len × SIG_BITS)` per request.
+    pub fn new(table: &[f32], vocab: usize, dim: usize,
+               prefix_len: usize) -> Result<Self> {
+        if vocab == 0 || dim == 0 || table.len() != vocab * dim {
+            return Err(Error::shape(format!(
+                "embedding table is {} floats, want vocab {vocab} × dim \
+                 {dim}",
+                table.len()
+            )));
+        }
+        // SIG_BITS Gaussian hyperplanes over the embedding space, from a
+        // fixed seed (see PROJECTION_SEED).
+        let mut rng = Pcg32::seeded(PROJECTION_SEED);
+        let planes: Vec<f32> =
+            (0..SIG_BITS * dim).map(|_| rng.next_gaussian()).collect();
+        let mut proj = vec![0.0f32; vocab * SIG_BITS];
+        for (t, prow) in proj.chunks_mut(SIG_BITS).enumerate() {
+            let row = &table[t * dim..(t + 1) * dim];
+            for (b, p) in prow.iter_mut().enumerate() {
+                let plane = &planes[b * dim..(b + 1) * dim];
+                *p = row.iter().zip(plane).map(|(x, w)| x * w).sum();
+            }
+        }
+        Ok(SemanticSketcher { proj, vocab, prefix_len: prefix_len.max(1) })
+    }
+
+    /// Build from the model's `[vocab, hidden]` embedding-table tensor
+    /// (`ModelRunner::embedding_table`).
+    pub fn from_embedding(table: &Tensor, prefix_len: usize) -> Result<Self> {
+        if table.shape().len() != 2 {
+            return Err(Error::shape(format!(
+                "embedding table must be [vocab, dim], got {:?}",
+                table.shape()
+            )));
+        }
+        Self::new(table.data(), table.shape()[0], table.shape()[1],
+                  prefix_len)
+    }
+
+    /// Vocabulary size the sketcher was built for.
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Non-pad prefix tokens pooled into one sketch.
+    pub fn prefix_len(&self) -> usize {
+        self.prefix_len
+    }
+
+    /// SimHash of the request's token ids.
+    ///
+    /// Pads and out-of-vocabulary ids are skipped. The accumulation runs
+    /// in canonical (sorted-token) order: float addition is not
+    /// associative, so summing in arrival order would let two
+    /// permutations of the same bag disagree in near-zero bits — sorting
+    /// makes the sketch permutation-invariant bit-exactly (whenever the
+    /// non-pad prefix fits within `prefix_len`). An all-pad request
+    /// sketches to 0.
+    pub fn sketch(&self, ids: &[i32]) -> u64 {
+        let mut toks: Vec<usize> = Vec::with_capacity(self.prefix_len);
+        for &t in ids {
+            if t == crate::data::tokenizer::PAD {
+                continue;
+            }
+            let Ok(ti) = usize::try_from(t) else { continue };
+            if ti >= self.vocab {
+                continue;
+            }
+            toks.push(ti);
+            if toks.len() >= self.prefix_len {
+                break;
+            }
+        }
+        if toks.is_empty() {
+            return 0;
+        }
+        toks.sort_unstable();
+        let mut acc = [0.0f32; SIG_BITS];
+        for &ti in &toks {
+            let row = &self.proj[ti * SIG_BITS..(ti + 1) * SIG_BITS];
+            for (a, &p) in acc.iter_mut().zip(row) {
+                *a += p;
+            }
+        }
+        let mut sig = 0u64;
+        for (b, &a) in acc.iter().enumerate() {
+            if a > 0.0 {
+                sig |= 1u64 << b;
+            }
+        }
+        sig
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic synthetic embedding table.
+    fn table(vocab: usize, dim: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..vocab * dim).map(|_| rng.next_gaussian()).collect()
+    }
+
+    #[test]
+    fn rejects_bad_dimensions() {
+        assert!(SemanticSketcher::new(&[0.0; 10], 3, 4, 8).is_err());
+        assert!(SemanticSketcher::new(&[], 0, 4, 8).is_err());
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert!(SemanticSketcher::from_embedding(&t, 8).is_err());
+    }
+
+    #[test]
+    fn sketch_is_deterministic_across_constructions() {
+        let tab = table(64, 16, 3);
+        let a = SemanticSketcher::new(&tab, 64, 16, 32).unwrap();
+        let b = SemanticSketcher::new(&tab, 64, 16, 32).unwrap();
+        let ids: Vec<i32> = (4..24).collect();
+        assert_eq!(a.sketch(&ids), b.sketch(&ids));
+    }
+
+    #[test]
+    fn sketch_ignores_pads_and_out_of_vocab() {
+        let sk = SemanticSketcher::new(&table(32, 8, 5), 32, 8, 16).unwrap();
+        let base = [4, 9, 17, 23];
+        let padded = [4, 0, 9, 17, 0, 23, 0, 0];
+        let noisy = [4, 9, 300, -7, 17, 23];
+        assert_eq!(sk.sketch(&base), sk.sketch(&padded));
+        assert_eq!(sk.sketch(&base), sk.sketch(&noisy));
+        assert_eq!(sk.sketch(&[0, 0, 0]), 0, "all-pad sketches to 0");
+    }
+
+    #[test]
+    fn sketch_is_permutation_invariant() {
+        let sk =
+            SemanticSketcher::new(&table(128, 16, 7), 128, 16, 32).unwrap();
+        let mut rng = Pcg32::seeded(11);
+        for k in 0..8u64 {
+            let base: Vec<i32> =
+                (0..20).map(|j| 4 + (k as i32) * 15 + j).collect();
+            let mut shuffled = base.clone();
+            rng.shuffle(&mut shuffled);
+            assert_eq!(sk.sketch(&base), sk.sketch(&shuffled),
+                       "permutation {k} changed the bag-of-words sketch");
+        }
+    }
+
+    #[test]
+    fn near_paraphrases_stay_close_unrelated_diverge() {
+        let sk =
+            SemanticSketcher::new(&table(256, 16, 9), 256, 16, 32).unwrap();
+        let a: Vec<i32> = (10..30).collect();
+        // One substituted word: most hyperplane signs survive.
+        let mut b = a.clone();
+        b[10] = 200;
+        let near = (sk.sketch(&a) ^ sk.sketch(&b)).count_ones();
+        assert!(near <= 24, "one-word edit flipped {near}/64 bits");
+        // A disjoint token set lands ~half the bits away.
+        let c: Vec<i32> = (100..120).collect();
+        let far = (sk.sketch(&a) ^ sk.sketch(&c)).count_ones();
+        assert!(far > 8, "unrelated bags differ in only {far}/64 bits");
+    }
+}

@@ -98,6 +98,14 @@ impl ModelRunner {
         &self.weights
     }
 
+    /// The token-embedding table `[vocab, hidden]` — the `embed` graph's
+    /// `tok_emb` weight, read host-side. Request-path consumers (the
+    /// semantic affinity signature) mean-pool its rows without any graph
+    /// execution.
+    pub fn embedding_table(&self) -> Result<&Tensor> {
+        self.weights.tensor("tok_emb")
+    }
+
     pub fn runtime(&self) -> &Runtime {
         &self.runtime
     }

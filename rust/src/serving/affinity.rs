@@ -9,21 +9,41 @@
 //! cluster's requests actually ride in one batch — this module makes that
 //! happen without any model forward:
 //!
-//! * [`signature`] — a cheap min-hash sketch over token-bigram n-grams of
-//!   the request's non-pad prefix. Two requests sharing most of their
-//!   prefix bigrams share the minimum with high probability (classic
-//!   min-wise LSH), so near-duplicate prompts sketch to the same value
-//!   while unrelated prompts scatter uniformly.
-//! * [`bucket_for`] — signature → bucket index (re-mixed so the min-hash
-//!   skew doesn't bias low buckets).
+//! * [`Signer`] — sketches a request's token ids into a 64-bit affinity
+//!   signature, in one of two modes:
+//!   - **prefix** ([`signature`]): a min-hash over the token-bigram set
+//!     of the non-pad prefix. Two requests sharing most prefix bigrams
+//!     share the minimum with high probability (classic min-wise LSH),
+//!     so near-duplicate prompts sketch alike — but the sketch is
+//!     order-sensitive, so paraphrases scatter.
+//!   - **semantic** ([`crate::memo::semhash::SemanticSketcher`]): a
+//!     SimHash over the mean-pooled embedding-table rows of the prefix —
+//!     a bag-of-words point in the model's own embedding space, so
+//!     word-order variants and near-paraphrases agree on most bits and
+//!     share a bucket. Used when `--signature-mode semantic` and an
+//!     embedding table is loaded; the min-hash is the fallback.
 //! * [`AffinityRouter`] — a bounded set of per-bucket FIFO sub-queues
-//!   behind one mutex/condvar pair. Bucket `b` is *home* to replica
-//!   `b % replicas`; a batcher round-robins over its non-empty home
-//!   buckets (so a hot bucket cannot starve a sparse sibling) and, when
-//!   it has no home work, **steals** from the fullest bucket overall so
-//!   skewed traffic never starves a replica (or leaves one idle).
-//!   Capacity is global across buckets — the admission-control semantics
-//!   of the old `BoundedQueue` are preserved.
+//!   behind one mutex/condvar pair, keyed by signature (`bucket = sig mod
+//!   buckets`; the prefix signer pre-mixes so its skewed minima spread
+//!   uniformly, the semantic signer's bits are uniform hyperplane signs
+//!   already). Bucket `b` is *home* to replica `b % replicas`; a batcher
+//!   round-robins over its non-empty home buckets (so a hot bucket cannot
+//!   starve a sparse sibling) and, when it has no home work, **steals**
+//!   from the fullest bucket overall so skewed traffic never starves a
+//!   replica (or leaves one idle). Capacity is global across buckets —
+//!   the admission-control semantics of the old `BoundedQueue` are
+//!   preserved.
+//! * **Adaptive re-bucketing** — with [`AffinityRouter::with_adaptive`],
+//!   the router watches a sliding window of pops: a high steal rate means
+//!   the partition is too coarse for the traffic (replicas idle while
+//!   work queues elsewhere), so the bucket space **doubles**; a window
+//!   that touched only a small fraction of the buckets means the space is
+//!   over-partitioned, so it **halves**. Each resize is a
+//!   drain-and-requeue epoch under the router lock: every queued request
+//!   is re-mapped from its stored signature, preserving per-signature
+//!   FIFO order and losing nothing (doubling/halving keeps `sig mod n`
+//!   consistent: each new bucket inherits from exactly one old bucket on
+//!   grow, and merged buckets concatenate in bucket order on shrink).
 //!
 //! With `buckets = 1` the router degenerates to the plain shared FIFO
 //! queue (`--no-affinity`): bucket 0 is home to replica 0 and every other
@@ -35,11 +55,23 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::memo::semhash::SemanticSketcher;
 use crate::{Error, Result};
 
-/// Non-pad prefix tokens fed into the signature sketch. Long enough to
+/// Default non-pad prefix length fed into the signature sketch
+/// (`ServingConfig::signature_prefix_len` overrides it). Long enough to
 /// tell topics apart, short enough that signing is O(1) per request.
-const SIG_PREFIX: usize = 32;
+pub const DEFAULT_SIG_PREFIX: usize = 32;
+
+/// Pops observed before the adaptive router re-evaluates its bucket count.
+const RESIZE_WINDOW: u64 = 128;
+
+/// Grow when more than 1 in `GROW_STEAL_DIV` window pops were steals.
+const GROW_STEAL_DIV: u64 = 4;
+
+/// Shrink when pushes touched no more than 1 in `SHRINK_TOUCH_DIV`
+/// buckets over the window.
+const SHRINK_TOUCH_DIV: usize = 4;
 
 /// SplitMix64 finalizer: cheap, well-distributed 64-bit mixing.
 fn mix(h: u64) -> u64 {
@@ -49,15 +81,16 @@ fn mix(h: u64) -> u64 {
     z ^ (z >> 31)
 }
 
-/// Cheap request signature: the min-hash of the token-bigram set of the
-/// first `SIG_PREFIX` (32) non-pad tokens. No model forward, no float
-/// math — O(prefix) integer hashing at enqueue time.
+/// Cheap prefix signature: the min-hash of the token-bigram set of the
+/// first `prefix_len` non-pad tokens. No model forward, no float math —
+/// O(prefix) integer hashing at enqueue time.
 ///
 /// Property (min-wise hashing): for two requests the probability that
 /// their signatures collide equals the Jaccard similarity of their bigram
 /// sets, so small edits (a word changed near the tail) usually preserve
 /// the signature while unrelated prompts diverge.
-pub fn signature(ids: &[i32]) -> u64 {
+pub fn signature(ids: &[i32], prefix_len: usize) -> u64 {
+    let prefix_len = prefix_len.max(1);
     let mut prev: Option<u64> = None;
     let mut min = u64::MAX;
     let mut taken = 0usize;
@@ -71,7 +104,7 @@ pub fn signature(ids: &[i32]) -> u64 {
         }
         prev = Some(tok);
         taken += 1;
-        if taken >= SIG_PREFIX {
+        if taken >= prefix_len {
             break;
         }
     }
@@ -82,18 +115,72 @@ pub fn signature(ids: &[i32]) -> u64 {
     }
 }
 
-/// Affinity bucket for a request's token ids: `signature` re-mixed modulo
-/// the bucket count (a raw min-hash is a minimum, hence skewed small —
-/// the extra mix spreads it uniformly over buckets).
-pub fn bucket_for(ids: &[i32], buckets: usize) -> usize {
+/// Signature → bucket index under a given bucket count. Doubling the
+/// count splits each bucket in two (`sig mod 2n` refines `sig mod n`),
+/// which is what makes adaptive power-of-two resizing order-preserving.
+pub fn bucket_of(sig: u64, buckets: usize) -> usize {
     if buckets <= 1 {
         return 0;
     }
-    (mix(signature(ids)) % buckets as u64) as usize
+    (sig % buckets as u64) as usize
+}
+
+/// Affinity bucket for a request's token ids under the default prefix
+/// signer (tests and benches predicting bucket placement): the min-hash
+/// re-mixed modulo the bucket count (a raw min-hash is a minimum, hence
+/// skewed small — the extra mix spreads it uniformly over buckets).
+pub fn bucket_for(ids: &[i32], buckets: usize) -> usize {
+    bucket_of(mix(signature(ids, DEFAULT_SIG_PREFIX)), buckets)
+}
+
+/// Sketches request token ids into the 64-bit affinity signature the
+/// router buckets by. Built once per server from `ServingConfig`
+/// (`signature_mode`, `signature_prefix_len`) and shared by all
+/// connection handlers.
+pub enum Signer {
+    /// Token-prefix min-hash (pre-mixed so `sig mod buckets` is uniform).
+    Prefix {
+        /// Non-pad prefix tokens sketched per request.
+        prefix_len: usize,
+    },
+    /// Feature-space SimHash over the model's embedding table.
+    Semantic(SemanticSketcher),
+}
+
+impl Signer {
+    /// Prefix min-hash signer.
+    pub fn prefix(prefix_len: usize) -> Signer {
+        Signer::Prefix { prefix_len: prefix_len.max(1) }
+    }
+
+    /// Semantic signer over a built sketcher.
+    pub fn semantic(sketcher: SemanticSketcher) -> Signer {
+        Signer::Semantic(sketcher)
+    }
+
+    /// The request's affinity signature.
+    pub fn sign(&self, ids: &[i32]) -> u64 {
+        match self {
+            Signer::Prefix { prefix_len } => {
+                mix(signature(ids, *prefix_len))
+            }
+            Signer::Semantic(sk) => sk.sketch(ids),
+        }
+    }
+
+    /// Mode name for logs/STATS (`prefix` or `semantic`).
+    pub fn mode_name(&self) -> &'static str {
+        match self {
+            Signer::Prefix { .. } => "prefix",
+            Signer::Semantic(_) => "semantic",
+        }
+    }
 }
 
 struct Inner<T> {
-    buckets: Vec<VecDeque<T>>,
+    /// Per-bucket FIFO of `(signature, request)` — the signature rides
+    /// along so a resize epoch can re-map queued requests.
+    buckets: Vec<VecDeque<(u64, T)>>,
     len: usize,
     closed: bool,
     /// Per-replica rotation cursor over home buckets: the next pop scans
@@ -101,6 +188,12 @@ struct Inner<T> {
     /// first policy would let one hot bucket starve a sparse sibling
     /// indefinitely under sustained skew).
     next_home: Vec<usize>,
+    /// Buckets that received at least one push in the current adaptive
+    /// observation window.
+    touched: Vec<bool>,
+    window_pops: u64,
+    window_steals: u64,
+    resizes: u64,
 }
 
 /// Snapshot of the router's observable state (for STATS reporting).
@@ -110,6 +203,8 @@ pub struct RouterStats {
     pub depths: Vec<usize>,
     /// Total pops that took a request from a non-home bucket.
     pub steals: u64,
+    /// Completed adaptive resize epochs since construction.
+    pub resizes: u64,
 }
 
 /// Bounded affinity-bucketed request queue shared between connection
@@ -124,13 +219,16 @@ pub struct AffinityRouter<T> {
     not_full: Condvar,
     depth: usize,
     replicas: usize,
-    num_buckets: usize,
+    adaptive: bool,
+    max_buckets: usize,
     steals: AtomicU64,
 }
 
 impl<T> AffinityRouter<T> {
     /// Router with `buckets` sub-queues serving `replicas` batchers and a
     /// global capacity of `depth` requests (each clamped to at least 1).
+    /// Adaptive re-bucketing is off until
+    /// [`AffinityRouter::with_adaptive`] enables it.
     pub fn new(buckets: usize, replicas: usize, depth: usize) -> Self {
         let buckets = buckets.max(1);
         let replicas = replicas.max(1);
@@ -140,20 +238,35 @@ impl<T> AffinityRouter<T> {
                 len: 0,
                 closed: false,
                 next_home: vec![0; replicas],
+                touched: vec![false; buckets],
+                window_pops: 0,
+                window_steals: 0,
+                resizes: 0,
             }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             depth: depth.max(1),
             replicas,
-            num_buckets: buckets,
+            adaptive: false,
+            max_buckets: buckets,
             steals: AtomicU64::new(0),
         }
     }
 
-    /// Number of affinity buckets (fixed at construction; lock-free —
-    /// the request handlers read it on every enqueue).
+    /// Enable (or disable) adaptive re-bucketing, capping growth at
+    /// `max_buckets` (clamped to at least the current bucket count).
+    pub fn with_adaptive(mut self, enabled: bool,
+                         max_buckets: usize) -> Self {
+        let current = self.inner.get_mut().unwrap().buckets.len();
+        self.adaptive = enabled;
+        self.max_buckets = max_buckets.max(current);
+        self
+    }
+
+    /// Current number of affinity buckets (takes the router lock — the
+    /// count changes across adaptive resize epochs).
     pub fn num_buckets(&self) -> usize {
-        self.num_buckets
+        self.inner.lock().unwrap().buckets.len()
     }
 
     /// Is `bucket` one of `replica`'s home buckets?
@@ -161,9 +274,9 @@ impl<T> AffinityRouter<T> {
         bucket % self.replicas == replica % self.replicas
     }
 
-    /// Non-blocking push into `bucket` (modulo the bucket count); `Err`
-    /// when the router is full or closed (caller sheds load).
-    pub fn try_push(&self, bucket: usize, item: T) -> Result<()> {
+    /// Non-blocking push of a request with affinity signature `sig`;
+    /// `Err` when the router is full or closed (caller sheds load).
+    pub fn try_push(&self, sig: u64, item: T) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
             return Err(Error::serving("queue closed"));
@@ -171,23 +284,26 @@ impl<T> AffinityRouter<T> {
         if g.len >= self.depth {
             return Err(Error::serving("queue full"));
         }
-        let nb = g.buckets.len();
-        g.buckets[bucket % nb].push_back(item);
+        let b = bucket_of(sig, g.buckets.len());
+        g.touched[b] = true;
+        g.buckets[b].push_back((sig, item));
         g.len += 1;
         self.not_empty.notify_one();
         Ok(())
     }
 
-    /// Blocking push into `bucket` (waits for space); `Err` when closed.
-    pub fn push(&self, bucket: usize, item: T) -> Result<()> {
+    /// Blocking push of a request with affinity signature `sig` (waits
+    /// for space); `Err` when closed.
+    pub fn push(&self, sig: u64, item: T) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if g.closed {
                 return Err(Error::serving("queue closed"));
             }
             if g.len < self.depth {
-                let nb = g.buckets.len();
-                g.buckets[bucket % nb].push_back(item);
+                let b = bucket_of(sig, g.buckets.len());
+                g.touched[b] = true;
+                g.buckets[b].push_back((sig, item));
                 g.len += 1;
                 self.not_empty.notify_one();
                 return Ok(());
@@ -236,12 +352,76 @@ impl<T> AffinityRouter<T> {
                 (best?, true)
             }
         };
-        let item = g.buckets[bucket].pop_front()?;
+        let (_sig, item) = g.buckets[bucket].pop_front()?;
         g.len -= 1;
+        g.window_pops += 1;
         if stolen {
             self.steals.fetch_add(1, Ordering::Relaxed);
+            g.window_steals += 1;
         }
+        self.maybe_resize(g);
         Some((bucket, item))
+    }
+
+    /// Adaptive re-bucketing check, run after every counted pop. The
+    /// returned bucket index of the pop that triggered a resize refers to
+    /// the pre-resize numbering; `drain_affine` guards with a modulo, so
+    /// the worst case is one batch drained from a re-mapped bucket.
+    fn maybe_resize(&self, g: &mut Inner<T>) {
+        if !self.adaptive || g.window_pops < RESIZE_WINDOW {
+            return;
+        }
+        let nb = g.buckets.len();
+        let steal_heavy = g.window_steals * GROW_STEAL_DIV > g.window_pops;
+        let touched = g.touched.iter().filter(|&&t| t).count();
+        if steal_heavy && nb * 2 <= self.max_buckets {
+            // Replicas were routinely idle-stealing: the partition is too
+            // coarse, concentrating traffic on too few home buckets.
+            self.rebucket_locked(g, nb * 2);
+        } else if !steal_heavy
+            && touched > 0
+            && touched * SHRINK_TOUCH_DIV <= nb
+            && nb >= 2
+        {
+            // The window's pushes touched a small corner of the bucket
+            // space: over-partitioned — halving re-concentrates sparse
+            // buckets into fuller (more batchable) ones.
+            self.rebucket_locked(g, nb / 2);
+        }
+        g.window_pops = 0;
+        g.window_steals = 0;
+        g.touched.fill(false);
+    }
+
+    /// Drain-and-requeue resize epoch (caller holds the lock): every
+    /// queued request is re-mapped from its stored signature into the new
+    /// bucket space. Old buckets are drained in index order and each
+    /// signature maps to one bucket deterministically, so the FIFO order
+    /// of any pair of equal-signature requests is preserved and no
+    /// request is dropped (`len` is untouched).
+    fn rebucket_locked(&self, g: &mut Inner<T>, new_buckets: usize) {
+        let new_buckets = new_buckets.max(1);
+        if new_buckets == g.buckets.len() {
+            return;
+        }
+        let old = std::mem::take(&mut g.buckets);
+        g.buckets = (0..new_buckets).map(|_| VecDeque::new()).collect();
+        for q in old {
+            for (sig, item) in q {
+                let b = bucket_of(sig, new_buckets);
+                g.buckets[b].push_back((sig, item));
+            }
+        }
+        g.touched = vec![false; new_buckets];
+        g.next_home.fill(0);
+        g.resizes += 1;
+    }
+
+    /// Force a resize epoch to `new_buckets` sub-queues (operational
+    /// escape hatch + tests; the adaptive path calls the same mechanics).
+    pub fn rebucket(&self, new_buckets: usize) {
+        let mut g = self.inner.lock().unwrap();
+        self.rebucket_locked(&mut g, new_buckets);
     }
 
     /// Pop one request for `replica`, waiting up to `timeout`; `None` on
@@ -289,7 +469,7 @@ impl<T> AffinityRouter<T> {
         for b in order {
             while out.len() < max {
                 match g.buckets[b].pop_front() {
-                    Some(x) => {
+                    Some((_sig, x)) => {
                         g.len -= 1;
                         out.push(x);
                     }
@@ -316,18 +496,25 @@ impl<T> AffinityRouter<T> {
         self.len() == 0
     }
 
-    /// Per-bucket depths + steal count (the STATS affinity section).
+    /// Per-bucket depths + steal/resize counts (the STATS affinity
+    /// section).
     pub fn stats(&self) -> RouterStats {
         let g = self.inner.lock().unwrap();
         RouterStats {
             depths: g.buckets.iter().map(VecDeque::len).collect(),
             steals: self.steals.load(Ordering::Relaxed),
+            resizes: g.resizes,
         }
     }
 
     /// Total pops that took a request from a non-home bucket.
     pub fn steals(&self) -> u64 {
         self.steals.load(Ordering::Relaxed)
+    }
+
+    /// Completed resize epochs since construction.
+    pub fn resizes(&self) -> u64 {
+        self.inner.lock().unwrap().resizes
     }
 
     /// Close the router; producers fail, consumers drain then get `None`.
@@ -346,25 +533,54 @@ impl<T> AffinityRouter<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Pcg32;
     use std::sync::Arc;
 
     #[test]
     fn signature_ignores_padding_and_is_stable() {
         let a = [1, 5, 6, 9, 2, 0, 0, 0];
         let b = [1, 5, 6, 9, 2, 0, 0, 0, 0, 0, 0, 0];
-        assert_eq!(signature(&a), signature(&b),
+        assert_eq!(signature(&a, 32), signature(&b, 32),
                    "pad tail must not change the signature");
-        assert_eq!(signature(&a), signature(&a));
-        assert_eq!(signature(&[0, 0, 0]), 0, "all-pad sketches to 0");
+        assert_eq!(signature(&a, 32), signature(&a, 32));
+        assert_eq!(signature(&[0, 0, 0], 32), 0, "all-pad sketches to 0");
         // Single-token requests still get a well-defined sketch.
-        assert_ne!(signature(&[7, 0, 0]), signature(&[9, 0, 0]));
+        assert_ne!(signature(&[7, 0, 0], 32), signature(&[9, 0, 0], 32));
+    }
+
+    #[test]
+    fn signature_prefix_len_is_a_knob() {
+        // Pairs sharing their first 8 tokens: a short prefix cannot tell
+        // them apart (always), a long one usually can — a single pair
+        // keeps a ~|shared|/|union| chance of an honest min-hash
+        // collision, so demand a clear majority across many pairs.
+        let mut long_diverged = 0;
+        for k in 0..16 {
+            let a: Vec<i32> =
+                (0..30).map(|j| 10 + 83 * k + j).collect();
+            let mut b = a.clone();
+            for t in b.iter_mut().skip(8) {
+                *t += 500;
+            }
+            assert_eq!(signature(&a, 8), signature(&b, 8),
+                       "identical 8-prefixes must sketch alike at len 8");
+            if signature(&a, 30) != signature(&b, 30) {
+                long_diverged += 1;
+            }
+        }
+        assert!(long_diverged >= 10,
+                "full-length signatures separated only \
+                 {long_diverged}/16 pairs");
+        // A zero length clamps to one token rather than panicking.
+        let a = [7, 9, 11];
+        assert_eq!(signature(&a, 0), signature(&[7], 1));
     }
 
     #[test]
     fn signature_separates_unrelated_prefixes() {
         let a: Vec<i32> = (10..30).collect();
         let b: Vec<i32> = (200..220).collect();
-        assert_ne!(signature(&a), signature(&b));
+        assert_ne!(signature(&a, 32), signature(&b, 32));
         assert_eq!(bucket_for(&a, 1), 0);
         // Unrelated prefixes spread over the bucket space instead of
         // piling into one bucket.
@@ -389,12 +605,48 @@ mod tests {
                 let a: Vec<i32> = (0..31).map(|j| 10 + 97 * k + j).collect();
                 let mut b = a.clone();
                 *b.last_mut().unwrap() = 7;
-                signature(&a) == signature(&b)
+                signature(&a, 32) == signature(&b, 32)
             })
             .count();
         assert!(survived >= 10,
                 "tail edits changed the signature in {}/16 cases",
                 16 - survived);
+    }
+
+    /// Satellite fixture: paraphrases (same words, different order) must
+    /// collide under the semantic signer where the prefix min-hash
+    /// scatters them.
+    #[test]
+    fn semantic_signer_collides_on_paraphrases_where_prefix_does_not() {
+        let mut rng = Pcg32::seeded(77);
+        let vocab = 256usize;
+        let dim = 16usize;
+        let table: Vec<f32> =
+            (0..vocab * dim).map(|_| rng.next_gaussian()).collect();
+        let sem = Signer::semantic(
+            SemanticSketcher::new(&table, vocab, dim, 32).unwrap());
+        let pre = Signer::prefix(32);
+        assert_eq!(sem.mode_name(), "semantic");
+        assert_eq!(pre.mode_name(), "prefix");
+
+        let mut prefix_diverged = 0;
+        for k in 0..8 {
+            let base: Vec<i32> =
+                (0..20).map(|j| 4 + k * 24 + j).collect();
+            let mut para = base.clone();
+            rng.shuffle(&mut para);
+            assert_eq!(sem.sign(&base), sem.sign(&para),
+                       "paraphrase {k} broke the semantic signature");
+            if pre.sign(&base) != pre.sign(&para) {
+                prefix_diverged += 1;
+            }
+        }
+        // A shuffled word order rewrites nearly every bigram, so the
+        // min-hash almost always moves; demand a clear majority rather
+        // than betting on all eight.
+        assert!(prefix_diverged >= 6,
+                "prefix min-hash matched {}/8 paraphrases",
+                8 - prefix_diverged);
     }
 
     #[test]
@@ -539,5 +791,96 @@ mod tests {
         let s = r.stats();
         assert_eq!(s.depths, vec![1, 0, 2]);
         assert_eq!(s.steals, 0);
+        assert_eq!(s.resizes, 0);
+    }
+
+    /// Satellite regression: a resize epoch must preserve per-signature
+    /// FIFO order and lose no queued request — grow and shrink both.
+    #[test]
+    fn rebucket_preserves_fifo_and_loses_nothing() {
+        let r: AffinityRouter<(u64, u32)> = AffinityRouter::new(4, 1, 4096);
+        // 7 signature streams over 4 buckets: some buckets hold several
+        // streams (the interleavings a resize must not reorder).
+        for i in 0..64u32 {
+            let sig = (i % 7) as u64;
+            r.try_push(sig, (sig, i)).unwrap();
+        }
+        r.rebucket(8); // grow
+        assert_eq!(r.len(), 64, "grow lost requests");
+        assert_eq!(r.num_buckets(), 8);
+        r.rebucket(2); // shrink
+        assert_eq!(r.len(), 64, "shrink lost requests");
+        assert_eq!(r.num_buckets(), 2);
+        assert_eq!(r.resizes(), 2);
+
+        // Drain everything; within each signature stream the values must
+        // come out in push order.
+        let mut last: std::collections::HashMap<u64, u32> =
+            std::collections::HashMap::new();
+        let mut got = 0usize;
+        while let Some((_, (sig, v))) =
+            r.pop_timeout(0, Duration::from_millis(10))
+        {
+            if let Some(&prev) = last.get(&sig) {
+                assert!(v > prev,
+                        "signature {sig} reordered: {v} after {prev}");
+            }
+            last.insert(sig, v);
+            got += 1;
+        }
+        assert_eq!(got, 64, "drain lost requests");
+    }
+
+    /// Adaptive growth: a steal-heavy window (one hot bucket, an idle
+    /// replica feeding off it) must double the bucket space up to the cap.
+    #[test]
+    fn adaptive_grows_under_steal_pressure() {
+        let r: AffinityRouter<u32> =
+            AffinityRouter::new(2, 2, 4096).with_adaptive(true, 16);
+        assert_eq!(r.num_buckets(), 2);
+        // All traffic in bucket 0 (home to replica 0); replica 1 can only
+        // steal, so every window is ~50% steals.
+        for i in 0..400u32 {
+            r.try_push(0, i).unwrap();
+            let replica = (i % 2) as usize;
+            assert!(r.pop_timeout(replica, Duration::from_millis(10))
+                .is_some());
+        }
+        assert!(r.resizes() >= 1, "steal pressure never triggered a grow");
+        assert!(r.num_buckets() > 2,
+                "bucket space did not grow: {}", r.num_buckets());
+        assert!(r.num_buckets() <= 16, "growth exceeded the cap");
+    }
+
+    /// Adaptive shrink: when pushes only ever touch a corner of the
+    /// bucket space and nobody steals, the space halves.
+    #[test]
+    fn adaptive_shrinks_overpartitioned_space() {
+        let r: AffinityRouter<u32> =
+            AffinityRouter::new(16, 1, 4096).with_adaptive(true, 16);
+        // One replica (pops are never steals), traffic in 2 of 16 buckets.
+        for i in 0..400u32 {
+            r.try_push((i % 2) as u64, i).unwrap();
+            assert!(r.pop_timeout(0, Duration::from_millis(10)).is_some());
+        }
+        assert!(r.resizes() >= 2,
+                "over-partitioning never triggered shrinks");
+        assert_eq!(r.num_buckets(), 4,
+                   "16 → 8 → 4, then 2 touched × 4 > 4 holds the floor");
+    }
+
+    /// `with_adaptive(false, …)` keeps the fixed-bucket behaviour.
+    #[test]
+    fn non_adaptive_router_never_resizes() {
+        let r: AffinityRouter<u32> =
+            AffinityRouter::new(2, 2, 4096).with_adaptive(false, 16);
+        for i in 0..300u32 {
+            r.try_push(0, i).unwrap();
+            let replica = (i % 2) as usize;
+            assert!(r.pop_timeout(replica, Duration::from_millis(10))
+                .is_some());
+        }
+        assert_eq!(r.resizes(), 0);
+        assert_eq!(r.num_buckets(), 2);
     }
 }

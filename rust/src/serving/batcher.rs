@@ -172,7 +172,7 @@ mod tests {
     fn batch_fills_up_to_max_batch_when_queue_is_deep() {
         let q: AffinityRouter<u32> = AffinityRouter::new(2, 1, 64);
         for i in 0..32 {
-            q.try_push((i % 2) as usize, i).unwrap();
+            q.try_push((i % 2) as u64, i).unwrap();
         }
         let batch = form_batch(&q, 0, 8, Duration::from_millis(50),
                                Duration::from_millis(50));

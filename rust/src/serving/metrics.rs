@@ -27,6 +27,9 @@ pub struct EngineMetrics {
     /// Router-level: zero on per-replica metrics, stamped onto the
     /// aggregated fleet view by the server's STATS path.
     pub steals: u64,
+    /// Adaptive re-bucketing epochs completed by the router (bucket-space
+    /// grows/shrinks). Router-level like `steals`.
+    pub bucket_resizes: u64,
     /// Per-affinity-bucket queue depth at report time. Router-level like
     /// `steals`; empty on per-replica metrics.
     pub queue_depths: Vec<usize>,
@@ -52,6 +55,7 @@ impl Default for EngineMetrics {
             dedup_skips: 0,
             admit_offered: 0,
             steals: 0,
+            bucket_resizes: 0,
             queue_depths: Vec::new(),
             online_entries: 0,
             request_latency_ms: Summary::new(),
@@ -115,9 +119,10 @@ impl EngineMetrics {
             let depths: Vec<String> =
                 self.queue_depths.iter().map(|d| d.to_string()).collect();
             s.push_str(&format!(
-                " affinity(buckets={} steals={} depths=[{}])",
+                " affinity(buckets={} steals={} resizes={} depths=[{}])",
                 self.queue_depths.len(),
                 self.steals,
+                self.bucket_resizes,
                 depths.join(",")
             ));
         }
@@ -139,6 +144,9 @@ impl EngineMetrics {
         self.dedup_skips += other.dedup_skips;
         self.admit_offered += other.admit_offered;
         self.steals += other.steals;
+        // Router-level epoch counter: both sides report the same router,
+        // so take the max instead of double-counting.
+        self.bucket_resizes = self.bucket_resizes.max(other.bucket_resizes);
         // Replicas share one router, so bucket depths are a router-level
         // gauge: keep whichever side carries them rather than summing.
         if self.queue_depths.is_empty() {
@@ -178,10 +186,15 @@ mod tests {
         assert!(r.contains("yield=0.750"), "{r}");
         assert!(!r.contains("affinity("), "no router gauges, no section");
         m.steals = 3;
+        m.bucket_resizes = 2;
         m.queue_depths = vec![2, 0, 1];
         let r = m.report();
-        assert!(r.contains("affinity(buckets=3 steals=3 depths=[2,0,1])"),
-                "{r}");
+        assert!(
+            r.contains(
+                "affinity(buckets=3 steals=3 resizes=2 depths=[2,0,1])"
+            ),
+            "{r}"
+        );
     }
 
     #[test]

@@ -2,12 +2,14 @@
 //! first-class feature.
 //!
 //! Flow: client → TCP line protocol (`server`) or in-process handle →
-//! affinity-bucketed request router (`affinity`: similar token prefixes
-//! share a bucket; batchers prefer home buckets and work-steal when
-//! idle) → dynamic batcher (`batcher`) → inference engine (`engine`,
-//! where memoization happens) → response. `metrics` records per-stage
-//! latency for the paper's Table 4 breakdown plus the affinity/dedup
-//! gauges. `queue` keeps the plain single-FIFO `BoundedQueue` primitive.
+//! affinity-bucketed request router (`affinity`: requests sketching
+//! alike — by token prefix or, in semantic mode, by meaning through the
+//! embedding table — share a bucket; batchers prefer home buckets,
+//! work-steal when idle, and the bucket space can adaptively resize) →
+//! dynamic batcher (`batcher`) → inference engine (`engine`, where
+//! memoization happens) → response. `metrics` records per-stage latency
+//! for the paper's Table 4 breakdown plus the affinity/dedup gauges.
+//! `queue` keeps the plain single-FIFO `BoundedQueue` primitive.
 
 pub mod affinity;
 pub mod batcher;
@@ -17,7 +19,8 @@ pub mod queue;
 pub mod request;
 pub mod server;
 
-pub use affinity::{bucket_for, signature, AffinityRouter};
+pub use affinity::{bucket_for, bucket_of, signature, AffinityRouter,
+                   Signer};
 pub use batcher::{form_batch, Batcher};
 pub use engine::{Engine, EngineOptions};
 pub use metrics::EngineMetrics;

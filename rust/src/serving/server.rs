@@ -8,16 +8,22 @@
 //!   server → `ERR <reason>` / `STATS <report>` / `BYE`
 //!
 //! Connections are handled by a small thread pool; handlers tokenize,
-//! compute the request's affinity signature, and enqueue into the
-//! signature's bucket of the shared [`AffinityRouter`]. The server runs
-//! one batcher thread per engine *replica*; each prefers its home
-//! buckets (similar requests batch together) and steals from the fullest
-//! bucket when idle. Replicas are expected to share one online `MemoTier`
+//! sketch the request's affinity signature through the server's
+//! [`Signer`] (token-prefix min-hash, or — with `--signature-mode
+//! semantic` — a SimHash over mean-pooled embedding-table rows, so
+//! paraphrases share a bucket; the min-hash is the fallback when no
+//! embedding table is loaded), and enqueue into the signature's bucket
+//! of the shared [`AffinityRouter`]. The server runs one batcher thread
+//! per engine *replica*; each prefers its home buckets (similar requests
+//! batch together) and steals from the fullest bucket when idle; with
+//! `--adaptive-buckets` the router grows/shrinks its bucket space when
+//! the steal rate or occupancy skew shows the partition fighting the
+//! traffic. Replicas are expected to share one online `MemoTier`
 //! (`Engine::with_shared_tier`): each replica's forward pass runs behind
 //! its own mutex, while tier lookups from all replicas proceed in
 //! parallel on the shards' read locks — there is no global engine mutex
 //! on the lookup path. `STATS` aggregates the fleet and appends the
-//! router's affinity gauges (per-bucket depth, steal count).
+//! router's affinity gauges (per-bucket depth, steal and resize counts).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -25,9 +31,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::config::ServingConfig;
+use crate::config::{ServingConfig, SignatureMode};
 use crate::data::tokenizer::Vocab;
-use crate::serving::affinity::{bucket_for, AffinityRouter};
+use crate::memo::semhash::SemanticSketcher;
+use crate::serving::affinity::{AffinityRouter, Signer};
 use crate::serving::batcher::Batcher;
 use crate::serving::engine::Engine;
 use crate::serving::metrics::EngineMetrics;
@@ -61,12 +68,40 @@ impl Server {
                 engines.len()
             )));
         }
+        // The request signer is built once, before the engines disappear
+        // behind their mutexes: semantic mode sketches by meaning through
+        // the model's embedding table; when the table is unavailable the
+        // prefix min-hash is the documented fallback.
+        let signer = Arc::new(match cfg.signature_mode {
+            SignatureMode::Semantic => {
+                match engines[0].runner().embedding_table().and_then(|t| {
+                    SemanticSketcher::from_embedding(
+                        t, cfg.signature_prefix_len)
+                }) {
+                    Ok(sk) => Signer::semantic(sk),
+                    Err(e) => {
+                        log::warn!(
+                            "semantic signatures unavailable ({e}); \
+                             falling back to the prefix min-hash"
+                        );
+                        Signer::prefix(cfg.signature_prefix_len)
+                    }
+                }
+            }
+            SignatureMode::Prefix => {
+                Signer::prefix(cfg.signature_prefix_len)
+            }
+        });
+        log::info!("affinity signatures: {} mode", signer.mode_name());
+
         let listener = TcpListener::bind(&cfg.bind)?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let queue: Arc<AffinityRouter<Request>> = Arc::new(
             AffinityRouter::new(cfg.affinity_buckets, cfg.replicas,
-                                cfg.queue_depth),
+                                cfg.queue_depth)
+                .with_adaptive(cfg.affinity_adaptive,
+                               cfg.affinity_max_buckets),
         );
         let engines: Arc<Vec<Arc<Mutex<Engine>>>> = Arc::new(
             engines
@@ -99,6 +134,7 @@ impl Server {
             let stop2 = stop.clone();
             let engines2 = engines.clone();
             let rejected2 = rejected.clone();
+            let signer2 = signer.clone();
             let seq_len = cfg.seq_len;
             threads.push(
                 std::thread::Builder::new()
@@ -118,9 +154,10 @@ impl Server {
                                     let e = engines2.clone();
                                     let rej = rejected2.clone();
                                     let ids = next_id.clone();
+                                    let sg = signer2.clone();
                                     handlers.push(std::thread::spawn(move || {
                                         let _ = handle_conn(
-                                            stream, q, v, e, rej, ids,
+                                            stream, q, v, e, rej, ids, sg,
                                             seq_len,
                                         );
                                     }));
@@ -164,7 +201,7 @@ impl Server {
 fn handle_conn(stream: TcpStream, queue: Arc<AffinityRouter<Request>>,
                vocab: Arc<Vocab>, engines: Arc<Vec<Arc<Mutex<Engine>>>>,
                rejected: Arc<AtomicU64>, next_id: Arc<AtomicU64>,
-               seq_len: usize) -> Result<()> {
+               signer: Arc<Signer>, seq_len: usize) -> Result<()> {
     stream.set_nodelay(true)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
@@ -177,13 +214,14 @@ fn handle_conn(stream: TcpStream, queue: Arc<AffinityRouter<Request>>,
         let msg = line.trim_end();
         if let Some(text) = msg.strip_prefix("INFER ") {
             let ids = vocab.encode(text, seq_len);
-            // Affinity routing: similar token prefixes sketch to the same
-            // bucket, so they meet in the same batch downstream.
-            let bucket = bucket_for(&ids, queue.num_buckets());
+            // Affinity routing: requests that sketch alike (by prefix
+            // min-hash or by embedding-space SimHash) share a bucket, so
+            // they meet in the same batch downstream.
+            let sig = signer.sign(&ids);
             let (req, rx) =
                 Request::new(next_id.fetch_add(1, Ordering::SeqCst), ids);
             let t0 = std::time::Instant::now();
-            if queue.try_push(bucket, req).is_err() {
+            if queue.try_push(sig, req).is_err() {
                 rejected.fetch_add(1, Ordering::Relaxed);
                 writeln!(out, "ERR overloaded")?;
                 continue;
@@ -208,6 +246,7 @@ fn handle_conn(stream: TcpStream, queue: Arc<AffinityRouter<Request>>,
             agg.rejected += rejected.load(Ordering::Relaxed);
             let router = queue.stats();
             agg.steals = router.steals;
+            agg.bucket_resizes = router.resizes;
             agg.queue_depths = router.depths;
             writeln!(out, "STATS {}", agg.report())?;
         } else if msg == "QUIT" {

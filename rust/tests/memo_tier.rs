@@ -227,6 +227,65 @@ fn warm_state_survives_restart_at_full_hit_rate() {
     );
 }
 
+/// Satellite (snapshot compat): a version-1 ATWM file — written by the
+/// pre-compaction producer — must still restore a warm tier byte-exactly,
+/// and the warm hit rate must survive the "restart" exactly as with the
+/// current version.
+#[test]
+fn warm_snapshot_version_one_still_restores() {
+    const CLUSTERS: usize = 4;
+    const THRESHOLD: f32 = 0.8;
+    let c = cfg();
+    let elems = c.apm_elems(SEQ);
+    let m = memo(32);
+    let tier = MemoTier::new(&c, SEQ, HnswParams::default(), &m);
+    let cents = centres(21, CLUSTERS, c.embed_dim);
+    let mut rng = Pcg32::seeded(23);
+    let mut dst = vec![0.0f32; elems];
+    for li in 0..LAYERS {
+        for i in 0..32 {
+            let q = near(&mut rng, &cents[i % CLUSTERS], 0.02);
+            if tier.lookup_fetch(li, &q, 48, THRESHOLD, &mut dst).is_none() {
+                let apm = vec![i as f32; elems];
+                tier.admit_batch(li, &[(q.as_slice(), apm.as_slice())],
+                                 THRESHOLD, 48)
+                    .unwrap();
+            }
+        }
+    }
+    let entries_at_save = tier.total_entries();
+
+    let dir = std::env::temp_dir().join("attmemo_memo_tier_v1");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("old.atwm");
+    attmemo::memo::persist::save_warm(&tier, THRESHOLD, &path).unwrap();
+    // Rewrite the header's version field to 1: v1 and v2 share a layout
+    // (v2 only changed the producer's compaction policy), so the old
+    // version must parse — per the PERSISTENCE.md compat policy.
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    drop(tier); // the restart
+
+    let (reloaded, thr) = attmemo::memo::persist::load_warm(
+        &path, &c, &m, HnswParams::default())
+        .unwrap();
+    assert_eq!(thr, THRESHOLD);
+    assert_eq!(reloaded.total_entries(), entries_at_save,
+               "v1 snapshot lost entries through the restart");
+    let mut rng = Pcg32::seeded(29);
+    for li in 0..LAYERS {
+        for (k, centre) in cents.iter().enumerate() {
+            let q = near(&mut rng, centre, 0.01);
+            assert!(
+                reloaded.lookup_fetch(li, &q, 48, THRESHOLD, &mut dst)
+                    .is_some(),
+                "layer {li} cluster {k} cold after a v1 restore"
+            );
+        }
+    }
+}
+
 /// Satellite regression (skips without artifacts): a shape-mismatched
 /// shared tier must not be rejected when `level = off` discards the tier
 /// anyway — a baseline A/B run over a foreign warm snapshot has to come

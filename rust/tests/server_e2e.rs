@@ -4,7 +4,7 @@
 use std::sync::Arc;
 
 use attmemo::bench_support::workload;
-use attmemo::config::{MemoConfig, MemoLevel, ServingConfig};
+use attmemo::config::{MemoConfig, MemoLevel, ServingConfig, SignatureMode};
 use attmemo::data::tokenizer::Vocab;
 use attmemo::serving::affinity::bucket_for;
 use attmemo::serving::server::{Client, Server};
@@ -209,6 +209,74 @@ fn affinity_routing_spans_buckets_and_steals() {
             "STATS must report the router gauges: {stats}");
     assert!(stats.contains("requests=56"),
             "all 24 + 32 requests served: {stats}");
+    c.quit().unwrap();
+    server.shutdown();
+}
+
+/// Semantic signature mode end-to-end (skips without artifacts): the
+/// server builds its signer from the model's embedding table (falling
+/// back to the min-hash only if the table were missing), serves
+/// paraphrase pairs — same words, different order — and keeps reporting
+/// the affinity gauges. Adaptive re-bucketing is enabled to exercise the
+/// resize plumbing under real traffic.
+#[test]
+fn semantic_signatures_serve_end_to_end() {
+    let Ok(rt) = workload::open_runtime() else {
+        eprintln!("SKIP (no artifacts)");
+        return;
+    };
+    let seq_len = rt.artifacts().serving_seq_len;
+    let engine = workload::engine_with_db(
+        &rt, "bert", seq_len, MemoLevel::Moderate, 48, false)
+        .expect("engine");
+    let vocab = Arc::new(
+        Vocab::load(&rt.artifacts().root().join("vocab.json")).unwrap());
+    let cfg = ServingConfig {
+        bind: "127.0.0.1:0".into(),
+        seq_len,
+        max_batch: 4,
+        max_wait_ms: 5,
+        signature_mode: SignatureMode::Semantic,
+        affinity_buckets: 4,
+        affinity_adaptive: true,
+        ..ServingConfig::default()
+    };
+    let server = Server::start(vec![engine], vocab, cfg)
+        .expect("server start");
+    let addr = server.addr.to_string();
+
+    // Paraphrase pairs: the semantic signer buckets each pair together
+    // (identical token bags); every request must be answered either way.
+    let pairs = [
+        ("the film was wonderful and superb",
+         "superb and wonderful was the film"),
+        ("a dreadful boring lifeless plot",
+         "lifeless boring a dreadful plot"),
+    ];
+    let mut handles = Vec::new();
+    for c in 0..2usize {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("connect");
+            for i in 0..8 {
+                let (a, b) = pairs[(c + i) % pairs.len()];
+                let text = if i % 2 == 0 { a } else { b };
+                let (label, _, ms) = client.infer(text).expect("infer");
+                assert!((0..=1).contains(&label));
+                assert!(ms > 0.0);
+            }
+            client.quit().expect("quit");
+        }));
+    }
+    for h in handles {
+        h.join().expect("paraphrase client");
+    }
+
+    let mut c = Client::connect(&addr).unwrap();
+    let stats = c.stats().unwrap();
+    assert!(stats.contains("affinity("),
+            "STATS must report the router gauges: {stats}");
+    assert!(stats.contains("requests=16"), "all requests served: {stats}");
     c.quit().unwrap();
     server.shutdown();
 }
