@@ -11,7 +11,9 @@
 //!   state, occupancy vs the budget, eviction churn, and lookup+admit
 //!   latency;
 //! * a **shared-tier read-scaling** section (1→4 reader threads on one
-//!   warmed tier);
+//!   warmed tier, plus the seqlock acceptance arms: 4 readers with a
+//!   full-tilt same-shard admitter vs an equal-CPU private-tier
+//!   admitter — lookup throughput must not degrade when admissions run);
 //! * an **affinity A/B** (8 buckets vs 1 on a clustered workload) and a
 //!   **signature A/B** (semantic SimHash vs prefix min-hash on a
 //!   *paraphrase-clustered* workload, where word order scatters the
@@ -24,13 +26,15 @@
 //! headline numbers (latency, hit rate, dedup yields) land in
 //! `BENCH_smoke.json` — the artifact CI uploads on every PR.
 
+use std::sync::Arc;
+
 use attmemo::bench_support::harness::time_ms;
 use attmemo::bench_support::{smoke, SmokeSummary, TableWriter};
 use attmemo::config::{MemoLevel, ModelConfig};
 use attmemo::memo::index::HnswParams;
 use attmemo::memo::policy::AdmissionPolicy;
 use attmemo::memo::semhash::SemanticSketcher;
-use attmemo::memo::AttentionDb;
+use attmemo::memo::{AttentionDb, MemoTier};
 use attmemo::serving::affinity::Signer;
 use attmemo::util::Pcg32;
 
@@ -169,72 +173,168 @@ fn run_engine_section() -> attmemo::Result<()> {
     Ok(())
 }
 
+/// Run `threads` reader threads of exact-match `lookup_fetch`es against
+/// `tier`'s layer 0, optionally with one background admitter thread
+/// churning `admit_into`'s layer 0 at full tilt. The admitter's batches
+/// are dedup-admissions (every row already stored above the dedup
+/// threshold), so each batch runs the complete writer path — snapshot
+/// clone, publish, slot reclaim — without changing the entry set, keeping
+/// the read workload identical across arms. Returns (total hits, wall
+/// seconds of the reader side).
+fn read_throughput(tier: &Arc<MemoTier>, entries: &Arc<Vec<Vec<f32>>>,
+                   elems: usize, threads: usize, lookups_per_thread: usize,
+                   admit_into: Option<Arc<MemoTier>>) -> (usize, f64) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let admitter = admit_into.map(|t| {
+        let stop = stop.clone();
+        let entries = entries.clone();
+        std::thread::spawn(move || {
+            let apm = vec![1.0f32; elems];
+            let mut k = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let rows: Vec<(&[f32], &[f32])> = (0..8)
+                    .map(|j| {
+                        (entries[(k + j) % entries.len()].as_slice(),
+                         apm.as_slice())
+                    })
+                    .collect();
+                t.admit_batch(0, &rows, 0.9, 48).unwrap();
+                k = (k + 8) % entries.len();
+            }
+        })
+    });
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let tier = tier.clone();
+        let entries = entries.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut dst = vec![0.0f32; elems];
+            let mut hits = 0usize;
+            for i in 0..lookups_per_thread {
+                let q = &entries[(i * (t + 1)) % entries.len()];
+                if tier.lookup_fetch(0, q, 48, 0.9, &mut dst).is_some() {
+                    hits += 1;
+                }
+            }
+            hits
+        }));
+    }
+    let hits: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let secs = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Relaxed);
+    if let Some(a) = admitter {
+        a.join().unwrap();
+    }
+    (hits, secs)
+}
+
 /// Shared-tier read scaling: one warmed `MemoTier`, 1..=4 reader threads
-/// doing lookup+fetch concurrently. Under the old engine-mutex design
-/// these lookups serialized; on the shard `RwLock` they run in parallel,
-/// so aggregate lookups/sec should grow with the thread count. Returns
-/// the 4-thread lookups/sec for the smoke summary.
-fn shared_tier_section(table: &mut TableWriter) -> f64 {
+/// doing lookup+fetch concurrently, then the seqlock acceptance
+/// measurement — 4 readers with a full-tilt admitter on the *same* shard
+/// versus the same CPU load admitting into a *private* tier. Under the
+/// old per-shard write lock the same-shard admitter stalled readers for
+/// whole admission batches; on the seqlock read path lookups never
+/// block, so the two arms must stay close. Returns (4-thread
+/// lookups/sec, shared-vs-private throughput ratio) for the smoke
+/// summary.
+fn shared_tier_section(table: &mut TableWriter) -> (f64, f64) {
     use attmemo::config::MemoConfig;
-    use attmemo::memo::MemoTier;
-    use std::sync::Arc;
 
     let cfg = sim_cfg();
     let seq = 32usize;
     let elems = cfg.apm_elems(seq);
     let memo = MemoConfig {
         online_admission: true,
-        max_db_entries: 0,
+        max_db_entries: 256,
         admission_min_attempts: 0,
-        intra_batch_dedup: false, // fill the tier, duplicates welcome
+        intra_batch_dedup: true, // admitter arms dedup: write-path churn
+                                 // with a stable entry set
         ..MemoConfig::default()
     };
-    let tier = Arc::new(MemoTier::new(&cfg, seq, Default::default(), &memo));
     let mut rng = Pcg32::seeded(21);
-    let entries: Vec<Vec<f32>> =
-        (0..256).map(|_| unit_vec(&mut rng, cfg.embed_dim)).collect();
+    let entries: Arc<Vec<Vec<f32>>> = Arc::new(
+        (0..256).map(|_| unit_vec(&mut rng, cfg.embed_dim)).collect());
     let apm = vec![1.0f32; elems];
-    let rows: Vec<(&[f32], &[f32])> = entries
-        .iter()
-        .map(|f| (f.as_slice(), apm.as_slice()))
-        .collect();
-    tier.admit_batch(0, &rows, 2.0, 48).unwrap();
+    let warm = |tier: &Arc<MemoTier>| {
+        let rows: Vec<(&[f32], &[f32])> = entries
+            .iter()
+            .map(|f| (f.as_slice(), apm.as_slice()))
+            .collect();
+        // Threshold 2.0: nothing clears it, so every row admits.
+        tier.admit_batch(0, &rows, 2.0, 48).unwrap();
+    };
+    let tier = Arc::new(MemoTier::new(&cfg, seq, Default::default(), &memo));
+    warm(&tier);
 
-    let lookups_per_thread = smoke::iters(2000, 200);
-    let mut last_rate = 0.0f64;
-    for threads in [1usize, 2, 4] {
-        let t0 = std::time::Instant::now();
-        let mut handles = Vec::new();
-        for t in 0..threads {
-            let tier = tier.clone();
-            let entries = entries.clone();
-            handles.push(std::thread::spawn(move || {
-                let mut dst = vec![0.0f32; elems];
-                let mut hits = 0usize;
-                for i in 0..lookups_per_thread {
-                    let q = &entries[(i * (t + 1)) % entries.len()];
-                    if tier.lookup_fetch(0, q, 48, 0.9, &mut dst).is_some()
-                    {
-                        hits += 1;
-                    }
-                }
-                hits
-            }));
-        }
-        let hits: usize =
-            handles.into_iter().map(|h| h.join().unwrap()).sum();
-        let secs = t0.elapsed().as_secs_f64();
+    // Smoke mode keeps a sizeable window here: the admitter-ratio arms
+    // time a multi-thread region, and a sub-millisecond window on a
+    // 2-vCPU CI runner would be all scheduler jitter.
+    let lookups_per_thread = smoke::iters(2000, 800);
+    let mut emit_row = |threads: usize, admitter: &str, hits: usize,
+                        secs: f64| -> f64 {
         let total = threads * lookups_per_thread;
-        last_rate = total as f64 / secs;
+        let rate = total as f64 / secs;
         table.row(&[
             threads.to_string(),
+            admitter.to_string(),
             total.to_string(),
             format!("{:.3}", hits as f64 / total as f64),
             format!("{:.1}", secs * 1e3),
-            format!("{last_rate:.0}"),
+            format!("{rate:.0}"),
         ]);
+        rate
+    };
+
+    let mut base4 = 0.0f64;
+    for threads in [1usize, 2, 4] {
+        let (hits, secs) = read_throughput(&tier, &entries, elems, threads,
+                                           lookups_per_thread, None);
+        let rate = emit_row(threads, "none", hits, secs);
+        if threads == 4 {
+            base4 = rate;
+        }
     }
-    last_rate
+    // Fair baseline: the same CPU load (an admitter churning a private
+    // warm tier) with zero shared-state interaction with the readers.
+    let private =
+        Arc::new(MemoTier::new(&cfg, seq, Default::default(), &memo));
+    warm(&private);
+    let (hits, secs) = read_throughput(&tier, &entries, elems, 4,
+                                       lookups_per_thread,
+                                       Some(private.clone()));
+    let rate_private = emit_row(4, "private", hits, secs);
+    // Contended arm: the admitter hammers the shard the readers use.
+    let (hits, secs) = read_throughput(&tier, &entries, elems, 4,
+                                       lookups_per_thread,
+                                       Some(tier.clone()));
+    let rate_shared = emit_row(4, "shared", hits, secs);
+    let ratio = rate_shared / rate_private.max(1e-9);
+    println!(
+        "shared-tier read scaling: 4t baseline {base4:.0}/s, private \
+         admitter {rate_private:.0}/s, same-shard admitter \
+         {rate_shared:.0}/s (shared/private ratio {ratio:.3})"
+    );
+    // Hard gate only on full runs: a CI smoke runner (2 vCPUs, capped
+    // iterations) can deschedule one arm long enough to fail an
+    // otherwise-healthy build, and the smoke summary records the ratio
+    // for the history trend either way.
+    if !smoke::smoke() {
+        assert!(
+            ratio > 0.7,
+            "a concurrent admitter degraded lookup throughput to \
+             {ratio:.3} of the equal-CPU baseline — the seqlock read \
+             path must not block readers"
+        );
+    } else if ratio <= 0.7 {
+        eprintln!(
+            "warn: smoke-mode admitter ratio {ratio:.3} <= 0.7 \
+             (not fatal under BENCH_SMOKE; check on a full run)"
+        );
+    }
+    (base4, ratio)
 }
 
 /// Outcome of one affinity A/B arm over the full run.
@@ -265,7 +365,6 @@ struct AbOutcome {
 fn run_affinity_arm(label: &str, signer: &Signer, buckets: usize,
                     paraphrase: bool, table: &mut TableWriter) -> AbOutcome {
     use attmemo::config::MemoConfig;
-    use attmemo::memo::MemoTier;
     use attmemo::serving::affinity::AffinityRouter;
     use attmemo::serving::batcher::form_batch;
     use std::time::Duration;
@@ -498,13 +597,16 @@ fn main() {
 
     let mut shared = TableWriter::new(
         "Shared memo tier — concurrent readers on one warmed tier \
-         (256 entries, exact-match queries)",
-        &["threads", "lookups", "hit_rate", "wall_ms", "lookups_per_s"],
+         (256 entries, exact-match queries; admitter arms exercise the \
+         seqlock write path)",
+        &["threads", "admitter", "lookups", "hit_rate", "wall_ms",
+          "lookups_per_s"],
     );
-    let lookups_per_s = shared_tier_section(&mut shared);
+    let (lookups_per_s, admit_ratio) = shared_tier_section(&mut shared);
     shared.emit(Some(std::path::Path::new(
         "bench_results/online_memo_shared_tier.csv")));
     summary.push("shared_tier_lookups_per_s_4t", lookups_per_s);
+    summary.push("shared_tier_admit_ratio", admit_ratio);
 
     let mut ab = TableWriter::new(
         "Affinity routing A/B — clustered workload, 2 replicas, \
@@ -533,6 +635,23 @@ fn main() {
     summary.push("steady_hit_rate_prefix", pre.steady_hit_rate);
 
     summary.emit(std::path::Path::new("BENCH_smoke.json"));
+    // CI trend (BENCH_HISTORY=1): gate the warm hit rate against the last
+    // committed history entry, then append this run's summary as a new
+    // JSON line — the cross-PR perf trajectory the artifacts alone never
+    // gave us.
+    if std::env::var("BENCH_HISTORY").map(|v| v == "1").unwrap_or(false) {
+        match summary.check_and_append_history(
+            std::path::Path::new("BENCH_history.jsonl"),
+            "sim_warm_hit_rate",
+            0.05,
+        ) {
+            Ok(()) => println!("history → BENCH_history.jsonl"),
+            Err(e) => {
+                eprintln!("BENCH history gate failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
 
     match run_engine_section() {
         Ok(()) => {}

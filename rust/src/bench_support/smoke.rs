@@ -68,6 +68,72 @@ impl SmokeSummary {
             println!("smoke summary → {}", path.display());
         }
     }
+
+    /// Render the summary as one compact JSON line (the
+    /// `BENCH_history.jsonl` format: one entry per recorded run).
+    pub fn history_line(&self) -> String {
+        let mut out = String::from("{");
+        let _ = write!(out, "\"smoke\": {}", smoke());
+        for (k, v) in &self.entries {
+            if v.is_finite() {
+                let _ = write!(out, ", \"{k}\": {v:.6}");
+            } else {
+                let _ = write!(out, ", \"{k}\": null");
+            }
+        }
+        out.push('}');
+        out
+    }
+
+    /// The cross-PR regression gate + trend append: read the last entry
+    /// of the committed history file at `path`, fail when this run's
+    /// `key` dropped more than `margin` below it, then append the current
+    /// summary as a new JSON line. A missing file or a last entry without
+    /// `key` passes the gate (the first entry seeds the trajectory) — but
+    /// a last line that exists and fails to parse is a hard error, not a
+    /// silent pass: a truncated or hand-mangled history must never turn
+    /// the gate off and then ratchet it down to a regressed value. A
+    /// failed gate appends nothing, so the history only ever records runs
+    /// that passed.
+    pub fn check_and_append_history(
+        &self, path: &Path, key: &str, margin: f64,
+    ) -> std::result::Result<(), String> {
+        let current = self
+            .entries
+            .iter()
+            .find(|(k, _)| k.as_str() == key)
+            .map(|(_, v)| *v);
+        let mut text = std::fs::read_to_string(path).unwrap_or_default();
+        let previous = match text.lines().rev().find(|l| !l.trim().is_empty())
+        {
+            Some(line) => match crate::config::json::Json::parse(line) {
+                Ok(entry) => entry.get(key).and_then(|v| v.as_f64()),
+                Err(e) => {
+                    return Err(format!(
+                        "unparseable last entry in {} ({e}); fix or remove \
+                         the line before the gate can run",
+                        path.display()
+                    ))
+                }
+            },
+            None => None,
+        };
+        if let (Some(prev), Some(cur)) = (previous, current) {
+            if cur + margin < prev {
+                return Err(format!(
+                    "{key} regressed: {cur:.4} vs last recorded {prev:.4} \
+                     (allowed margin {margin})"
+                ));
+            }
+        }
+        if !text.is_empty() && !text.ends_with('\n') {
+            text.push('\n');
+        }
+        text.push_str(&self.history_line());
+        text.push('\n');
+        std::fs::write(path, text)
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
 }
 
 #[cfg(test)]
@@ -93,5 +159,63 @@ mod tests {
         let mut s = SmokeSummary::new();
         s.push("bad", f64::NAN);
         assert!(s.json().contains("\"bad\": null"));
+    }
+
+    #[test]
+    fn history_line_is_one_parseable_json_line() {
+        let mut s = SmokeSummary::new();
+        s.push("sim_warm_hit_rate", 0.9375);
+        let line = s.history_line();
+        assert!(!line.contains('\n'));
+        let parsed = crate::config::json::Json::parse(&line).unwrap();
+        assert_eq!(
+            parsed.get("sim_warm_hit_rate").and_then(|v| v.as_f64()),
+            Some(0.9375)
+        );
+    }
+
+    /// Satellite: the CI trend gate — first entries seed, equal values
+    /// append, a regression beyond the margin fails without appending.
+    #[test]
+    fn history_gate_detects_regression_and_appends() {
+        let dir = std::env::temp_dir().join("attmemo_smoke_hist");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hist.jsonl");
+        let _ = std::fs::remove_file(&path);
+
+        let mut s = SmokeSummary::new();
+        s.push("sim_warm_hit_rate", 0.9);
+        // No history yet: the gate passes and seeds the file.
+        s.check_and_append_history(&path, "sim_warm_hit_rate", 0.05)
+            .unwrap();
+        // Equal value: passes and appends a second entry.
+        s.check_and_append_history(&path, "sim_warm_hit_rate", 0.05)
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2, "{text}");
+        // Within-margin dip still passes.
+        let mut dip = SmokeSummary::new();
+        dip.push("sim_warm_hit_rate", 0.87);
+        dip.check_and_append_history(&path, "sim_warm_hit_rate", 0.05)
+            .unwrap();
+        // A clear regression beyond the margin fails and must not append.
+        let mut worse = SmokeSummary::new();
+        worse.push("sim_warm_hit_rate", 0.7);
+        let err = worse
+            .check_and_append_history(&path, "sim_warm_hit_rate", 0.05)
+            .unwrap_err();
+        assert!(err.contains("regressed"), "{err}");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3, "failed gate must not append");
+        // A mangled last line must fail loudly, never silently disable
+        // the gate (and must not append on top of the damage).
+        std::fs::write(&path, "{\"sim_warm_hit_rate\": 0.9}\n{trunc")
+            .unwrap();
+        let mut s2 = SmokeSummary::new();
+        s2.push("sim_warm_hit_rate", 0.9);
+        let err = s2
+            .check_and_append_history(&path, "sim_warm_hit_rate", 0.05)
+            .unwrap_err();
+        assert!(err.contains("unparseable"), "{err}");
     }
 }

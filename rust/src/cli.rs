@@ -135,8 +135,10 @@ AFFINITY ROUTING (serve)
   --signature-mode M    how requests sketch into buckets: `prefix`
                         (token min-hash, the default) or `semantic`
                         (SimHash over mean-pooled embedding-table rows,
-                        so paraphrases share a bucket; falls back to
-                        prefix when no embedding table is loaded)
+                        so paraphrases share a bucket). Explicitly
+                        requesting `semantic` with no embedding table
+                        loaded is a startup error; only a semantic
+                        *config default* warns and falls back to prefix
   --signature-prefix-len N
                         non-pad prefix tokens both signature modes
                         sketch over (default 32; also --set
@@ -300,6 +302,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .max(1);
     if let Some(mode) = args.opt("signature-mode") {
         cfg.signature_mode = SignatureMode::parse(mode)?;
+        // An explicit flag must not silently degrade: the server errors
+        // at startup when semantic mode is requested without a usable
+        // embedding table (a config *default* still warns + falls back).
+        cfg.signature_explicit = true;
     }
     cfg.signature_prefix_len = args
         .opt_usize("signature-prefix-len", cfg.signature_prefix_len)?

@@ -216,9 +216,17 @@ pub struct ServingConfig {
     pub affinity_buckets: usize,
     /// How requests are sketched into affinity signatures
     /// (`--signature-mode prefix|semantic`). Semantic mode buckets by
-    /// meaning through the model's embedding table and falls back to the
-    /// prefix min-hash when no table is loaded.
+    /// meaning through the model's embedding table; when no table is
+    /// loaded, a semantic *default* falls back to the prefix min-hash
+    /// with a warning, while an *explicitly requested* semantic mode
+    /// (see [`ServingConfig::signature_explicit`]) is a hard startup
+    /// error.
     pub signature_mode: SignatureMode,
+    /// Whether `signature_mode` was set explicitly by the operator
+    /// (`--signature-mode` / `--set signature_mode=…`) rather than
+    /// inherited from a config default. Explicit semantic mode must not
+    /// silently degrade to the prefix min-hash.
+    pub signature_explicit: bool,
     /// Non-pad prefix tokens both signature modes sketch over
     /// (`--signature-prefix-len`, `--set signature_prefix_len=N`).
     pub signature_prefix_len: usize,
@@ -244,6 +252,7 @@ impl Default for ServingConfig {
             replicas: 1,
             affinity_buckets: 8,
             signature_mode: SignatureMode::Prefix,
+            signature_explicit: false,
             signature_prefix_len: 32,
             affinity_adaptive: false,
             affinity_max_buckets: 64,
@@ -266,7 +275,8 @@ impl ServingConfig {
                 self.affinity_buckets = parse_num(key, value)?.max(1)
             }
             "signature_mode" => {
-                self.signature_mode = SignatureMode::parse(value)?
+                self.signature_mode = SignatureMode::parse(value)?;
+                self.signature_explicit = true;
             }
             "signature_prefix_len" => {
                 self.signature_prefix_len = parse_num(key, value)?.max(1)
@@ -364,10 +374,13 @@ mod tests {
     fn signature_and_adaptive_overrides() {
         let mut s = ServingConfig::default();
         assert_eq!(s.signature_mode, SignatureMode::Prefix);
+        assert!(!s.signature_explicit, "defaults are not explicit");
         assert_eq!(s.signature_prefix_len, 32);
         assert!(!s.affinity_adaptive);
         s.set("signature_mode", "semantic").unwrap();
         assert_eq!(s.signature_mode, SignatureMode::Semantic);
+        assert!(s.signature_explicit,
+                "a --set override is an explicit operator request");
         s.set("signature_mode", "minhash").unwrap();
         assert_eq!(s.signature_mode, SignatureMode::Prefix);
         assert!(s.set("signature_mode", "quantum").is_err());

@@ -14,9 +14,29 @@
 //! later admission instead of growing the file forever. A removed id stays
 //! dead: `get`/`file_offset` on it error, and its slot's next tenant gets a
 //! fresh id.
+//!
+//! **Snapshots.** Since the seqlock tier (`memo/tier.rs`) went
+//! copy-on-write, an arena value is a cheap *snapshot* over a shared
+//! backing store: the memfd, its size and its mappings live in an
+//! `Arc`-shared [`Store`], while the id→slot table, slot epochs and the
+//! free list are per-snapshot. `cow_clone` gives the tier's writer a
+//! private copy to mutate; published (frozen) snapshots keep reading the
+//! same physical pages. Two rules make that safe with zero reader-side
+//! synchronization:
+//!
+//! * the file **never shrinks or remaps in place** — growth creates a new
+//!   mapping and old mappings stay alive (each snapshot pins the mapping
+//!   that covers its slots), so a reader's pointer is valid for as long
+//!   as it holds the snapshot;
+//! * in deferred-free mode (`set_defer_free`, the tier's writer lineage),
+//!   a removed entry's physical slot goes onto a *pending* list instead
+//!   of the free list — the tier recycles it only once every snapshot
+//!   that could still reference the slot has quiesced, so no reader ever
+//!   observes a slot's bytes being overwritten under it.
 
 use std::os::fd::RawFd;
-use std::sync::OnceLock;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::{Error, Result};
 
@@ -39,6 +59,101 @@ pub struct ApmId(
     pub u32,
 );
 
+/// One read-write `MAP_SHARED` view of the store's file. Mappings are
+/// immutable once created and shared behind `Arc`: growth creates a new,
+/// larger mapping while snapshots keep pinning the one that covers their
+/// slots — all mappings alias the same physical pages, so a write through
+/// the newest mapping is visible through every older one.
+struct Mapping {
+    base: *mut u8,
+    bytes: usize,
+}
+
+// SAFETY: the raw pointer is only dereferenced with range checks against
+// slots the owning snapshot knows; the pages stay mapped for the Mapping's
+// lifetime (munmap happens in Drop, after every referencing snapshot is
+// gone).
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    fn empty() -> Mapping {
+        Mapping { base: std::ptr::null_mut(), bytes: 0 }
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        if !self.base.is_null() {
+            unsafe { libc::munmap(self.base.cast(), self.bytes) };
+        }
+    }
+}
+
+/// Growth state of a store: serialized by its mutex (in practice by the
+/// tier's per-shard writer mutex — only one lineage writer allocates).
+struct GrowState {
+    /// Physical slots the file currently holds.
+    cap: usize,
+    /// Physical slots ever handed out (high-water mark).
+    phys_used: usize,
+    /// Mapping covering all `cap` slots.
+    map: Arc<Mapping>,
+}
+
+/// The shared backing store of one arena lineage: the memfd plus its
+/// growth state. Snapshot clones of an arena share the store; the file is
+/// closed when the last snapshot drops.
+struct Store {
+    fd: RawFd,
+    /// Page-aligned byte stride between entries.
+    stride: usize,
+    grow: Mutex<GrowState>,
+    /// `cap × stride`, readable without the grow lock (stats path).
+    resident: AtomicUsize,
+}
+
+/// Owned identity of one backing [`Store`]: freed page slots are only
+/// meaningful on the store they were freed on, so the tier tags its
+/// deferred-reclaim lists with a handle and refuses to recycle slots onto
+/// any other store (a compaction mid-batch moves the lineage to a fresh
+/// store; the old one retires wholesale). Holding the store `Arc` means
+/// the identity can never be recycled onto a different memfd.
+pub(crate) struct StoreHandle(Arc<Store>);
+
+impl Drop for Store {
+    fn drop(&mut self) {
+        unsafe { libc::close(self.fd) };
+    }
+}
+
+/// Extend the file by `extra` slots and install a fresh covering mapping.
+/// Old mappings are left untouched (snapshots may still read them).
+fn grow_store(store: &Store, g: &mut GrowState, extra: usize) -> Result<()> {
+    let new_cap = g.cap + extra;
+    let bytes = new_cap * store.stride;
+    if unsafe { libc::ftruncate(store.fd, bytes as libc::off_t) } != 0 {
+        return Err(Error::Io(std::io::Error::last_os_error()));
+    }
+    let base = unsafe {
+        libc::mmap(
+            std::ptr::null_mut(),
+            bytes,
+            libc::PROT_READ | libc::PROT_WRITE,
+            libc::MAP_SHARED,
+            store.fd,
+            0,
+        )
+    };
+    if base == libc::MAP_FAILED {
+        return Err(Error::Io(std::io::Error::last_os_error()));
+    }
+    g.map = Arc::new(Mapping { base: base.cast(), bytes });
+    g.cap = new_cap;
+    store.resident.store(bytes, Ordering::Relaxed);
+    Ok(())
+}
+
 /// Fixed-stride, page-aligned entry store on a memfd with slot reuse.
 ///
 /// ```
@@ -48,37 +163,31 @@ pub struct ApmId(
 /// assert_eq!(arena.get(id).unwrap(), &[1.0; 8]);
 /// ```
 pub struct ApmArena {
-    fd: RawFd,
+    store: Arc<Store>,
+    /// The store mapping covering every slot this snapshot references.
+    map: Arc<Mapping>,
     /// Bytes of payload per entry (f32 count × 4).
     entry_bytes: usize,
-    /// Page-aligned stride between entries.
-    stride: usize,
     /// id → physical slot; `None` once evicted.
     slots: Vec<Option<u32>>,
+    /// Per-physical-slot reuse epoch, bumped on every `remove`. One slot's
+    /// epoch identifies which *tenant* a stamp was taken against.
+    slot_epochs: Vec<u32>,
     /// Physical slots freed by eviction, available for reuse.
     free: Vec<u32>,
+    /// Slots freed while `defer_free` is on: dead, but not reusable until
+    /// the owner proves no concurrent snapshot can still read them
+    /// ([`ApmArena::take_pending_free`] / [`ApmArena::release_slots`]).
+    pending_free: Vec<u32>,
+    /// Route `remove`d slots through `pending_free` instead of `free`.
+    defer_free: bool,
     /// Live entries (`slots` entries that are `Some`).
     live: usize,
-    /// Physical slots ever handed out (high-water mark).
-    phys_used: usize,
-    /// Physical slots the file currently holds.
-    cap: usize,
-    /// Persistent read-write mapping of the whole file.
-    base: *mut u8,
-    map_bytes: usize,
     /// Arena generation: bumped by the owner (`LayerDb::compact`) whenever
     /// the id space is renumbered, so pre-compaction epoch stamps can never
     /// validate against the rebuilt arena.
     generation: u32,
-    /// Per-physical-slot reuse epoch, bumped on every `remove`. One slot's
-    /// epoch identifies which *tenant* a stamp was taken against.
-    slot_epochs: Vec<u32>,
 }
-
-// The raw pointer is only dereferenced through &self/&mut self with range
-// checks; the underlying memfd pages are valid for the arena's lifetime.
-unsafe impl Send for ApmArena {}
-unsafe impl Sync for ApmArena {}
 
 const GROW_CHUNK: usize = 256; // entries added per ftruncate
 
@@ -96,29 +205,97 @@ impl ApmArena {
         if fd < 0 {
             return Err(Error::Io(std::io::Error::last_os_error()));
         }
-        let mut arena = ApmArena {
+        let store = Store {
             fd,
-            entry_bytes,
             stride,
-            slots: Vec::new(),
-            free: Vec::new(),
-            live: 0,
-            phys_used: 0,
-            cap: 0,
-            base: std::ptr::null_mut(),
-            map_bytes: 0,
-            generation: 0,
-            slot_epochs: Vec::new(),
+            grow: Mutex::new(GrowState {
+                cap: 0,
+                phys_used: 0,
+                map: Arc::new(Mapping::empty()),
+            }),
+            resident: AtomicUsize::new(0),
         };
-        arena.grow(GROW_CHUNK)?;
-        Ok(arena)
+        let map = {
+            let mut g = store.grow.lock().unwrap();
+            grow_store(&store, &mut g, GROW_CHUNK)?;
+            g.map.clone()
+        };
+        Ok(ApmArena {
+            store: Arc::new(store),
+            map,
+            entry_bytes,
+            slots: Vec::new(),
+            slot_epochs: Vec::new(),
+            free: Vec::new(),
+            pending_free: Vec::new(),
+            defer_free: false,
+            live: 0,
+            generation: 0,
+        })
+    }
+
+    /// Cheap snapshot copy for the copy-on-write tier: the id→slot table,
+    /// epochs and free lists are duplicated, the backing store (memfd,
+    /// mappings, payload bytes) is shared.
+    pub(crate) fn cow_clone(&self) -> ApmArena {
+        ApmArena {
+            store: Arc::clone(&self.store),
+            map: Arc::clone(&self.map),
+            entry_bytes: self.entry_bytes,
+            slots: self.slots.clone(),
+            slot_epochs: self.slot_epochs.clone(),
+            free: self.free.clone(),
+            pending_free: self.pending_free.clone(),
+            defer_free: self.defer_free,
+            live: self.live,
+            generation: self.generation,
+        }
+    }
+
+    /// Opaque identity of this arena's backing store (see
+    /// [`StoreHandle`]). The handle keeps the store alive, so the
+    /// identity can never be recycled onto a different memfd (no ABA).
+    pub(crate) fn store_handle(&self) -> StoreHandle {
+        StoreHandle(Arc::clone(&self.store))
+    }
+
+    /// Whether this arena still lives on the store `h` identifies (false
+    /// across a compaction, which rebuilds onto a new store).
+    pub(crate) fn is_on_store(&self, h: &StoreHandle) -> bool {
+        Arc::ptr_eq(&self.store, &h.0)
+    }
+
+    /// Switch `remove` between immediate slot reuse (single-threaded
+    /// owners: offline builds, benches) and deferred reclamation (the
+    /// concurrent tier, which recycles slots only after snapshot
+    /// quiescence).
+    pub(crate) fn set_defer_free(&mut self, on: bool) {
+        self.defer_free = on;
+    }
+
+    /// Whether removals defer slot reuse (see
+    /// [`ApmArena::set_defer_free`]).
+    pub(crate) fn defer_free(&self) -> bool {
+        self.defer_free
+    }
+
+    /// Drain the slots freed since the last call (deferred mode). The
+    /// caller owns proving quiescence before feeding them back through
+    /// [`ApmArena::release_slots`].
+    pub(crate) fn take_pending_free(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.pending_free)
+    }
+
+    /// Return quiesced slots to the free list for reuse by later pushes.
+    pub(crate) fn release_slots(&mut self, slots: Vec<u32>) {
+        self.free.extend(slots);
     }
 
     /// Whether gathered batches are usable as one contiguous f32 tensor
     /// (true iff the payload exactly fills its pages; holds for all
     /// serving shapes — e.g. 4·128·128·4 B = 64 pages).
     pub fn dense_mappable(&self) -> bool {
-        self.entry_bytes == self.stride
+        self.entry_bytes == self.store.stride
     }
 
     /// Bytes of payload per entry.
@@ -133,7 +310,7 @@ impl ApmArena {
 
     /// Page-aligned byte stride between entries in the file.
     pub fn stride(&self) -> usize {
-        self.stride
+        self.store.stride
     }
 
     /// Arena generation (see [`ApmArena::epoch`]); bumped when the id space
@@ -218,18 +395,19 @@ impl ApmArena {
     }
 
     pub(crate) fn fd(&self) -> RawFd {
-        self.fd
+        self.store.fd
     }
 
-    /// Total bytes resident in the store (capacity × stride).
+    /// Total bytes resident in the store (capacity × stride). Lock-free:
+    /// reads the store's atomic gauge.
     pub fn resident_bytes(&self) -> usize {
-        self.cap * self.stride
+        self.store.resident.load(Ordering::Relaxed)
     }
 
     /// Byte offset of an entry inside the file (for gather mappings).
     pub(crate) fn file_offset(&self, id: ApmId) -> Result<usize> {
         match self.slots.get(id.0 as usize) {
-            Some(Some(slot)) => Ok(*slot as usize * self.stride),
+            Some(Some(slot)) => Ok(*slot as usize * self.store.stride),
             Some(None) => {
                 Err(Error::memo(format!("ApmId {} was evicted", id.0)))
             }
@@ -241,33 +419,21 @@ impl ApmArena {
         }
     }
 
-    fn grow(&mut self, extra: usize) -> Result<()> {
-        let new_cap = self.cap + extra;
-        let bytes = new_cap * self.stride;
-        if unsafe { libc::ftruncate(self.fd, bytes as libc::off_t) } != 0 {
-            return Err(Error::Io(std::io::Error::last_os_error()));
+    /// Hand out a never-used physical slot, extending the file (and
+    /// refreshing this snapshot's mapping) when the high-water mark hits
+    /// the current capacity.
+    fn alloc_fresh_slot(&mut self) -> Result<u32> {
+        let mut g = self.store.grow.lock().unwrap();
+        if g.phys_used == g.cap {
+            let extra = GROW_CHUNK.max(g.cap / 2);
+            grow_store(&self.store, &mut g, extra)?;
         }
-        // Remap the full file read-write.
-        if !self.base.is_null() {
-            unsafe { libc::munmap(self.base.cast(), self.map_bytes) };
-        }
-        let base = unsafe {
-            libc::mmap(
-                std::ptr::null_mut(),
-                bytes,
-                libc::PROT_READ | libc::PROT_WRITE,
-                libc::MAP_SHARED,
-                self.fd,
-                0,
-            )
-        };
-        if base == libc::MAP_FAILED {
-            return Err(Error::Io(std::io::Error::last_os_error()));
-        }
-        self.base = base.cast();
-        self.map_bytes = bytes;
-        self.cap = new_cap;
-        Ok(())
+        let s = g.phys_used as u32;
+        g.phys_used += 1;
+        // The writer's view must cover the slot it is about to fill; old
+        // snapshots keep their own (older, smaller) mapping.
+        self.map = g.map.clone();
+        Ok(s)
     }
 
     /// Store one entry — into a freed slot when available, appending
@@ -282,21 +448,16 @@ impl ApmArena {
         }
         let slot = match self.free.pop() {
             Some(s) => s,
-            None => {
-                if self.phys_used == self.cap {
-                    self.grow(GROW_CHUNK.max(self.cap / 2))?;
-                }
-                let s = self.phys_used as u32;
-                self.phys_used += 1;
-                self.slot_epochs.push(0);
-                s
-            }
+            None => self.alloc_fresh_slot()?,
         };
-        let off = slot as usize * self.stride;
+        while self.slot_epochs.len() <= slot as usize {
+            self.slot_epochs.push(0);
+        }
+        let off = slot as usize * self.store.stride;
         unsafe {
             std::ptr::copy_nonoverlapping(
                 data.as_ptr().cast::<u8>(),
-                self.base.add(off),
+                self.map.base.add(off),
                 self.entry_bytes,
             );
         }
@@ -306,7 +467,8 @@ impl ApmArena {
     }
 
     /// Evict an entry: its id goes dead and its physical slot becomes
-    /// reusable by a later `push`.
+    /// reusable by a later `push` — immediately, or (in deferred mode)
+    /// once the owner releases it after snapshot quiescence.
     pub fn remove(&mut self, id: ApmId) -> Result<()> {
         let i = id.0 as usize;
         if i >= self.slots.len() {
@@ -322,7 +484,11 @@ impl ApmArena {
                 // distinguishable from this one, even at the same offset.
                 let e = &mut self.slot_epochs[slot as usize];
                 *e = e.wrapping_add(1);
-                self.free.push(slot);
+                if self.defer_free {
+                    self.pending_free.push(slot);
+                } else {
+                    self.free.push(slot);
+                }
                 self.live -= 1;
                 Ok(())
             }
@@ -337,19 +503,10 @@ impl ApmArena {
         let off = self.file_offset(id)?;
         unsafe {
             Ok(std::slice::from_raw_parts(
-                self.base.add(off).cast::<f32>(),
+                self.map.base.add(off).cast::<f32>(),
                 self.entry_bytes / 4,
             ))
         }
-    }
-}
-
-impl Drop for ApmArena {
-    fn drop(&mut self) {
-        if !self.base.is_null() {
-            unsafe { libc::munmap(self.base.cast(), self.map_bytes) };
-        }
-        unsafe { libc::close(self.fd) };
     }
 }
 
@@ -469,5 +626,63 @@ mod tests {
         }
         assert_eq!(a.resident_bytes(), bytes, "churn must not grow the file");
         assert_eq!(a.len(), 1);
+    }
+
+    /// The seqlock tier's slot discipline: a deferred-mode removal must
+    /// not hand the slot to the next push (a frozen snapshot could still
+    /// be reading it); release after quiescence recycles it.
+    #[test]
+    fn deferred_free_recycles_only_after_release() {
+        let mut a = ApmArena::new(8).unwrap();
+        a.set_defer_free(true);
+        assert!(a.defer_free());
+        let i0 = a.push(&[0.0; 8]).unwrap();
+        let off0 = a.file_offset(i0).unwrap();
+        a.remove(i0).unwrap();
+        let i1 = a.push(&[1.0; 8]).unwrap();
+        assert_ne!(a.file_offset(i1).unwrap(), off0,
+                   "a pending slot must not be reused before release");
+        let pending = a.take_pending_free();
+        assert_eq!(pending, vec![0]);
+        assert!(a.take_pending_free().is_empty(), "drain is one-shot");
+        a.release_slots(pending);
+        let i2 = a.push(&[2.0; 8]).unwrap();
+        assert_eq!(a.file_offset(i2).unwrap(), off0,
+                   "a released slot recycles");
+        assert_eq!(a.get(i2).unwrap(), &[2.0; 8]);
+    }
+
+    /// Copy-on-write: mutating the writer's copy leaves a snapshot's view
+    /// (table *and* payload bytes) intact — the no-torn-reads property the
+    /// seqlock tier is built on.
+    #[test]
+    fn cow_clone_shares_store_and_isolates_tables() {
+        let mut a = ApmArena::new(8).unwrap();
+        a.set_defer_free(true);
+        let i0 = a.push(&[3.0; 8]).unwrap();
+        let snap = a.cow_clone();
+        assert!(snap.is_on_store(&a.store_handle()));
+        a.remove(i0).unwrap();
+        let i1 = a.push(&[4.0; 8]).unwrap(); // deferred free ⇒ fresh slot
+        assert!(!a.is_live(i0));
+        assert!(snap.is_live(i0), "snapshot view must be frozen");
+        assert_eq!(snap.get(i0).unwrap(), &[3.0; 8],
+                   "snapshot bytes overwritten under a frozen view");
+        assert_eq!(a.get(i1).unwrap(), &[4.0; 8]);
+    }
+
+    /// Growth installs a new mapping; snapshots pin the old one, so their
+    /// pointers stay valid across any number of regrows.
+    #[test]
+    fn snapshot_survives_store_growth_remap() {
+        let mut a = ApmArena::new(8).unwrap();
+        let i0 = a.push(&[7.0; 8]).unwrap();
+        let snap = a.cow_clone();
+        for i in 0..2 * GROW_CHUNK {
+            a.push(&[i as f32; 8]).unwrap();
+        }
+        assert_eq!(snap.get(i0).unwrap(), &[7.0; 8],
+                   "old mapping must stay valid after regrowth");
+        assert_eq!(a.get(i0).unwrap(), &[7.0; 8]);
     }
 }

@@ -12,8 +12,10 @@
 //! arena's page slot for reuse and tombstones the index entry, so retired
 //! ids stop matching without an index rebuild.
 
+use std::sync::{Arc, Mutex};
+
 use crate::config::ModelConfig;
-use crate::memo::arena::{ApmArena, ApmId};
+use crate::memo::arena::{ApmArena, ApmId, StoreHandle};
 use crate::memo::index::{Hnsw, HnswParams, VectorIndex};
 use crate::{Error, Result};
 
@@ -65,7 +67,11 @@ const COMPACT_MIN_IDS: usize = 64;
 pub struct LayerDb {
     arena: ApmArena,
     index: Hnsw,
-    reuse: std::sync::Mutex<ReuseTrack>,
+    /// Shared across copy-on-write snapshots of this layer (the reuse
+    /// signal is a heuristic that should keep accumulating while frozen
+    /// snapshots serve reads); replaced wholesale by `compact`, which
+    /// renumbers ids.
+    reuse: Arc<Mutex<ReuseTrack>>,
     /// Eviction clock position (an id in `[0, arena.next_id())`).
     hand: usize,
 }
@@ -77,9 +83,51 @@ impl LayerDb {
             arena: ApmArena::new(cfg.apm_elems(seq_len))
                 .expect("arena creation"),
             index: Hnsw::new(cfg.embed_dim, params),
-            reuse: std::sync::Mutex::new(ReuseTrack::default()),
+            reuse: Arc::new(Mutex::new(ReuseTrack::default())),
             hand: 0,
         }
+    }
+
+    /// Copy-on-write snapshot for the seqlock tier: the index and the
+    /// arena's id tables are duplicated (so the copy can mutate freely),
+    /// the arena's payload store and the reuse track are shared — reuse
+    /// marked by readers of a frozen snapshot keeps feeding the live
+    /// eviction clock.
+    pub(crate) fn cow_clone(&self) -> LayerDb {
+        LayerDb {
+            arena: self.arena.cow_clone(),
+            index: self.index.clone(),
+            reuse: Arc::clone(&self.reuse),
+            hand: self.hand,
+        }
+    }
+
+    /// Route the arena's evictions through the deferred-reclaim list (the
+    /// concurrent tier's slot discipline; see `ApmArena::set_defer_free`).
+    pub(crate) fn set_defer_free(&mut self, on: bool) {
+        self.arena.set_defer_free(on);
+    }
+
+    /// Drain the arena slots freed since the last call (deferred mode).
+    pub(crate) fn take_pending_free(&mut self) -> Vec<u32> {
+        self.arena.take_pending_free()
+    }
+
+    /// Return quiesced arena slots to the free list.
+    pub(crate) fn release_free_slots(&mut self, slots: Vec<u32>) {
+        self.arena.release_slots(slots);
+    }
+
+    /// Owned identity of the arena's current backing store (the tier tags
+    /// freed-slot lists with it; see `ApmArena::store_handle`).
+    pub(crate) fn store_handle(&self) -> StoreHandle {
+        self.arena.store_handle()
+    }
+
+    /// Whether this layer's arena still lives on the store `h` identifies
+    /// (false across a compaction, which rebuilds onto a fresh store).
+    pub(crate) fn is_on_store(&self, h: &StoreHandle) -> bool {
+        self.arena.is_on_store(h)
     }
 
     /// Insert one (feature vector, APM) pair.
@@ -148,6 +196,11 @@ impl LayerDb {
         // The rebuilt arena is a new id universe: epoch stamps taken before
         // the compaction must not validate against renumbered entries.
         arena.set_generation(self.arena.generation().wrapping_add(1));
+        // The rebuild lands on a *fresh* backing store; keep the owner's
+        // reclaim discipline. The old store (and any slots pending
+        // reclaim on it) is retired wholesale once the last snapshot
+        // referencing it drops.
+        arena.set_defer_free(self.arena.defer_free());
         let mut index = Hnsw::new(self.index.dim(), *self.index.params());
         let mut track = ReuseTrack::default();
         {
@@ -164,7 +217,11 @@ impl LayerDb {
         }
         self.arena = arena;
         self.index = index;
-        self.reuse = std::sync::Mutex::new(track);
+        // A fresh track (fresh Arc): readers of pre-compaction snapshots
+        // keep marking reuse on *their* (correctly sized) track; those
+        // marks are lost to the rebuilt clock, which is fine for a
+        // heuristic — corruption from renumbered ids is not.
+        self.reuse = Arc::new(Mutex::new(track));
         self.hand = 0;
         Ok(())
     }
@@ -281,18 +338,18 @@ impl LayerDb {
     }
 
     /// Start a new snapshot epoch: clear every since-last-snapshot bit.
-    /// Takes `&self` so it runs under the shard read lock like
-    /// `mark_reused`.
+    /// Takes `&self` so it runs against a published snapshot like
+    /// `mark_reused` (the track is shared across snapshot copies).
     pub fn clear_warm_bits(&self) {
         self.reuse.lock().unwrap().warm.fill(0);
     }
 
     /// Clear the since-last-snapshot bits of exactly `ids` — the entries
-    /// a snapshot just serialized. `save_warm` calls this under the same
-    /// shard read lock it serialized under, so an entry admitted or
-    /// re-warmed concurrently (which never appears in `ids`) keeps its
-    /// bit and survives into the *next* snapshot — preserving the
-    /// one-snapshot grace period.
+    /// a snapshot just serialized. `save_warm` calls this inside the
+    /// same writer-quiesced section it serialized under, so an entry
+    /// admitted or re-warmed concurrently (which never appears in `ids`)
+    /// keeps its bit and survives into the *next* snapshot — preserving
+    /// the one-snapshot grace period.
     pub fn clear_warm_bits_for(&self, ids: &[ApmId]) {
         let mut track = self.reuse.lock().unwrap();
         for id in ids {
@@ -656,5 +713,43 @@ mod tests {
         let hit2 = db.layer(0).lookup(&f2, 32).unwrap();
         assert_eq!(hit2.id, id2);
         assert_eq!(db.layer(0).arena().get(id2).unwrap(), &vec![2.0; elems][..]);
+    }
+
+    /// The seqlock tier's snapshot unit: a `cow_clone` must freeze the
+    /// view (index hits, live set, payload bytes) while the original
+    /// mutates, and reuse marked through either side must land on the
+    /// shared clock.
+    #[test]
+    fn cow_clone_freezes_view_and_shares_reuse() {
+        let c = cfg();
+        let mut db = LayerDb::new(&c, 16, HnswParams::default());
+        db.set_defer_free(true);
+        let mut rng = Pcg32::seeded(51);
+        let elems = c.apm_elems(16);
+        let f0 = unit(&mut rng, c.embed_dim);
+        let f1 = unit(&mut rng, c.embed_dim);
+        let id0 = db.insert(&f0, &vec![0.0; elems]).unwrap();
+        let snap = db.cow_clone();
+        assert!(snap.is_on_store(&db.store_handle()));
+        // Mutate the original: evict the entry, insert another.
+        db.evict(id0).unwrap();
+        let id1 = db.insert(&f1, &vec![1.0; elems]).unwrap();
+        // The snapshot still serves the pre-mutation view, bytes intact.
+        assert!(snap.arena().is_live(id0));
+        let hit = snap.lookup(&f0, 32).unwrap();
+        assert_eq!(hit.id, id0);
+        assert_eq!(
+            snap.arena().get_checked(hit.id, hit.epoch).unwrap(),
+            &vec![0.0; elems][..]
+        );
+        assert!(snap.lookup(&f1, 32).map_or(true, |h| h.id == id0),
+                "snapshot must not see the post-snapshot insert");
+        // The live side sees the new state.
+        assert!(!db.arena().is_live(id0));
+        assert_eq!(db.lookup(&f1, 32).unwrap().id, id1);
+        // Reuse marked through the snapshot feeds the shared clock.
+        snap.mark_reused(id1);
+        assert_eq!(db.reuse_counts()[id1.0 as usize], 1,
+                   "snapshot reuse marks must reach the shared track");
     }
 }

@@ -32,6 +32,7 @@ impl Default for HnswParams {
     }
 }
 
+#[derive(Clone)]
 struct Node {
     /// Neighbour lists, one per level (index 0 = ground level).
     links: Vec<Vec<u32>>,
@@ -44,6 +45,12 @@ struct Node {
 /// is never returned as a hit and new nodes stop linking to it. This is
 /// the standard HNSW delete strategy and what lets the serve-time
 /// eviction path retire entries without rebuilding the graph.
+///
+/// `Clone` duplicates the whole graph (vectors, links, tombstones, RNG
+/// state) — the seqlock tier's copy-on-write admission path clones once
+/// per admitted *batch*, mutates the copy, and publishes it while frozen
+/// snapshots keep serving searches.
+#[derive(Clone)]
 pub struct Hnsw {
     dim: usize,
     params: HnswParams,

@@ -2,8 +2,9 @@
 //!
 //! * [`arena`] / [`attdb`] — the attention database (pre-computed APMs in
 //!   page-aligned big memory, per layer).
-//! * [`tier`] — the shared online tier: per-layer `RwLock` shards admit
-//!   and serve concurrently across engine replicas.
+//! * [`tier`] — the shared online tier: seqlock-published copy-on-write
+//!   shards, one per layer — admissions publish new snapshots while
+//!   readers serve lock-free across engine replicas.
 //! * [`gather`] — copy vs memory-mapped APM batch gathering (§5.3).
 //! * [`index`] — the index database: HNSW over hidden-state embeddings.
 //! * [`embedder`] — runs the MLP embedding executable (§5.2).
@@ -36,4 +37,4 @@ pub use builder::DbBuilder;
 pub use policy::{AdmissionPolicy, LayerProfile, SelectivePolicy};
 pub use semhash::SemanticSketcher;
 pub use stats::MemoStats;
-pub use tier::{MemoTier, TierAdmitOutcome};
+pub use tier::{MemoTier, ShardReader, TierAdmitOutcome};

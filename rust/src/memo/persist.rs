@@ -276,17 +276,20 @@ pub fn load(path: &Path, cfg: &ModelConfig,
 /// tail. The live tier keeps the aged-out entries (they can still hit
 /// and re-warm into the next snapshot); only the file compacts. The
 /// since-snapshot bits of exactly the serialized entries are cleared
-/// under the same shard read lock the shard was serialized under, so an
-/// entry admitted or re-warmed while *other* shards serialize keeps its
-/// bit and gets its grace period in the next snapshot. The rare loss
+/// inside the same writer-quiesced section the shard serialized under,
+/// so an entry admitted or re-warmed while *other* shards serialize
+/// keeps its bit and gets its grace period in the next snapshot. The rare loss
 /// case is a failed rename after the bits cleared (disk full): the
 /// serialized entries may then age out of the next file unless reused —
 /// sound for a cache.
 ///
-/// Each shard is serialized under its read lock, so snapshots can be
-/// taken while replicas keep serving; shards are serialized one at a
-/// time, so a snapshot is per-shard (not cross-shard) consistent — fine
-/// for a cache, where the worst case is re-missing a handful of entries.
+/// Each shard is serialized with its *writer* quiesced
+/// (`MemoTier::read_layer_quiesced`): admissions and evictions wait for
+/// the shard's turn to finish, while readers keep serving the published
+/// snapshot throughout — a save never stalls the lookup path. Shards are
+/// serialized one at a time, so a snapshot is per-shard (not cross-shard)
+/// consistent — fine for a cache, where the worst case is re-missing a
+/// handful of entries.
 ///
 /// The snapshot is written to a sibling temp file, flushed, and renamed
 /// over `path`, so a crash mid-write (or a full disk) can never destroy
@@ -320,7 +323,11 @@ fn write_warm(tier: &MemoTier, threshold: f32, path: &Path) -> Result<u64> {
     w.write_all(&threshold.to_le_bytes())?;
     let mut aged_out = 0u64;
     for li in 0..tier.num_layers() {
-        aged_out += tier.read_layer(li, |layer| -> Result<u64> {
+        // Writer-quiesced: no admission/eviction can churn this shard
+        // mid-serialization; concurrent readers keep serving (and their
+        // reuse marks land in the shared track, re-warming entries for
+        // the *next* snapshot).
+        aged_out += tier.read_layer_quiesced(li, |layer| -> Result<u64> {
             // Live ids only (eviction holes compact away in the file and
             // ids are reassigned densely on load), filtered by the
             // since-last-snapshot bits: idle entries age out of the file.
@@ -350,9 +357,9 @@ fn write_warm(tier: &MemoTier, threshold: f32, path: &Path) -> Result<u64> {
                 w.write_all(&[refs.get(id.0 as usize).copied().unwrap_or(0)])?;
             }
             // Start the next since-snapshot epoch for exactly the
-            // serialized entries, still under this shard's read lock:
-            // concurrent reuses marked on *other* entries keep their
-            // bits (and their grace period in the next snapshot).
+            // serialized entries, still inside this shard's quiesced
+            // section: concurrent reuses marked on *other* entries keep
+            // their bits (and their grace period in the next snapshot).
             layer.clear_warm_bits_for(&ids);
             Ok((total - ids.len()) as u64)
         })?;

@@ -2,38 +2,52 @@
 //! readable, writable at serve time.
 //!
 //! PR 1's online overlay lived inside the engine behind one
-//! `Arc<Mutex<Engine>>`, so every lookup and admission serialized on a
-//! single lock and the warmed state died with the process. [`MemoTier`]
-//! extracts that overlay into a standalone subsystem shaped like the
-//! paper's big-memory attention database:
+//! `Arc<Mutex<Engine>>`; PR 2 extracted it into per-layer `RwLock` shards
+//! so lookups parallelized — but an admission still held a shard's write
+//! lock for the whole batch (HNSW inserts included), stalling exactly the
+//! readers the paper says must stay fast. [`MemoTier`] now uses a
+//! **seqlock-published copy-on-write** design, so admissions never block
+//! readers at all:
 //!
-//! * **Per-layer shards** — one [`LayerDb`] per self-attention layer, each
-//!   behind its own `RwLock`. The request path is read-mostly (lookups +
-//!   payload fetches take a shard *read* lock, so any number of engine
-//!   replicas search the same layer in parallel); only admission and
-//!   eviction take the *write* lock, and only for their own layer.
-//! * **Shared ownership** — the tier is `Sync` and meant to be shared as
-//!   `Arc<MemoTier>` across engine replicas (`serving::Server` runs one
-//!   batcher thread per replica against one tier), so a miss warmed by one
-//!   replica is a hit for every other.
-//! * **Race-free fetches** — [`MemoTier::lookup_fetch`] performs the index
-//!   search, reuse marking and payload copy under a single read lock, and
-//!   the payload read is epoch-checked (`ApmArena::get_checked`), so a
-//!   concurrent eviction in the same shard can never be observed as a
-//!   reused slot with stale bytes.
-//! * **Intra-batch dedup** — [`MemoTier::admit_batch`] admits a batch of
-//!   miss-path rows under one write lock, skipping rows whose nearest
-//!   neighbour (including rows admitted earlier in the *same batch*)
-//!   already clears the similarity threshold, so near-identical rows admit
-//!   once instead of flooding the capacity budget with duplicates.
+//! * **Per-layer shards**, each publishing an immutable
+//!   [`LayerDb`] snapshot through an `Arc` cell guarded by a pointer-swap
+//!   `RwLock` plus an atomic **sequence counter** (even = stable, odd = a
+//!   publish in flight). A reader's only shared-state touch is cloning
+//!   the `Arc` — nanoseconds — after which the whole lookup, epoch-checked
+//!   payload read and copy run against the frozen snapshot with **no lock
+//!   held**. The worst a reader can ever wait for is one pointer swap.
+//! * **Writers serialize on a per-shard mutex**: `admit_batch`, eviction,
+//!   compaction and warm restore clone the current snapshot (tables and
+//!   index only — payload bytes are shared), mutate the private copy with
+//!   the exact same `LayerDb` logic as before, and publish it with a
+//!   `seq` bump around the swap.
+//! * **Epoch-based slot reclaim**: an eviction retires its arena page
+//!   slot to a *pending* list instead of reusing it. Superseded snapshots
+//!   go onto a per-shard retire list together with the slots their
+//!   replacement freed; a slot recycles only once every snapshot that
+//!   could still reference it has quiesced (its `Arc` count drained — and
+//!   retirement order is respected, so a slot outlives *every* older
+//!   reader). No reader can ever observe freed bytes being overwritten.
+//! * **Optimistic reads with retry**: readers still validate payload
+//!   fetches against the arena's generation/slot-epoch stamps
+//!   (`ApmArena::get_checked`). Within one snapshot a torn read is
+//!   impossible by construction; if a stamp nevertheless fails to
+//!   validate, the reader consults the shard's sequence counter — changed
+//!   means "retry against the fresh snapshot", unchanged means the entry
+//!   is genuinely gone.
+//! * **Lock-free stats**: `layer_len`/`total_entries`/`resident_bytes`
+//!   read per-shard atomics refreshed at publish time instead of walking
+//!   every shard's lock.
 //!
 //! Warm state survives restarts through `memo::persist::{save_warm,
-//! load_warm}` (see `docs/PERSISTENCE.md` for the file format).
+//! load_warm}` (see `docs/PERSISTENCE.md`); a snapshot save quiesces the
+//! shard's *writer* only — readers keep serving throughout.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::config::{MemoConfig, ModelConfig};
+use crate::memo::arena::StoreHandle;
 use crate::memo::attdb::{LayerDb, Lookup};
 use crate::memo::index::HnswParams;
 use crate::memo::policy::{AdmissionPolicy, LayerProfile};
@@ -49,6 +63,147 @@ pub struct TierAdmitOutcome {
     /// Rows skipped because a near-identical entry (often from the same
     /// batch) was already stored.
     pub deduped: u64,
+}
+
+/// One layer shard: a seqlock-published snapshot plus its writer state.
+struct Shard {
+    /// Publish sequence: even = stable, odd = a swap is in flight. Bumped
+    /// with `AcqRel`/`Release` around every publish so optimistic readers
+    /// can tell "retry against a newer snapshot" from "genuinely gone".
+    seq: AtomicU64,
+    /// The published snapshot. The lock is held only long enough to clone
+    /// or swap the `Arc` — never across a search, copy or mutation.
+    snap: RwLock<Arc<LayerDb>>,
+    /// Serializes mutations (admission, eviction, compaction, restore)
+    /// and owns the epoch-reclaim list.
+    writer: Mutex<ShardWriter>,
+    /// Live entries in the published snapshot (lock-free stats).
+    len: AtomicUsize,
+    /// Resident arena bytes of the published snapshot (lock-free stats).
+    resident: AtomicUsize,
+}
+
+/// Writer-side state: superseded snapshots awaiting reader quiescence.
+#[derive(Default)]
+struct ShardWriter {
+    /// `(snapshot, store the freed slots live on, slots freed by the
+    /// mutation that replaced it)`, in retirement order. The head
+    /// recycles once its `Arc` count shows no reader holds it; stopping
+    /// at the first live entry guarantees a freed slot outlives every
+    /// snapshot old enough to reference it. The store handle is the
+    /// *publishing* copy's store (an intra-batch compaction moves the
+    /// lineage to a fresh store mid-mutation, so the displaced snapshot's
+    /// store may differ from the one the slots were freed on).
+    retired: Vec<(Arc<LayerDb>, StoreHandle, Vec<u32>)>,
+}
+
+/// Outcome of one optimistic read attempt against a snapshot.
+enum ReadAttempt {
+    /// Entry found, payload copied, reuse marked.
+    Hit(Lookup),
+    /// No entry clears the similarity floor.
+    Miss,
+    /// The epoch stamp failed to validate mid-read.
+    Torn,
+}
+
+/// A frozen, internally consistent view of one layer shard.
+///
+/// Every operation against a `ShardReader` — index search, epoch stamp,
+/// payload copy — resolves against one publish epoch, so a batch of rows
+/// can share one snapshot without per-row revalidation and without
+/// holding any lock. Admissions by other replicas publish *new* snapshots;
+/// they never mutate this one (displaced arena slots are reclaimed only
+/// after this reader drops).
+pub struct ShardReader {
+    db: Arc<LayerDb>,
+    apm_elems: usize,
+}
+
+impl ShardReader {
+    /// Whether the snapshot holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.db.is_empty()
+    }
+
+    /// Live entries in the snapshot.
+    pub fn len(&self) -> usize {
+        self.db.len()
+    }
+
+    /// Nearest stored entry for a query (see [`MemoTier::lookup`]).
+    pub fn lookup(&self, feature: &[f32], ef: usize) -> Option<Lookup> {
+        self.db.lookup(feature, ef)
+    }
+
+    /// Search + similarity gate + epoch-checked payload copy + reuse
+    /// mark, all against this snapshot.
+    fn fetch(&self, feature: &[f32], ef: usize, min_similarity: f32,
+             dst: &mut [f32]) -> ReadAttempt {
+        let Some(hit) = self.db.lookup(feature, ef) else {
+            return ReadAttempt::Miss;
+        };
+        if hit.similarity < min_similarity {
+            return ReadAttempt::Miss;
+        }
+        match self.db.arena().get_checked(hit.id, hit.epoch) {
+            Ok(apm) => {
+                dst.copy_from_slice(apm);
+                self.db.mark_reused(hit.id);
+                ReadAttempt::Hit(hit)
+            }
+            Err(_) => ReadAttempt::Torn,
+        }
+    }
+
+    /// Lazy-buffer variant of [`ShardReader::fetch`]: `buf` is zero-filled
+    /// to `rows` rows only on the first actual hit, then row `row` is
+    /// filled.
+    fn fetch_lazy(&self, feature: &[f32], ef: usize, min_similarity: f32,
+                  buf: &mut Vec<f32>, rows: usize,
+                  row: usize) -> ReadAttempt {
+        let Some(hit) = self.db.lookup(feature, ef) else {
+            return ReadAttempt::Miss;
+        };
+        if hit.similarity < min_similarity {
+            return ReadAttempt::Miss;
+        }
+        match self.db.arena().get_checked(hit.id, hit.epoch) {
+            Ok(apm) => {
+                if buf.is_empty() {
+                    buf.resize(rows * self.apm_elems, 0.0);
+                }
+                buf[row * self.apm_elems..(row + 1) * self.apm_elems]
+                    .copy_from_slice(apm);
+                self.db.mark_reused(hit.id);
+                ReadAttempt::Hit(hit)
+            }
+            Err(_) => ReadAttempt::Torn,
+        }
+    }
+
+    /// Atomic lookup + payload fetch against this snapshot (the per-row
+    /// form of [`MemoTier::lookup_fetch`]). A torn read cannot happen
+    /// within one snapshot; it is mapped to a miss defensively.
+    pub fn lookup_fetch(&self, feature: &[f32], ef: usize,
+                        min_similarity: f32,
+                        dst: &mut [f32]) -> Option<Lookup> {
+        match self.fetch(feature, ef, min_similarity, dst) {
+            ReadAttempt::Hit(hit) => Some(hit),
+            ReadAttempt::Miss | ReadAttempt::Torn => None,
+        }
+    }
+
+    /// Lazy whole-batch variant of [`ShardReader::lookup_fetch`] (the
+    /// per-row form of [`MemoTier::lookup_fetch_lazy`]).
+    pub fn lookup_fetch_lazy(&self, feature: &[f32], ef: usize,
+                             min_similarity: f32, buf: &mut Vec<f32>,
+                             rows: usize, row: usize) -> Option<Lookup> {
+        match self.fetch_lazy(feature, ef, min_similarity, buf, rows, row) {
+            ReadAttempt::Hit(hit) => Some(hit),
+            ReadAttempt::Miss | ReadAttempt::Torn => None,
+        }
+    }
 }
 
 /// The serve-time attention database shared by all engine replicas.
@@ -83,7 +238,7 @@ pub struct TierAdmitOutcome {
 /// assert_eq!(fetched, apm);
 /// ```
 pub struct MemoTier {
-    shards: Vec<RwLock<LayerDb>>,
+    shards: Vec<Shard>,
     capacity: usize,
     policy: AdmissionPolicy,
     dedup: bool,
@@ -104,7 +259,20 @@ impl MemoTier {
                memo: &MemoConfig) -> Self {
         MemoTier {
             shards: (0..cfg.layers)
-                .map(|_| RwLock::new(LayerDb::new(cfg, seq_len, params)))
+                .map(|_| {
+                    let mut db = LayerDb::new(cfg, seq_len, params);
+                    // Tier shards defer slot reuse: freed pages recycle
+                    // only after snapshot quiescence (see module docs).
+                    db.set_defer_free(true);
+                    let resident = db.arena().resident_bytes();
+                    Shard {
+                        seq: AtomicU64::new(0),
+                        snap: RwLock::new(Arc::new(db)),
+                        writer: Mutex::new(ShardWriter::default()),
+                        len: AtomicUsize::new(0),
+                        resident: AtomicUsize::new(resident),
+                    }
+                })
                 .collect(),
             capacity: memo.max_db_entries,
             policy: AdmissionPolicy::new(
@@ -157,26 +325,30 @@ impl MemoTier {
         self.policy.should_admit(profile, attempts, tokens)
     }
 
-    /// Live entries in one layer shard.
+    /// Live entries in one layer shard (atomic gauge, no locks).
     pub fn layer_len(&self, layer: usize) -> usize {
-        self.shards[layer].read().unwrap().len()
+        self.shards[layer].len.load(Ordering::Relaxed)
     }
 
-    /// Whether a layer shard holds no entries.
+    /// Whether a layer shard holds no entries (atomic gauge, no locks).
     pub fn is_layer_empty(&self, layer: usize) -> bool {
-        self.shards[layer].read().unwrap().is_empty()
+        self.layer_len(layer) == 0
     }
 
-    /// Total live entries across layers.
+    /// Total live entries across layers (atomic gauges, no locks).
     pub fn total_entries(&self) -> usize {
-        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+        self.shards
+            .iter()
+            .map(|s| s.len.load(Ordering::Relaxed))
+            .sum()
     }
 
-    /// Total resident payload bytes across layer arenas.
+    /// Total resident payload bytes across layer arenas (atomic gauges,
+    /// no locks).
     pub fn resident_bytes(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.read().unwrap().arena().resident_bytes())
+            .map(|s| s.resident.load(Ordering::Relaxed))
             .sum()
     }
 
@@ -195,35 +367,65 @@ impl MemoTier {
         self.deduped.load(Ordering::Relaxed)
     }
 
-    /// Nearest stored entry for a query (shard read lock; runs in
-    /// parallel with other lookups). The returned id is only guaranteed
-    /// stable while no admission runs — use [`MemoTier::lookup_fetch`] to
-    /// atomically obtain the payload.
-    pub fn lookup(&self, layer: usize, feature: &[f32],
-                  ef: usize) -> Option<Lookup> {
-        self.shards[layer].read().unwrap().lookup(feature, ef)
+    /// A frozen snapshot of one layer shard. The only shared-state touch
+    /// is an `Arc` clone under the publish cell's read lock (nanoseconds;
+    /// the write side holds it only for a pointer swap) — batch callers
+    /// take one reader per layer and run every row against it lock-free.
+    pub fn reader(&self, layer: usize) -> ShardReader {
+        ShardReader {
+            db: self.shards[layer].snap.read().unwrap().clone(),
+            apm_elems: self.apm_elems,
+        }
     }
 
-    /// Atomic lookup + payload fetch: under one shard read lock, search
-    /// for the nearest entry, reject it if its similarity is below
-    /// `min_similarity`, otherwise mark it reused and copy its APM payload
-    /// into `dst` (which must hold [`MemoTier::apm_elems`] values).
+    /// Nearest stored entry for a query, resolved against the snapshot
+    /// current at call time. The id/epoch pair is only meaningful within
+    /// that snapshot — use [`MemoTier::lookup_fetch`] (or a held
+    /// [`ShardReader`]) to atomically obtain the payload.
+    pub fn lookup(&self, layer: usize, feature: &[f32],
+                  ef: usize) -> Option<Lookup> {
+        self.reader(layer).lookup(feature, ef)
+    }
+
+    /// Atomic lookup + payload fetch: search for the nearest entry,
+    /// reject it if its similarity is below `min_similarity`, otherwise
+    /// mark it reused and copy its APM payload into `dst` (which must
+    /// hold [`MemoTier::apm_elems`] values).
     ///
-    /// Because search, epoch-checked read and copy share the lock, a
-    /// concurrent admission/eviction in the same shard can never be
-    /// observed as a reused arena slot with stale bytes.
+    /// This is the seqlock read path: each attempt runs entirely against
+    /// one published snapshot (search, epoch-checked read, copy — no lock
+    /// held), so a concurrent admission or eviction can never be observed
+    /// as a reused slot with stale bytes. If the epoch stamp nevertheless
+    /// fails to validate, the shard's sequence counter decides: changed ⇒
+    /// retry against the fresh snapshot, unchanged ⇒ genuinely gone.
     pub fn lookup_fetch(&self, layer: usize, feature: &[f32], ef: usize,
                         min_similarity: f32,
                         dst: &mut [f32]) -> Option<Lookup> {
-        let shard = self.shards[layer].read().unwrap();
-        let hit = shard.lookup(feature, ef)?;
-        if hit.similarity < min_similarity {
-            return None;
+        self.seqlock_read(layer, |snap| {
+            snap.fetch(feature, ef, min_similarity, dst)
+        })
+    }
+
+    /// The optimistic reader loop shared by the fetch entry points: run
+    /// `attempt` against the current snapshot; on a torn read, retry iff
+    /// the shard's sequence counter shows a publish raced the attempt
+    /// (unchanged means the entry is genuinely gone).
+    fn seqlock_read(&self, layer: usize,
+                    mut attempt: impl FnMut(&ShardReader) -> ReadAttempt)
+        -> Option<Lookup> {
+        let shard = &self.shards[layer];
+        loop {
+            let seq = shard.seq.load(Ordering::Acquire);
+            match attempt(&self.reader(layer)) {
+                ReadAttempt::Hit(hit) => return Some(hit),
+                ReadAttempt::Miss => return None,
+                ReadAttempt::Torn => {
+                    if shard.seq.load(Ordering::Acquire) == seq {
+                        return None;
+                    }
+                }
+            }
         }
-        let apm = shard.arena().get_checked(hit.id, hit.epoch).ok()?;
-        dst.copy_from_slice(apm);
-        shard.mark_reused(hit.id);
-        Some(hit)
     }
 
     /// [`MemoTier::lookup_fetch`] into a *lazily allocated* whole-batch
@@ -234,29 +436,80 @@ impl MemoTier {
     /// This keeps the engine's total-miss fast path allocation-free: a
     /// batch whose rows all miss (the common case on a cold tier) never
     /// pays the multi-MB batch-APM allocation just because an online tier
-    /// exists. Same atomicity as `lookup_fetch` — search, epoch-checked
-    /// read, copy and reuse-mark all run under one shard read lock.
+    /// exists. Same snapshot discipline (and torn-read retry) as
+    /// [`MemoTier::lookup_fetch`].
     pub fn lookup_fetch_lazy(&self, layer: usize, feature: &[f32],
                              ef: usize, min_similarity: f32,
                              buf: &mut Vec<f32>, rows: usize,
                              row: usize) -> Option<Lookup> {
-        let shard = self.shards[layer].read().unwrap();
-        let hit = shard.lookup(feature, ef)?;
-        if hit.similarity < min_similarity {
-            return None;
+        self.seqlock_read(layer, |snap| {
+            snap.fetch_lazy(feature, ef, min_similarity, buf, rows, row)
+        })
+    }
+
+    /// Start a mutation: clone the published snapshot into a private
+    /// working copy. Caller holds the shard's writer mutex. (Quiesced
+    /// retirees are reclaimed in [`MemoTier::publish`], not here: a
+    /// mutation that errors discards its working copy, and slots released
+    /// into a discarded copy would leak from every list for good.)
+    fn begin_write(&self, layer: usize) -> LayerDb {
+        let cur = self.shards[layer].snap.read().unwrap();
+        cur.cow_clone()
+    }
+
+    /// Publish a mutated working copy: recycle arena slots whose readers
+    /// have all quiesced, refresh the stat gauges, bump the sequence
+    /// counter around the pointer swap, and retire the displaced snapshot
+    /// together with the slots this mutation freed. Caller holds the
+    /// shard's writer mutex.
+    fn publish(&self, layer: usize, w: &mut ShardWriter, mut db: LayerDb) {
+        // Reclaim in retirement order and stop at the first snapshot that
+        // still has readers: a slot freed at epoch k may be referenced by
+        // readers of any epoch ≤ k, so nothing younger may recycle first.
+        // Running this only on the publish path keeps the retire list
+        // intact when a mutation errors out (its discarded working copy
+        // must not swallow released slots).
+        loop {
+            match w.retired.first() {
+                Some((snap, _, _)) if Arc::strong_count(snap) == 1 => {}
+                _ => break,
+            }
+            // `strong_count` loads Relaxed; the fence orders the departed
+            // readers' payload reads before any future overwrite of the
+            // slots we are about to recycle (their Arc drops decremented
+            // with Release).
+            std::sync::atomic::fence(Ordering::Acquire);
+            let (_snap, store, slots) = w.retired.remove(0);
+            // Slots belong to the store they were freed on; after a
+            // compaction (fresh store) they die with the old store.
+            if db.is_on_store(&store) {
+                db.release_free_slots(slots);
+            }
         }
-        let apm = shard.arena().get_checked(hit.id, hit.epoch).ok()?;
-        if buf.is_empty() {
-            buf.resize(rows * self.apm_elems, 0.0);
-        }
-        buf[row * self.apm_elems..(row + 1) * self.apm_elems]
-            .copy_from_slice(apm);
-        shard.mark_reused(hit.id);
-        Some(hit)
+        let shard = &self.shards[layer];
+        let freed = db.take_pending_free();
+        // The freed slots live on the *publishing* copy's store: an
+        // intra-batch compaction drops its pre-compaction pending list
+        // with the old arena, so `freed` is always homogeneous on the
+        // current store.
+        let freed_store = db.store_handle();
+        shard.len.store(db.len(), Ordering::Relaxed);
+        shard
+            .resident
+            .store(db.arena().resident_bytes(), Ordering::Relaxed);
+        let new = Arc::new(db);
+        shard.seq.fetch_add(1, Ordering::AcqRel); // odd: swap in flight
+        let old = {
+            let mut cell = shard.snap.write().unwrap();
+            std::mem::replace(&mut *cell, new)
+        };
+        shard.seq.fetch_add(1, Ordering::Release); // even: stable
+        w.retired.push((old, freed_store, freed));
     }
 
     /// Admit one batch of miss-path `(feature, apm)` rows into a layer
-    /// shard under a single write lock.
+    /// shard under the shard's writer mutex (readers are never blocked:
+    /// they keep serving the previous snapshot until the batch publishes).
     ///
     /// Rows whose nearest stored neighbour already clears
     /// `dedup_threshold` are skipped (and the surviving twin is marked
@@ -264,11 +517,16 @@ impl MemoTier {
     /// ones, near-identical rows within one batch admit once — the
     /// intra-batch dedup the ROADMAP called for. At most `capacity` rows
     /// are admitted per call (more would evict entries admitted moments
-    /// earlier in the same loop).
+    /// earlier in the same loop). On error the working copy is discarded
+    /// and the published snapshot is left untouched (batches are atomic;
+    /// file pages the discarded copy allocated stay orphaned until the
+    /// next compaction retires the store — admission errors are
+    /// exceptional, so this is bounded in practice).
     pub fn admit_batch(&self, layer: usize, rows: &[(&[f32], &[f32])],
                        dedup_threshold: f32,
                        ef: usize) -> Result<TierAdmitOutcome> {
-        let mut shard = self.shards[layer].write().unwrap();
+        let mut w = self.shards[layer].writer.lock().unwrap();
+        let mut db = self.begin_write(layer);
         let quota = if self.capacity == 0 {
             rows.len()
         } else {
@@ -280,36 +538,62 @@ impl MemoTier {
                 break;
             }
             if self.dedup {
-                if let Some(hit) = shard.lookup(feature, ef) {
+                if let Some(hit) = db.lookup(feature, ef) {
                     if hit.similarity >= dedup_threshold {
-                        shard.mark_reused(hit.id);
+                        db.mark_reused(hit.id);
                         out.deduped += 1;
                         continue;
                     }
                 }
             }
-            let admitted = shard.admit(feature, apm, self.capacity)?;
+            let admitted = db.admit(feature, apm, self.capacity)?;
             out.admitted += 1;
             out.evicted += admitted.evicted.len() as u64;
         }
+        self.publish(layer, &mut *w, db);
         self.admissions.fetch_add(out.admitted, Ordering::Relaxed);
         self.evictions.fetch_add(out.evicted, Ordering::Relaxed);
         self.deduped.fetch_add(out.deduped, Ordering::Relaxed);
         Ok(out)
     }
 
-    /// Run `f` against one layer shard under the read lock (persistence,
-    /// tests, diagnostics).
+    /// Run `f` against one layer's *snapshot* (persistence, tests,
+    /// diagnostics). No lock is held while `f` runs; concurrent
+    /// admissions publish new snapshots without waiting for it.
     pub fn read_layer<R>(&self, layer: usize,
                          f: impl FnOnce(&LayerDb) -> R) -> R {
-        f(&self.shards[layer].read().unwrap())
+        let snap = { self.shards[layer].snap.read().unwrap().clone() };
+        f(&snap)
     }
 
-    /// Run `f` against one layer shard under the write lock (warm-state
-    /// restore).
+    /// Like [`MemoTier::read_layer`], but with the shard's *writer*
+    /// quiesced for the duration of `f`: admissions/evictions wait,
+    /// readers keep serving the published snapshot. Warm snapshots
+    /// serialize through this, so a save sees a mutation-stable shard
+    /// without ever stalling the lookup path.
+    pub fn read_layer_quiesced<R>(&self, layer: usize,
+                                  f: impl FnOnce(&LayerDb) -> R) -> R {
+        let _w = self.shards[layer].writer.lock().unwrap();
+        let snap = { self.shards[layer].snap.read().unwrap().clone() };
+        f(&snap)
+    }
+
+    /// Run `f` against a writable copy of one layer shard and publish the
+    /// result (warm-state restore). Serializes with admissions on the
+    /// shard's writer mutex; readers are never blocked.
+    ///
+    /// The copy is published even when `f` reports a failure through its
+    /// return value (this method cannot see into `R`), so `f` must leave
+    /// the copy publishable on every path — a caller that errors out of a
+    /// multi-step mutation must discard the whole tier (as the warm
+    /// loader does) rather than keep serving the partial state.
     pub fn write_layer<R>(&self, layer: usize,
                           f: impl FnOnce(&mut LayerDb) -> R) -> R {
-        f(&mut self.shards[layer].write().unwrap())
+        let mut w = self.shards[layer].writer.lock().unwrap();
+        let mut db = self.begin_write(layer);
+        let r = f(&mut db);
+        self.publish(layer, &mut *w, db);
+        r
     }
 }
 
@@ -543,5 +827,92 @@ mod tests {
         // Layer 0 stayed untouched.
         assert!(tier.is_layer_empty(0));
         assert_eq!(tier.layer_len(1), 1);
+    }
+
+    /// Seqlock contract: a `ShardReader` is a frozen view — admissions
+    /// published after it was taken are invisible to it, while fresh
+    /// readers (and the tier's own methods) see them.
+    #[test]
+    fn reader_snapshot_is_frozen_across_admissions() {
+        let c = cfg(1);
+        let tier = MemoTier::new(&c, 16, HnswParams::default(),
+                                 &memo(8, true));
+        let mut rng = Pcg32::seeded(47);
+        let elems = c.apm_elems(16);
+        let apm = vec![1.0f32; elems];
+        let fa = unit(&mut rng, c.embed_dim);
+        tier.admit_batch(0, &[(fa.as_slice(), apm.as_slice())], 0.99, 32)
+            .unwrap();
+
+        let frozen = tier.reader(0);
+        assert_eq!(frozen.len(), 1);
+
+        let fb = unit(&mut rng, c.embed_dim);
+        tier.admit_batch(0, &[(fb.as_slice(), apm.as_slice())], 0.99, 32)
+            .unwrap();
+
+        // The frozen reader still serves the old epoch…
+        assert_eq!(frozen.len(), 1, "snapshot grew under a frozen reader");
+        assert!(frozen.lookup(&fb, 32).map_or(true,
+                                              |h| h.similarity < 0.999),
+                "snapshot must not see the later admission");
+        let mut dst = vec![0.0f32; elems];
+        assert!(frozen.lookup_fetch(&fa, 32, 0.9, &mut dst).is_some(),
+                "pre-snapshot entries keep serving");
+        // …while the tier (fresh snapshot) sees both entries.
+        assert_eq!(tier.layer_len(0), 2);
+        assert!(tier.lookup_fetch(0, &fb, 32, 0.9, &mut dst).is_some());
+    }
+
+    /// Batch atomicity: an admission that errors mid-batch discards the
+    /// working copy — the published snapshot and the gauges are untouched.
+    #[test]
+    fn failed_admit_batch_discards_partial_mutation() {
+        let c = cfg(1);
+        let tier = MemoTier::new(&c, 16, HnswParams::default(),
+                                 &memo(8, false));
+        let mut rng = Pcg32::seeded(53);
+        let f0 = unit(&mut rng, c.embed_dim);
+        let f1 = unit(&mut rng, c.embed_dim);
+        let good = vec![0.0f32; c.apm_elems(16)];
+        let bad = vec![0.0f32; 3]; // wrong payload size ⇒ arena error
+        let rows: Vec<(&[f32], &[f32])> = vec![
+            (f0.as_slice(), good.as_slice()),
+            (f1.as_slice(), bad.as_slice()),
+        ];
+        assert!(tier.admit_batch(0, &rows, 2.0, 32).is_err());
+        assert_eq!(tier.layer_len(0), 0, "failed batch must not publish");
+        assert_eq!(tier.admissions(), 0);
+        assert!(tier.lookup(0, &f0, 32).is_none());
+        // The shard still works afterwards.
+        let rows: Vec<(&[f32], &[f32])> =
+            vec![(f0.as_slice(), good.as_slice())];
+        tier.admit_batch(0, &rows, 2.0, 32).unwrap();
+        assert_eq!(tier.layer_len(0), 1);
+    }
+
+    /// The lock-free stat gauges track publishes.
+    #[test]
+    fn stat_gauges_follow_publishes() {
+        let c = cfg(2);
+        let tier = MemoTier::new(&c, 16, HnswParams::default(),
+                                 &memo(16, false));
+        assert_eq!(tier.total_entries(), 0);
+        assert!(tier.resident_bytes() > 0, "arenas preallocate pages");
+        let mut rng = Pcg32::seeded(59);
+        let elems = c.apm_elems(16);
+        let apm = vec![0.0f32; elems];
+        for li in 0..2 {
+            for _ in 0..3 {
+                let f = unit(&mut rng, c.embed_dim);
+                tier.admit_batch(li, &[(f.as_slice(), apm.as_slice())],
+                                 2.0, 32)
+                    .unwrap();
+            }
+        }
+        assert_eq!(tier.layer_len(0), 3);
+        assert_eq!(tier.layer_len(1), 3);
+        assert_eq!(tier.total_entries(), 6);
+        assert!(!tier.is_layer_empty(0));
     }
 }

@@ -73,6 +73,18 @@ const GROW_STEAL_DIV: u64 = 4;
 /// buckets over the window.
 const SHRINK_TOUCH_DIV: usize = 4;
 
+/// Hysteresis: whole observation windows sat out after any resize. A
+/// freshly doubled space trivially satisfies the shrink test (the same
+/// traffic now touches a smaller *fraction* of the buckets), so without a
+/// cooldown mixed traffic ping-pongs double→halve every window.
+const RESIZE_COOLDOWN_WINDOWS: u32 = 1;
+
+/// Asymmetric damping: growth reacts in one window (an idle-stealing
+/// replica is lost capacity *now*), but a shrink requires the
+/// over-partitioned signal to persist for this many consecutive evaluated
+/// windows — a transient traffic dip must not collapse the bucket space.
+const SHRINK_STREAK_WINDOWS: u32 = 2;
+
 /// SplitMix64 finalizer: cheap, well-distributed 64-bit mixing.
 fn mix(h: u64) -> u64 {
     let mut z = h.wrapping_add(0x9e37_79b9_7f4a_7c15);
@@ -194,11 +206,24 @@ struct Inner<T> {
     window_pops: u64,
     window_steals: u64,
     resizes: u64,
+    /// Windows left to sit out after a resize (hysteresis).
+    cooldown: u32,
+    /// Consecutive evaluated windows that met the shrink condition.
+    shrink_streak: u32,
 }
 
 /// Snapshot of the router's observable state (for STATS reporting).
+///
+/// Every field is captured under one router guard, so the snapshot is
+/// internally consistent even while a drain-and-requeue resize epoch is
+/// mid-flight — `depths.len()` always equals `buckets`, and the depths
+/// always sum to the queued-request count at snapshot time. (Composing
+/// separate `steals()`/`num_buckets()` calls instead can interleave with
+/// a resize and report depths against a stale bucket count.)
 #[derive(Debug, Clone)]
 pub struct RouterStats {
+    /// Bucket count at snapshot time (same guard as `depths`).
+    pub buckets: usize,
     /// Queue depth per bucket at snapshot time.
     pub depths: Vec<usize>,
     /// Total pops that took a request from a non-home bucket.
@@ -242,6 +267,8 @@ impl<T> AffinityRouter<T> {
                 window_pops: 0,
                 window_steals: 0,
                 resizes: 0,
+                cooldown: 0,
+                shrink_streak: 0,
             }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
@@ -367,6 +394,14 @@ impl<T> AffinityRouter<T> {
     /// returned bucket index of the pop that triggered a resize refers to
     /// the pre-resize numbering; `drain_affine` guards with a modulo, so
     /// the worst case is one batch drained from a re-mapped bucket.
+    ///
+    /// Two hysteresis rules damp oscillation under mixed traffic (a
+    /// freshly doubled space trivially satisfies the shrink test, so the
+    /// naive controller ping-pongs): after any resize the controller sits
+    /// out [`RESIZE_COOLDOWN_WINDOWS`] whole windows, and — asymmetric
+    /// with the one-window grow reaction — a shrink additionally needs
+    /// the over-partitioned signal to persist for
+    /// [`SHRINK_STREAK_WINDOWS`] consecutive evaluated windows.
     fn maybe_resize(&self, g: &mut Inner<T>) {
         if !self.adaptive || g.window_pops < RESIZE_WINDOW {
             return;
@@ -374,19 +409,34 @@ impl<T> AffinityRouter<T> {
         let nb = g.buckets.len();
         let steal_heavy = g.window_steals * GROW_STEAL_DIV > g.window_pops;
         let touched = g.touched.iter().filter(|&&t| t).count();
-        if steal_heavy && nb * 2 <= self.max_buckets {
+        let over_partitioned = !steal_heavy
+            && touched > 0
+            && touched * SHRINK_TOUCH_DIV <= nb
+            && nb >= 2;
+        if g.cooldown > 0 {
+            // Sitting out a post-resize window: observe, don't act — and
+            // don't let this window count toward a shrink streak either.
+            g.cooldown -= 1;
+            g.shrink_streak = 0;
+        } else if steal_heavy && nb * 2 <= self.max_buckets {
             // Replicas were routinely idle-stealing: the partition is too
             // coarse, concentrating traffic on too few home buckets.
             self.rebucket_locked(g, nb * 2);
-        } else if !steal_heavy
-            && touched > 0
-            && touched * SHRINK_TOUCH_DIV <= nb
-            && nb >= 2
-        {
+            g.cooldown = RESIZE_COOLDOWN_WINDOWS;
+            g.shrink_streak = 0;
+        } else if over_partitioned {
             // The window's pushes touched a small corner of the bucket
-            // space: over-partitioned — halving re-concentrates sparse
-            // buckets into fuller (more batchable) ones.
-            self.rebucket_locked(g, nb / 2);
+            // space: over-partitioned — but only halve (re-concentrating
+            // sparse buckets into fuller, more batchable ones) once the
+            // signal has persisted across consecutive windows.
+            g.shrink_streak += 1;
+            if g.shrink_streak >= SHRINK_STREAK_WINDOWS {
+                self.rebucket_locked(g, nb / 2);
+                g.cooldown = RESIZE_COOLDOWN_WINDOWS;
+                g.shrink_streak = 0;
+            }
+        } else {
+            g.shrink_streak = 0;
         }
         g.window_pops = 0;
         g.window_steals = 0;
@@ -496,11 +546,14 @@ impl<T> AffinityRouter<T> {
         self.len() == 0
     }
 
-    /// Per-bucket depths + steal/resize counts (the STATS affinity
-    /// section).
+    /// Per-bucket depths + bucket/steal/resize counts, all captured under
+    /// one guard (the STATS affinity section). The steal counter is only
+    /// ever written while the guard is held, so reading it here is
+    /// consistent with the depths.
     pub fn stats(&self) -> RouterStats {
         let g = self.inner.lock().unwrap();
         RouterStats {
+            buckets: g.buckets.len(),
             depths: g.buckets.iter().map(VecDeque::len).collect(),
             steals: self.steals.load(Ordering::Relaxed),
             resizes: g.resizes,
@@ -789,9 +842,44 @@ mod tests {
         r.try_push(2, 2).unwrap();
         r.try_push(2, 3).unwrap();
         let s = r.stats();
+        assert_eq!(s.buckets, 3);
         assert_eq!(s.depths, vec![1, 0, 2]);
         assert_eq!(s.steals, 0);
         assert_eq!(s.resizes, 0);
+    }
+
+    /// Satellite regression: a stats snapshot must be internally
+    /// consistent — depths sliced under the same guard as the bucket
+    /// count, nothing lost — even while resize epochs run concurrently.
+    #[test]
+    fn stats_snapshot_consistent_across_concurrent_resizes() {
+        use std::sync::atomic::AtomicBool;
+
+        let r: Arc<AffinityRouter<u32>> =
+            Arc::new(AffinityRouter::new(4, 2, 4096));
+        for i in 0..256u32 {
+            r.try_push((i % 13) as u64, i).unwrap();
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let resizer = {
+            let (r, stop) = (r.clone(), stop.clone());
+            std::thread::spawn(move || {
+                let mut n = 2usize;
+                while !stop.load(Ordering::Relaxed) {
+                    r.rebucket(n);
+                    n = if n == 2 { 16 } else { 2 };
+                }
+            })
+        };
+        for _ in 0..2000 {
+            let s = r.stats();
+            assert_eq!(s.depths.len(), s.buckets,
+                       "depths and bucket count torn across a resize");
+            assert_eq!(s.depths.iter().sum::<usize>(), 256,
+                       "every queued request visible in one snapshot");
+        }
+        stop.store(true, Ordering::Relaxed);
+        resizer.join().unwrap();
     }
 
     /// Satellite regression: a resize epoch must preserve per-signature
@@ -853,20 +941,55 @@ mod tests {
     }
 
     /// Adaptive shrink: when pushes only ever touch a corner of the
-    /// bucket space and nobody steals, the space halves.
+    /// bucket space and nobody steals, the space halves — patiently (a
+    /// shrink needs the signal to persist for two evaluated windows, and
+    /// every resize is followed by a cooldown window).
     #[test]
     fn adaptive_shrinks_overpartitioned_space() {
         let r: AffinityRouter<u32> =
             AffinityRouter::new(16, 1, 4096).with_adaptive(true, 16);
         // One replica (pops are never steals), traffic in 2 of 16 buckets.
-        for i in 0..400u32 {
+        // Window schedule: streak, shrink 16→8, cooldown, streak,
+        // shrink 8→4, cooldown, floor — 7+ windows of 128 pops.
+        for i in 0..1024u32 {
             r.try_push((i % 2) as u64, i).unwrap();
             assert!(r.pop_timeout(0, Duration::from_millis(10)).is_some());
         }
-        assert!(r.resizes() >= 2,
-                "over-partitioning never triggered shrinks");
+        assert_eq!(r.resizes(), 2,
+                   "over-partitioning must trigger exactly the two shrinks");
         assert_eq!(r.num_buckets(), 4,
                    "16 → 8 → 4, then 2 touched × 4 > 4 holds the floor");
+    }
+
+    /// Satellite regression: mixed traffic that alternates steal-heavy
+    /// and over-concentrated windows made the naive controller ping-pong
+    /// double→halve every window (a freshly doubled space trivially
+    /// satisfies the shrink test). With cooldown + asymmetric shrink
+    /// damping, resizes are bounded by the monotone growth path.
+    #[test]
+    fn adaptive_damps_oscillating_mixed_traffic() {
+        let r: AffinityRouter<u32> =
+            AffinityRouter::new(2, 2, 8192).with_adaptive(true, 16);
+        // 16 alternating 128-pop phases, all traffic in bucket 0 (home to
+        // replica 0). Odd phases pop from replica 1 only — pure steals
+        // (the grow trigger); even phases pop from replica 0 only — no
+        // steals and one touched bucket (the shrink trigger).
+        for phase in 0..16 {
+            let replica = phase % 2;
+            for i in 0..128u32 {
+                r.try_push(0, i).unwrap();
+                assert!(r
+                    .pop_timeout(replica, Duration::from_millis(10))
+                    .is_some());
+            }
+        }
+        // Unbounded ping-pong would resize ~once per phase (≈14 here);
+        // the damped controller only walks the growth path 2→4→8→16.
+        assert!(r.resizes() <= 3,
+                "hysteresis failed to damp ping-pong: {} resizes",
+                r.resizes());
+        assert!(r.num_buckets() >= 2 && r.num_buckets() <= 16);
+        assert!(r.is_empty(), "phases must drain completely");
     }
 
     /// `with_adaptive(false, …)` keeps the fixed-bucket behaviour.

@@ -6,7 +6,8 @@
 //!    index databases (the offline-built one and, when serve-time
 //!    admission is on, the shared online `MemoTier`), and accept entries
 //!    whose estimated similarity clears the level's threshold; online-tier
-//!    payloads are fetched atomically under the shard's read lock;
+//!    payloads are fetched atomically against one frozen shard snapshot
+//!    per batch (the tier's seqlock read path — no lock held);
 //! 3. missing rows (if any) run `attn_scores` as a packed sub-batch; hit
 //!    rows are fetched from the attention database (memory-mapped window
 //!    or direct arena view);
@@ -19,8 +20,9 @@
 //!
 //! The online tier is an `Arc<MemoTier>`: several engine replicas (one
 //! batcher thread each, see `serving::server`) can share it, so lookups
-//! proceed in parallel across replicas with no global engine mutex on the
-//! lookup path — admissions by one replica become hits for all.
+//! proceed in parallel across replicas with no global engine mutex — and,
+//! since the tier's seqlock read path, no shard lock either — on the
+//! lookup path; admissions by one replica become hits for all.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -66,7 +68,7 @@ pub struct BatchResult {
 /// behind its own `Arc<Mutex<Engine>>`, so no two threads touch one
 /// engine's XLA state concurrently. The only state replicas *share* is
 /// the online `Arc<MemoTier>`, which is `Sync` by construction (per-layer
-/// `RwLock` shards).
+/// seqlock-published snapshots, writer-mutex-serialized mutations).
 pub struct Engine {
     runner: ModelRunner,
     built: Option<Arc<BuiltDb>>,
@@ -109,8 +111,8 @@ impl Engine {
 
     /// Build an engine replica over a *shared* online tier: N replicas
     /// constructed with clones of one `Arc<MemoTier>` serve one attention
-    /// database — lookups run in parallel (shard read locks), and entries
-    /// admitted by any replica are hits for all of them.
+    /// database — lookups run in parallel (lock-free snapshot reads), and
+    /// entries admitted by any replica are hits for all of them.
     pub fn with_shared_tier(runner: ModelRunner, built: Option<Arc<BuiltDb>>,
                             tier: Arc<MemoTier>,
                             opts: EngineOptions) -> Result<Self> {
@@ -299,18 +301,20 @@ impl Engine {
             &feats_t.slice0(0, n)?)?;
         self.stats.stages.embedding_ms.record(te.elapsed().as_secs_f64() * 1e3);
 
-        // Per-row two-tier search. Online-tier payloads are copied into
-        // the batch APM immediately, inside the shard's read lock
-        // (`MemoTier::lookup_fetch_lazy`): between a bare lookup and a
-        // later fetch another replica could admit/evict in the same shard,
-        // so id-then-fetch is only race-free when fused like this.
+        // Per-row two-tier search. One frozen shard snapshot
+        // (`MemoTier::reader`) serves the whole batch: every row's search,
+        // epoch-checked payload read and copy resolve against a single
+        // publish epoch with no lock held — admissions by other replicas
+        // publish new snapshots without ever blocking this batch, and a
+        // fetched payload can never be a reused slot's stale bytes
+        // (displaced slots are reclaimed only after this snapshot drops).
         let ts = Instant::now();
+        let online_snap = online.as_ref().map(|t| t.reader(li));
         // The batch APM is allocated lazily: nothing writes into it until
         // either the first *online hit* (`lookup_fetch_lazy` zero-fills it
-        // under the shard lock just before copying the payload in) or the
-        // post-early-return assembly below — so total-miss and
-        // quorum-reverted layers never pay the multi-MB allocation, with
-        // or without an online tier.
+        // just before copying the payload in) or the post-early-return
+        // assembly below — so total-miss and quorum-reverted layers never
+        // pay the multi-MB allocation, with or without an online tier.
         let mut apm_data: Vec<f32> = Vec::new();
         let mut stat_hits: Vec<(usize, ApmId)> = Vec::new();
         let mut online_rows: Vec<usize> = Vec::new();
@@ -331,8 +335,8 @@ impl Engine {
             // static tier's similarity (ties prefer the warmer entry).
             let floor =
                 best_static.map_or(self.threshold, |s| s.similarity);
-            let online_hit = online.as_ref().and_then(|t| {
-                t.lookup_fetch_lazy(li, q, self.opts.ef_search, floor,
+            let online_hit = online_snap.as_ref().and_then(|s| {
+                s.lookup_fetch_lazy(q, self.opts.ef_search, floor,
                                     &mut apm_data, n, i)
             });
             if online_hit.is_some() {
@@ -346,6 +350,9 @@ impl Engine {
             }
         }
         let hit_count = stat_hits.len() + online_rows.len();
+        // Release the snapshot before the admission below: holding it
+        // would only delay the reclaim of slots that admission displaces.
+        drop(online_snap);
         self.stats.stages.search_ms.record(ts.elapsed().as_secs_f64() * 1e3);
         self.stats.layers[li].attempts += n as u64;
         self.stats.layers[li].hits += hit_count as u64;

@@ -11,8 +11,10 @@
 //! sketch the request's affinity signature through the server's
 //! [`Signer`] (token-prefix min-hash, or — with `--signature-mode
 //! semantic` — a SimHash over mean-pooled embedding-table rows, so
-//! paraphrases share a bucket; the min-hash is the fallback when no
-//! embedding table is loaded), and enqueue into the signature's bucket
+//! paraphrases share a bucket; with no embedding table loaded an
+//! *explicit* semantic request fails startup while a semantic config
+//! default warns and falls back to the min-hash), and enqueue into the
+//! signature's bucket
 //! of the shared [`AffinityRouter`]. The server runs one batcher thread
 //! per engine *replica*; each prefers its home buckets (similar requests
 //! batch together) and steals from the fullest bucket when idle; with
@@ -21,8 +23,8 @@
 //! traffic. Replicas are expected to share one online `MemoTier`
 //! (`Engine::with_shared_tier`): each replica's forward pass runs behind
 //! its own mutex, while tier lookups from all replicas proceed in
-//! parallel on the shards' read locks — there is no global engine mutex
-//! on the lookup path. `STATS` aggregates the fleet and appends the
+//! parallel on the tier's lock-free seqlock snapshots — there is no
+//! global engine mutex (nor any shard lock) on the lookup path. `STATS` aggregates the fleet and appends the
 //! router's affinity gauges (per-bucket depth, steal and resize counts).
 
 use std::io::{BufRead, BufReader, Write};
@@ -39,7 +41,45 @@ use crate::serving::batcher::Batcher;
 use crate::serving::engine::Engine;
 use crate::serving::metrics::EngineMetrics;
 use crate::serving::request::Request;
+use crate::tensor::Tensor;
 use crate::{Error, Result};
+
+/// Resolve the server's affinity signer from the configured mode and the
+/// runner's embedding table.
+///
+/// An *explicitly requested* semantic mode (`--signature-mode semantic`,
+/// `--set signature_mode=semantic`) with no usable embedding table is a
+/// hard startup error: silently serving a different bucketing than the
+/// operator asked for hides real capacity/locality regressions. When
+/// semantic mode merely came from a config default, the prefix min-hash
+/// fallback applies with a warning, as before.
+fn build_signer(cfg: &ServingConfig,
+                table: Result<&Tensor>) -> Result<Signer> {
+    match cfg.signature_mode {
+        SignatureMode::Semantic => {
+            match table.and_then(|t| {
+                SemanticSketcher::from_embedding(t, cfg.signature_prefix_len)
+            }) {
+                Ok(sk) => Ok(Signer::semantic(sk)),
+                Err(e) if cfg.signature_explicit => Err(Error::config(
+                    format!(
+                        "--signature-mode semantic was requested but the \
+                         semantic signer is unavailable ({e}); load a model \
+                         with an embedding table or drop the flag"
+                    ),
+                )),
+                Err(e) => {
+                    log::warn!(
+                        "semantic signatures unavailable ({e}); \
+                         falling back to the prefix min-hash"
+                    );
+                    Ok(Signer::prefix(cfg.signature_prefix_len))
+                }
+            }
+        }
+        SignatureMode::Prefix => Ok(Signer::prefix(cfg.signature_prefix_len)),
+    }
+}
 
 /// A running server: listener thread + per-replica batcher threads +
 /// handler pool.
@@ -70,28 +110,11 @@ impl Server {
         }
         // The request signer is built once, before the engines disappear
         // behind their mutexes: semantic mode sketches by meaning through
-        // the model's embedding table; when the table is unavailable the
-        // prefix min-hash is the documented fallback.
-        let signer = Arc::new(match cfg.signature_mode {
-            SignatureMode::Semantic => {
-                match engines[0].runner().embedding_table().and_then(|t| {
-                    SemanticSketcher::from_embedding(
-                        t, cfg.signature_prefix_len)
-                }) {
-                    Ok(sk) => Signer::semantic(sk),
-                    Err(e) => {
-                        log::warn!(
-                            "semantic signatures unavailable ({e}); \
-                             falling back to the prefix min-hash"
-                        );
-                        Signer::prefix(cfg.signature_prefix_len)
-                    }
-                }
-            }
-            SignatureMode::Prefix => {
-                Signer::prefix(cfg.signature_prefix_len)
-            }
-        });
+        // the model's embedding table. A missing table downgrades a
+        // semantic *default* to the prefix min-hash with a warning, but
+        // fails startup when the operator asked for semantic explicitly.
+        let signer = Arc::new(build_signer(
+            &cfg, engines[0].runner().embedding_table())?);
         log::info!("affinity signatures: {} mode", signer.mode_name());
 
         let listener = TcpListener::bind(&cfg.bind)?;
@@ -300,5 +323,63 @@ impl Client {
     pub fn quit(mut self) -> Result<()> {
         let _ = self.roundtrip("QUIT")?;
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(mode: SignatureMode, explicit: bool) -> ServingConfig {
+        ServingConfig {
+            signature_mode: mode,
+            signature_explicit: explicit,
+            ..ServingConfig::default()
+        }
+    }
+
+    fn table() -> Tensor {
+        Tensor::new(vec![16, 8], vec![0.1; 16 * 8]).unwrap()
+    }
+
+    #[test]
+    fn prefix_mode_ignores_missing_table() {
+        let s = build_signer(&cfg(SignatureMode::Prefix, true),
+                             Err(Error::serving("no table")))
+            .unwrap();
+        assert_eq!(s.mode_name(), "prefix");
+    }
+
+    #[test]
+    fn semantic_mode_with_table_builds_semantic_signer() {
+        let t = table();
+        for explicit in [false, true] {
+            let s = build_signer(&cfg(SignatureMode::Semantic, explicit),
+                                 Ok(&t))
+                .unwrap();
+            assert_eq!(s.mode_name(), "semantic");
+        }
+    }
+
+    /// Satellite regression: `--signature-mode semantic` without an
+    /// embedding table must fail startup, not silently degrade.
+    #[test]
+    fn explicit_semantic_without_table_is_a_startup_error() {
+        let err = build_signer(&cfg(SignatureMode::Semantic, true),
+                               Err(Error::serving("no table")))
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("semantic"), "{msg}");
+        assert!(msg.contains("no table"),
+                "the root cause must be surfaced: {msg}");
+    }
+
+    /// A semantic *config default* keeps the documented warn-and-fallback.
+    #[test]
+    fn default_semantic_without_table_falls_back_to_prefix() {
+        let s = build_signer(&cfg(SignatureMode::Semantic, false),
+                             Err(Error::serving("no table")))
+            .unwrap();
+        assert_eq!(s.mode_name(), "prefix");
     }
 }

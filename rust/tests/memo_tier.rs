@@ -2,10 +2,14 @@
 //!
 //! The hermetic tests exercise the shared tier directly (no artifacts, no
 //! PJRT): reader threads look up concurrently with an admitter per layer,
-//! proving the shard `RwLock` scheme loses no hits and never overflows
-//! the capacity budget; a save→load round trip proves the warm hit rate
-//! survives a "restart". The final tests drive real engine replicas and
-//! skip without artifacts, like every runtime-gated test.
+//! proving the seqlock snapshot scheme loses no hits, never serves a
+//! reused slot's stale bytes (payloads are tagged per cluster and every
+//! fetched payload must match its match), and never overflows the
+//! capacity budget — including under eviction churn, tombstone
+//! compactions and a concurrent `save_warm`. A save→load round trip
+//! proves the warm hit rate survives a "restart". The final tests drive
+//! real engine replicas and skip without artifacts, like every
+//! runtime-gated test.
 
 use std::sync::Arc;
 
@@ -73,9 +77,10 @@ fn near(rng: &mut Pcg32, centre: &[f32], noise: f32) -> Vec<f32> {
 }
 
 /// N reader threads + 1 admitter thread per layer, all against one tier:
-/// readers run on the shard read locks while admissions churn the write
-/// side. Afterwards, every cluster the admitters warmed must be a hit
-/// (no lost hits) and occupancy must respect the budget throughout.
+/// readers run lock-free against published snapshots while admissions
+/// publish new ones. Afterwards, every cluster the admitters warmed must
+/// be a hit (no lost hits) and occupancy must respect the budget
+/// throughout.
 #[test]
 fn concurrent_readers_and_admitters_lose_no_hits() {
     const CLUSTERS: usize = 16;
@@ -123,7 +128,7 @@ fn concurrent_readers_and_admitters_lose_no_hits() {
                     let q = near(&mut rng, &cents[i % CLUSTERS], 0.02);
                     // Hit or miss both fine mid-churn; what matters is
                     // that fetched payloads are always internally
-                    // consistent (epoch-checked under the read lock).
+                    // consistent (epoch-checked against one snapshot).
                     let _ = tier.lookup_fetch(li, &q, 48, THRESHOLD,
                                               &mut dst);
                 }
@@ -158,6 +163,275 @@ fn concurrent_readers_and_admitters_lose_no_hits() {
                 assert_eq!(hit.id, id, "layer {li} index/arena misaligned");
             }
         });
+    }
+}
+
+/// Seqlock stress (tentpole): N reader threads race one admitter per
+/// layer through heavy eviction churn and tombstone compactions — the
+/// tight capacity plus a stream of throwaway "junk" admissions forces
+/// both. Every cluster's payload is a constant tag, so any fetched
+/// payload that does not match its matched cluster would prove a
+/// stale-slot (torn) read; the epoch-checked snapshot path must make
+/// that impossible while occupancy respects the budget throughout.
+#[test]
+fn seqlock_readers_race_admit_evict_compact() {
+    const CLUSTERS: usize = 8;
+    const CAPACITY: usize = 12; // tight: junk churn forces evictions
+    const READERS_PER_LAYER: usize = 3;
+    const ROUNDS: usize = 30;
+    const THRESHOLD: f32 = 0.9;
+
+    let c = cfg();
+    let elems = c.apm_elems(SEQ);
+    let dim = c.embed_dim;
+    let tier = Arc::new(MemoTier::new(&c, SEQ, HnswParams::default(),
+                                      &memo(CAPACITY)));
+    let cents = Arc::new(centres(71, CLUSTERS, dim));
+
+    let mut threads = Vec::new();
+    let mut reader_hits = Vec::new();
+    for li in 0..LAYERS {
+        // Admitter: alternates a wave of tagged cluster rows (payload =
+        // cluster index everywhere) with a wave of far-away junk rows
+        // (payload ≥ 1000) — the junk keeps the clock evicting and the
+        // id space compacting while readers fly.
+        {
+            let tier = tier.clone();
+            let cents = cents.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut rng = Pcg32::seeded(500 + li as u64);
+                for round in 0..ROUNDS {
+                    let feats: Vec<Vec<f32>> = (0..CLUSTERS)
+                        .map(|k| near(&mut rng, &cents[k], 0.02))
+                        .collect();
+                    let apms: Vec<Vec<f32>> = (0..CLUSTERS)
+                        .map(|k| vec![k as f32; elems])
+                        .collect();
+                    let rows: Vec<(&[f32], &[f32])> = feats
+                        .iter()
+                        .zip(&apms)
+                        .map(|(f, a)| (f.as_slice(), a.as_slice()))
+                        .collect();
+                    tier.admit_batch(li, &rows, THRESHOLD, 48).unwrap();
+                    assert!(tier.layer_len(li) <= CAPACITY,
+                            "occupancy exceeded budget mid-run");
+
+                    let junk: Vec<Vec<f32>> = (0..CLUSTERS)
+                        .map(|_| {
+                            let mut v: Vec<f32> = (0..dim)
+                                .map(|_| rng.next_gaussian())
+                                .collect();
+                            normalize(&mut v);
+                            v
+                        })
+                        .collect();
+                    let japm = vec![1000.0 + round as f32; elems];
+                    let rows: Vec<(&[f32], &[f32])> = junk
+                        .iter()
+                        .map(|f| (f.as_slice(), japm.as_slice()))
+                        .collect();
+                    tier.admit_batch(li, &rows, THRESHOLD, 48).unwrap();
+                    assert!(tier.layer_len(li) <= CAPACITY,
+                            "junk wave pushed occupancy over budget");
+                }
+            }));
+        }
+        // Readers: every fetched payload must tag-match the queried
+        // cluster — a mismatch means a reused slot's bytes leaked
+        // through the snapshot discipline.
+        for r in 0..READERS_PER_LAYER {
+            let tier = tier.clone();
+            let cents = cents.clone();
+            let handle = std::thread::spawn(move || {
+                let mut rng = Pcg32::seeded(9000 + (li * 10 + r) as u64);
+                let mut dst = vec![0.0f32; elems];
+                let mut hits = 0usize;
+                for i in 0..600 {
+                    let k = i % CLUSTERS;
+                    let q = near(&mut rng, &cents[k], 0.02);
+                    if tier
+                        .lookup_fetch(li, &q, 48, THRESHOLD, &mut dst)
+                        .is_some()
+                    {
+                        hits += 1;
+                        let want = k as f32;
+                        assert!(
+                            dst[0] == want
+                                && dst[elems / 2] == want
+                                && dst[elems - 1] == want,
+                            "layer {li} cluster {k}: fetched payload \
+                             tagged {} — stale/foreign bytes",
+                            dst[0]
+                        );
+                    }
+                }
+                hits
+            });
+            reader_hits.push(handle);
+        }
+    }
+    for t in threads {
+        t.join().expect("admitter thread");
+    }
+    let total_hits: usize = reader_hits
+        .into_iter()
+        .map(|h| h.join().expect("reader thread"))
+        .sum();
+    assert!(total_hits > 0, "readers never hit a warm entry");
+    assert!(tier.admissions() > 0);
+    assert!(tier.evictions() > 0, "the tight budget must have churned");
+
+    // No lost hits: one final cluster wave per layer (dedup or admit),
+    // then every cluster must resolve — same-batch admissions are never
+    // evicted by their own batch and capacity exceeds the cluster count.
+    let mut rng = Pcg32::seeded(13);
+    let mut dst = vec![0.0f32; elems];
+    for li in 0..LAYERS {
+        let feats: Vec<Vec<f32>> = (0..CLUSTERS)
+            .map(|k| near(&mut rng, &cents[k], 0.01))
+            .collect();
+        let apms: Vec<Vec<f32>> =
+            (0..CLUSTERS).map(|k| vec![k as f32; elems]).collect();
+        let rows: Vec<(&[f32], &[f32])> = feats
+            .iter()
+            .zip(&apms)
+            .map(|(f, a)| (f.as_slice(), a.as_slice()))
+            .collect();
+        tier.admit_batch(li, &rows, THRESHOLD, 48).unwrap();
+        assert!(tier.layer_len(li) <= CAPACITY);
+        for (k, centre) in cents.iter().enumerate() {
+            let q = near(&mut rng, centre, 0.01);
+            // Probe floor 0.8, not 0.9: the final wave may have deduped
+            // against an older (noisier) twin, and 0.8 still cleanly
+            // excludes every other cluster and all junk.
+            let hit = tier.lookup_fetch(li, &q, 64, 0.8, &mut dst);
+            assert!(hit.is_some(), "layer {li} lost cluster {k}");
+            assert_eq!(dst[0], k as f32, "layer {li} cluster {k} payload");
+        }
+        // Post-churn self-consistency of the published snapshot.
+        tier.read_layer(li, |layer| {
+            for id in layer.live_ids() {
+                layer.arena().get(id).unwrap();
+                let v = layer.index_vector(id).to_vec();
+                let hit = layer.lookup(&v, 64).unwrap();
+                assert_eq!(hit.id, id, "layer {li} index/arena misaligned");
+            }
+        });
+    }
+}
+
+/// Seqlock + persistence (satellite): `save_warm` runs while readers
+/// hammer the same shards and an admitter keeps churning — the save
+/// quiesces *writers only*, so readers observe no interruption (their
+/// payload-tag invariant keeps holding), and the snapshot round-trips
+/// into a warm tier that still serves every cluster.
+#[test]
+fn warm_save_during_active_reads_and_admissions_roundtrips() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    const CLUSTERS: usize = 8;
+    const THRESHOLD: f32 = 0.9;
+    let c = cfg();
+    let elems = c.apm_elems(SEQ);
+    let dim = c.embed_dim;
+    // Unbounded capacity: no eviction can ever touch the warm set, so
+    // the post-load assertions are deterministic regardless of how much
+    // the concurrent admitter churns before the save lands.
+    let m = memo(0);
+    let tier = Arc::new(MemoTier::new(&c, SEQ, HnswParams::default(), &m));
+    let cents = Arc::new(centres(83, CLUSTERS, dim));
+
+    // Warm every layer with tagged cluster payloads.
+    let mut rng = Pcg32::seeded(29);
+    for li in 0..LAYERS {
+        let feats: Vec<Vec<f32>> = (0..CLUSTERS)
+            .map(|k| near(&mut rng, &cents[k], 0.01))
+            .collect();
+        let apms: Vec<Vec<f32>> =
+            (0..CLUSTERS).map(|k| vec![k as f32; elems]).collect();
+        let rows: Vec<(&[f32], &[f32])> = feats
+            .iter()
+            .zip(&apms)
+            .map(|(f, a)| (f.as_slice(), a.as_slice()))
+            .collect();
+        tier.admit_batch(li, &rows, THRESHOLD, 48).unwrap();
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut workers = Vec::new();
+    // Readers on every layer, asserting the payload-tag invariant.
+    for li in 0..LAYERS {
+        for r in 0..2 {
+            let (tier, cents, stop) =
+                (tier.clone(), cents.clone(), stop.clone());
+            workers.push(std::thread::spawn(move || {
+                let mut rng = Pcg32::seeded(7000 + (li * 10 + r) as u64);
+                let mut dst = vec![0.0f32; elems];
+                let mut i = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let k = i % CLUSTERS;
+                    let q = near(&mut rng, &cents[k], 0.02);
+                    if tier
+                        .lookup_fetch(li, &q, 48, THRESHOLD, &mut dst)
+                        .is_some()
+                    {
+                        assert_eq!(dst[0], k as f32,
+                                   "stale payload during concurrent save");
+                    }
+                    i += 1;
+                }
+            }));
+        }
+    }
+    // One admitter churning junk into layer 0 (admissions must interleave
+    // with the save's writer-quiesced sections, never deadlock).
+    {
+        let (tier, stop) = (tier.clone(), stop.clone());
+        workers.push(std::thread::spawn(move || {
+            let mut rng = Pcg32::seeded(311);
+            let mut round = 0f32;
+            while !stop.load(Ordering::Relaxed) {
+                let mut v: Vec<f32> = (0..dim)
+                    .map(|_| rng.next_gaussian())
+                    .collect();
+                normalize(&mut v);
+                let apm = vec![2000.0 + round; elems];
+                tier.admit_batch(0, &[(v.as_slice(), apm.as_slice())],
+                                 THRESHOLD, 48)
+                    .unwrap();
+                round += 1.0;
+            }
+        }));
+    }
+
+    // Save mid-flight: the first snapshot serializes every fresh entry.
+    let dir = std::env::temp_dir().join("attmemo_memo_tier_live_save");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("live.atwm");
+    attmemo::memo::persist::save_warm(&tier, THRESHOLD, &path).unwrap();
+
+    stop.store(true, Ordering::Relaxed);
+    for w in workers {
+        w.join().expect("worker thread");
+    }
+
+    let (loaded, thr) = attmemo::memo::persist::load_warm(
+        &path, &c, &m, HnswParams::default())
+        .unwrap();
+    assert_eq!(thr, THRESHOLD);
+    assert!(loaded.total_entries() >= LAYERS * CLUSTERS,
+            "snapshot lost warm entries");
+    let mut rng = Pcg32::seeded(37);
+    let mut dst = vec![0.0f32; elems];
+    for li in 0..LAYERS {
+        for (k, centre) in cents.iter().enumerate() {
+            let q = near(&mut rng, centre, 0.01);
+            let hit = loaded.lookup_fetch(li, &q, 64, THRESHOLD, &mut dst);
+            assert!(hit.is_some(),
+                    "layer {li} cluster {k} cold after the live save");
+            assert_eq!(dst[0], k as f32,
+                       "layer {li} cluster {k} payload corrupted");
+        }
     }
 }
 

@@ -282,9 +282,10 @@ fn semantic_signatures_serve_end_to_end() {
 }
 
 /// Two engine replicas behind one server, sharing one online `MemoTier`:
-/// both batcher threads serve from the shared queue, lookups hit the
-/// tier's shard read locks in parallel (no global engine mutex on the
-/// lookup path), and warm-ups made by either replica count for both.
+/// both batcher threads serve from the shared queue, lookups run in
+/// parallel on the tier's lock-free shard snapshots (no global engine
+/// mutex on the lookup path), and warm-ups made by either replica count
+/// for both.
 #[test]
 fn two_replicas_share_one_memo_tier() {
     let Ok(rt) = workload::open_runtime() else {
