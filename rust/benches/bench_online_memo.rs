@@ -14,6 +14,9 @@
 //!   warmed tier, plus the seqlock acceptance arms: 4 readers with a
 //!   full-tilt same-shard admitter vs an equal-CPU private-tier
 //!   admitter — lookup throughput must not degrade when admissions run);
+//! * a **write-path A/B** (dedup prepass on vs off on a steady-state
+//!   all-dedup workload — the prepass must strictly reduce publishes,
+//!   and on full runs its admit p99 must beat the full publish path);
 //! * an **affinity A/B** (8 buckets vs 1 on a clustered workload) and a
 //!   **signature A/B** (semantic SimHash vs prefix min-hash on a
 //!   *paraphrase-clustered* workload, where word order scatters the
@@ -177,10 +180,12 @@ fn run_engine_section() -> attmemo::Result<()> {
 /// `tier`'s layer 0, optionally with one background admitter thread
 /// churning `admit_into`'s layer 0 at full tilt. The admitter's batches
 /// are dedup-admissions (every row already stored above the dedup
-/// threshold), so each batch runs the complete writer path — snapshot
-/// clone, publish, slot reclaim — without changing the entry set, keeping
-/// the read workload identical across arms. Returns (total hits, wall
-/// seconds of the reader side).
+/// threshold), so the entry set never changes and the read workload is
+/// identical across arms. With the dedup prepass on (the default) each
+/// such batch resolves against the published snapshot and *skips* the
+/// publish — the steady-state cheap-write path; with it off, each batch
+/// runs the complete writer path (snapshot clone, publish, slot reclaim).
+/// Returns (total hits, wall seconds of the reader side).
 fn read_throughput(tier: &Arc<MemoTier>, entries: &Arc<Vec<Vec<f32>>>,
                    elems: usize, threads: usize, lookups_per_thread: usize,
                    admit_into: Option<Arc<MemoTier>>) -> (usize, f64) {
@@ -335,6 +340,113 @@ fn shared_tier_section(table: &mut TableWriter) -> (f64, f64) {
         );
     }
     (base4, ratio)
+}
+
+/// Write-path A/B (tentpole satellite): dedup prepass on vs off over an
+/// identical steady-state workload. Each arm warms its own tier with the
+/// same 256 entries, then admits batches whose rows are *all already
+/// stored* — the shape a warm clustered workload converges to. With the
+/// prepass on, every such batch is resolved against the published
+/// snapshot and the snapshot clone + publish + retiree churn are skipped
+/// outright; with it off, every batch pays the full copy-on-write writer
+/// path just to rediscover row by row that nothing changed. The prepass
+/// must *strictly* reduce publishes (that is deterministic); the latency
+/// win is asserted on full runs only (a 2-vCPU smoke runner is all
+/// scheduler jitter at these timescales). Returns the prepass arm's
+/// (admit_p50_ns, admit_p99_ns, publish_skips) for the smoke summary.
+fn write_path_section(table: &mut TableWriter) -> (f64, f64, f64) {
+    use attmemo::config::MemoConfig;
+    use attmemo::util::stats::Summary;
+
+    let cfg = sim_cfg();
+    let seq = 32usize;
+    let elems = cfg.apm_elems(seq);
+    let mut rng = Pcg32::seeded(33);
+    let entries: Vec<Vec<f32>> =
+        (0..256).map(|_| unit_vec(&mut rng, cfg.embed_dim)).collect();
+    let apm = vec![1.0f32; elems];
+    let batches = smoke::iters(400, 100);
+
+    // One arm: warm, then `batches` all-dedup 8-row admissions, timed.
+    let run_arm = |prepass: bool| -> (Summary, u64, u64) {
+        let memo = MemoConfig {
+            online_admission: true,
+            max_db_entries: 512,
+            admission_min_attempts: 0,
+            intra_batch_dedup: true,
+            dedup_prepass: prepass,
+            ..MemoConfig::default()
+        };
+        let tier = MemoTier::new(&cfg, seq, Default::default(), &memo);
+        let rows: Vec<(&[f32], &[f32])> = entries
+            .iter()
+            .map(|f| (f.as_slice(), apm.as_slice()))
+            .collect();
+        // Threshold 2.0: nothing clears it, so every row admits.
+        tier.admit_batch(0, &rows, 2.0, 48).unwrap();
+
+        let mut lat = Summary::new();
+        let mut k = 0usize;
+        for _ in 0..batches {
+            let rows: Vec<(&[f32], &[f32])> = (0..8)
+                .map(|j| {
+                    (entries[(k + j) % entries.len()].as_slice(),
+                     apm.as_slice())
+                })
+                .collect();
+            let t0 = std::time::Instant::now();
+            tier.admit_batch(0, &rows, 0.9, 48).unwrap();
+            lat.record(t0.elapsed().as_nanos() as f64);
+            k = (k + 8) % entries.len();
+        }
+        (lat, tier.publishes(), tier.publish_skips())
+    };
+
+    let (mut lat_on, pub_on, skips_on) = run_arm(true);
+    let (mut lat_off, pub_off, skips_off) = run_arm(false);
+    for (arm, lat, publishes, skips) in [
+        ("prepass", &mut lat_on, pub_on, skips_on),
+        ("publish", &mut lat_off, pub_off, skips_off),
+    ] {
+        let (p50, p99) = (lat.p50(), lat.p99());
+        table.row(&[
+            arm.to_string(),
+            batches.to_string(),
+            format!("{p50:.0}"),
+            format!("{p99:.0}"),
+            publishes.to_string(),
+            skips.to_string(),
+        ]);
+    }
+    println!(
+        "write path A/B: prepass admit p50={:.0}ns p99={:.0}ns \
+         ({} publishes, {} skips) vs full-publish p50={:.0}ns \
+         p99={:.0}ns ({} publishes)",
+        lat_on.p50(), lat_on.p99(), pub_on, skips_on,
+        lat_off.p50(), lat_off.p99(), pub_off,
+    );
+    assert!(
+        pub_on < pub_off,
+        "the dedup prepass must strictly reduce publishes on a \
+         steady-state workload: {pub_on} with prepass vs {pub_off} without"
+    );
+    assert!(skips_on > 0, "prepass arm never took the skip path");
+    assert_eq!(skips_off, 0, "prepass off must never skip a publish");
+    if !smoke::smoke() {
+        assert!(
+            lat_on.p99() < lat_off.p99(),
+            "skipping the snapshot clone + publish must lower admit p99: \
+             {:.0}ns with prepass vs {:.0}ns without",
+            lat_on.p99(), lat_off.p99()
+        );
+    } else if lat_on.p99() >= lat_off.p99() {
+        eprintln!(
+            "warn: smoke-mode admit p99 {:.0}ns (prepass) >= {:.0}ns \
+             (publish) — not fatal under BENCH_SMOKE; check on a full run",
+            lat_on.p99(), lat_off.p99()
+        );
+    }
+    (lat_on.p50(), lat_on.p99(), skips_on as f64)
 }
 
 /// Outcome of one affinity A/B arm over the full run.
@@ -607,6 +719,19 @@ fn main() {
         "bench_results/online_memo_shared_tier.csv")));
     summary.push("shared_tier_lookups_per_s_4t", lookups_per_s);
     summary.push("shared_tier_admit_ratio", admit_ratio);
+
+    let mut wp = TableWriter::new(
+        "Write path A/B — dedup prepass vs full publish on a steady-state \
+         all-dedup workload (8-row batches, 256 stored entries)",
+        &["arm", "batches", "admit_p50_ns", "admit_p99_ns", "publishes",
+          "publish_skips"],
+    );
+    let (admit_p50, admit_p99, publish_skips) = write_path_section(&mut wp);
+    wp.emit(Some(std::path::Path::new(
+        "bench_results/online_memo_write_path.csv")));
+    summary.push("admit_p50_ns", admit_p50);
+    summary.push("admit_p99_ns", admit_p99);
+    summary.push("publish_skips", publish_skips);
 
     let mut ab = TableWriter::new(
         "Affinity routing A/B — clustered workload, 2 replicas, \

@@ -120,6 +120,11 @@ ONLINE MEMOIZATION (serve/eval)
                         gate activates (default 64)
   --no-dedup            disable intra-batch dedup on the admission path
                         (near-identical rows in one batch then all admit)
+  --no-dedup-prepass    disable the publish-skip fast path (a batch whose
+                        rows all dedup against the published snapshot is
+                        normally served by reuse marks alone — no
+                        copy-on-write clone, no publish); every batch
+                        then pays the full write path (A/B measurement)
 
 AFFINITY ROUTING (serve)
   --affinity-buckets N  similarity-affinity buckets in front of the
@@ -236,6 +241,7 @@ fn parse_memo(args: &Args, level: MemoLevel) -> Result<MemoConfig> {
             defaults.admission_min_attempts as usize,
         )? as u64,
         intra_batch_dedup: !args.flag("no-dedup"),
+        dedup_prepass: !args.flag("no-dedup-prepass"),
         ..defaults
     })
 }
@@ -477,10 +483,14 @@ fn cmd_eval(args: &Args) -> Result<()> {
         }
         if let Some(t) = engine.online() {
             println!(
-                "  online tier: entries={} capacity/layer={} deduped={}",
+                "  online tier: entries={} capacity/layer={} deduped={} \
+                 publishes={} publish_skips={} forced_reclaims={}",
                 t.total_entries(),
                 t.capacity(),
-                t.deduped()
+                t.deduped(),
+                t.publishes(),
+                t.publish_skips(),
+                t.forced_reclaims()
             );
         }
     }

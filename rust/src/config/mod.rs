@@ -169,6 +169,13 @@ pub struct MemoConfig {
     /// rows admitted earlier in the same batch) already clears the
     /// similarity threshold — near-identical rows in one batch admit once.
     pub intra_batch_dedup: bool,
+    /// Probe the published snapshot before paying the copy-on-write clone
+    /// in `admit_batch`: a batch whose rows *all* dedup against stored
+    /// entries (steady-state warm traffic) is served by lock-free reuse
+    /// marks alone — no clone, no publish. Requires `intra_batch_dedup`;
+    /// disable with `--no-dedup-prepass` to force every batch through the
+    /// full publish path (A/B measurement, debugging).
+    pub dedup_prepass: bool,
 }
 
 impl Default for MemoConfig {
@@ -183,6 +190,7 @@ impl Default for MemoConfig {
             online_admission: false,
             admission_min_attempts: 64,
             intra_batch_dedup: true,
+            dedup_prepass: true,
         }
     }
 }

@@ -32,10 +32,24 @@
 //!   a removed entry's physical slot goes onto a *pending* list instead
 //!   of the free list — the tier recycles it only once every snapshot
 //!   that could still reference the slot has quiesced, so no reader ever
-//!   observes a slot's bytes being overwritten under it.
+//!   observes a slot's bytes being overwritten under it. When the tier's
+//!   retire list hits its generation cap, a slot may be recycled *under*
+//!   a stalled reader; the shared tenancy-epoch table below turns that
+//!   reader's fetches into clean stamp failures instead of foreign bytes.
+//!
+//! **Tenancy epochs.** Each physical slot carries a *live* epoch counter
+//! in a table of atomics shared across every snapshot of the lineage
+//! ([`EpochTable`]); a snapshot's id table records the epoch the tenant
+//! was stored under. The two agree while the tenant is live *or* merely
+//! evicted-but-unreclaimed (frozen snapshots keep serving such entries,
+//! the hit-rate grace PR 5 established); the live epoch is bumped only
+//! when the slot is **claimed by its next tenant**, at which point every
+//! older snapshot's stamps stop validating. Readers revalidate the stamp
+//! *after* copying payload bytes ([`ApmArena::recheck`]), closing the
+//! check-then-copy window when a forced reclaim overwrites a slot mid-read.
 
 use std::os::fd::RawFd;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::{Error, Result};
@@ -154,6 +168,115 @@ fn grow_store(store: &Store, g: &mut GrowState, extra: usize) -> Result<()> {
     Ok(())
 }
 
+/// Entries per chunk of the chunked id→slot table and the shared
+/// tenancy-epoch table. Matches `GROW_CHUNK` so one admission's table
+/// traffic stays within the store-growth granularity.
+const TABLE_CHUNK: usize = 256;
+
+/// One live entry's physical location plus the tenancy epoch it was
+/// stored under (the per-snapshot half of the stamp check; the live half
+/// is the shared [`EpochTable`]).
+#[derive(Debug, Clone, Copy)]
+struct SlotRef {
+    slot: u32,
+    epoch: u32,
+}
+
+/// Chunked persistent id→slot table: chunks are `Arc`-shared between a
+/// snapshot and its copy-on-write clone, and a mutation clones only the
+/// chunk it touches (`Arc::make_mut`). This keeps `cow_clone` — paid on
+/// *every* admission batch — at O(chunks touched), not O(ids ever issued).
+#[derive(Clone, Default)]
+struct SlotTable {
+    chunks: Vec<Arc<Vec<Option<SlotRef>>>>,
+    len: usize,
+}
+
+impl SlotTable {
+    /// `Some(entry)` for issued ids, `None` past the end of the id space.
+    fn get(&self, i: usize) -> Option<Option<SlotRef>> {
+        if i >= self.len {
+            return None;
+        }
+        Some(self.chunks[i / TABLE_CHUNK][i % TABLE_CHUNK])
+    }
+
+    fn push(&mut self, v: Option<SlotRef>) {
+        if self.len % TABLE_CHUNK == 0 {
+            self.chunks
+                .push(Arc::new(Vec::with_capacity(TABLE_CHUNK)));
+        }
+        let last = self.chunks.last_mut().expect("chunk just ensured");
+        Arc::make_mut(last).push(v);
+        self.len += 1;
+    }
+
+    fn set(&mut self, i: usize, v: Option<SlotRef>) {
+        Arc::make_mut(&mut self.chunks[i / TABLE_CHUNK])[i % TABLE_CHUNK] = v;
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn iter(&self) -> impl Iterator<Item = Option<SlotRef>> + '_ {
+        self.chunks.iter().flat_map(|c| c.iter().copied())
+    }
+}
+
+/// One chunk of live tenancy epochs (atomics, shared across snapshots).
+struct EpochChunk([AtomicU32; TABLE_CHUNK]);
+
+impl EpochChunk {
+    fn new() -> Self {
+        EpochChunk(std::array::from_fn(|_| AtomicU32::new(0)))
+    }
+}
+
+/// Per-physical-slot *live* tenancy epochs. The chunk list is cloned per
+/// snapshot (cheap `Arc` copies) but the counters inside are shared by the
+/// whole lineage: when a slot is claimed by a new tenant the claim bump is
+/// visible through every frozen snapshot, which is what lets the tier
+/// force-reclaim slots from under a stalled reader without that reader
+/// ever validating a stamp against foreign bytes.
+#[derive(Clone, Default)]
+struct EpochTable {
+    chunks: Vec<Arc<EpochChunk>>,
+    slots: usize,
+}
+
+impl EpochTable {
+    /// Make sure `slot` has a counter (writer-side, under the grow/writer
+    /// serialization; frozen snapshots never index past their own slots).
+    fn ensure(&mut self, slot: usize) {
+        while self.slots <= slot {
+            if self.slots % TABLE_CHUNK == 0 {
+                self.chunks.push(Arc::new(EpochChunk::new()));
+            }
+            self.slots += 1;
+        }
+    }
+
+    /// Current tenancy epoch of a slot.
+    fn load(&self, slot: u32) -> u32 {
+        let i = slot as usize;
+        self.chunks[i / TABLE_CHUNK].0[i % TABLE_CHUNK]
+            .load(Ordering::Acquire)
+    }
+
+    /// Claim a previously-used slot for a new tenant: bump its live epoch
+    /// so every stamp taken against the previous tenant stops validating.
+    /// `AcqRel` keeps the payload writes that follow ordered after the
+    /// bump — a racing reader that observes any new bytes must also
+    /// observe the bump on its post-copy revalidation.
+    fn claim(&self, slot: u32) -> u32 {
+        let i = slot as usize;
+        self.chunks[i / TABLE_CHUNK].0[i % TABLE_CHUNK]
+            .fetch_add(1, Ordering::AcqRel)
+            .wrapping_add(1)
+    }
+}
+
 /// Fixed-stride, page-aligned entry store on a memfd with slot reuse.
 ///
 /// ```
@@ -168,11 +291,14 @@ pub struct ApmArena {
     map: Arc<Mapping>,
     /// Bytes of payload per entry (f32 count × 4).
     entry_bytes: usize,
-    /// id → physical slot; `None` once evicted.
-    slots: Vec<Option<u32>>,
-    /// Per-physical-slot reuse epoch, bumped on every `remove`. One slot's
-    /// epoch identifies which *tenant* a stamp was taken against.
-    slot_epochs: Vec<u32>,
+    /// id → (physical slot, tenancy epoch at store time); `None` once
+    /// evicted. Chunked copy-on-write: an admission clones only the
+    /// chunks it touches.
+    slots: SlotTable,
+    /// Per-physical-slot *live* tenancy epoch, bumped when a slot is
+    /// claimed by its next tenant. Shared (atomics) across every snapshot
+    /// of the lineage — see the module docs on tenancy epochs.
+    epochs: EpochTable,
     /// Physical slots freed by eviction, available for reuse.
     free: Vec<u32>,
     /// Slots freed while `defer_free` is on: dead, but not reusable until
@@ -224,8 +350,8 @@ impl ApmArena {
             store: Arc::new(store),
             map,
             entry_bytes,
-            slots: Vec::new(),
-            slot_epochs: Vec::new(),
+            slots: SlotTable::default(),
+            epochs: EpochTable::default(),
             free: Vec::new(),
             pending_free: Vec::new(),
             defer_free: false,
@@ -234,16 +360,18 @@ impl ApmArena {
         })
     }
 
-    /// Cheap snapshot copy for the copy-on-write tier: the id→slot table,
-    /// epochs and free lists are duplicated, the backing store (memfd,
-    /// mappings, payload bytes) is shared.
+    /// Cheap snapshot copy for the copy-on-write tier: the chunked
+    /// id→slot table shares its chunks until a mutation touches them
+    /// (O(chunks) `Arc` copies here, O(touched chunks) per admission),
+    /// the live tenancy-epoch counters and the backing store (memfd,
+    /// mappings, payload bytes) are shared outright.
     pub(crate) fn cow_clone(&self) -> ApmArena {
         ApmArena {
             store: Arc::clone(&self.store),
             map: Arc::clone(&self.map),
             entry_bytes: self.entry_bytes,
             slots: self.slots.clone(),
-            slot_epochs: self.slot_epochs.clone(),
+            epochs: self.epochs.clone(),
             free: self.free.clone(),
             pending_free: self.pending_free.clone(),
             defer_free: self.defer_free,
@@ -326,16 +454,17 @@ impl ApmArena {
     }
 
     /// Epoch stamp of a live entry: encodes the arena generation and the
-    /// entry's physical-slot reuse counter. A stamp taken at lookup time
-    /// and passed back to [`ApmArena::get_checked`] guarantees the bytes
-    /// read belong to the *same tenant* the lookup matched — a concurrent
-    /// eviction that frees and reuses the slot (or a compaction that
+    /// tenancy epoch the entry was stored under. A stamp taken at lookup
+    /// time and passed back to [`ApmArena::get_checked`] guarantees the
+    /// bytes read belong to the *same tenant* the lookup matched — a
+    /// concurrent eviction whose slot was recycled (or a compaction that
     /// renumbers ids) invalidates the stamp instead of silently serving
     /// stale or foreign bytes. Errors on dead/unknown ids.
     pub fn epoch(&self, id: ApmId) -> Result<u64> {
         match self.slots.get(id.0 as usize) {
-            Some(Some(slot)) => Ok(((self.generation as u64) << 32)
-                | self.slot_epochs[*slot as usize] as u64),
+            Some(Some(r)) => {
+                Ok(((self.generation as u64) << 32) | r.epoch as u64)
+            }
             Some(None) => {
                 Err(Error::memo(format!("ApmId {} was evicted", id.0)))
             }
@@ -347,12 +476,32 @@ impl ApmArena {
         }
     }
 
+    /// Does `stamp` still identify the entry's current tenancy? True only
+    /// when the id is live in this snapshot, the stamp matches the epoch
+    /// the entry was stored under, *and* the slot's shared live epoch
+    /// agrees — i.e. no later lineage writer has recycled the slot for a
+    /// new tenant (a merely-evicted, not-yet-reclaimed entry still
+    /// validates: frozen snapshots keep serving it).
+    fn stamp_valid(&self, id: ApmId, stamp: u64) -> bool {
+        match self.slots.get(id.0 as usize) {
+            Some(Some(r)) => {
+                (((self.generation as u64) << 32) | r.epoch as u64) == stamp
+                    && self.epochs.load(r.slot) == r.epoch
+            }
+            _ => false,
+        }
+    }
+
     /// Read-only view of one entry, validated against an epoch stamp taken
     /// when the entry was looked up (see [`ApmArena::epoch`]). Errors if
-    /// the id has died, its slot was reused, or the arena was compacted
-    /// since the stamp — never returns another tenant's bytes.
+    /// the id has died, its slot was recycled for a new tenant, or the
+    /// arena was compacted since the stamp — never returns another
+    /// tenant's bytes. Callers that *copy* the returned bytes while other
+    /// lineage writers run must confirm the copy with
+    /// [`ApmArena::recheck`] afterwards: a forced slot reclaim (tier
+    /// retire-cap overflow) may overwrite the slot mid-copy.
     pub fn get_checked(&self, id: ApmId, epoch: u64) -> Result<&[f32]> {
-        if self.epoch(id)? != epoch {
+        if !self.stamp_valid(id, epoch) {
             return Err(Error::memo(format!(
                 "ApmId {} is stale: slot reused or arena compacted since \
                  lookup",
@@ -360,6 +509,17 @@ impl ApmArena {
             )));
         }
         self.get(id)
+    }
+
+    /// Post-copy stamp revalidation (the seqlock read discipline): after
+    /// copying bytes obtained through [`ApmArena::get_checked`], confirm
+    /// the slot's tenancy did not change mid-copy. The `Acquire` fence
+    /// orders the copy's reads before the epoch reload, pairing with the
+    /// `AcqRel` claim bump a reclaiming writer performs *before* it
+    /// overwrites the slot.
+    pub fn recheck(&self, id: ApmId, epoch: u64) -> bool {
+        std::sync::atomic::fence(Ordering::Acquire);
+        self.stamp_valid(id, epoch)
     }
 
     /// Live entries.
@@ -394,6 +554,12 @@ impl ApmArena {
             .collect()
     }
 
+    /// Number of entries per chunk of the id table (the copy-on-write
+    /// clone granularity; exposed for tests and sizing docs).
+    pub fn table_chunk() -> usize {
+        TABLE_CHUNK
+    }
+
     pub(crate) fn fd(&self) -> RawFd {
         self.store.fd
     }
@@ -407,7 +573,7 @@ impl ApmArena {
     /// Byte offset of an entry inside the file (for gather mappings).
     pub(crate) fn file_offset(&self, id: ApmId) -> Result<usize> {
         match self.slots.get(id.0 as usize) {
-            Some(Some(slot)) => Ok(*slot as usize * self.store.stride),
+            Some(Some(r)) => Ok(r.slot as usize * self.store.stride),
             Some(None) => {
                 Err(Error::memo(format!("ApmId {} was evicted", id.0)))
             }
@@ -446,13 +612,22 @@ impl ApmArena {
                 data.len()
             )));
         }
-        let slot = match self.free.pop() {
-            Some(s) => s,
-            None => self.alloc_fresh_slot()?,
+        let (slot, reused) = match self.free.pop() {
+            Some(s) => (s, true),
+            None => (self.alloc_fresh_slot()?, false),
         };
-        while self.slot_epochs.len() <= slot as usize {
-            self.slot_epochs.push(0);
-        }
+        self.epochs.ensure(slot as usize);
+        // A recycled slot gets a fresh tenancy epoch *before* its bytes
+        // are overwritten: stamps against the previous tenant stop
+        // validating first, so a stalled reader racing a forced reclaim
+        // fails its (pre- or post-copy) stamp check instead of returning
+        // this tenant's bytes. Fresh slots never had a tenant — no stamp
+        // can exist, epoch 0 stands.
+        let epoch = if reused {
+            self.epochs.claim(slot)
+        } else {
+            self.epochs.load(slot)
+        };
         let off = slot as usize * self.store.stride;
         unsafe {
             std::ptr::copy_nonoverlapping(
@@ -461,7 +636,7 @@ impl ApmArena {
                 self.entry_bytes,
             );
         }
-        self.slots.push(Some(slot));
+        self.slots.push(Some(SlotRef { slot, epoch }));
         self.live += 1;
         Ok(ApmId((self.slots.len() - 1) as u32))
     }
@@ -478,16 +653,18 @@ impl ApmArena {
                 self.slots.len()
             )));
         }
-        match self.slots[i].take() {
-            Some(slot) => {
-                // Epoch-check support: the slot's next tenant must be
-                // distinguishable from this one, even at the same offset.
-                let e = &mut self.slot_epochs[slot as usize];
-                *e = e.wrapping_add(1);
+        match self.slots.get(i).flatten() {
+            Some(r) => {
+                // The id dies now; the slot's *live* epoch is bumped only
+                // when the next tenant claims it (`push`), so frozen
+                // snapshots that still map this id keep validating stamps
+                // — and keep serving the intact bytes — until the slot is
+                // actually recycled.
+                self.slots.set(i, None);
                 if self.defer_free {
-                    self.pending_free.push(slot);
+                    self.pending_free.push(r.slot);
                 } else {
-                    self.free.push(slot);
+                    self.free.push(r.slot);
                 }
                 self.live -= 1;
                 Ok(())

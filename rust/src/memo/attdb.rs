@@ -12,7 +12,8 @@
 //! arena's page slot for reuse and tombstones the index entry, so retired
 //! ids stop matching without an index rebuild.
 
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU32, AtomicU8, Ordering};
+use std::sync::Arc;
 
 use crate::config::ModelConfig;
 use crate::memo::arena::{ApmArena, ApmId, StoreHandle};
@@ -43,20 +44,128 @@ pub struct AdmitOutcome {
     pub evicted: Vec<ApmId>,
 }
 
-/// Per-entry reuse accounting, under one lock so engines sharing a built
-/// database read-only behind `Arc` can still record reuse through `&self`.
-#[derive(Debug, Default)]
-struct ReuseTrack {
-    /// Total reuses per entry (Fig. 11). Indexed by id; evicted entries
-    /// keep their final count.
-    counts: Vec<u32>,
+/// Entries per chunk of the reuse track. Chunks are cache-line-aligned
+/// blocks of per-entry atomics: a reuse mark touches one `AtomicU32` and
+/// two `AtomicU8`s inside one chunk, so concurrent readers marking
+/// different (hot) entries land on different lines instead of all
+/// serializing through one mutex — the lock the PR 5 hit path still paid.
+const TRACK_CHUNK: usize = 256;
+
+/// One chunk of per-entry reuse state (see [`ReuseTrack`]).
+#[repr(align(64))]
+struct TrackChunk {
+    /// Total reuses per entry (Fig. 11); evicted entries keep their
+    /// final count.
+    counts: [AtomicU32; TRACK_CHUNK],
     /// Clock reference counters (second-chance bits, saturating at 3):
     /// bumped on reuse, decayed by the eviction clock.
-    refs: Vec<u8>,
+    refs: [AtomicU8; TRACK_CHUNK],
     /// 1 when the entry was admitted or reused since the last warm
     /// snapshot; `save_warm` persists only warm entries and clears the
     /// bits afterwards (the snapshot compaction policy).
-    warm: Vec<u8>,
+    warm: [AtomicU8; TRACK_CHUNK],
+}
+
+impl TrackChunk {
+    fn new() -> Self {
+        TrackChunk {
+            counts: std::array::from_fn(|_| AtomicU32::new(0)),
+            refs: std::array::from_fn(|_| AtomicU8::new(0)),
+            warm: std::array::from_fn(|_| AtomicU8::new(0)),
+        }
+    }
+}
+
+/// Per-entry reuse accounting as chunked atomics — no lock anywhere on
+/// the mark path. The chunk list is cloned per copy-on-write snapshot
+/// (cheap `Arc` copies) while the counters inside are shared across the
+/// whole lineage, so reuse marked by readers of a frozen snapshot keeps
+/// feeding the live eviction clock, exactly as the mutex version did.
+/// All counter updates are `Relaxed`: the track is an eviction/persistence
+/// heuristic, never a correctness input.
+#[derive(Clone, Default)]
+struct ReuseTrack {
+    chunks: Vec<Arc<TrackChunk>>,
+    /// Entries this snapshot knows about. Marks are accepted for any id
+    /// within the *allocated* chunks (a frozen snapshot may legitimately
+    /// mark an id a newer lineage issued — the chunk is shared), but
+    /// serialization reads stop at `len`.
+    len: usize,
+}
+
+impl ReuseTrack {
+    /// `(chunk, index)` of an id the caller may touch, `None` past the
+    /// allocated chunks.
+    fn cell(&self, i: usize) -> Option<(&TrackChunk, usize)> {
+        self.chunks
+            .get(i / TRACK_CHUNK)
+            .map(|c| (c.as_ref(), i % TRACK_CHUNK))
+    }
+
+    /// Append one entry's state (writer-side; the slot in the shared
+    /// chunk is unused by every frozen snapshot, whose `len` is smaller).
+    fn push(&mut self, count: u32, refs: u8, warm: u8) {
+        if self.len % TRACK_CHUNK == 0 {
+            self.chunks.push(Arc::new(TrackChunk::new()));
+        }
+        let c = &self.chunks[self.len / TRACK_CHUNK];
+        let i = self.len % TRACK_CHUNK;
+        c.counts[i].store(count, Ordering::Relaxed);
+        c.refs[i].store(refs, Ordering::Relaxed);
+        c.warm[i].store(warm, Ordering::Relaxed);
+        self.len += 1;
+    }
+
+    /// Lock-free reuse mark: count +1, clock ref saturating +1, warm bit
+    /// set. Safe from any snapshot sharing the chunks.
+    fn mark(&self, i: usize) {
+        let Some((c, k)) = self.cell(i) else { return };
+        c.counts[k].fetch_add(1, Ordering::Relaxed);
+        let _ = c.refs[k].fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |r| if r >= 3 { None } else { Some(r + 1) },
+        );
+        c.warm[k].store(1, Ordering::Relaxed);
+    }
+
+    /// Clock ref of an entry (eviction scan).
+    fn refs_of(&self, i: usize) -> u8 {
+        self.cell(i).map_or(0, |(c, k)| c.refs[k].load(Ordering::Relaxed))
+    }
+
+    /// Decay an entry's clock ref by one (eviction scan), saturating at 0.
+    fn decay(&self, i: usize) {
+        if let Some((c, k)) = self.cell(i) {
+            let _ = c.refs[k].fetch_update(
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+                |r| if r == 0 { None } else { Some(r - 1) },
+            );
+        }
+    }
+
+    fn count_of(&self, i: usize) -> u32 {
+        self.cell(i)
+            .map_or(0, |(c, k)| c.counts[k].load(Ordering::Relaxed))
+    }
+
+    fn warm_of(&self, i: usize) -> u8 {
+        self.cell(i).map_or(0, |(c, k)| c.warm[k].load(Ordering::Relaxed))
+    }
+
+    fn set_warm(&self, i: usize, v: u8) {
+        if let Some((c, k)) = self.cell(i) {
+            c.warm[k].store(v, Ordering::Relaxed);
+        }
+    }
+
+    fn set_restored(&self, i: usize, count: u32, refs: u8) {
+        if let Some((c, k)) = self.cell(i) {
+            c.counts[k].store(count, Ordering::Relaxed);
+            c.refs[k].store(refs.min(3), Ordering::Relaxed);
+        }
+    }
 }
 
 /// Don't bother compacting tombstones below this id-space size — small
@@ -67,11 +176,11 @@ const COMPACT_MIN_IDS: usize = 64;
 pub struct LayerDb {
     arena: ApmArena,
     index: Hnsw,
-    /// Shared across copy-on-write snapshots of this layer (the reuse
-    /// signal is a heuristic that should keep accumulating while frozen
-    /// snapshots serve reads); replaced wholesale by `compact`, which
-    /// renumbers ids.
-    reuse: Arc<Mutex<ReuseTrack>>,
+    /// Chunk-shared across copy-on-write snapshots of this layer (the
+    /// reuse signal is a heuristic that should keep accumulating while
+    /// frozen snapshots serve reads); replaced wholesale by `compact`,
+    /// which renumbers ids. Pure atomics: `mark_reused` takes no lock.
+    reuse: ReuseTrack,
     /// Eviction clock position (an id in `[0, arena.next_id())`).
     hand: usize,
 }
@@ -83,21 +192,21 @@ impl LayerDb {
             arena: ApmArena::new(cfg.apm_elems(seq_len))
                 .expect("arena creation"),
             index: Hnsw::new(cfg.embed_dim, params),
-            reuse: Arc::new(Mutex::new(ReuseTrack::default())),
+            reuse: ReuseTrack::default(),
             hand: 0,
         }
     }
 
     /// Copy-on-write snapshot for the seqlock tier: the index and the
     /// arena's id tables are duplicated (so the copy can mutate freely),
-    /// the arena's payload store and the reuse track are shared — reuse
-    /// marked by readers of a frozen snapshot keeps feeding the live
-    /// eviction clock.
+    /// the arena's payload store and the reuse-track chunks are shared —
+    /// reuse marked by readers of a frozen snapshot keeps feeding the
+    /// live eviction clock.
     pub(crate) fn cow_clone(&self) -> LayerDb {
         LayerDb {
             arena: self.arena.cow_clone(),
             index: self.index.clone(),
-            reuse: Arc::clone(&self.reuse),
+            reuse: self.reuse.clone(),
             hand: self.hand,
         }
     }
@@ -135,10 +244,8 @@ impl LayerDb {
         let id = self.arena.push(apm)?;
         let iid = self.index.add(feature);
         debug_assert_eq!(iid, id.0, "arena and index ids must stay aligned");
-        let mut track = self.reuse.lock().unwrap();
-        track.counts.push(0);
-        track.refs.push(0);
-        track.warm.push(1); // fresh entries survive their first snapshot
+        // Fresh entries survive their first snapshot (warm = 1).
+        self.reuse.push(0, 0, 1);
         Ok(id)
     }
 
@@ -147,9 +254,7 @@ impl LayerDb {
     pub fn insert_restored(&mut self, feature: &[f32], apm: &[f32],
                            count: u32, refs: u8) -> Result<ApmId> {
         let id = self.insert(feature, apm)?;
-        let mut track = self.reuse.lock().unwrap();
-        track.counts[id.0 as usize] = count;
-        track.refs[id.0 as usize] = refs.min(3);
+        self.reuse.set_restored(id.0 as usize, count, refs);
         Ok(id)
     }
 
@@ -203,25 +308,24 @@ impl LayerDb {
         arena.set_defer_free(self.arena.defer_free());
         let mut index = Hnsw::new(self.index.dim(), *self.index.params());
         let mut track = ReuseTrack::default();
-        {
-            let old = self.reuse.lock().unwrap();
-            for &id in &ids {
-                let nid = arena.push(self.arena.get(id)?)?;
-                let iid = index.add(self.index.vector(id.0));
-                debug_assert_eq!(iid, nid.0, "compaction id alignment");
-                let i = id.0 as usize;
-                track.counts.push(old.counts.get(i).copied().unwrap_or(0));
-                track.refs.push(old.refs.get(i).copied().unwrap_or(0));
-                track.warm.push(old.warm.get(i).copied().unwrap_or(1));
-            }
+        for &id in &ids {
+            let nid = arena.push(self.arena.get(id)?)?;
+            let iid = index.add(self.index.vector(id.0));
+            debug_assert_eq!(iid, nid.0, "compaction id alignment");
+            let i = id.0 as usize;
+            track.push(
+                self.reuse.count_of(i),
+                self.reuse.refs_of(i),
+                self.reuse.warm_of(i),
+            );
         }
         self.arena = arena;
         self.index = index;
-        // A fresh track (fresh Arc): readers of pre-compaction snapshots
-        // keep marking reuse on *their* (correctly sized) track; those
-        // marks are lost to the rebuilt clock, which is fine for a
-        // heuristic — corruption from renumbered ids is not.
-        self.reuse = Arc::new(Mutex::new(track));
+        // A fresh track (fresh chunks): readers of pre-compaction
+        // snapshots keep marking reuse on *their* (correctly sized)
+        // chunks; those marks are lost to the rebuilt clock, which is
+        // fine for a heuristic — corruption from renumbered ids is not.
+        self.reuse = track;
         self.hand = 0;
         Ok(())
     }
@@ -244,26 +348,23 @@ impl LayerDb {
             return None;
         }
         let mut victim: Option<ApmId> = None;
-        {
-            let mut track = self.reuse.lock().unwrap();
-            let mut first_live: Option<u32> = None;
-            for step in 0..2 * span {
-                let id = ((self.hand + step) % span) as u32;
-                if !self.arena.is_live(ApmId(id)) {
-                    continue;
-                }
-                if first_live.is_none() {
-                    first_live = Some(id);
-                }
-                if track.refs[id as usize] == 0 {
-                    victim = Some(ApmId(id));
-                    break;
-                }
-                track.refs[id as usize] -= 1;
+        let mut first_live: Option<u32> = None;
+        for step in 0..2 * span {
+            let id = ((self.hand + step) % span) as u32;
+            if !self.arena.is_live(ApmId(id)) {
+                continue;
             }
-            if victim.is_none() {
-                victim = first_live.map(ApmId);
+            if first_live.is_none() {
+                first_live = Some(id);
             }
+            if self.reuse.refs_of(id as usize) == 0 {
+                victim = Some(ApmId(id));
+                break;
+            }
+            self.reuse.decay(id as usize);
+        }
+        if victim.is_none() {
+            victim = first_live.map(ApmId);
         }
         let v = victim?;
         self.hand = (v.0 as usize + 1) % span;
@@ -283,19 +384,12 @@ impl LayerDb {
         })
     }
 
-    /// Record that an entry was used for memoization.
+    /// Record that an entry was used for memoization. Lock-free (chunked
+    /// atomics): hit-path callers — including readers of frozen snapshots
+    /// — touch no mutex; the mark lands on the chunk shared with the live
+    /// lineage, feeding its eviction clock.
     pub fn mark_reused(&self, id: ApmId) {
-        let mut track = self.reuse.lock().unwrap();
-        let i = id.0 as usize;
-        if let Some(c) = track.counts.get_mut(i) {
-            *c += 1;
-        }
-        if let Some(r) = track.refs.get_mut(i) {
-            *r = (*r + 1).min(3);
-        }
-        if let Some(w) = track.warm.get_mut(i) {
-            *w = 1;
-        }
+        self.reuse.mark(id.0 as usize);
     }
 
     /// The layer's APM payload arena.
@@ -319,14 +413,18 @@ impl LayerDb {
     }
 
     /// Per-id reuse counts (Fig. 11); evicted ids keep their final count.
+    /// Snapshot of the shared atomic counters (`Relaxed` loads — a mark
+    /// racing the read may or may not be included, which is fine for a
+    /// heuristic that persistence treats as advisory).
     pub fn reuse_counts(&self) -> Vec<u32> {
-        self.reuse.lock().unwrap().counts.clone()
+        (0..self.reuse.len).map(|i| self.reuse.count_of(i)).collect()
     }
 
     /// Per-id clock reference bits (persistence carries these over so a
-    /// reloaded snapshot keeps its eviction ordering).
+    /// reloaded snapshot keeps its eviction ordering). Atomic snapshot
+    /// like [`LayerDb::reuse_counts`].
     pub fn reuse_refs(&self) -> Vec<u8> {
-        self.reuse.lock().unwrap().refs.clone()
+        (0..self.reuse.len).map(|i| self.reuse.refs_of(i)).collect()
     }
 
     /// Per-id "admitted or reused since the last warm snapshot" bits —
@@ -334,14 +432,16 @@ impl LayerDb {
     /// bit is 0 (idle since the previous snapshot) instead of persisting
     /// them.
     pub fn warm_bits(&self) -> Vec<u8> {
-        self.reuse.lock().unwrap().warm.clone()
+        (0..self.reuse.len).map(|i| self.reuse.warm_of(i)).collect()
     }
 
     /// Start a new snapshot epoch: clear every since-last-snapshot bit.
     /// Takes `&self` so it runs against a published snapshot like
-    /// `mark_reused` (the track is shared across snapshot copies).
+    /// `mark_reused` (the track chunks are shared across snapshot copies).
     pub fn clear_warm_bits(&self) {
-        self.reuse.lock().unwrap().warm.fill(0);
+        for i in 0..self.reuse.len {
+            self.reuse.set_warm(i, 0);
+        }
     }
 
     /// Clear the since-last-snapshot bits of exactly `ids` — the entries
@@ -351,10 +451,9 @@ impl LayerDb {
     /// keeps its bit and survives into the *next* snapshot — preserving
     /// the one-snapshot grace period.
     pub fn clear_warm_bits_for(&self, ids: &[ApmId]) {
-        let mut track = self.reuse.lock().unwrap();
         for id in ids {
-            if let Some(w) = track.warm.get_mut(id.0 as usize) {
-                *w = 0;
+            if (id.0 as usize) < self.reuse.len {
+                self.reuse.set_warm(id.0 as usize, 0);
             }
         }
     }

@@ -340,6 +340,10 @@ fn write_warm(tier: &MemoTier, threshold: f32, path: &Path) -> Result<u64> {
                     warm.get(id.0 as usize).copied().unwrap_or(1) != 0
                 })
                 .collect();
+            // Snapshots of the lock-free reuse track (chunked atomics,
+            // `Relaxed`): a reuse marked concurrently with these reads
+            // may or may not be counted — the serialized counters are
+            // advisory eviction/ordering hints, not an exact ledger.
             let counts = layer.reuse_counts();
             let refs = layer.reuse_refs();
             w_u64(&mut w, ids.len() as u64)?;

@@ -21,23 +21,48 @@
 //!   index only — payload bytes are shared), mutate the private copy with
 //!   the exact same `LayerDb` logic as before, and publish it with a
 //!   `seq` bump around the swap.
-//! * **Epoch-based slot reclaim**: an eviction retires its arena page
-//!   slot to a *pending* list instead of reusing it. Superseded snapshots
-//!   go onto a per-shard retire list together with the slots their
-//!   replacement freed; a slot recycles only once every snapshot that
-//!   could still reference it has quiesced (its `Arc` count drained — and
-//!   retirement order is respected, so a slot outlives *every* older
-//!   reader). No reader can ever observe freed bytes being overwritten.
-//! * **Optimistic reads with retry**: readers still validate payload
-//!   fetches against the arena's generation/slot-epoch stamps
-//!   (`ApmArena::get_checked`). Within one snapshot a torn read is
-//!   impossible by construction; if a stamp nevertheless fails to
-//!   validate, the reader consults the shard's sequence counter — changed
-//!   means "retry against the fresh snapshot", unchanged means the entry
-//!   is genuinely gone.
+//! * **Dedup prepass / publish-skip**: before paying the copy-on-write
+//!   clone, `admit_batch` probes the *published* snapshot; when every row
+//!   of the batch dedups against stored entries (the steady-state case
+//!   once a workload's clusters are warm), the batch is served by reuse
+//!   marks alone — no clone, no publish, no retiree churn. The skip path
+//!   still refreshes the shard's stat gauges, so `STATS` stays live under
+//!   pure-dedup traffic.
+//! * **Epoch-based slot reclaim, bounded**: an eviction retires its arena
+//!   page slot to a *pending* list instead of reusing it. Superseded
+//!   snapshots go onto a per-shard retire list together with the slots
+//!   their replacement freed; a slot recycles only once every snapshot
+//!   that could still reference it has quiesced (its `Arc` count drained
+//!   — and retirement order is respected, so a slot outlives *every*
+//!   older reader). A stalled reader can therefore delay reclamation but
+//!   not unboundedly: past [`MemoTier::retire_cap`] generations the
+//!   oldest retirees are *force-reclaimed* (a high-water counter warns
+//!   first), and correctness falls back to epoch-stamp validation — the
+//!   arena bumps a slot's shared tenancy epoch before its next tenant's
+//!   bytes land, so the stalled reader's stamps stop validating and its
+//!   fetches turn into clean misses, never foreign bytes.
+//! * **Optimistic reads with retry**: readers validate payload fetches
+//!   against the arena's generation/tenancy-epoch stamps
+//!   (`ApmArena::get_checked`) and *revalidate after copying*
+//!   (`ApmArena::recheck`), the seqlock read discipline that makes the
+//!   forced-reclaim fallback safe. Within one snapshot a torn read only
+//!   happens when a forced reclaim raced the copy; on a stamp failure the
+//!   reader consults the shard's sequence counter — changed means "retry
+//!   against the fresh snapshot", unchanged means the entry is genuinely
+//!   gone.
 //! * **Lock-free stats**: `layer_len`/`total_entries`/`resident_bytes`
-//!   read per-shard atomics refreshed at publish time instead of walking
-//!   every shard's lock.
+//!   read per-shard atomics refreshed at publish (and publish-skip) time
+//!   instead of walking every shard's lock.
+//!
+//! Since PR 6 a steady-state hit acquires **no mutex or rwlock
+//! anywhere**: the reuse track is chunked atomics (`attdb.rs`), so a held
+//! [`ShardReader`]'s search + epoch-checked copy + reuse mark touch locks
+//! zero times, and the snapshot `Arc` itself is served from a
+//! **thread-local cache** validated against the shard's sequence counter
+//! — only the first read after a publish refreshes it under the pointer-
+//! swap read lock. With the dedup prepass suppressing steady-state
+//! publishes, the sequence counter goes quiet and the whole hit path is
+//! snapshot-Arc load + atomics, end to end.
 //!
 //! Warm state survives restarts through `memo::persist::{save_warm,
 //! load_warm}` (see `docs/PERSISTENCE.md`); a snapshot save quiesces the
@@ -82,6 +107,17 @@ struct Shard {
     /// Resident arena bytes of the published snapshot (lock-free stats).
     resident: AtomicUsize,
 }
+
+/// Retire-list depth at which the tier starts counting (and once warns)
+/// that a stalled reader is delaying snapshot reclamation.
+const RETIRE_HIGH_WATER: usize = 8;
+
+/// Hard bound on retired-but-unreclaimed snapshot generations per shard.
+/// Publishing past this force-reclaims the oldest retirees even if a
+/// reader still pins them — safe because the arena's shared tenancy
+/// epochs invalidate that reader's stamps the moment a recycled slot is
+/// claimed by a new tenant (see `ApmArena::recheck`).
+const RETIRE_CAP: usize = 16;
 
 /// Writer-side state: superseded snapshots awaiting reader quiescence.
 #[derive(Default)]
@@ -149,6 +185,14 @@ impl ShardReader {
         match self.db.arena().get_checked(hit.id, hit.epoch) {
             Ok(apm) => {
                 dst.copy_from_slice(apm);
+                // Post-copy revalidation (seqlock read discipline): a
+                // forced slot reclaim on the writer side (retire-cap
+                // overflow) can overwrite the slot while the copy runs;
+                // the tenancy-epoch recheck turns that into a clean torn
+                // read instead of serving the next tenant's bytes.
+                if !self.db.arena().recheck(hit.id, hit.epoch) {
+                    return ReadAttempt::Torn;
+                }
                 self.db.mark_reused(hit.id);
                 ReadAttempt::Hit(hit)
             }
@@ -173,8 +217,16 @@ impl ShardReader {
                 if buf.is_empty() {
                     buf.resize(rows * self.apm_elems, 0.0);
                 }
-                buf[row * self.apm_elems..(row + 1) * self.apm_elems]
-                    .copy_from_slice(apm);
+                let dst = &mut buf
+                    [row * self.apm_elems..(row + 1) * self.apm_elems];
+                dst.copy_from_slice(apm);
+                // Post-copy revalidation — see [`ShardReader::fetch`]. A
+                // torn row is re-zeroed so a miss verdict never leaves
+                // another tenant's bytes behind in the batch buffer.
+                if !self.db.arena().recheck(hit.id, hit.epoch) {
+                    dst.fill(0.0);
+                    return ReadAttempt::Torn;
+                }
                 self.db.mark_reused(hit.id);
                 ReadAttempt::Hit(hit)
             }
@@ -183,8 +235,11 @@ impl ShardReader {
     }
 
     /// Atomic lookup + payload fetch against this snapshot (the per-row
-    /// form of [`MemoTier::lookup_fetch`]). A torn read cannot happen
-    /// within one snapshot; it is mapped to a miss defensively.
+    /// form of [`MemoTier::lookup_fetch`]). A torn read surfaces as a
+    /// miss: it means this snapshot outlived the retire cap and the
+    /// entry's slot was forcibly recycled under it — retrying against
+    /// the same frozen snapshot could never succeed, so the caller
+    /// should take a fresh reader if it wants the entry back.
     pub fn lookup_fetch(&self, feature: &[f32], ef: usize,
                         min_similarity: f32,
                         dst: &mut [f32]) -> Option<Lookup> {
@@ -242,13 +297,49 @@ pub struct MemoTier {
     capacity: usize,
     policy: AdmissionPolicy,
     dedup: bool,
+    /// Probe the published snapshot before cloning it, skipping the
+    /// publish entirely for all-dedup batches (`MemoConfig::dedup_prepass`).
+    prepass: bool,
     seq_len: usize,
     apm_elems: usize,
     embed_dim: usize,
     admissions: AtomicU64,
     evictions: AtomicU64,
     deduped: AtomicU64,
+    /// Batches that swapped in a new snapshot.
+    publishes: AtomicU64,
+    /// Batches served entirely by the dedup prepass (no clone, no swap).
+    publish_skips: AtomicU64,
+    /// Publishes that found a retire list at/above the high-water mark.
+    retire_high_water: AtomicU64,
+    /// Retired generations force-reclaimed past the cap.
+    forced_reclaims: AtomicU64,
+    /// Process-unique id keying the thread-local snapshot cache — two
+    /// tiers must never share a cache entry even if one is dropped and
+    /// the other happens to be allocated at the same address.
+    tier_id: u64,
 }
+
+/// Source of [`MemoTier::tier_id`] values.
+static NEXT_TIER_ID: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// Per-thread snapshot cache: `(tier_id, layer) → (publish seq, Arc)`.
+    /// A hit whose stored sequence still matches the shard's live counter
+    /// serves the snapshot with no lock at all; a mismatch (a publish
+    /// happened) falls back to the pointer-swap read lock once and
+    /// re-caches. Entries pin their snapshot's `Arc` from this thread —
+    /// which is exactly the "stalled reader" shape the retire cap bounds,
+    /// so an idle thread can delay reclamation but never unboundedly.
+    static SNAP_CACHE: std::cell::RefCell<
+        std::collections::HashMap<(u64, usize), (u64, Arc<LayerDb>)>,
+    > = std::cell::RefCell::new(std::collections::HashMap::new());
+}
+
+/// Cap on per-thread cached snapshots; past it the cache is dropped
+/// wholesale (a rare event — it takes hundreds of live tiers × layers on
+/// one thread) rather than pinning arbitrarily many snapshot `Arc`s.
+const SNAP_CACHE_MAX: usize = 256;
 
 impl MemoTier {
     /// Empty tier with one shard per self-attention layer. Capacity,
@@ -278,12 +369,18 @@ impl MemoTier {
             policy: AdmissionPolicy::new(
                 memo.online_admission, memo.admission_min_attempts),
             dedup: memo.intra_batch_dedup,
+            prepass: memo.intra_batch_dedup && memo.dedup_prepass,
             seq_len,
             apm_elems: cfg.apm_elems(seq_len),
             embed_dim: cfg.embed_dim,
             admissions: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             deduped: AtomicU64::new(0),
+            publishes: AtomicU64::new(0),
+            publish_skips: AtomicU64::new(0),
+            retire_high_water: AtomicU64::new(0),
+            forced_reclaims: AtomicU64::new(0),
+            tier_id: NEXT_TIER_ID.fetch_add(1, Ordering::Relaxed),
         }
     }
 
@@ -367,15 +464,97 @@ impl MemoTier {
         self.deduped.load(Ordering::Relaxed)
     }
 
-    /// A frozen snapshot of one layer shard. The only shared-state touch
-    /// is an `Arc` clone under the publish cell's read lock (nanoseconds;
-    /// the write side holds it only for a pointer swap) — batch callers
-    /// take one reader per layer and run every row against it lock-free.
+    /// Batches that swapped in a new snapshot (admissions, evictions,
+    /// restores — everything but the publish-skip fast path).
+    pub fn publishes(&self) -> u64 {
+        self.publishes.load(Ordering::Relaxed)
+    }
+
+    /// Admission batches whose rows all dedup'd against the published
+    /// snapshot, skipping the copy-on-write clone and publish entirely
+    /// (the cheap-write fast path; see [`MemoTier::admit_batch`]).
+    pub fn publish_skips(&self) -> u64 {
+        self.publish_skips.load(Ordering::Relaxed)
+    }
+
+    /// Publishes that found a shard's retire list at or above the
+    /// high-water mark — a stalled reader is delaying snapshot
+    /// reclamation (the tier warns once when this first trips).
+    pub fn retire_high_water(&self) -> u64 {
+        self.retire_high_water.load(Ordering::Relaxed)
+    }
+
+    /// Retired snapshot generations force-reclaimed past
+    /// [`MemoTier::retire_cap`] (their slots recycled under a potentially
+    /// live reader; epoch stamps keep that reader correct).
+    pub fn forced_reclaims(&self) -> u64 {
+        self.forced_reclaims.load(Ordering::Relaxed)
+    }
+
+    /// Retired-but-unreclaimed snapshot generations of one layer shard
+    /// (diagnostics/tests; takes the shard's writer mutex briefly).
+    pub fn retired_generations(&self, layer: usize) -> usize {
+        self.shards[layer].writer.lock().unwrap().retired.len()
+    }
+
+    /// Hard bound on [`MemoTier::retired_generations`]: publishing past
+    /// this force-reclaims the oldest retirees.
+    pub fn retire_cap() -> usize {
+        RETIRE_CAP
+    }
+
+    /// A frozen snapshot of one layer shard. The snapshot `Arc` is served
+    /// from this thread's [`SNAP_CACHE`] when the shard's sequence counter
+    /// proves no publish happened since it was cached — the steady-state
+    /// path, which touches **no mutex or rwlock at all**. Only the first
+    /// read after a publish refreshes the cache under the publish cell's
+    /// pointer-swap read lock (nanoseconds; the write side holds it only
+    /// for the swap itself).
     pub fn reader(&self, layer: usize) -> ShardReader {
         ShardReader {
-            db: self.shards[layer].snap.read().unwrap().clone(),
+            db: self.snapshot(layer),
             apm_elems: self.apm_elems,
         }
+    }
+
+    /// The current published snapshot, via the seq-validated thread-local
+    /// cache (see [`MemoTier::reader`]).
+    fn snapshot(&self, layer: usize) -> Arc<LayerDb> {
+        let shard = &self.shards[layer];
+        let key = (self.tier_id, layer);
+        // Fast path: the sequence counter is stable (even) and matches
+        // the cached entry — the cached Arc *is* the published snapshot.
+        // (`Acquire` pairs with the publisher's post-swap `Release` bump,
+        // so everything the snapshot points at is visible.)
+        let seq = shard.seq.load(Ordering::Acquire);
+        if seq & 1 == 0 {
+            let cached = SNAP_CACHE.with(|c| {
+                c.borrow().get(&key).and_then(|(s, db)| {
+                    (*s == seq).then(|| db.clone())
+                })
+            });
+            if let Some(db) = cached {
+                return db;
+            }
+        }
+        // Slow path (first read, or a publish since): take the pointer-
+        // swap read lock, then re-validate the sequence. Cache only when
+        // no publish raced the clone — a racing publish would otherwise
+        // pair the *new* sequence with the *old* snapshot and pin this
+        // thread on stale data until the next publish.
+        let pre = shard.seq.load(Ordering::Acquire);
+        let db = shard.snap.read().unwrap().clone();
+        let post = shard.seq.load(Ordering::Acquire);
+        if pre == post && post & 1 == 0 {
+            SNAP_CACHE.with(|c| {
+                let mut c = c.borrow_mut();
+                if c.len() >= SNAP_CACHE_MAX {
+                    c.clear();
+                }
+                c.insert(key, (post, db.clone()));
+            });
+        }
+        db
     }
 
     /// Nearest stored entry for a query, resolved against the snapshot
@@ -486,6 +665,20 @@ impl MemoTier {
                 db.release_free_slots(slots);
             }
         }
+        // Reclaim bound: one stalled reader must not pin slots without
+        // limit. Past the generation cap, force-reclaim the oldest
+        // retirees even though a reader may still hold their snapshots —
+        // safe because a recycled slot's next `push` bumps the shared
+        // tenancy epoch *before* overwriting bytes, so the stalled
+        // reader's stamps stop validating (its pre- and post-copy checks
+        // turn the fetch into a clean miss, never foreign bytes).
+        while w.retired.len() >= RETIRE_CAP {
+            let (_snap, store, slots) = w.retired.remove(0);
+            if db.is_on_store(&store) {
+                db.release_free_slots(slots);
+            }
+            self.forced_reclaims.fetch_add(1, Ordering::Relaxed);
+        }
         let shard = &self.shards[layer];
         let freed = db.take_pending_free();
         // The freed slots live on the *publishing* copy's store: an
@@ -505,6 +698,57 @@ impl MemoTier {
         };
         shard.seq.fetch_add(1, Ordering::Release); // even: stable
         w.retired.push((old, freed_store, freed));
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+        if w.retired.len() >= RETIRE_HIGH_WATER
+            && self.retire_high_water.fetch_add(1, Ordering::Relaxed) == 0
+        {
+            log::warn!(
+                "memo tier layer {layer}: retire list at high water \
+                 ({} generations) — a stalled reader is delaying \
+                 snapshot reclamation (forced reclaim past {})",
+                w.retired.len(),
+                RETIRE_CAP
+            );
+        }
+    }
+
+    /// The dedup-prepass fast path of [`MemoTier::admit_batch`]: probe
+    /// every row against the *published* snapshot (the caller holds the
+    /// shard's writer mutex, so the snapshot cannot change underneath).
+    /// `Some(outcome)` iff every row dedups — the rows' surviving twins
+    /// are reuse-marked (lock-free, on the track shared with the live
+    /// lineage), the publish-skip counter bumps, and the stat gauges are
+    /// refreshed so `STATS` stays live under pure-dedup traffic (the
+    /// satellite fix: resident bytes can drift between publishes because
+    /// the arena store is shared across snapshots, e.g. after a failed
+    /// batch grew it). `None` means at least one row needs admission:
+    /// nothing was marked and the caller takes the normal publish path.
+    fn prepass_skip(&self, layer: usize, rows: &[(&[f32], &[f32])],
+                    dedup_threshold: f32,
+                    ef: usize) -> Option<TierAdmitOutcome> {
+        let shard = &self.shards[layer];
+        let snap = shard.snap.read().unwrap().clone();
+        let mut twins = Vec::with_capacity(rows.len());
+        for &(feature, _) in rows {
+            let hit = snap.lookup(feature, ef)?;
+            if hit.similarity < dedup_threshold {
+                return None;
+            }
+            twins.push(hit.id);
+        }
+        for id in twins {
+            snap.mark_reused(id);
+        }
+        shard.len.store(snap.len(), Ordering::Relaxed);
+        shard
+            .resident
+            .store(snap.arena().resident_bytes(), Ordering::Relaxed);
+        self.publish_skips.fetch_add(1, Ordering::Relaxed);
+        Some(TierAdmitOutcome {
+            admitted: 0,
+            evicted: 0,
+            deduped: rows.len() as u64,
+        })
     }
 
     /// Admit one batch of miss-path `(feature, apm)` rows into a layer
@@ -522,10 +766,30 @@ impl MemoTier {
     /// file pages the discarded copy allocated stay orphaned until the
     /// next compaction retires the store — admission errors are
     /// exceptional, so this is bounded in practice).
+    ///
+    /// **Dedup prepass** (`MemoConfig::dedup_prepass`): before paying the
+    /// copy-on-write clone, the batch is probed against the *published*
+    /// snapshot; when every row dedups, the whole batch is served by
+    /// lock-free reuse marks — no clone, no index insert, no publish.
+    /// This is the steady-state shape of warm traffic (affinity routing
+    /// makes batches cluster-homogeneous, so repeats arrive together),
+    /// where the write path previously paid a full table copy just to
+    /// discover there was nothing to write. Mixed batches fall through to
+    /// the unchanged path, whose per-row probes run against the working
+    /// copy (they must: earlier admissions of the same call are dedup
+    /// candidates for later rows).
     pub fn admit_batch(&self, layer: usize, rows: &[(&[f32], &[f32])],
                        dedup_threshold: f32,
                        ef: usize) -> Result<TierAdmitOutcome> {
         let mut w = self.shards[layer].writer.lock().unwrap();
+        if self.prepass && !rows.is_empty() {
+            if let Some(out) =
+                self.prepass_skip(layer, rows, dedup_threshold, ef)
+            {
+                self.deduped.fetch_add(out.deduped, Ordering::Relaxed);
+                return Ok(out);
+            }
+        }
         let mut db = self.begin_write(layer);
         let quota = if self.capacity == 0 {
             rows.len()
@@ -889,6 +1153,124 @@ mod tests {
             vec![(f0.as_slice(), good.as_slice())];
         tier.admit_batch(0, &rows, 2.0, 32).unwrap();
         assert_eq!(tier.layer_len(0), 1);
+    }
+
+    /// Cheap-write fast path: a batch whose rows all dedup against the
+    /// published snapshot must skip the copy-on-write publish entirely —
+    /// and still mark its twins reused on the shared (lock-free) track.
+    #[test]
+    fn all_dedup_batch_skips_publish() {
+        let c = cfg(1);
+        let tier = MemoTier::new(&c, 16, HnswParams::default(),
+                                 &memo(32, true));
+        let mut rng = Pcg32::seeded(61);
+        let elems = c.apm_elems(16);
+        let apm = vec![1.0f32; elems];
+        let feats: Vec<Vec<f32>> =
+            (0..4).map(|_| unit(&mut rng, c.embed_dim)).collect();
+        let rows: Vec<(&[f32], &[f32])> =
+            feats.iter().map(|f| (f.as_slice(), apm.as_slice())).collect();
+
+        // Cold tier: the first batch cannot skip (rows are misses).
+        let out = tier.admit_batch(0, &rows, 0.99, 32).unwrap();
+        assert_eq!(out.admitted, 4);
+        assert_eq!(tier.publishes(), 1);
+        assert_eq!(tier.publish_skips(), 0);
+
+        // Steady state: the identical batch dedups wholesale — no new
+        // publish, every row counted as deduped, reuse marks landed.
+        let out = tier.admit_batch(0, &rows, 0.99, 32).unwrap();
+        assert_eq!(out.admitted, 0);
+        assert_eq!(out.deduped, 4);
+        assert_eq!(tier.publishes(), 1, "all-dedup batch must not publish");
+        assert_eq!(tier.publish_skips(), 1);
+        assert_eq!(tier.deduped(), 4);
+        assert_eq!(tier.layer_len(0), 4);
+        tier.read_layer(0, |layer| {
+            assert_eq!(layer.reuse_counts(), vec![1, 1, 1, 1],
+                       "prepass must mark the surviving twins reused");
+        });
+
+        // A single fresh row forces the whole batch down the publish
+        // path — and nothing was double-marked by the abandoned prepass.
+        let fresh = unit(&mut rng, c.embed_dim);
+        let mut mixed = rows.clone();
+        mixed.push((fresh.as_slice(), apm.as_slice()));
+        let out = tier.admit_batch(0, &mixed, 0.99, 32).unwrap();
+        assert_eq!(out.admitted, 1);
+        assert_eq!(out.deduped, 4);
+        assert_eq!(tier.publishes(), 2, "mixed batch must publish");
+        assert_eq!(tier.publish_skips(), 1);
+        tier.read_layer(0, |layer| {
+            assert_eq!(layer.reuse_counts()[..4], [2, 2, 2, 2],
+                       "per-row dedup marks exactly once per twin");
+        });
+    }
+
+    /// `dedup_prepass: false` forces every batch through the full
+    /// copy-on-write publish path (the A/B baseline), with identical
+    /// dedup outcomes.
+    #[test]
+    fn prepass_disabled_publishes_every_batch() {
+        let c = cfg(1);
+        let mut m = memo(32, true);
+        m.dedup_prepass = false;
+        let tier = MemoTier::new(&c, 16, HnswParams::default(), &m);
+        let mut rng = Pcg32::seeded(67);
+        let elems = c.apm_elems(16);
+        let apm = vec![1.0f32; elems];
+        let feats: Vec<Vec<f32>> =
+            (0..4).map(|_| unit(&mut rng, c.embed_dim)).collect();
+        let rows: Vec<(&[f32], &[f32])> =
+            feats.iter().map(|f| (f.as_slice(), apm.as_slice())).collect();
+        tier.admit_batch(0, &rows, 0.99, 32).unwrap();
+        let out = tier.admit_batch(0, &rows, 0.99, 32).unwrap();
+        assert_eq!(out.deduped, 4, "dedup itself is unaffected");
+        assert_eq!(tier.publishes(), 2);
+        assert_eq!(tier.publish_skips(), 0);
+    }
+
+    /// Reclaim bound: a reader pinning one old snapshot while batches
+    /// churn must not grow the retire list past the cap — the high-water
+    /// counter trips, forced reclaims kick in, and the pinned reader
+    /// keeps resolving its own view (or cleanly missing), never foreign
+    /// bytes (covered in depth by `tests/memo_tier.rs`).
+    #[test]
+    fn retire_list_is_bounded_under_a_stalled_reader() {
+        let c = cfg(1);
+        let tier = MemoTier::new(&c, 16, HnswParams::default(),
+                                 &memo(4, false));
+        let mut rng = Pcg32::seeded(71);
+        let elems = c.apm_elems(16);
+        let apm = vec![0.0f32; elems];
+        let f = unit(&mut rng, c.embed_dim);
+        tier.admit_batch(0, &[(f.as_slice(), apm.as_slice())], 2.0, 32)
+            .unwrap();
+        let stalled = tier.reader(0);
+
+        for _ in 0..4 * MemoTier::retire_cap() {
+            let g = unit(&mut rng, c.embed_dim);
+            tier.admit_batch(0, &[(g.as_slice(), apm.as_slice())], 2.0, 32)
+                .unwrap();
+            assert!(tier.retired_generations(0) <= MemoTier::retire_cap(),
+                    "retire list exceeded the generation cap");
+        }
+        assert!(tier.retire_high_water() > 0,
+                "the high-water warning counter must trip");
+        assert!(tier.forced_reclaims() > 0,
+                "churn past the cap must force-reclaim");
+        assert!(!stalled.is_empty(), "the pinned snapshot view is frozen");
+        drop(stalled);
+
+        // Once the stalled reader departs, later publishes drain the
+        // backlog the normal (quiesced) way.
+        for _ in 0..MemoTier::retire_cap() {
+            let g = unit(&mut rng, c.embed_dim);
+            tier.admit_batch(0, &[(g.as_slice(), apm.as_slice())], 2.0, 32)
+                .unwrap();
+        }
+        assert!(tier.retired_generations(0) <= 1,
+                "backlog must drain after the reader departs");
     }
 
     /// The lock-free stat gauges track publishes.

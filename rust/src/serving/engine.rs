@@ -251,6 +251,7 @@ impl Engine {
         self.metrics.requests += n as u64;
         if let Some(tier) = &self.online {
             self.metrics.online_entries = tier.total_entries() as u64;
+            self.metrics.publish_skips = tier.publish_skips();
         }
         Ok(BatchResult { logits, labels, memo_hits, seconds })
     }

@@ -35,6 +35,12 @@ pub struct EngineMetrics {
     pub queue_depths: Vec<usize>,
     /// Live entries across the online database's layers (occupancy gauge).
     pub online_entries: u64,
+    /// Snapshot publishes the online tier skipped outright because every
+    /// row in an admitted batch deduplicated against the current snapshot
+    /// (the steady-state cheap-write path). Tier-level gauge like
+    /// `online_entries`: every replica reports the same shared tier, so
+    /// aggregation takes the max.
+    pub publish_skips: u64,
     pub request_latency_ms: Summary,
     pub queue_wait_ms: Summary,
     pub batch_size: Summary,
@@ -58,6 +64,7 @@ impl Default for EngineMetrics {
             bucket_resizes: 0,
             queue_depths: Vec::new(),
             online_entries: 0,
+            publish_skips: 0,
             request_latency_ms: Summary::new(),
             queue_wait_ms: Summary::new(),
             batch_size: Summary::new(),
@@ -99,7 +106,7 @@ impl EngineMetrics {
             "requests={} batches={} rejected={} rps={:.1} \
              lat(ms) p50={:.1} p99={:.1} mean_batch={:.1} compute_ms p50={:.1} \
              online(admit={} evict={} dedup={} offered={} yield={:.3} \
-             entries={})",
+             entries={} pskip={})",
             self.requests,
             self.batches,
             self.rejected,
@@ -114,6 +121,7 @@ impl EngineMetrics {
             self.admit_offered,
             self.dedup_yield(),
             self.online_entries,
+            self.publish_skips,
         );
         if !self.queue_depths.is_empty() {
             let depths: Vec<String> =
@@ -153,6 +161,7 @@ impl EngineMetrics {
             self.queue_depths.clone_from(&other.queue_depths);
         }
         self.online_entries = self.online_entries.max(other.online_entries);
+        self.publish_skips = self.publish_skips.max(other.publish_skips);
         self.request_latency_ms.merge(&other.request_latency_ms);
         self.queue_wait_ms.merge(&other.queue_wait_ms);
         self.batch_size.merge(&other.batch_size);
@@ -204,11 +213,13 @@ mod tests {
         a.dedup_skips = 1;
         a.admit_offered = 2;
         a.online_entries = 10;
+        a.publish_skips = 5;
         a.request_latency_ms.record(1.0);
         let mut b = EngineMetrics::new();
         b.requests = 4;
         b.admit_offered = 3;
         b.online_entries = 10;
+        b.publish_skips = 5;
         b.queue_depths = vec![1, 2];
         b.request_latency_ms.record(3.0);
         a.absorb(&b);
@@ -218,6 +229,7 @@ mod tests {
         assert_eq!(a.queue_depths, vec![1, 2],
                    "router gauge carries over, not summed");
         assert_eq!(a.online_entries, 10, "shared gauge must not double");
+        assert_eq!(a.publish_skips, 5, "tier gauge must not double");
         assert_eq!(a.request_latency_ms.count(), 2);
     }
 }

@@ -320,6 +320,135 @@ fn seqlock_readers_race_admit_evict_compact() {
     }
 }
 
+/// Retire-list bounding (satellite): a stalled reader pinning one old
+/// snapshot while an admitter churns single-row batches must (a) trip
+/// the high-water warning counter, (b) keep the retire list within the
+/// generation cap via forced epoch-stamp reclaim, and (c) never observe
+/// foreign bytes through its pinned view — a probe against the stalled
+/// snapshot either re-validates (payload tag intact) or fails cleanly
+/// as a miss once its slot has been recycled under it.
+#[test]
+fn stalled_reader_never_pins_unbounded_generations() {
+    const CLUSTERS: usize = 8;
+    const CAPACITY: usize = 32;
+    const ROUNDS: usize = 64; // single-row churn batches
+    const THRESHOLD: f32 = 0.9;
+
+    let c = cfg();
+    let elems = c.apm_elems(SEQ);
+    let dim = c.embed_dim;
+    let tier = MemoTier::new(&c, SEQ, HnswParams::default(),
+                             &memo(CAPACITY));
+    let cents = centres(91, CLUSTERS, dim);
+
+    // Warm layer 0 with tagged cluster payloads (payload = cluster id).
+    let mut rng = Pcg32::seeded(53);
+    let feats: Vec<Vec<f32>> = (0..CLUSTERS)
+        .map(|k| near(&mut rng, &cents[k], 0.01))
+        .collect();
+    let apms: Vec<Vec<f32>> =
+        (0..CLUSTERS).map(|k| vec![k as f32; elems]).collect();
+    let rows: Vec<(&[f32], &[f32])> = feats
+        .iter()
+        .zip(&apms)
+        .map(|(f, a)| (f.as_slice(), a.as_slice()))
+        .collect();
+    tier.admit_batch(0, &rows, THRESHOLD, 48).unwrap();
+
+    // Pin the warm snapshot: this reader never advances past it.
+    let stalled = tier.reader(0);
+    assert_eq!(stalled.len(), CLUSTERS, "pinned view missed the warm-up");
+    let mut dst = vec![0.0f32; elems];
+    let q0 = near(&mut rng, &cents[0], 0.01);
+    assert!(stalled.lookup_fetch(&q0, 48, THRESHOLD, &mut dst).is_some());
+    assert_eq!(dst[0], 0.0, "pinned view served the wrong payload");
+
+    // Churn: one junk row per batch, each far from every cluster, so
+    // every batch misses the dedup prepass, publishes a fresh snapshot
+    // and (once full) evicts. The pinned generation blocks in-order
+    // reclamation, so the retire list must climb to the cap and then be
+    // force-reclaimed — recycling slots the stalled reader still cites.
+    let mut stalled_hits = 0usize;
+    let mut stalled_misses = 0usize;
+    for round in 0..ROUNDS {
+        let mut junk: Vec<f32> =
+            (0..dim).map(|_| rng.next_gaussian()).collect();
+        normalize(&mut junk);
+        let japm = vec![1000.0 + round as f32; elems];
+        tier.admit_batch(0, &[(junk.as_slice(), japm.as_slice())],
+                         THRESHOLD, 48)
+            .unwrap();
+        assert!(tier.layer_len(0) <= CAPACITY, "budget broken mid-churn");
+        assert!(
+            tier.retired_generations(0) <= MemoTier::retire_cap(),
+            "round {round}: retire list exceeded the generation cap"
+        );
+
+        // Probe the pinned view every round: a hit must carry the
+        // original cluster tag end to end; a recycled slot must surface
+        // as a clean miss (torn read), never as junk payload bytes.
+        let k = round % CLUSTERS;
+        let q = near(&mut rng, &cents[k], 0.01);
+        match stalled.lookup_fetch(&q, 48, THRESHOLD, &mut dst) {
+            Some(_) => {
+                stalled_hits += 1;
+                let want = k as f32;
+                assert!(
+                    dst[0] == want
+                        && dst[elems / 2] == want
+                        && dst[elems - 1] == want,
+                    "round {round}: pinned view served payload tagged {} \
+                     for cluster {k} — foreign bytes leaked through a \
+                     forced reclaim",
+                    dst[0]
+                );
+            }
+            None => stalled_misses += 1,
+        }
+    }
+    assert_eq!(stalled_hits + stalled_misses, ROUNDS);
+
+    // The stall must have tripped the high-water warning and forced
+    // epoch-stamp reclaims past the cap — one slow reader cannot pin an
+    // unbounded number of displaced generations.
+    assert!(tier.retire_high_water() > 0,
+            "retire list never reached high water despite the stall");
+    assert!(tier.forced_reclaims() > 0,
+            "cap overflow never forced a reclaim");
+    assert!(tier.retired_generations(0) <= MemoTier::retire_cap());
+    assert!(tier.evictions() > 0, "junk churn never evicted");
+
+    // The pinned view is frozen regardless of everything above.
+    assert_eq!(stalled.len(), CLUSTERS);
+
+    // Dropping the stalled reader unblocks in-order reclamation: after a
+    // few more publishes the backlog drains to O(1) generations.
+    drop(stalled);
+    for round in 0..MemoTier::retire_cap() {
+        let mut junk: Vec<f32> =
+            (0..dim).map(|_| rng.next_gaussian()).collect();
+        normalize(&mut junk);
+        let japm = vec![5000.0 + round as f32; elems];
+        tier.admit_batch(0, &[(junk.as_slice(), japm.as_slice())],
+                         THRESHOLD, 48)
+            .unwrap();
+    }
+    assert!(
+        tier.retired_generations(0) <= 1,
+        "backlog failed to drain after the stalled reader released"
+    );
+
+    // The live tier stayed self-consistent through the forced reclaims.
+    tier.read_layer(0, |layer| {
+        for id in layer.live_ids() {
+            layer.arena().get(id).unwrap();
+            let v = layer.index_vector(id).to_vec();
+            let hit = layer.lookup(&v, 64).unwrap();
+            assert_eq!(hit.id, id, "index/arena misaligned after churn");
+        }
+    });
+}
+
 /// Seqlock + persistence (satellite): `save_warm` runs while readers
 /// hammer the same shards and an admitter keeps churning — the save
 /// quiesces *writers only*, so readers observe no interruption (their
