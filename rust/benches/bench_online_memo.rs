@@ -759,7 +759,9 @@ fn main() {
     summary.push("steady_hit_rate_semantic", sem.steady_hit_rate);
     summary.push("steady_hit_rate_prefix", pre.steady_hit_rate);
 
-    summary.emit(std::path::Path::new("BENCH_smoke.json"));
+    // Merged, not overwritten: bench_db_scaling's cold-tier arm records
+    // its own keys into the same file.
+    summary.emit_merged(std::path::Path::new("BENCH_smoke.json"));
     // CI trend (BENCH_HISTORY=1): gate the warm hit rate against the last
     // committed history entry, then append this run's summary as a new
     // JSON line — the cross-PR perf trajectory the artifacts alone never

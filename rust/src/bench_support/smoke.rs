@@ -69,6 +69,38 @@ impl SmokeSummary {
         }
     }
 
+    /// [`SmokeSummary::emit`], preserving keys already present in the
+    /// file that this summary does not set. Several bench binaries share
+    /// one `BENCH_smoke.json`; each must merge, not overwrite, or
+    /// whichever runs last erases the others' headline numbers. Keys
+    /// this summary *does* set always take the fresh value. An existing
+    /// file that fails to parse is warned about and replaced outright.
+    pub fn emit_merged(&self, path: &Path) {
+        let mut merged = SmokeSummary::new();
+        merged.entries.clone_from(&self.entries);
+        if let Ok(text) = std::fs::read_to_string(path) {
+            match crate::config::json::Json::parse(&text) {
+                Ok(prev) => {
+                    for (k, v) in prev.as_obj().into_iter().flatten() {
+                        if k.as_str() == "smoke"
+                            || self.entries.iter().any(|(sk, _)| sk == k)
+                        {
+                            continue;
+                        }
+                        if let Some(x) = v.as_f64() {
+                            merged.push(k, x);
+                        }
+                    }
+                }
+                Err(e) => eprintln!(
+                    "warn: replacing unparseable {}: {e}",
+                    path.display()
+                ),
+            }
+        }
+        merged.emit(path);
+    }
+
     /// Render the summary as one compact JSON line (the
     /// `BENCH_history.jsonl` format: one entry per recorded run).
     pub fn history_line(&self) -> String {
@@ -85,16 +117,17 @@ impl SmokeSummary {
         out
     }
 
-    /// The cross-PR regression gate + trend append: read the last entry
-    /// of the committed history file at `path`, fail when this run's
-    /// `key` dropped more than `margin` below it, then append the current
-    /// summary as a new JSON line. A missing file or a last entry without
-    /// `key` passes the gate (the first entry seeds the trajectory) — but
-    /// a last line that exists and fails to parse is a hard error, not a
-    /// silent pass: a truncated or hand-mangled history must never turn
-    /// the gate off and then ratchet it down to a regressed value. A
-    /// failed gate appends nothing, so the history only ever records runs
-    /// that passed.
+    /// The cross-PR regression gate + trend append: find the most recent
+    /// history entry at `path` carrying `key` (several bench binaries
+    /// append to one history file, so the literal last line may belong to
+    /// a different bench), fail when this run's `key` dropped more than
+    /// `margin` below it, then append the current summary as a new JSON
+    /// line. A missing file or a history without `key` passes the gate
+    /// (the first entry seeds the trajectory) — but any line that exists
+    /// and fails to parse is a hard error, not a silent pass: a truncated
+    /// or hand-mangled history must never turn the gate off and then
+    /// ratchet it down to a regressed value. A failed gate appends
+    /// nothing, so the history only ever records runs that passed.
     pub fn check_and_append_history(
         &self, path: &Path, key: &str, margin: f64,
     ) -> std::result::Result<(), String> {
@@ -104,20 +137,25 @@ impl SmokeSummary {
             .find(|(k, _)| k.as_str() == key)
             .map(|(_, v)| *v);
         let mut text = std::fs::read_to_string(path).unwrap_or_default();
-        let previous = match text.lines().rev().find(|l| !l.trim().is_empty())
-        {
-            Some(line) => match crate::config::json::Json::parse(line) {
-                Ok(entry) => entry.get(key).and_then(|v| v.as_f64()),
+        let mut previous = None;
+        for line in text.lines().rev().filter(|l| !l.trim().is_empty()) {
+            match crate::config::json::Json::parse(line) {
+                Ok(entry) => {
+                    if let Some(v) = entry.get(key).and_then(|v| v.as_f64())
+                    {
+                        previous = Some(v);
+                        break;
+                    }
+                }
                 Err(e) => {
                     return Err(format!(
-                        "unparseable last entry in {} ({e}); fix or remove \
+                        "unparseable entry in {} ({e}); fix or remove \
                          the line before the gate can run",
                         path.display()
                     ))
                 }
-            },
-            None => None,
-        };
+            }
+        }
         if let (Some(prev), Some(cur)) = (previous, current) {
             if cur + margin < prev {
                 return Err(format!(
@@ -172,6 +210,65 @@ mod tests {
             parsed.get("sim_warm_hit_rate").and_then(|v| v.as_f64()),
             Some(0.9375)
         );
+    }
+
+    #[test]
+    fn emit_merged_preserves_other_benches_keys() {
+        let dir = std::env::temp_dir().join("attmemo_smoke_merge");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("smoke.json");
+        let _ = std::fs::remove_file(&path);
+
+        let mut a = SmokeSummary::new();
+        a.push("sim_warm_hit_rate", 0.9);
+        a.push("admit_p99_ns", 1200.0);
+        a.emit_merged(&path);
+        let mut b = SmokeSummary::new();
+        b.push("cold_hit_p99_ns", 8000.0);
+        b.push("admit_p99_ns", 1500.0); // fresh value wins
+        b.emit_merged(&path);
+
+        let merged = crate::config::json::Json::from_file(&path).unwrap();
+        assert_eq!(
+            merged.get("sim_warm_hit_rate").and_then(|v| v.as_f64()),
+            Some(0.9),
+            "the first bench's key must survive the second emit"
+        );
+        assert_eq!(
+            merged.get("cold_hit_p99_ns").and_then(|v| v.as_f64()),
+            Some(8000.0)
+        );
+        assert_eq!(
+            merged.get("admit_p99_ns").and_then(|v| v.as_f64()),
+            Some(1500.0),
+            "a re-emitted key takes the fresh value"
+        );
+    }
+
+    #[test]
+    fn history_gate_skips_other_benches_lines() {
+        let dir = std::env::temp_dir().join("attmemo_smoke_hist_multi");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hist.jsonl");
+        let _ = std::fs::remove_file(&path);
+
+        let mut a = SmokeSummary::new();
+        a.push("sim_warm_hit_rate", 0.9);
+        a.check_and_append_history(&path, "sim_warm_hit_rate", 0.05)
+            .unwrap();
+        // A different bench appends a line without the gated key.
+        let mut b = SmokeSummary::new();
+        b.push("cold_warm_hit_rate", 1.0);
+        b.check_and_append_history(&path, "cold_warm_hit_rate", 0.01)
+            .unwrap();
+        // The gate must reach past b's line to a's entry and still
+        // catch the regression.
+        let mut worse = SmokeSummary::new();
+        worse.push("sim_warm_hit_rate", 0.5);
+        let err = worse
+            .check_and_append_history(&path, "sim_warm_hit_rate", 0.05)
+            .unwrap_err();
+        assert!(err.contains("regressed"), "{err}");
     }
 
     /// Satellite: the CI trend gate — first entries seed, equal values

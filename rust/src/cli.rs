@@ -125,6 +125,15 @@ ONLINE MEMOIZATION (serve/eval)
                         normally served by reuse marks alone — no
                         copy-on-write clone, no publish); every batch
                         then pays the full write path (A/B measurement)
+  --cold-tier-dir DIR   spill clock-evicted entries into a file-backed
+                        cold tier rooted at DIR instead of dropping
+                        them (implies --online-admission): hot misses
+                        fall through to a cold lookup and cold hits
+                        promote back into the hot tier; the cold tier
+                        survives restarts (see docs/PERSISTENCE.md)
+  --cold-capacity N     per-layer entry budget of the cold tier
+                        (required with --cold-tier-dir; the oldest cold
+                        entries fall off FIFO past it)
 
 AFFINITY ROUTING (serve)
   --affinity-buckets N  similarity-affinity buckets in front of the
@@ -228,12 +237,15 @@ fn parse_memo(args: &Args, level: MemoLevel) -> Result<MemoConfig> {
     Ok(MemoConfig {
         level,
         selective: !args.flag("no-selective"),
-        // The warm-state flags imply an online tier: loading restores into
-        // one, and saving without one would silently write nothing.
+        // The warm-state and cold-tier flags imply an online tier:
+        // loading restores into one, saving without one would silently
+        // write nothing, and a spill directory without a tier to spill
+        // from would silently do nothing.
         online_admission: args.flag("online-admission")
             || args.flag("cold-db")
             || args.opt("load-warm").is_some()
-            || args.opt("save-warm").is_some(),
+            || args.opt("save-warm").is_some()
+            || args.opt("cold-tier-dir").is_some(),
         max_db_entries: args.opt_usize("db-capacity",
                                        defaults.max_db_entries)?,
         admission_min_attempts: args.opt_usize(
@@ -242,6 +254,11 @@ fn parse_memo(args: &Args, level: MemoLevel) -> Result<MemoConfig> {
         )? as u64,
         intra_batch_dedup: !args.flag("no-dedup"),
         dedup_prepass: !args.flag("no-dedup-prepass"),
+        cold_tier_dir: args
+            .opt("cold-tier-dir")
+            .map(std::path::PathBuf::from),
+        cold_capacity: args.opt_usize("cold-capacity",
+                                      defaults.cold_capacity)?,
         ..defaults
     })
 }
@@ -256,7 +273,7 @@ fn parse_online_tier(args: &Args, rt: &Arc<crate::runtime::Runtime>,
         return Ok(None);
     }
     let cfg = rt.artifacts().family(family)?.config.clone();
-    let tier = match args.opt("load-warm") {
+    let mut tier = match args.opt("load-warm") {
         Some(path) => {
             let (tier, saved_thr) = crate::memo::persist::load_warm(
                 std::path::Path::new(path), &cfg, memo, Default::default())?;
@@ -269,6 +286,16 @@ fn parse_online_tier(args: &Args, rt: &Arc<crate::runtime::Runtime>,
         }
         None => MemoTier::new(&cfg, seq_len, Default::default(), memo),
     };
+    if memo.cold_tier_dir.is_some() {
+        // Works for both the fresh and the warm-restored tier: the cold
+        // shards take their dimensions from the hot tier.
+        tier.attach_cold_tier(memo)?;
+        println!(
+            "cold tier: {} spilled entries recovered (budget {}/layer)",
+            tier.cold_entries(),
+            memo.cold_capacity
+        );
+    }
     Ok(Some(Arc::new(tier)))
 }
 
@@ -476,9 +503,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
         for (li, l) in engine.stats.layers.iter().enumerate() {
             println!(
                 "  layer {li}: total={} attempts={} hits={} skipped={} \
-                 reverted={} admitted={} evicted={} deduped={}",
+                 reverted={} admitted={} evicted={} deduped={} demoted={}",
                 l.total, l.attempts, l.hits, l.skipped, l.reverted,
-                l.admitted, l.evicted, l.deduped
+                l.admitted, l.evicted, l.deduped, l.demoted
             );
         }
         if let Some(t) = engine.online() {
@@ -492,6 +519,19 @@ fn cmd_eval(args: &Args) -> Result<()> {
                 t.publish_skips(),
                 t.forced_reclaims()
             );
+            if let Some(c) = t.cold() {
+                println!(
+                    "  cold tier: entries={} capacity/layer={} \
+                     cold_hits={} promotions={} demotions={} \
+                     resident={:.1} MiB",
+                    t.cold_entries(),
+                    c.capacity(),
+                    t.cold_hits(),
+                    t.promotions(),
+                    t.demotions(),
+                    t.cold_resident_bytes() as f64 / (1 << 20) as f64
+                );
+            }
         }
     }
     Ok(())
@@ -551,6 +591,23 @@ mod tests {
         );
         assert_eq!(a.opt_usize("signature-prefix-len", 32).unwrap(), 16);
         assert!(a.flag("adaptive-buckets"));
+    }
+
+    #[test]
+    fn cold_tier_flags_parse() {
+        let a = Args::parse(&argv(&[
+            "eval", "--cold-tier-dir", "/tmp/attmemo-cold",
+            "--cold-capacity", "512",
+        ]))
+        .unwrap();
+        let memo = parse_memo(&a, MemoLevel::Moderate).unwrap();
+        assert_eq!(
+            memo.cold_tier_dir,
+            Some(std::path::PathBuf::from("/tmp/attmemo-cold"))
+        );
+        assert_eq!(memo.cold_capacity, 512);
+        assert!(memo.online_admission,
+                "a spill directory implies the online tier");
     }
 
     #[test]

@@ -176,6 +176,17 @@ pub struct MemoConfig {
     /// disable with `--no-dedup-prepass` to force every batch through the
     /// full publish path (A/B measurement, debugging).
     pub dedup_prepass: bool,
+    /// Directory for the file-backed cold spill tier (`memo/cold.rs`).
+    /// `None` (the default) disables spilling: clock victims are simply
+    /// dropped. With a directory set, victims demote into per-layer
+    /// cold arenas there, hot misses fall through to a cold lookup, and
+    /// cold hits promote back into the hot tier (`--cold-tier-dir`).
+    pub cold_tier_dir: Option<std::path::PathBuf>,
+    /// Per-layer entry budget of the cold tier (`--cold-capacity`).
+    /// Must be positive when `cold_tier_dir` is set; past it the oldest
+    /// cold entries fall off the end (FIFO — twice-demoted is the end
+    /// of the line).
+    pub cold_capacity: usize,
 }
 
 impl Default for MemoConfig {
@@ -191,6 +202,8 @@ impl Default for MemoConfig {
             admission_min_attempts: 64,
             intra_batch_dedup: true,
             dedup_prepass: true,
+            cold_tier_dir: None,
+            cold_capacity: 0,
         }
     }
 }

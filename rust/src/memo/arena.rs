@@ -1,4 +1,6 @@
-//! Page-aligned APM arena backed by an in-memory file (`memfd_create`).
+//! Page-aligned APM arena backed by a memory-mapped file — an anonymous
+//! in-memory one (`memfd_create`, the hot tier) or a regular on-disk one
+//! ([`ApmArena::new_file_backed`], the cold spill tier's store).
 //!
 //! This is the substrate for the paper's memory-mapping trick (§5.3,
 //! Fig. 9): every APM is stored page-aligned inside one shared memory file,
@@ -318,19 +320,57 @@ pub struct ApmArena {
 const GROW_CHUNK: usize = 256; // entries added per ftruncate
 
 impl ApmArena {
-    /// Create an arena for entries of `elems` f32 values each.
+    /// Create an arena for entries of `elems` f32 values each, backed by
+    /// an anonymous in-memory file (`memfd_create`) — the hot tier's
+    /// store.
     pub fn new(elems: usize) -> Result<Self> {
         if elems == 0 {
             return Err(Error::memo("arena entry size must be positive"));
         }
-        let entry_bytes = elems * 4;
-        let stride = page_align(entry_bytes);
         let fd = unsafe {
             libc::memfd_create(b"attmemo-apm\0".as_ptr().cast(), 0)
         };
         if fd < 0 {
             return Err(Error::Io(std::io::Error::last_os_error()));
         }
+        Self::with_fd(elems, fd)
+    }
+
+    /// Create an arena backed by a regular file at `path` (created or
+    /// truncated) — the cold tier's spill store (`memo/cold.rs`). The
+    /// same page-aligned stride, growth (`ftruncate` + fresh
+    /// `MAP_SHARED` mapping) and slot/epoch discipline as the memfd
+    /// store apply unchanged; entries start on page boundaries, so the
+    /// layout stays `O_DIRECT`-friendly for tooling that bypasses the
+    /// page cache.
+    pub fn new_file_backed(elems: usize,
+                           path: &std::path::Path) -> Result<Self> {
+        if elems == 0 {
+            return Err(Error::memo("arena entry size must be positive"));
+        }
+        use std::os::unix::ffi::OsStrExt;
+        let cpath = std::ffi::CString::new(path.as_os_str().as_bytes())
+            .map_err(|_| Error::memo("arena path contains a NUL byte"))?;
+        let fd = unsafe {
+            libc::open(
+                cpath.as_ptr(),
+                libc::O_RDWR | libc::O_CREAT | libc::O_TRUNC,
+                0o644,
+            )
+        };
+        if fd < 0 {
+            return Err(Error::Io(std::io::Error::last_os_error()));
+        }
+        Self::with_fd(elems, fd)
+    }
+
+    /// Shared constructor tail: wrap an owned, freshly created fd (memfd
+    /// or regular file, zero-length either way) into a [`Store`] and
+    /// pre-grow the first slot chunk. Takes ownership of `fd` — it is
+    /// closed when the store drops, including on a growth error here.
+    fn with_fd(elems: usize, fd: RawFd) -> Result<Self> {
+        let entry_bytes = elems * 4;
+        let stride = page_align(entry_bytes);
         let store = Store {
             fd,
             stride,
@@ -846,6 +886,38 @@ mod tests {
         assert_eq!(snap.get(i0).unwrap(), &[3.0; 8],
                    "snapshot bytes overwritten under a frozen view");
         assert_eq!(a.get(i1).unwrap(), &[4.0; 8]);
+    }
+
+    /// The cold tier's store variant: a file-backed arena behaves like
+    /// the memfd one and its payload bytes land in the real file at
+    /// slot × stride (the cold recovery path reads them back there).
+    #[test]
+    fn file_backed_store_roundtrips_and_lands_in_file() {
+        let dir = std::env::temp_dir().join("attmemo_arena_file");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cold.apm");
+        let mut a = ApmArena::new_file_backed(8, &path).unwrap();
+        let i0 = a.push(&[3.0; 8]).unwrap();
+        let i1 = a.push(&[4.0; 8]).unwrap();
+        assert_eq!(a.get(i0).unwrap(), &[3.0; 8]);
+        assert_eq!(a.get(i1).unwrap(), &[4.0; 8]);
+        assert_eq!(a.stride() % page_size(), 0, "O_DIRECT-friendly stride");
+        let stride = a.stride();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.len() >= 2 * stride);
+        for (slot, want) in [(0usize, 3.0f32), (1, 4.0)] {
+            let b: [u8; 4] = bytes[slot * stride..slot * stride + 4]
+                .try_into()
+                .unwrap();
+            assert_eq!(f32::from_le_bytes(b), want,
+                       "slot {slot} bytes must be visible in the file");
+        }
+        drop(a);
+        // Reopening truncates: the constructor hands back a fresh store
+        // (recovery replays the index log before recreating the file).
+        let a2 = ApmArena::new_file_backed(8, &path).unwrap();
+        assert_eq!(a2.len(), 0);
+        assert!(ApmArena::new_file_backed(0, &path).is_err());
     }
 
     /// Growth installs a new mapping; snapshots pin the old one, so their

@@ -268,11 +268,29 @@ impl LayerDb {
     /// (or discarded) before admitting again.
     pub fn admit(&mut self, feature: &[f32], apm: &[f32],
                  capacity: usize) -> Result<AdmitOutcome> {
+        self.admit_demoting(feature, apm, capacity, &mut |_, _| {})
+    }
+
+    /// [`LayerDb::admit`] with eviction capture: each capacity victim's
+    /// stored feature vector and APM payload are handed to `demote`
+    /// *before* the eviction frees its slot — the two-tier spill hook
+    /// (`memo/cold.rs`). The sink runs on the writer path (the tier
+    /// holds its shard mutex across the whole admission), so captured
+    /// slices are stable for the duration of the call.
+    pub fn admit_demoting(&mut self, feature: &[f32], apm: &[f32],
+                          capacity: usize,
+                          demote: &mut dyn FnMut(&[f32], &[f32]))
+                          -> Result<AdmitOutcome> {
         let mut evicted = Vec::new();
         if capacity > 0 {
             while self.len() >= capacity {
-                match self.evict_victim() {
-                    Some(id) => evicted.push(id),
+                match self.pick_victim() {
+                    Some(id) => {
+                        demote(self.index.vector(id.0),
+                               self.arena.get(id)?);
+                        self.evict(id)?;
+                        evicted.push(id);
+                    }
                     None => break,
                 }
             }
@@ -343,6 +361,15 @@ impl LayerDb {
     /// survive (reuse-aware LRU approximation). Falls back to the first
     /// live entry after two full sweeps; `None` on an empty layer.
     pub fn evict_victim(&mut self) -> Option<ApmId> {
+        let v = self.pick_victim()?;
+        self.evict(v).ok()?;
+        Some(v)
+    }
+
+    /// Run the clock sweep and advance the hand, returning the victim
+    /// *without* evicting it — the demotion path captures the victim's
+    /// feature and payload first ([`LayerDb::admit_demoting`]).
+    fn pick_victim(&mut self) -> Option<ApmId> {
         let span = self.arena.next_id() as usize;
         if span == 0 || self.arena.is_empty() {
             return None;
@@ -368,7 +395,6 @@ impl LayerDb {
         }
         let v = victim?;
         self.hand = (v.0 as usize + 1) % span;
-        self.evict(v).ok()?;
         Some(v)
     }
 
@@ -687,6 +713,43 @@ mod tests {
         assert_eq!(evicted.len(), 2);
         assert!(!evicted.contains(&hot), "reused entry evicted first");
         assert!(db.layer(0).arena().is_live(hot));
+    }
+
+    /// The two-tier spill hook: an over-budget admission hands each
+    /// victim's stored feature and payload to the demotion sink before
+    /// the eviction frees its slot.
+    #[test]
+    fn admit_demoting_captures_victims_before_eviction() {
+        let c = cfg();
+        let mut db = AttentionDb::new(&c, 16, HnswParams::default());
+        let mut rng = Pcg32::seeded(29);
+        let elems = c.apm_elems(16);
+        let cap = 3usize;
+        let mut feats = Vec::new();
+        for i in 0..cap {
+            let f = unit(&mut rng, c.embed_dim);
+            db.layer_mut(0)
+                .admit(&f, &vec![i as f32; elems], cap)
+                .unwrap();
+            feats.push(f);
+        }
+        let mut demoted: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+        let f = unit(&mut rng, c.embed_dim);
+        let out = db
+            .layer_mut(0)
+            .admit_demoting(&f, &vec![9.0; elems], cap, &mut |df, da| {
+                demoted.push((df.to_vec(), da.to_vec()))
+            })
+            .unwrap();
+        assert_eq!(out.evicted.len(), 1);
+        assert_eq!(demoted.len(), 1);
+        let (df, da) = &demoted[0];
+        assert_eq!(da, &vec![0.0f32; elems],
+                   "victim payload captured intact");
+        assert_eq!(df, &feats[0], "victim feature captured intact");
+        assert_eq!(db.layer(0).len(), cap);
+        assert!(!db.layer(0).arena().is_live(out.evicted[0]),
+                "victim slot freed after capture");
     }
 
     #[test]

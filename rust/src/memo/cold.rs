@@ -1,0 +1,700 @@
+//! The cold spill tier: file-backed overflow storage under the hot
+//! seqlock shards.
+//!
+//! The paper's premise is an attention database *larger than DRAM*
+//! served from big memory. [`ColdTier`] takes that seriously: when the
+//! hot tier's clock evicts an entry, the tier demotes it here instead
+//! of dropping it — payload APMs move into a *file-backed* [`ApmArena`]
+//! (the same page-aligned slot/epoch discipline as the hot memfd store,
+//! but on a regular file an operator points at NVMe), while the feature
+//! vectors stay DRAM-resident so the nearest-neighbour probe never
+//! touches the disk path. A hot-snapshot miss falls through to a cold
+//! probe (`MemoTier::lookup_fetch`); a qualifying cold hit is
+//! *promoted*: its payload is served, the entry leaves the cold shard,
+//! and it re-enters the hot tier through the ordinary admission path —
+//! an entry is never live in both tiers.
+//!
+//! **Concurrency.** Each layer shard is an `RwLock`: probes share the
+//! read lock; demotions and promotions take the write lock (demotions
+//! run on the hot tier's writer path, which already serializes per
+//! shard). On top of the lock, every payload read revalidates the same
+//! tenancy-epoch stamps the hot tier uses ([`ApmArena::get_checked`] /
+//! [`ApmArena::recheck`]) before *and* after the copy, so even a future
+//! lock-free cold read path — or a bug that leaked a stale stamp — can
+//! never serve a recycled slot's foreign bytes.
+//!
+//! **Recovery.** Payload bytes alone are not a database: each shard
+//! pairs its arena file (`cold-layerN.apm`) with an append-only *index
+//! log* (`cold-layerN.idx`, magic `ATCD` — versioned in `memo::persist`
+//! alongside the other on-disk formats, layout in
+//! `docs/PERSISTENCE.md`) recording id→slot mappings, per-payload
+//! checksums and the DRAM-resident features. A demotion writes the
+//! payload bytes through the shared mapping first and appends its ADD
+//! record second, so opening a directory can replay the log and drop
+//! every record whose payload bytes are missing, out of range or fail
+//! their checksum — a crash mid-demotion truncates to a clean miss,
+//! never a torn entry — then rewrite both files compacted.
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::RwLock;
+
+use crate::memo::arena::{page_align, ApmArena, ApmId};
+use crate::memo::persist::{COLD_COMPAT_VERSIONS, COLD_MAGIC, COLD_VERSION};
+use crate::{Error, Result};
+
+/// FNV-1a over the little-endian bytes of a payload — the per-record
+/// integrity check that turns torn cold slots into clean misses.
+fn fnv1a_f32s(xs: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for x in xs {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Index-log record tags.
+const TAG_ADD: u8 = 1;
+const TAG_DEL: u8 = 2;
+
+/// Index-log header: magic, version, embed_dim, apm_elems.
+const IDX_HEADER: usize = 16;
+
+fn write_header(f: &mut std::fs::File, embed_dim: usize,
+                apm_elems: usize) -> Result<()> {
+    f.write_all(COLD_MAGIC)?;
+    f.write_all(&COLD_VERSION.to_le_bytes())?;
+    f.write_all(&(embed_dim as u32).to_le_bytes())?;
+    f.write_all(&(apm_elems as u32).to_le_bytes())?;
+    Ok(())
+}
+
+/// Serialized ADD record: tag, cold id, physical slot, payload
+/// checksum, feature vector.
+fn add_record(id: u64, slot: u32, apm: &[f32],
+              feature: &[f32]) -> Vec<u8> {
+    let mut rec = Vec::with_capacity(21 + feature.len() * 4);
+    rec.push(TAG_ADD);
+    rec.extend_from_slice(&id.to_le_bytes());
+    rec.extend_from_slice(&slot.to_le_bytes());
+    rec.extend_from_slice(&fnv1a_f32s(apm).to_le_bytes());
+    for x in feature {
+        rec.extend_from_slice(&x.to_le_bytes());
+    }
+    rec
+}
+
+/// A qualifying cold hit taken out of the cold shard for promotion: the
+/// entry's stored feature vector (the hot tier re-admits under it) and
+/// its similarity to the probe.
+#[derive(Debug, Clone)]
+pub struct ColdPromotion {
+    /// Feature vector the entry was stored under.
+    pub feature: Vec<f32>,
+    /// Similarity `1 − ‖e(q) − e(x)‖₂` of the probe to that feature.
+    pub similarity: f32,
+}
+
+/// One live cold entry: payload in the file-backed arena; id, feature
+/// and the arena's tenancy-epoch stamp in DRAM.
+struct ColdEntry {
+    id: u64,
+    apm: ApmId,
+    stamp: u64,
+    feature: Vec<f32>,
+}
+
+/// Mutable state of one cold layer shard.
+struct ColdInner {
+    arena: ApmArena,
+    /// Live entries in FIFO (ascending cold-id) order; the front is the
+    /// eviction victim when the shard is at its budget.
+    entries: VecDeque<ColdEntry>,
+    next_id: u64,
+    log: std::fs::File,
+    idx_path: PathBuf,
+    /// Records appended since the log was created or last rewritten;
+    /// past `4 × capacity + 64` the log is compacted in place.
+    log_writes: usize,
+}
+
+impl ColdInner {
+    /// Append one ADD record (best ordering: the caller already wrote
+    /// the payload bytes through the arena's shared mapping, so a crash
+    /// between the two leaves an unreferenced payload, never a
+    /// referenced hole).
+    fn log_add(&mut self, id: u64, slot: u32, apm: &[f32],
+               feature: &[f32]) -> Result<()> {
+        self.log.write_all(&add_record(id, slot, apm, feature))?;
+        self.log_writes += 1;
+        Ok(())
+    }
+
+    fn log_del(&mut self, id: u64) -> Result<()> {
+        let mut rec = [0u8; 9];
+        rec[0] = TAG_DEL;
+        rec[1..9].copy_from_slice(&id.to_le_bytes());
+        self.log.write_all(&rec)?;
+        self.log_writes += 1;
+        Ok(())
+    }
+
+    /// Insert with a caller-chosen id (recovery preserves prior ids;
+    /// live inserts pass `next_id`).
+    fn insert_with_id(&mut self, id: u64, feature: &[f32],
+                      apm: &[f32]) -> Result<()> {
+        let apm_id = self.arena.push(apm)?;
+        let stamp = self.arena.epoch(apm_id)?;
+        let slot =
+            (self.arena.file_offset(apm_id)? / self.arena.stride()) as u32;
+        if let Err(e) = self.log_add(id, slot, apm, feature) {
+            // Keep memory and log consistent: an unlogged entry would
+            // survive in DRAM but vanish (or tear) across a restart.
+            let _ = self.arena.remove(apm_id);
+            return Err(e);
+        }
+        self.entries.push_back(ColdEntry {
+            id,
+            apm: apm_id,
+            stamp,
+            feature: feature.to_vec(),
+        });
+        Ok(())
+    }
+
+    /// Compact the append-only log once DEL/ADD churn dominates:
+    /// rewrite it from the live entries (sibling temp file + rename, so
+    /// a crash mid-rewrite keeps the previous good log) and reopen it
+    /// for appending.
+    fn maybe_rewrite_log(&mut self, capacity: usize,
+                         embed_dim: usize) -> Result<()> {
+        if self.log_writes <= 4 * capacity + 64 {
+            return Ok(());
+        }
+        let mut tmp = self.idx_path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = PathBuf::from(tmp);
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            write_header(&mut f, embed_dim, self.arena.entry_elems())?;
+            for e in &self.entries {
+                let apm = self.arena.get(e.apm)?;
+                let slot = (self.arena.file_offset(e.apm)?
+                    / self.arena.stride()) as u32;
+                f.write_all(&add_record(e.id, slot, apm, &e.feature))?;
+            }
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, &self.idx_path)?;
+        self.log = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&self.idx_path)?;
+        self.log_writes = 0;
+        Ok(())
+    }
+}
+
+/// One per-layer cold shard plus its lock-free stat gauges.
+struct ColdShard {
+    inner: RwLock<ColdInner>,
+    len: AtomicUsize,
+    resident: AtomicUsize,
+}
+
+/// Index and squared distance of the nearest entry (linear scan — the
+/// features are DRAM-resident and cold probes only run after a hot
+/// miss, so the scan is off the hot path by construction).
+fn nearest(entries: &VecDeque<ColdEntry>,
+           feature: &[f32]) -> Option<(usize, f32)> {
+    let mut best: Option<(usize, f32)> = None;
+    for (i, e) in entries.iter().enumerate() {
+        let d2: f32 = e
+            .feature
+            .iter()
+            .zip(feature)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        if best.map_or(true, |(_, bd)| d2 < bd) {
+            best = Some((i, d2));
+        }
+    }
+    best.map(|(i, d2)| (i, 1.0 - d2.sqrt()))
+}
+
+/// Replay one shard's index log against its payload file: the surviving
+/// `(id, feature, payload)` records, ascending by id, truncated to
+/// `capacity` (newest kept). Missing files mean an empty shard; a short
+/// or unknown-tag tail means the log was torn by a crash — replay stops
+/// there. Records whose payload bytes are out of range or fail their
+/// checksum are dropped (a torn demotion resolves as a clean miss).
+/// Wrong magic, an unsupported version or mismatched dimensions are
+/// hard errors: the directory belongs to another format or family.
+fn recover(apm_path: &Path, idx_path: &Path, embed_dim: usize,
+           apm_elems: usize, capacity: usize)
+           -> Result<Vec<(u64, Vec<f32>, Vec<f32>)>> {
+    let Ok(idx) = std::fs::read(idx_path) else {
+        return Ok(Vec::new());
+    };
+    if idx.len() < IDX_HEADER {
+        // A crash can truncate even the header: nothing durable yet.
+        return Ok(Vec::new());
+    }
+    if &idx[0..4] != COLD_MAGIC {
+        return Err(Error::memo(format!(
+            "{}: not an ATCD cold index log",
+            idx_path.display()
+        )));
+    }
+    let version = u32::from_le_bytes(idx[4..8].try_into().unwrap());
+    if !COLD_COMPAT_VERSIONS.contains(&version) {
+        return Err(Error::memo(format!(
+            "ATCD version {version} unsupported (this build reads \
+             {COLD_COMPAT_VERSIONS:?}); clear the cold dir to start cold"
+        )));
+    }
+    let dim = u32::from_le_bytes(idx[8..12].try_into().unwrap()) as usize;
+    let elems =
+        u32::from_le_bytes(idx[12..16].try_into().unwrap()) as usize;
+    if dim != embed_dim || elems != apm_elems {
+        return Err(Error::memo(format!(
+            "ATCD dims (dim {dim}, elems {elems}) do not match the \
+             configured family (dim {embed_dim}, elems {apm_elems})"
+        )));
+    }
+    let payload = std::fs::read(apm_path).unwrap_or_default();
+    let stride = page_align(apm_elems * 4);
+    let mut live: std::collections::BTreeMap<u64, (Vec<f32>, Vec<f32>)> =
+        std::collections::BTreeMap::new();
+    let add_len = 21 + embed_dim * 4;
+    let mut pos = IDX_HEADER;
+    let mut torn = 0usize;
+    loop {
+        let Some(&tag) = idx.get(pos) else { break };
+        match tag {
+            TAG_ADD => {
+                if pos + add_len > idx.len() {
+                    break; // torn tail
+                }
+                let id = u64::from_le_bytes(
+                    idx[pos + 1..pos + 9].try_into().unwrap(),
+                );
+                let slot = u32::from_le_bytes(
+                    idx[pos + 9..pos + 13].try_into().unwrap(),
+                ) as usize;
+                let sum = u64::from_le_bytes(
+                    idx[pos + 13..pos + 21].try_into().unwrap(),
+                );
+                let feature: Vec<f32> = idx[pos + 21..pos + add_len]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                pos += add_len;
+                let off = slot * stride;
+                let end = off + apm_elems * 4;
+                if end > payload.len() {
+                    torn += 1;
+                    continue;
+                }
+                let apm: Vec<f32> = payload[off..end]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                if fnv1a_f32s(&apm) != sum {
+                    torn += 1;
+                    continue;
+                }
+                live.insert(id, (feature, apm));
+            }
+            TAG_DEL => {
+                if pos + 9 > idx.len() {
+                    break;
+                }
+                let id = u64::from_le_bytes(
+                    idx[pos + 1..pos + 9].try_into().unwrap(),
+                );
+                live.remove(&id);
+                pos += 9;
+            }
+            _ => break, // corrupt tag — stop trusting the stream
+        }
+    }
+    if torn > 0 {
+        log::warn!(
+            "{}: dropped {torn} torn cold record(s) during recovery \
+             (they resolve as clean misses)",
+            idx_path.display()
+        );
+    }
+    let mut out: Vec<(u64, Vec<f32>, Vec<f32>)> = live
+        .into_iter()
+        .map(|(id, (f, a))| (id, f, a))
+        .collect();
+    if out.len() > capacity {
+        out.drain(..out.len() - capacity); // keep the newest
+    }
+    Ok(out)
+}
+
+/// The file-backed cold tier under a hot `MemoTier`: one shard per
+/// layer, each a payload arena on disk plus DRAM-resident features.
+/// See the module docs for the demotion/promotion protocol and the
+/// recovery story.
+pub struct ColdTier {
+    shards: Vec<ColdShard>,
+    capacity: usize,
+    embed_dim: usize,
+    apm_elems: usize,
+    evictions: AtomicU64,
+}
+
+impl ColdTier {
+    /// Open (or create) a cold tier rooted at `dir` with one shard per
+    /// layer and a per-layer budget of `capacity` entries. Existing
+    /// shard files are replayed (see the module docs): live entries
+    /// survive a restart, torn ones resolve as misses, and both files
+    /// are rewritten compacted.
+    pub fn open(dir: &Path, layers: usize, embed_dim: usize,
+                apm_elems: usize, capacity: usize) -> Result<ColdTier> {
+        if capacity == 0 {
+            return Err(Error::config(
+                "cold tier capacity must be positive (--cold-capacity)",
+            ));
+        }
+        if embed_dim == 0 || apm_elems == 0 {
+            return Err(Error::memo("cold tier dims must be positive"));
+        }
+        std::fs::create_dir_all(dir)?;
+        let mut shards = Vec::with_capacity(layers);
+        for li in 0..layers {
+            let apm_path = dir.join(format!("cold-layer{li}.apm"));
+            let idx_path = dir.join(format!("cold-layer{li}.idx"));
+            let survivors = recover(&apm_path, &idx_path, embed_dim,
+                                    apm_elems, capacity)?;
+            // Survivor payloads are in memory now; recreate both files
+            // fresh (recovery doubles as compaction).
+            let arena = ApmArena::new_file_backed(apm_elems, &apm_path)?;
+            let mut log = std::fs::File::create(&idx_path)?;
+            write_header(&mut log, embed_dim, apm_elems)?;
+            let mut inner = ColdInner {
+                arena,
+                entries: VecDeque::new(),
+                next_id: survivors.last().map_or(0, |s| s.0 + 1),
+                log,
+                idx_path,
+                log_writes: 0,
+            };
+            for (id, feature, apm) in &survivors {
+                inner.insert_with_id(*id, feature, apm)?;
+            }
+            let len = inner.entries.len();
+            let resident = inner.arena.resident_bytes();
+            shards.push(ColdShard {
+                inner: RwLock::new(inner),
+                len: AtomicUsize::new(len),
+                resident: AtomicUsize::new(resident),
+            });
+        }
+        Ok(ColdTier {
+            shards,
+            capacity,
+            embed_dim,
+            apm_elems,
+            evictions: AtomicU64::new(0),
+        })
+    }
+
+    /// Number of layer shards.
+    pub fn num_layers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-layer entry budget.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Live entries in one shard (atomic gauge, no locks).
+    pub fn layer_len(&self, layer: usize) -> usize {
+        self.shards[layer].len.load(Ordering::Relaxed)
+    }
+
+    /// Total live entries across shards (atomic gauges, no locks).
+    pub fn total_entries(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.len.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Total bytes of the file-backed payload arenas (atomic gauges).
+    pub fn resident_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.resident.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Entries dropped off the cold end (FIFO) by the budget.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Demote one evicted hot entry into a cold shard, dropping the
+    /// oldest cold entry first when the shard is at its budget (two
+    /// demotions is the end of the line). Returns the entry's cold id.
+    pub fn insert(&self, layer: usize, feature: &[f32],
+                  apm: &[f32]) -> Result<u64> {
+        if feature.len() != self.embed_dim
+            || apm.len() != self.apm_elems
+        {
+            return Err(Error::memo(format!(
+                "cold insert: want ({}, {}) values, got ({}, {})",
+                self.embed_dim,
+                self.apm_elems,
+                feature.len(),
+                apm.len()
+            )));
+        }
+        let shard = &self.shards[layer];
+        let mut inner = shard.inner.write().unwrap();
+        let mut dropped = 0u64;
+        while inner.entries.len() >= self.capacity {
+            let e = inner.entries.pop_front().expect("len checked");
+            let _ = inner.arena.remove(e.apm);
+            // Best-effort DEL: if it never lands, recovery's newest-
+            // first capacity truncation drops the entry anyway.
+            let _ = inner.log_del(e.id);
+            dropped += 1;
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.insert_with_id(id, feature, apm)?;
+        inner.maybe_rewrite_log(self.capacity, self.embed_dim)?;
+        shard.len.store(inner.entries.len(), Ordering::Relaxed);
+        shard
+            .resident
+            .store(inner.arena.resident_bytes(), Ordering::Relaxed);
+        self.evictions.fetch_add(dropped, Ordering::Relaxed);
+        Ok(id)
+    }
+
+    /// Nearest cold entry clearing `min_similarity`, without mutating
+    /// the shard: `(cold id, similarity)`. Shares the read lock with
+    /// other probes; the hot tier's lazy fetch uses this to avoid
+    /// paying a batch-buffer allocation for a cold miss.
+    pub fn probe(&self, layer: usize, feature: &[f32],
+                 min_similarity: f32) -> Option<(u64, f32)> {
+        let inner = self.shards[layer].inner.read().unwrap();
+        let (i, sim) = nearest(&inner.entries, feature)?;
+        if sim >= min_similarity {
+            Some((inner.entries[i].id, sim))
+        } else {
+            None
+        }
+    }
+
+    /// Take the nearest entry clearing `min_similarity` out of a cold
+    /// shard (the promotion path): its payload is copied into `dst`
+    /// (`apm_elems` values), its stored feature vector and the probe
+    /// similarity are returned, and the entry leaves the cold tier —
+    /// the caller re-admits it into the hot tier, so an entry is never
+    /// live in both. The payload read is validated against the arena's
+    /// tenancy-epoch stamp before *and* after the copy; a stamp failure
+    /// drops the entry and reports a clean miss, never foreign bytes.
+    pub fn take_nearest(&self, layer: usize, feature: &[f32],
+                        min_similarity: f32,
+                        dst: &mut [f32]) -> Option<ColdPromotion> {
+        let shard = &self.shards[layer];
+        let mut inner = shard.inner.write().unwrap();
+        let (i, similarity) = nearest(&inner.entries, feature)?;
+        if similarity < min_similarity {
+            return None;
+        }
+        let e = inner.entries.remove(i).expect("index in range");
+        let ok = match inner.arena.get_checked(e.apm, e.stamp) {
+            Ok(apm) => {
+                dst.copy_from_slice(apm);
+                inner.arena.recheck(e.apm, e.stamp)
+            }
+            Err(_) => false,
+        };
+        let _ = inner.arena.remove(e.apm);
+        let _ = inner.log_del(e.id);
+        shard.len.store(inner.entries.len(), Ordering::Relaxed);
+        shard
+            .resident
+            .store(inner.arena.resident_bytes(), Ordering::Relaxed);
+        if !ok {
+            // The epoch discipline tripped: never serve the bytes. The
+            // entry is gone either way (it could not have been read
+            // intact again).
+            dst.fill(0.0);
+            return None;
+        }
+        Some(ColdPromotion {
+            feature: e.feature,
+            similarity,
+        })
+    }
+
+    /// Copies of one shard's live entries — `(cold id, stored feature,
+    /// payload)` in FIFO (ascending-id) order. Diagnostics and tests;
+    /// takes the read lock and copies everything.
+    pub fn entries(&self,
+                   layer: usize) -> Vec<(u64, Vec<f32>, Vec<f32>)> {
+        let inner = self.shards[layer].inner.read().unwrap();
+        inner
+            .entries
+            .iter()
+            .filter_map(|e| {
+                inner.arena.get(e.apm).ok().map(|apm| {
+                    (e.id, e.feature.clone(), apm.to_vec())
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DIM: usize = 4;
+    const ELEMS: usize = 8;
+
+    fn dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn basis(k: usize) -> [f32; DIM] {
+        let mut f = [0.0f32; DIM];
+        f[k % DIM] = 1.0;
+        f
+    }
+
+    #[test]
+    fn insert_probe_take_roundtrip() {
+        let d = dir("attmemo_cold_roundtrip");
+        let cold = ColdTier::open(&d, 1, DIM, ELEMS, 8).unwrap();
+        let f = basis(0);
+        cold.insert(0, &f, &[7.0; ELEMS]).unwrap();
+        assert_eq!(cold.layer_len(0), 1);
+        assert_eq!(cold.total_entries(), 1);
+        assert!(cold.resident_bytes() > 0);
+        let (_, sim) = cold.probe(0, &f, 0.9).unwrap();
+        assert!(sim > 0.999);
+        assert!(cold.probe(0, &basis(1), 0.9).is_none(),
+                "an orthogonal probe must not clear the floor");
+        let mut dst = [0.0f32; ELEMS];
+        let promo = cold.take_nearest(0, &f, 0.9, &mut dst).unwrap();
+        assert_eq!(promo.feature, f);
+        assert!(promo.similarity > 0.999);
+        assert_eq!(dst, [7.0; ELEMS]);
+        assert_eq!(cold.layer_len(0), 0,
+                   "promotion takes the entry out of the cold tier");
+        assert!(cold.take_nearest(0, &f, 0.9, &mut dst).is_none());
+        assert!(cold.insert(0, &f, &[0.0; 3]).is_err(),
+                "wrong payload size rejected");
+    }
+
+    #[test]
+    fn fifo_eviction_bounds_occupancy() {
+        let d = dir("attmemo_cold_fifo");
+        let cold = ColdTier::open(&d, 1, DIM, ELEMS, 3).unwrap();
+        for k in 0..5 {
+            let mut f = [0.0f32; DIM];
+            f[0] = k as f32;
+            cold.insert(0, &f, &[k as f32; ELEMS]).unwrap();
+        }
+        assert_eq!(cold.layer_len(0), 3, "budget enforced");
+        assert_eq!(cold.evictions(), 2, "oldest entries dropped");
+        let ids: Vec<u64> =
+            cold.entries(0).iter().map(|e| e.0).collect();
+        assert_eq!(ids, [2, 3, 4], "FIFO keeps the newest");
+    }
+
+    #[test]
+    fn reopen_recovers_entries_and_next_id() {
+        let d = dir("attmemo_cold_reopen");
+        {
+            let cold = ColdTier::open(&d, 2, DIM, ELEMS, 8).unwrap();
+            for k in 0..3 {
+                cold.insert(0, &basis(k), &[k as f32; ELEMS])
+                    .unwrap();
+            }
+            cold.insert(1, &basis(0), &[9.0; ELEMS]).unwrap();
+            // Promote one out so a DEL record is replayed too.
+            let mut dst = [0.0f32; ELEMS];
+            cold.take_nearest(0, &basis(1), 0.9, &mut dst).unwrap();
+        }
+        let cold = ColdTier::open(&d, 2, DIM, ELEMS, 8).unwrap();
+        assert_eq!(cold.layer_len(0), 2);
+        assert_eq!(cold.layer_len(1), 1);
+        let e = cold.entries(0);
+        assert_eq!((e[0].0, e[0].2[0]), (0, 0.0));
+        assert_eq!((e[1].0, e[1].2[0]), (2, 2.0));
+        assert_eq!(e[1].1, basis(2), "features survive the restart");
+        // New ids continue after the recovered ones.
+        let id =
+            cold.insert(0, &basis(3), &[5.0; ELEMS]).unwrap();
+        assert_eq!(id, 3);
+    }
+
+    #[test]
+    fn unsupported_version_and_dims_are_rejected() {
+        let d = dir("attmemo_cold_version");
+        {
+            let cold = ColdTier::open(&d, 1, DIM, ELEMS, 4).unwrap();
+            cold.insert(0, &basis(0), &[1.0; ELEMS]).unwrap();
+        }
+        let idx = d.join("cold-layer0.idx");
+        let mut bytes = std::fs::read(&idx).unwrap();
+        bytes[4..8].copy_from_slice(&(COLD_VERSION + 1).to_le_bytes());
+        std::fs::write(&idx, &bytes).unwrap();
+        let err = ColdTier::open(&d, 1, DIM, ELEMS, 4).unwrap_err();
+        assert!(format!("{err}").contains("unsupported"), "{err}");
+        bytes[4..8].copy_from_slice(&COLD_VERSION.to_le_bytes());
+        std::fs::write(&idx, &bytes).unwrap();
+        assert!(ColdTier::open(&d, 1, DIM + 1, ELEMS, 4).is_err(),
+                "dimension mismatch must be rejected");
+        assert_eq!(
+            ColdTier::open(&d, 1, DIM, ELEMS, 4)
+                .unwrap()
+                .layer_len(0),
+            1
+        );
+        assert!(ColdTier::open(&d, 1, DIM, ELEMS, 0).is_err(),
+                "zero capacity is a configuration error");
+    }
+
+    /// Heavy churn must not grow the append-only index log without
+    /// bound: the in-process rewrite compacts it to the live set.
+    #[test]
+    fn log_compaction_preserves_live_entries() {
+        let d = dir("attmemo_cold_logcompact");
+        let cap = 2usize;
+        let cold = ColdTier::open(&d, 1, DIM, ELEMS, cap).unwrap();
+        for k in 0..200 {
+            let mut f = [0.0f32; DIM];
+            f[0] = k as f32;
+            cold.insert(0, &f, &[k as f32; ELEMS]).unwrap();
+        }
+        assert_eq!(cold.layer_len(0), cap);
+        let idx_len = std::fs::metadata(d.join("cold-layer0.idx"))
+            .unwrap()
+            .len();
+        assert!(idx_len < 4096,
+                "log must compact under churn: {idx_len} bytes");
+        let e = cold.entries(0);
+        assert_eq!(e.len(), cap);
+        assert_eq!((e[1].0, e[1].2[0]), (199, 199.0));
+    }
+}

@@ -5,6 +5,9 @@
 //! * [`tier`] — the shared online tier: seqlock-published copy-on-write
 //!   shards, one per layer — admissions publish new snapshots while
 //!   readers serve lock-free across engine replicas.
+//! * [`cold`] — the file-backed cold spill tier under the hot shards:
+//!   clock victims demote into it, hot misses fall through to it, and
+//!   cold hits promote back through the normal admission path.
 //! * [`gather`] — copy vs memory-mapped APM batch gathering (§5.3).
 //! * [`index`] — the index database: HNSW over hidden-state embeddings.
 //! * [`embedder`] — runs the MLP embedding executable (§5.2).
@@ -21,6 +24,7 @@
 pub mod arena;
 pub mod attdb;
 pub mod builder;
+pub mod cold;
 pub mod embedder;
 pub mod gather;
 pub mod index;
@@ -34,6 +38,7 @@ pub mod tier;
 pub use arena::{ApmArena, ApmId};
 pub use attdb::{AdmitOutcome, AttentionDb};
 pub use builder::DbBuilder;
+pub use cold::{ColdPromotion, ColdTier};
 pub use policy::{AdmissionPolicy, LayerProfile, SelectivePolicy};
 pub use semhash::SemanticSketcher;
 pub use stats::MemoStats;

@@ -53,6 +53,21 @@ pub const WARM_VERSION: u32 = 2;
 /// layout; see `docs/PERSISTENCE.md`).
 pub const WARM_COMPAT_VERSIONS: [u32; 2] = [1, 2];
 
+/// Magic of the cold tier's per-layer index log (`memo/cold.rs`): the
+/// append-only id→slot record stream that makes the file-backed cold
+/// arena recoverable across restarts. Versioned here, alongside the
+/// other on-disk formats, under the same policy: bump on any layout or
+/// producer change, loaders accept exactly the versions they parse, and
+/// a rejected file recovers by starting the (cache) tier cold. The
+/// layout itself is documented in `docs/PERSISTENCE.md`.
+pub const COLD_MAGIC: &[u8; 4] = b"ATCD";
+
+/// Current cold index-log format version.
+pub const COLD_VERSION: u32 = 1;
+
+/// Cold index-log versions this build can replay.
+pub const COLD_COMPAT_VERSIONS: [u32; 1] = [1];
+
 fn w_u32(w: &mut impl Write, x: u32) -> Result<()> {
     w.write_all(&x.to_le_bytes())?;
     Ok(())

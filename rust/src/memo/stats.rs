@@ -40,6 +40,9 @@ pub struct LayerCounters {
     /// Miss rows skipped by intra-batch dedup (a near-identical entry —
     /// often from the same batch — was already stored).
     pub deduped: u64,
+    /// Eviction victims demoted into the cold spill tier instead of
+    /// dropped (0 without a cold tier; never exceeds `evicted`).
+    pub demoted: u64,
 }
 
 /// Whole-engine memoization statistics.
@@ -106,6 +109,11 @@ impl MemoStats {
     /// Total intra-batch-dedup skips across layers.
     pub fn total_deduped(&self) -> u64 {
         self.layers.iter().map(|l| l.deduped).sum()
+    }
+
+    /// Total cold-tier demotions across layers (0 without a cold tier).
+    pub fn total_demoted(&self) -> u64 {
+        self.layers.iter().map(|l| l.demoted).sum()
     }
 }
 

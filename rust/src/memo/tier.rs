@@ -53,6 +53,16 @@
 //! * **Lock-free stats**: `layer_len`/`total_entries`/`resident_bytes`
 //!   read per-shard atomics refreshed at publish (and publish-skip) time
 //!   instead of walking every shard's lock.
+//! * **Cold spill tier** (optional — [`MemoTier::with_cold_tier`]):
+//!   clock victims demote out of the hot arena into a file-backed cold
+//!   arena (`memo/cold.rs`) on the writer path, under the same shard
+//!   mutex that evicted them; a hot-snapshot miss falls through to a
+//!   cold probe, and a qualifying cold hit *promotes* back into the hot
+//!   tier through the ordinary [`MemoTier::admit_batch`] path. Cold
+//!   payload reads validate the same tenancy-epoch stamps as hot ones,
+//!   so a racing promotion can never serve foreign bytes; see the
+//!   `cold` module docs for the on-disk format and crash-recovery
+//!   story.
 //!
 //! Since PR 6 a steady-state hit acquires **no mutex or rwlock
 //! anywhere**: the reuse track is chunked atomics (`attdb.rs`), so a held
@@ -74,9 +84,10 @@ use std::sync::{Arc, Mutex, RwLock};
 use crate::config::{MemoConfig, ModelConfig};
 use crate::memo::arena::StoreHandle;
 use crate::memo::attdb::{LayerDb, Lookup};
+use crate::memo::cold::ColdTier;
 use crate::memo::index::HnswParams;
 use crate::memo::policy::{AdmissionPolicy, LayerProfile};
-use crate::Result;
+use crate::{Error, Result};
 
 /// What one batched admission did (per layer shard).
 #[derive(Debug, Clone, Copy, Default)]
@@ -88,6 +99,9 @@ pub struct TierAdmitOutcome {
     /// Rows skipped because a near-identical entry (often from the same
     /// batch) was already stored.
     pub deduped: u64,
+    /// Eviction victims demoted into the cold tier instead of dropped
+    /// (0 without a cold tier; never exceeds `evicted`).
+    pub demoted: u64,
 }
 
 /// One layer shard: a seqlock-published snapshot plus its writer state.
@@ -314,6 +328,15 @@ pub struct MemoTier {
     retire_high_water: AtomicU64,
     /// Retired generations force-reclaimed past the cap.
     forced_reclaims: AtomicU64,
+    /// The optional file-backed cold spill tier (`memo/cold.rs`): clock
+    /// victims demote into it, hot misses fall through to it.
+    cold: Option<Arc<ColdTier>>,
+    /// Hot-snapshot misses served from the cold tier.
+    cold_hits: AtomicU64,
+    /// Cold hits re-admitted into the hot tier.
+    promotions: AtomicU64,
+    /// Hot clock victims moved into the cold tier (vs dropped).
+    demotions: AtomicU64,
     /// Process-unique id keying the thread-local snapshot cache — two
     /// tiers must never share a cache entry even if one is dropped and
     /// the other happens to be allocated at the same address.
@@ -380,8 +403,50 @@ impl MemoTier {
             publish_skips: AtomicU64::new(0),
             retire_high_water: AtomicU64::new(0),
             forced_reclaims: AtomicU64::new(0),
+            cold: None,
+            cold_hits: AtomicU64::new(0),
+            promotions: AtomicU64::new(0),
+            demotions: AtomicU64::new(0),
             tier_id: NEXT_TIER_ID.fetch_add(1, Ordering::Relaxed),
         }
+    }
+
+    /// [`MemoTier::new`] plus an attached file-backed cold spill tier
+    /// rooted at `memo.cold_tier_dir` with a per-layer budget of
+    /// `memo.cold_capacity` entries (see the module docs and
+    /// `memo/cold.rs`): clock victims demote into it instead of being
+    /// dropped, hot misses fall through to it, and cold hits promote
+    /// back through the normal admission path. Fallible, unlike
+    /// [`MemoTier::new`]: the cold directory is created — and any
+    /// previous run's shard files replayed — right here.
+    pub fn with_cold_tier(cfg: &ModelConfig, seq_len: usize,
+                          params: HnswParams,
+                          memo: &MemoConfig) -> Result<MemoTier> {
+        let mut tier = MemoTier::new(cfg, seq_len, params, memo);
+        tier.attach_cold_tier(memo)?;
+        Ok(tier)
+    }
+
+    /// Attach a cold spill tier to an already-built tier — the path a
+    /// warm-restored tier (`persist::load_warm`) takes, since the warm
+    /// loader constructs the tier itself. `memo.cold_tier_dir` must be
+    /// set and `memo.cold_capacity` positive; the cold shards take
+    /// their dimensions from this tier, so they always match the hot
+    /// family. Call before the tier is shared: demotions only consult
+    /// the cold tier at admission time, but entries evicted before the
+    /// attach are gone, not spilled.
+    pub fn attach_cold_tier(&mut self, memo: &MemoConfig) -> Result<()> {
+        let dir = memo.cold_tier_dir.as_ref().ok_or_else(|| {
+            Error::config("cold tier requires --cold-tier-dir")
+        })?;
+        self.cold = Some(Arc::new(ColdTier::open(
+            dir,
+            self.shards.len(),
+            self.embed_dim,
+            self.apm_elems,
+            memo.cold_capacity,
+        )?));
+        Ok(())
     }
 
     /// Number of layer shards.
@@ -491,6 +556,51 @@ impl MemoTier {
         self.forced_reclaims.load(Ordering::Relaxed)
     }
 
+    /// The attached cold spill tier, if this tier was built through
+    /// [`MemoTier::with_cold_tier`].
+    pub fn cold(&self) -> Option<&ColdTier> {
+        self.cold.as_deref()
+    }
+
+    /// Hot-snapshot misses served from the cold tier since creation.
+    pub fn cold_hits(&self) -> u64 {
+        self.cold_hits.load(Ordering::Relaxed)
+    }
+
+    /// Cold hits re-admitted into the hot tier since creation.
+    pub fn promotions(&self) -> u64 {
+        self.promotions.load(Ordering::Relaxed)
+    }
+
+    /// Hot clock victims demoted into the cold tier since creation
+    /// (without a cold tier a victim is simply dropped and this stays 0).
+    pub fn demotions(&self) -> u64 {
+        self.demotions.load(Ordering::Relaxed)
+    }
+
+    /// Live entries across the cold tier's shards (0 without one).
+    pub fn cold_entries(&self) -> usize {
+        self.cold.as_ref().map_or(0, |c| c.total_entries())
+    }
+
+    /// Bytes of the cold tier's file-backed payload arenas (0 without
+    /// one).
+    pub fn cold_resident_bytes(&self) -> usize {
+        self.cold.as_ref().map_or(0, |c| c.resident_bytes())
+    }
+
+    /// Fraction of all live entries resident in the hot tier — 1.0
+    /// without a cold tier (or when both tiers are empty).
+    pub fn hot_resident_ratio(&self) -> f64 {
+        let hot = self.total_entries();
+        let cold = self.cold_entries();
+        if hot + cold == 0 {
+            1.0
+        } else {
+            hot as f64 / (hot + cold) as f64
+        }
+    }
+
     /// Retired-but-unreclaimed snapshot generations of one layer shard
     /// (diagnostics/tests; takes the shard's writer mutex briefly).
     pub fn retired_generations(&self, layer: usize) -> usize {
@@ -577,12 +687,68 @@ impl MemoTier {
     /// as a reused slot with stale bytes. If the epoch stamp nevertheless
     /// fails to validate, the shard's sequence counter decides: changed ⇒
     /// retry against the fresh snapshot, unchanged ⇒ genuinely gone.
+    ///
+    /// With a cold tier attached ([`MemoTier::with_cold_tier`]), a hot
+    /// miss falls through to a cold probe; a qualifying cold hit is
+    /// served into `dst` and promoted back into the hot tier.
     pub fn lookup_fetch(&self, layer: usize, feature: &[f32], ef: usize,
                         min_similarity: f32,
                         dst: &mut [f32]) -> Option<Lookup> {
-        self.seqlock_read(layer, |snap| {
+        if let Some(hit) = self.seqlock_read(layer, |snap| {
             snap.fetch(feature, ef, min_similarity, dst)
-        })
+        }) {
+            return Some(hit);
+        }
+        self.cold_fallthrough(layer, feature, ef, min_similarity, dst)
+    }
+
+    /// The two-tier miss path: probe the cold tier (if one is attached)
+    /// after the hot snapshot missed. A qualifying cold hit is served
+    /// from `dst` and *promoted* — the entry leaves the cold shard and
+    /// re-enters the hot tier through the ordinary admission path, with
+    /// a dedup threshold no similarity can reach so neither the prepass
+    /// nor per-row dedup can swallow the row. The returned id/epoch are
+    /// resolved against the fresh hot snapshot, keeping the [`Lookup`]
+    /// contract identical to a hot hit. Lock order is hot-writer →
+    /// cold-shard, never the reverse: `take_nearest` releases the cold
+    /// lock before the re-admit takes the hot writer mutex.
+    fn cold_fallthrough(&self, layer: usize, feature: &[f32], ef: usize,
+                        min_similarity: f32,
+                        dst: &mut [f32]) -> Option<Lookup> {
+        let cold = self.cold.as_ref()?;
+        let promo =
+            cold.take_nearest(layer, feature, min_similarity, dst)?;
+        self.cold_hits.fetch_add(1, Ordering::Relaxed);
+        match self.admit_batch(
+            layer,
+            &[(promo.feature.as_slice(), &dst[..])],
+            2.0,
+            ef,
+        ) {
+            Ok(_) => {
+                self.promotions.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => log::warn!(
+                "memo tier layer {layer}: promotion re-admit failed \
+                 (cold entry served once, then dropped): {e}"
+            ),
+        }
+        match self.lookup(layer, &promo.feature, ef) {
+            Some(h) => Some(Lookup {
+                id: h.id,
+                epoch: h.epoch,
+                similarity: promo.similarity,
+            }),
+            None => {
+                // The promoted entry vanished between admit and lookup
+                // (racing eviction, or the re-admit failed). Never
+                // fabricate an id/epoch — a made-up stamp could
+                // validate against an unrelated live entry. Report a
+                // clean miss and leave no partial payload behind.
+                dst.fill(0.0);
+                None
+            }
+        }
     }
 
     /// The optimistic reader loop shared by the fetch entry points: run
@@ -616,14 +782,29 @@ impl MemoTier {
     /// batch whose rows all miss (the common case on a cold tier) never
     /// pays the multi-MB batch-APM allocation just because an online tier
     /// exists. Same snapshot discipline (and torn-read retry) as
-    /// [`MemoTier::lookup_fetch`].
+    /// [`MemoTier::lookup_fetch`] — including the cold fallthrough,
+    /// which allocates the batch buffer only once a lock-shared cold
+    /// *probe* clears the similarity floor, so a two-tier total miss
+    /// stays allocation-free too.
     pub fn lookup_fetch_lazy(&self, layer: usize, feature: &[f32],
                              ef: usize, min_similarity: f32,
                              buf: &mut Vec<f32>, rows: usize,
                              row: usize) -> Option<Lookup> {
-        self.seqlock_read(layer, |snap| {
+        if let Some(hit) = self.seqlock_read(layer, |snap| {
             snap.fetch_lazy(feature, ef, min_similarity, buf, rows, row)
-        })
+        }) {
+            return Some(hit);
+        }
+        let cold = self.cold.as_ref()?;
+        cold.probe(layer, feature, min_similarity)?;
+        if buf.is_empty() {
+            buf.resize(rows * self.apm_elems, 0.0);
+        }
+        let dst =
+            &mut buf[row * self.apm_elems..(row + 1) * self.apm_elems];
+        // A racing promoter may have taken the entry since the probe;
+        // the fallthrough then misses and the row stays zeroed.
+        self.cold_fallthrough(layer, feature, ef, min_similarity, dst)
     }
 
     /// Start a mutation: clone the published snapshot into a private
@@ -748,6 +929,7 @@ impl MemoTier {
             admitted: 0,
             evicted: 0,
             deduped: rows.len() as u64,
+            demoted: 0,
         })
     }
 
@@ -810,7 +992,46 @@ impl MemoTier {
                     }
                 }
             }
-            let admitted = db.admit(feature, apm, self.capacity)?;
+            let admitted = match self.cold.as_deref() {
+                Some(cold) => {
+                    // Demote-on-evict: capture each clock victim before
+                    // the working copy drops it, then move it into the
+                    // cold tier — still under this shard's writer mutex
+                    // (the hot-writer → cold-shard lock order; nothing
+                    // ever holds them in reverse).
+                    let mut demoted: Vec<(Vec<f32>, Vec<f32>)> =
+                        Vec::new();
+                    let o = db.admit_demoting(
+                        feature,
+                        apm,
+                        self.capacity,
+                        &mut |df, da| {
+                            demoted.push((df.to_vec(), da.to_vec()));
+                        },
+                    )?;
+                    for (df, da) in demoted {
+                        match cold.insert(layer, &df, &da) {
+                            Ok(_) => {
+                                out.demoted += 1;
+                                self.demotions
+                                    .fetch_add(1, Ordering::Relaxed);
+                            }
+                            // Never fail the batch here: the hot-side
+                            // eviction already happened in the working
+                            // copy, so erroring out would leave the
+                            // entry counted in neither tier. Dropping
+                            // it is exactly the pre-cold-tier contract.
+                            Err(e) => log::warn!(
+                                "memo tier layer {layer}: demotion to \
+                                 the cold tier failed (entry dropped): \
+                                 {e}"
+                            ),
+                        }
+                    }
+                    o
+                }
+                None => db.admit(feature, apm, self.capacity)?,
+            };
             out.admitted += 1;
             out.evicted += admitted.evicted.len() as u64;
         }
@@ -1296,5 +1517,163 @@ mod tests {
         assert_eq!(tier.layer_len(1), 3);
         assert_eq!(tier.total_entries(), 6);
         assert!(!tier.is_layer_empty(0));
+    }
+
+    fn cold_dir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn cold_memo(capacity: usize, cold_cap: usize,
+                 dir: &std::path::Path) -> MemoConfig {
+        MemoConfig {
+            cold_tier_dir: Some(dir.to_path_buf()),
+            cold_capacity: cold_cap,
+            ..memo(capacity, false)
+        }
+    }
+
+    /// The tentpole contract end to end: clock victims demote into the
+    /// cold tier instead of vanishing, a hot miss falls through to a
+    /// cold hit with the original payload, and the hit promotes the
+    /// entry back into the hot tier (demoting a fresh victim in turn).
+    #[test]
+    fn demote_on_evict_spills_and_promotes() {
+        let c = cfg(1);
+        let d = cold_dir("attmemo_tier_cold_promote");
+        let tier = MemoTier::with_cold_tier(
+            &c, 16, HnswParams::default(), &cold_memo(2, 8, &d))
+            .unwrap();
+        let mut rng = Pcg32::seeded(83);
+        let elems = c.apm_elems(16);
+        let feats: Vec<Vec<f32>> =
+            (0..4).map(|_| unit(&mut rng, c.embed_dim)).collect();
+        for (k, f) in feats.iter().enumerate() {
+            let apm = vec![(10 + k) as f32; elems];
+            tier.admit_batch(0, &[(f.as_slice(), apm.as_slice())],
+                             2.0, 32)
+                .unwrap();
+        }
+        assert_eq!(tier.layer_len(0), 2, "hot budget enforced");
+        assert_eq!(tier.cold_entries(), 2, "victims demoted, not dropped");
+        assert_eq!(tier.demotions(), 2);
+        assert_eq!(tier.evictions(), 2, "eviction count is unchanged");
+        assert!((tier.hot_resident_ratio() - 0.5).abs() < 1e-9);
+        assert!(tier.cold_resident_bytes() > 0);
+
+        // The first admitted feature was clock-demoted: a hot lookup
+        // misses, the two-tier fetch serves it from cold and promotes.
+        let mut dst = vec![0.0f32; elems];
+        let hit = tier
+            .lookup_fetch(0, &feats[0], 32, 0.9, &mut dst)
+            .expect("cold fallthrough must serve the demoted entry");
+        assert!(hit.similarity > 0.999);
+        assert_eq!(dst, vec![10.0f32; elems],
+                   "the original payload tag survives the round trip");
+        assert_eq!(tier.cold_hits(), 1);
+        assert_eq!(tier.promotions(), 1);
+        assert_eq!(tier.layer_len(0), 2, "promotion respects the budget");
+        assert_eq!(tier.cold_entries(), 2,
+                   "promotion's own eviction demotes a fresh victim");
+        assert_eq!(tier.demotions(), 3);
+
+        // Now resident in the hot tier: the next fetch is a hot hit.
+        let hot = tier
+            .lookup_fetch(0, &feats[0], 32, 0.9, &mut dst)
+            .expect("promoted entry must be hot now");
+        assert!(hot.similarity > 0.999);
+        assert_eq!(tier.cold_hits(), 1, "second fetch never went cold");
+    }
+
+    /// The lazy two-tier path: a cold *miss* leaves the batch buffer
+    /// unallocated; a cold hit allocates it, fills exactly the row, and
+    /// promotes like the eager path.
+    #[test]
+    fn lazy_fetch_allocates_only_on_cold_hit() {
+        let c = cfg(1);
+        let d = cold_dir("attmemo_tier_cold_lazy");
+        let tier = MemoTier::with_cold_tier(
+            &c, 16, HnswParams::default(), &cold_memo(1, 8, &d))
+            .unwrap();
+        let mut rng = Pcg32::seeded(89);
+        let elems = c.apm_elems(16);
+        let feats: Vec<Vec<f32>> =
+            (0..2).map(|_| unit(&mut rng, c.embed_dim)).collect();
+        for (k, f) in feats.iter().enumerate() {
+            let apm = vec![(10 + k) as f32; elems];
+            tier.admit_batch(0, &[(f.as_slice(), apm.as_slice())],
+                             2.0, 32)
+                .unwrap();
+        }
+        // feats[0] was demoted; an unrelated probe misses both tiers.
+        let probe = unit(&mut rng, c.embed_dim);
+        let mut buf = Vec::new();
+        assert!(tier
+            .lookup_fetch_lazy(0, &probe, 32, 0.9, &mut buf, 2, 0)
+            .is_none());
+        assert!(buf.is_empty(),
+                "a two-tier total miss must stay allocation-free");
+        let hit = tier
+            .lookup_fetch_lazy(0, &feats[0], 32, 0.9, &mut buf, 2, 1)
+            .expect("cold hit through the lazy path");
+        assert!(hit.similarity > 0.999);
+        assert_eq!(buf.len(), 2 * elems);
+        assert_eq!(&buf[elems..], vec![10.0f32; elems].as_slice(),
+                   "the cold payload lands in the requested row");
+        assert_eq!(&buf[..elems], vec![0.0f32; elems].as_slice(),
+                   "other rows stay zeroed");
+        assert_eq!(tier.promotions(), 1);
+    }
+
+    /// Demoted entries survive a restart: reopening the cold directory
+    /// replays the shard files and the two-tier fetch serves the
+    /// original payloads into a fresh (empty) hot tier.
+    #[test]
+    fn cold_tier_survives_restart() {
+        let c = cfg(1);
+        let d = cold_dir("attmemo_tier_cold_restart");
+        let elems = c.apm_elems(16);
+        let mut rng = Pcg32::seeded(97);
+        let feats: Vec<Vec<f32>> =
+            (0..3).map(|_| unit(&mut rng, c.embed_dim)).collect();
+        {
+            let tier = MemoTier::with_cold_tier(
+                &c, 16, HnswParams::default(), &cold_memo(1, 8, &d))
+                .unwrap();
+            for (k, f) in feats.iter().enumerate() {
+                let apm = vec![(10 + k) as f32; elems];
+                tier.admit_batch(0, &[(f.as_slice(), apm.as_slice())],
+                                 2.0, 32)
+                    .unwrap();
+            }
+            assert_eq!(tier.cold_entries(), 2);
+        }
+        let tier = MemoTier::with_cold_tier(
+            &c, 16, HnswParams::default(), &cold_memo(1, 8, &d))
+            .unwrap();
+        assert_eq!(tier.total_entries(), 0, "hot tier restarts empty");
+        assert_eq!(tier.cold_entries(), 2,
+                   "demoted entries survive the restart");
+        let mut dst = vec![0.0f32; elems];
+        tier.lookup_fetch(0, &feats[1], 32, 0.9, &mut dst)
+            .expect("recovered cold entry must be servable");
+        assert_eq!(dst, vec![11.0f32; elems],
+                   "payload tag intact across the restart");
+    }
+
+    /// Configuration errors surface at construction, not first use.
+    #[test]
+    fn with_cold_tier_rejects_bad_config() {
+        let c = cfg(1);
+        let err = MemoTier::with_cold_tier(
+            &c, 16, HnswParams::default(), &memo(2, false))
+            .unwrap_err();
+        assert!(format!("{err}").contains("--cold-tier-dir"), "{err}");
+        let d = cold_dir("attmemo_tier_cold_badcfg");
+        let err = MemoTier::with_cold_tier(
+            &c, 16, HnswParams::default(), &cold_memo(2, 0, &d))
+            .unwrap_err();
+        assert!(format!("{err}").contains("--cold-capacity"), "{err}");
     }
 }

@@ -252,6 +252,15 @@ impl Engine {
         if let Some(tier) = &self.online {
             self.metrics.online_entries = tier.total_entries() as u64;
             self.metrics.publish_skips = tier.publish_skips();
+            self.metrics.hot_resident_bytes = tier.resident_bytes() as u64;
+            if tier.cold().is_some() {
+                self.metrics.cold_entries = tier.cold_entries() as u64;
+                self.metrics.cold_hits = tier.cold_hits();
+                self.metrics.promotions = tier.promotions();
+                self.metrics.demotions = tier.demotions();
+                self.metrics.cold_resident_bytes =
+                    tier.cold_resident_bytes() as u64;
+            }
         }
         Ok(BatchResult { logits, labels, memo_hits, seconds })
     }
@@ -470,6 +479,7 @@ impl Engine {
                 self.stats.layers[li].admitted += out.admitted;
                 self.stats.layers[li].evicted += out.evicted;
                 self.stats.layers[li].deduped += out.deduped;
+                self.stats.layers[li].demoted += out.demoted;
                 self.metrics.admit_offered += rows.len() as u64;
                 self.metrics.admissions += out.admitted;
                 self.metrics.evictions += out.evicted;

@@ -41,6 +41,23 @@ pub struct EngineMetrics {
     /// `online_entries`: every replica reports the same shared tier, so
     /// aggregation takes the max.
     pub publish_skips: u64,
+    /// Live entries across the cold spill tier's shards (0 without one).
+    /// Tier-level gauge: aggregation takes the max.
+    pub cold_entries: u64,
+    /// Hot-snapshot misses served from the cold tier. Tier-level counter
+    /// shared by every replica, so aggregation takes the max.
+    pub cold_hits: u64,
+    /// Cold hits re-admitted into the hot tier. Tier-level like
+    /// `cold_hits`.
+    pub promotions: u64,
+    /// Hot clock victims demoted into the cold tier. Tier-level like
+    /// `cold_hits`.
+    pub demotions: u64,
+    /// Resident bytes of the hot tier's payload arenas. Tier-level gauge.
+    pub hot_resident_bytes: u64,
+    /// Bytes of the cold tier's file-backed payload arenas (0 without
+    /// one). Tier-level gauge.
+    pub cold_resident_bytes: u64,
     pub request_latency_ms: Summary,
     pub queue_wait_ms: Summary,
     pub batch_size: Summary,
@@ -65,6 +82,12 @@ impl Default for EngineMetrics {
             queue_depths: Vec::new(),
             online_entries: 0,
             publish_skips: 0,
+            cold_entries: 0,
+            cold_hits: 0,
+            promotions: 0,
+            demotions: 0,
+            hot_resident_bytes: 0,
+            cold_resident_bytes: 0,
             request_latency_ms: Summary::new(),
             queue_wait_ms: Summary::new(),
             batch_size: Summary::new(),
@@ -134,6 +157,21 @@ impl EngineMetrics {
                 depths.join(",")
             ));
         }
+        // The cold section appears only when a spill tier is attached —
+        // its arenas preallocate pages, so resident bytes are the
+        // reliable "a cold tier exists" signal even before any demotion.
+        if self.cold_resident_bytes > 0 || self.cold_entries > 0 {
+            s.push_str(&format!(
+                " cold(entries={} hits={} promote={} demote={} \
+                 hot_resident={:.1}MiB cold_resident={:.1}MiB)",
+                self.cold_entries,
+                self.cold_hits,
+                self.promotions,
+                self.demotions,
+                self.hot_resident_bytes as f64 / (1 << 20) as f64,
+                self.cold_resident_bytes as f64 / (1 << 20) as f64,
+            ));
+        }
         s
     }
 
@@ -162,6 +200,16 @@ impl EngineMetrics {
         }
         self.online_entries = self.online_entries.max(other.online_entries);
         self.publish_skips = self.publish_skips.max(other.publish_skips);
+        // All cold-tier fields report one shared tier (gauges *and*
+        // counters read the tier's own atomics), so max, never sum.
+        self.cold_entries = self.cold_entries.max(other.cold_entries);
+        self.cold_hits = self.cold_hits.max(other.cold_hits);
+        self.promotions = self.promotions.max(other.promotions);
+        self.demotions = self.demotions.max(other.demotions);
+        self.hot_resident_bytes =
+            self.hot_resident_bytes.max(other.hot_resident_bytes);
+        self.cold_resident_bytes =
+            self.cold_resident_bytes.max(other.cold_resident_bytes);
         self.request_latency_ms.merge(&other.request_latency_ms);
         self.queue_wait_ms.merge(&other.queue_wait_ms);
         self.batch_size.merge(&other.batch_size);
@@ -204,6 +252,30 @@ mod tests {
             ),
             "{r}"
         );
+    }
+
+    #[test]
+    fn cold_section_is_gated_and_absorbs_by_max() {
+        let mut m = EngineMetrics::new();
+        assert!(!m.report().contains("cold("),
+                "no cold tier, no cold section");
+        m.cold_entries = 12;
+        m.cold_hits = 3;
+        m.promotions = 2;
+        m.demotions = 14;
+        m.cold_resident_bytes = 2 << 20;
+        m.hot_resident_bytes = 1 << 20;
+        let r = m.report();
+        assert!(r.contains("cold(entries=12 hits=3 promote=2 demote=14"),
+                "{r}");
+        let mut other = EngineMetrics::new();
+        other.cold_entries = 10;
+        other.cold_hits = 3;
+        other.demotions = 20;
+        m.absorb(&other);
+        assert_eq!(m.cold_entries, 12, "shared gauge must not double");
+        assert_eq!(m.cold_hits, 3, "shared counter must not double");
+        assert_eq!(m.demotions, 20, "max carries the fresher reading");
     }
 
     #[test]

@@ -49,6 +49,16 @@ fn memo(capacity: usize) -> MemoConfig {
     }
 }
 
+/// [`memo`] plus a file-backed cold spill tier rooted at `dir`.
+fn two_tier_memo(hot: usize, cold: usize,
+                 dir: &std::path::Path) -> MemoConfig {
+    MemoConfig {
+        cold_tier_dir: Some(dir.to_path_buf()),
+        cold_capacity: cold,
+        ..memo(hot)
+    }
+}
+
 fn normalize(v: &mut [f32]) {
     let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
     v.iter_mut().for_each(|x| *x /= n);
@@ -687,6 +697,253 @@ fn warm_snapshot_version_one_still_restores() {
             );
         }
     }
+}
+
+/// Fault injection (satellite): crash mid-demotion — simulated by
+/// truncating a cold shard's arena or index-log file at a random byte
+/// boundary, or flipping a record byte — then reload. The recovery
+/// contract: the tier always comes up, damaged records resolve as
+/// *clean misses* (never a served torn payload), undamaged shards lose
+/// nothing, and recovery never resurrects more entries than were live
+/// at the crash.
+#[test]
+fn cold_tier_crash_truncation_recovers_to_clean_misses() {
+    const ENTRIES: usize = 16;
+    const HOT_CAP: usize = 4;
+    const COLD_CAP: usize = 32;
+    const THRESHOLD: f32 = 0.9;
+
+    let c = cfg();
+    let elems = c.apm_elems(SEQ);
+    let cents = centres(171, ENTRIES, c.embed_dim);
+
+    // Populate a master cold directory through real demotion churn
+    // (payload tag = 10 + entry index, stamped across the whole APM),
+    // then "crash" by dropping the tier with no shutdown ritual.
+    let master = std::env::temp_dir().join("attmemo_cold_fault_master");
+    let _ = std::fs::remove_dir_all(&master);
+    let total_cold_at_crash;
+    {
+        let m = two_tier_memo(HOT_CAP, COLD_CAP, &master);
+        let tier =
+            MemoTier::with_cold_tier(&c, SEQ, HnswParams::default(), &m)
+                .unwrap();
+        for li in 0..LAYERS {
+            for (k, centre) in cents.iter().enumerate() {
+                let apm = vec![(10 + k) as f32; elems];
+                tier.admit_batch(
+                    li, &[(centre.as_slice(), apm.as_slice())],
+                    THRESHOLD, 48,
+                )
+                .unwrap();
+            }
+        }
+        assert!(tier.demotions() > 0, "populate never demoted");
+        total_cold_at_crash = tier.cold_entries();
+        assert!(total_cold_at_crash > 0);
+    }
+
+    let mut rng = Pcg32::seeded(0xfa017);
+    for round in 0..8usize {
+        let dir = std::env::temp_dir()
+            .join(format!("attmemo_cold_fault_{round}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for li in 0..LAYERS {
+            for ext in ["apm", "idx"] {
+                let name = format!("cold-layer{li}.{ext}");
+                std::fs::copy(master.join(&name), dir.join(&name))
+                    .unwrap();
+            }
+        }
+        // Damage layer 0 only: alternate victims across rounds, truncate
+        // in the first six rounds, flip a record byte in the last two.
+        let victim = if round % 2 == 0 { "apm" } else { "idx" };
+        let path = dir.join(format!("cold-layer0.{victim}"));
+        let len = std::fs::metadata(&path).unwrap().len() as usize;
+        if round < 6 {
+            let cut = rng.range_usize(0, len + 1) as u64;
+            let f = std::fs::OpenOptions::new()
+                .write(true)
+                .open(&path)
+                .unwrap();
+            f.set_len(cut).unwrap();
+        } else {
+            let mut bytes = std::fs::read(&path).unwrap();
+            // Keep the 16-byte ATCD header intact: header damage is a
+            // loud configuration error by policy, not a recovery case.
+            let floor = if victim == "idx" { 16 } else { 0 };
+            let i = rng.range_usize(floor, bytes.len());
+            bytes[i] ^= 0xff;
+            std::fs::write(&path, &bytes).unwrap();
+        }
+
+        let m = two_tier_memo(HOT_CAP, COLD_CAP, &dir);
+        let tier =
+            MemoTier::with_cold_tier(&c, SEQ, HnswParams::default(), &m)
+                .unwrap_or_else(|e| {
+                    panic!("round {round}: recovery must survive torn \
+                            {victim}: {e}")
+                });
+        assert_eq!(tier.total_entries(), 0,
+                   "the hot tier is volatile — it restarts empty");
+        assert!(
+            tier.cold_entries() <= total_cold_at_crash,
+            "round {round}: recovery resurrected entries ({} > {})",
+            tier.cold_entries(), total_cold_at_crash
+        );
+
+        // Every lookup either serves an intact original payload or
+        // misses cleanly; the undamaged layer 1 must lose nothing.
+        let undamaged_live = tier.cold().unwrap().layer_len(1);
+        let mut dst = vec![0.0f32; elems];
+        let mut layer1_hits = 0usize;
+        for li in 0..LAYERS {
+            for (k, centre) in cents.iter().enumerate() {
+                match tier.lookup_fetch(li, centre, 48, THRESHOLD,
+                                        &mut dst) {
+                    Some(h) => {
+                        assert!(h.similarity > 0.99);
+                        let want = (10 + k) as f32;
+                        assert!(
+                            dst[0] == want
+                                && dst[elems / 2] == want
+                                && dst[elems - 1] == want,
+                            "round {round}: layer {li} entry {k} served \
+                             a torn payload (tag {})",
+                            dst[0]
+                        );
+                        if li == 1 {
+                            layer1_hits += 1;
+                        }
+                    }
+                    None => {} // torn or hot-at-crash: a clean miss
+                }
+            }
+        }
+        assert_eq!(
+            layer1_hits, undamaged_live,
+            "round {round}: the undamaged layer lost cold entries"
+        );
+        assert!(tier.cold_hits() > 0,
+                "round {round}: the sweep never touched the cold tier");
+    }
+}
+
+/// Stalled reader × two tiers (satellite): a reader pinning layer 0's
+/// hot snapshot across 64 demotion rounds — junk admissions evicting
+/// into the cold tier while promotions pull clusters back, recycling
+/// arena slots the pinned view still cites. The pinned reader must
+/// serve every hit with its original cluster tag or miss cleanly
+/// (never cold-recycled or junk bytes), and the retire-list generation
+/// cap must hold throughout the two-tier churn.
+#[test]
+fn stalled_reader_survives_two_tier_demotion_churn() {
+    const CLUSTERS: usize = 8;
+    const CAPACITY: usize = 8; // exactly the cluster set: junk evicts
+    // Ample FIFO window: a cluster's cold entry refreshes every ≤ 8
+    // rounds (~72 cold ids), far newer than the 256-id drop horizon, so
+    // junk ages out of the cold tier but clusters never do.
+    const COLD_CAP: usize = 256;
+    const ROUNDS: usize = 64;
+    const THRESHOLD: f32 = 0.9;
+
+    let c = cfg();
+    let elems = c.apm_elems(SEQ);
+    let dim = c.embed_dim;
+    let dir = std::env::temp_dir().join("attmemo_cold_stalled");
+    let _ = std::fs::remove_dir_all(&dir);
+    let m = two_tier_memo(CAPACITY, COLD_CAP, &dir);
+    let tier = MemoTier::with_cold_tier(&c, SEQ, HnswParams::default(), &m)
+        .unwrap();
+    let cents = centres(191, CLUSTERS, dim);
+
+    // Warm layer 0 (payload tag = cluster id), then pin the snapshot.
+    let mut rng = Pcg32::seeded(61);
+    let feats: Vec<Vec<f32>> = (0..CLUSTERS)
+        .map(|k| near(&mut rng, &cents[k], 0.01))
+        .collect();
+    let apms: Vec<Vec<f32>> =
+        (0..CLUSTERS).map(|k| vec![k as f32; elems]).collect();
+    let rows: Vec<(&[f32], &[f32])> = feats
+        .iter()
+        .zip(&apms)
+        .map(|(f, a)| (f.as_slice(), a.as_slice()))
+        .collect();
+    tier.admit_batch(0, &rows, THRESHOLD, 48).unwrap();
+    let stalled = tier.reader(0);
+    assert_eq!(stalled.len(), CLUSTERS, "pinned view missed the warm-up");
+
+    let mut dst = vec![0.0f32; elems];
+    let mut stalled_hits = 0usize;
+    let mut stalled_misses = 0usize;
+    for round in 0..ROUNDS {
+        // A full-capacity junk wave: every live hot entry — clusters
+        // included, whatever their reuse counters say — is evicted and
+        // demoted into the cold tier while the pinned generation blocks
+        // in-order reclaim. This makes the round's promotion below a
+        // certainty, not a clock accident.
+        let junk: Vec<Vec<f32>> = (0..CAPACITY)
+            .map(|_| {
+                let mut v: Vec<f32> =
+                    (0..dim).map(|_| rng.next_gaussian()).collect();
+                normalize(&mut v);
+                v
+            })
+            .collect();
+        let japm = vec![1000.0 + round as f32; elems];
+        let rows: Vec<(&[f32], &[f32])> = junk
+            .iter()
+            .map(|f| (f.as_slice(), japm.as_slice()))
+            .collect();
+        tier.admit_batch(0, &rows, THRESHOLD, 48).unwrap();
+        assert!(tier.layer_len(0) <= CAPACITY, "hot budget broken");
+        assert!(tier.cold().unwrap().layer_len(0) <= COLD_CAP,
+                "cold budget broken");
+        assert!(
+            tier.retired_generations(0) <= MemoTier::retire_cap(),
+            "round {round}: retire list exceeded the cap under \
+             two-tier churn"
+        );
+
+        // Pull the round's cluster back through the live path: a hot
+        // miss promotes it from cold, recycling slots under the pinned
+        // reader. The cluster set is never droppable, so this must hit.
+        let k = round % CLUSTERS;
+        let q = near(&mut rng, &cents[k], 0.01);
+        tier.lookup_fetch(0, &q, 48, THRESHOLD, &mut dst)
+            .unwrap_or_else(|| {
+                panic!("round {round}: cluster {k} lost from both tiers")
+            });
+        assert_eq!(dst[0], k as f32,
+                   "round {round}: live path served foreign bytes");
+
+        // The pinned view: an original tag end to end, or a clean miss
+        // — never bytes recycled through the cold tier's round trips.
+        let q = near(&mut rng, &cents[k], 0.01);
+        match stalled.lookup_fetch(&q, 48, THRESHOLD, &mut dst) {
+            Some(_) => {
+                stalled_hits += 1;
+                let want = k as f32;
+                assert!(
+                    dst[0] == want
+                        && dst[elems / 2] == want
+                        && dst[elems - 1] == want,
+                    "round {round}: pinned view served payload tagged \
+                     {} for cluster {k} — cold-recycled bytes leaked",
+                    dst[0]
+                );
+            }
+            None => stalled_misses += 1,
+        }
+    }
+    assert_eq!(stalled_hits + stalled_misses, ROUNDS);
+    assert!(tier.evictions() > 0, "junk churn never evicted");
+    assert!(tier.demotions() > 0, "eviction churn never demoted");
+    assert!(tier.cold_hits() > 0, "promotion path never exercised");
+    assert!(tier.promotions() > 0, "cold hits never promoted back");
+    assert!(tier.retired_generations(0) <= MemoTier::retire_cap());
+    assert_eq!(stalled.len(), CLUSTERS, "pinned view must stay frozen");
 }
 
 /// Satellite regression (skips without artifacts): a shape-mismatched

@@ -197,6 +197,182 @@ fn prop_queue_preserves_order_and_items() {
     });
 }
 
+// ---- Two-tier memo database (hot seqlock shards + cold spill) -----------
+//
+// The ops below cover the whole residency protocol: `admit` carries
+// evict + demote (clock victims spill to the cold tier under the writer
+// mutex) and, with enough churn, the cold index-log compaction; a hot-miss
+// `lookup_fetch` carries the cold probe + promotion (which itself demotes
+// a fresh victim). Features are ±eᵢ basis vectors, so distinct entries
+// have similarity ≤ 0 under both the hot cosine and the cold
+// 1−distance metric — only an exact match clears a 0.95 floor — and the
+// payload's first element doubles as the entry's identity tag.
+
+mod two_tier {
+    use attmemo::config::{MemoConfig, ModelConfig};
+    use attmemo::memo::index::HnswParams;
+    use attmemo::memo::MemoTier;
+
+    pub const DIM: usize = 8;
+    /// ±eᵢ: 16 mutually non-confusable features.
+    pub const FEATS: usize = 2 * DIM;
+
+    pub fn feat(k: usize) -> [f32; DIM] {
+        let mut f = [0.0f32; DIM];
+        f[k % DIM] = if k < DIM { 1.0 } else { -1.0 };
+        f
+    }
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            family: "bert".into(),
+            vocab_size: 256,
+            hidden: 32,
+            layers: 1,
+            heads: 2,
+            ffn: 64,
+            max_len: 16,
+            num_classes: 2,
+            rel_pos_buckets: 8,
+            embed_dim: DIM,
+            embed_hidden: 16,
+            embed_segments: 4,
+            causal: false,
+        }
+    }
+
+    /// Fresh two-tier MemoTier over a wiped cold directory.
+    pub fn tier(name: &str, hot_cap: usize,
+                cold_cap: usize) -> (MemoTier, usize) {
+        let dir = std::env::temp_dir().join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = cfg();
+        let elems = c.apm_elems(8);
+        let memo = MemoConfig {
+            online_admission: true,
+            max_db_entries: hot_cap,
+            admission_min_attempts: 0,
+            cold_tier_dir: Some(dir),
+            cold_capacity: cold_cap,
+            ..MemoConfig::default()
+        };
+        let t = MemoTier::with_cold_tier(&c, 8, HnswParams::default(), &memo)
+            .expect("cold tier open");
+        (t, elems)
+    }
+
+    /// Exact-match hot residency, observed without mutating either tier.
+    pub fn hot_has(t: &MemoTier, k: usize) -> bool {
+        t.lookup(0, &feat(k), 32)
+            .map_or(false, |h| h.similarity > 0.999)
+    }
+
+    /// Cold residency by payload tag; asserts each cold payload still
+    /// matches the feature it was stored with.
+    pub fn cold_tags(t: &MemoTier) -> Vec<usize> {
+        t.cold()
+            .expect("tier has a cold spill")
+            .entries(0)
+            .iter()
+            .map(|(_, f, payload)| {
+                let k = payload[0] as usize - 10;
+                assert!(k < FEATS, "cold payload tag {} is foreign",
+                        payload[0]);
+                assert_eq!(f.as_slice(), &feat(k)[..],
+                           "cold entry {k}'s feature was corrupted");
+                k
+            })
+            .collect()
+    }
+
+    pub fn admit(t: &MemoTier, k: usize, elems: usize) {
+        let apm = vec![(10 + k) as f32; elems];
+        t.admit_batch(0, &[(&feat(k)[..], apm.as_slice())], 0.9, 32)
+            .expect("admit");
+    }
+}
+
+#[test]
+fn prop_two_tier_budgets_and_disjointness() {
+    use two_tier::*;
+    // Tight budgets: constant demotion churn plus cold FIFO drops.
+    let (hot_cap, cold_cap) = (3usize, 6usize);
+    forall(12, |rng| {
+        let (tier, elems) =
+            tier("attmemo_prop_two_tier_tight", hot_cap, cold_cap);
+        let mut dst = vec![0.0f32; elems];
+        for _ in 0..40 {
+            let k = rng.range_usize(0, FEATS);
+            if rng.next_f32() < 0.5 {
+                // Admit only what is not already resident somewhere, so
+                // a tag can never legitimately exist in both tiers.
+                if !hot_has(&tier, k) && !cold_tags(&tier).contains(&k) {
+                    admit(&tier, k, elems);
+                }
+            } else if let Some(h) =
+                tier.lookup_fetch(0, &feat(k), 32, 0.95, &mut dst)
+            {
+                assert!(h.similarity > 0.999,
+                        "0.95 floor admits only exact matches");
+                assert_eq!(dst[0], (10 + k) as f32,
+                           "fetch served entry {k} a foreign payload");
+            }
+            // Budgets hold after every op...
+            assert!(tier.layer_len(0) <= hot_cap);
+            let cold = tier.cold().unwrap();
+            assert!(cold.layer_len(0) <= cold_cap,
+                    "cold occupancy {} over budget {}",
+                    cold.layer_len(0), cold_cap);
+            // ...and no tag is resident in both tiers at once.
+            let ctags = cold_tags(&tier);
+            for k in 0..FEATS {
+                assert!(
+                    !(hot_has(&tier, k) && ctags.contains(&k)),
+                    "entry {k} resident in both tiers"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_two_tier_conservation_under_ample_cold_budget() {
+    use std::collections::BTreeSet;
+    use two_tier::*;
+    // A cold budget that can hold the whole feature universe: nothing is
+    // ever FIFO-dropped, so every admitted entry must stay fetchable
+    // with its original payload through any demote/promote history.
+    let (hot_cap, cold_cap) = (3usize, FEATS);
+    forall(8, |rng| {
+        let (tier, elems) =
+            tier("attmemo_prop_two_tier_ample", hot_cap, cold_cap);
+        let mut admitted: BTreeSet<usize> = BTreeSet::new();
+        let mut dst = vec![0.0f32; elems];
+        for _ in 0..30 {
+            let k = rng.range_usize(0, FEATS);
+            if rng.next_f32() < 0.6 {
+                if !hot_has(&tier, k) && !cold_tags(&tier).contains(&k) {
+                    admit(&tier, k, elems);
+                    admitted.insert(k);
+                }
+            } else {
+                // Random promotions reshuffle residency mid-run.
+                let _ = tier.lookup_fetch(0, &feat(k), 32, 0.95, &mut dst);
+            }
+        }
+        for &k in &admitted {
+            let h = tier
+                .lookup_fetch(0, &feat(k), 32, 0.95, &mut dst)
+                .unwrap_or_else(|| {
+                    panic!("entry {k} was lost (admitted, never dropped)")
+                });
+            assert!(h.similarity > 0.999);
+            assert_eq!(dst[0], (10 + k) as f32,
+                       "entry {k} came back with a foreign payload");
+        }
+    });
+}
+
 #[test]
 fn prop_summary_percentiles_are_order_statistics() {
     use attmemo::util::stats::Summary;
