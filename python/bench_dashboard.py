@@ -1,0 +1,135 @@
+"""Static perf-trajectory dashboard over BENCH_history.jsonl.
+
+Renders one inline-SVG sparkline per numeric summary key across the
+recorded bench history, into a single self-contained HTML file — no
+dependencies beyond the stdlib, so CI can run it right after the bench
+smoke job and upload the page as an artifact.
+
+Usage:
+    python3 python/bench_dashboard.py BENCH_history.jsonl \
+        docs/bench_history.html
+
+Lines that fail to parse are skipped with a warning; a short or missing
+history still produces a valid (if sparse) page.
+"""
+
+import html
+import json
+import sys
+
+WIDTH, HEIGHT, PAD = 260, 48, 4
+
+PAGE = """<!doctype html>
+<html><head><meta charset="utf-8"><title>bench history</title>
+<style>
+ body {{ font: 14px/1.5 system-ui, sans-serif; margin: 2em auto;
+        max-width: 64em; color: #1a1a2e; }}
+ table {{ border-collapse: collapse; width: 100%; }}
+ td, th {{ padding: .4em .8em; border-bottom: 1px solid #ddd;
+          text-align: left; vertical-align: middle; }}
+ td.num {{ font-variant-numeric: tabular-nums; }}
+ svg {{ display: block; }}
+</style></head><body>
+<h1>Bench history</h1>
+<p>{runs} recorded run(s) from <code>{src}</code>. Newest value,
+range, and per-run sparkline for every numeric summary key.</p>
+<table>
+<tr><th>key</th><th>last</th><th>min</th><th>max</th><th>trend</th></tr>
+{rows}
+</table></body></html>
+"""
+
+
+def load_history(path):
+    """Parse the jsonl history into a list of dicts, skipping bad lines."""
+    entries = []
+    try:
+        with open(path, encoding="utf-8") as fh:
+            for n, line in enumerate(fh, 1):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    entries.append(json.loads(line))
+                except ValueError:
+                    print(f"warning: {path}:{n}: unparseable line "
+                          "skipped", file=sys.stderr)
+    except OSError as e:
+        print(f"warning: {e}; rendering empty dashboard",
+              file=sys.stderr)
+    return entries
+
+
+def numeric_keys(entries):
+    """Keys holding numbers, in order of first appearance."""
+    keys = []
+    for e in entries:
+        for k, v in e.items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                if k not in keys:
+                    keys.append(k)
+    return keys
+
+
+def sparkline(values):
+    """Inline SVG polyline through the series, min..max normalized."""
+    pts = [(i, v) for i, v in enumerate(values) if v is not None]
+    if not pts:
+        return "<svg width='%d' height='%d'></svg>" % (WIDTH, HEIGHT)
+    lo = min(v for _, v in pts)
+    hi = max(v for _, v in pts)
+    span_x = max(len(values) - 1, 1)
+    span_y = (hi - lo) or 1.0
+    coords = []
+    for i, v in pts:
+        x = PAD + (WIDTH - 2 * PAD) * i / span_x
+        y = PAD + (HEIGHT - 2 * PAD) * (1 - (v - lo) / span_y)
+        coords.append("%.1f,%.1f" % (x, y))
+    dot = coords[-1].split(",")
+    return (
+        "<svg width='%d' height='%d'>"
+        "<polyline points='%s' fill='none' stroke='#4361ee' "
+        "stroke-width='1.5'/>"
+        "<circle cx='%s' cy='%s' r='2.5' fill='#4361ee'/></svg>"
+        % (WIDTH, HEIGHT, " ".join(coords), dot[0], dot[1])
+    )
+
+
+def fmt(v):
+    if v is None:
+        return "&mdash;"
+    return "%g" % round(v, 6)
+
+
+def render(entries, src):
+    rows = []
+    for key in numeric_keys(entries):
+        series = [e.get(key) for e in entries]
+        present = [v for v in series if v is not None]
+        rows.append(
+            "<tr><td><code>%s</code></td><td class='num'>%s</td>"
+            "<td class='num'>%s</td><td class='num'>%s</td><td>%s</td>"
+            "</tr>"
+            % (html.escape(key), fmt(present[-1]), fmt(min(present)),
+               fmt(max(present)), sparkline(series))
+        )
+    return PAGE.format(runs=len(entries), src=html.escape(src),
+                       rows="\n".join(rows))
+
+
+def main(argv):
+    if len(argv) != 3:
+        print("usage: bench_dashboard.py <history.jsonl> <out.html>",
+              file=sys.stderr)
+        return 2
+    entries = load_history(argv[1])
+    page = render(entries, argv[1])
+    with open(argv[2], "w", encoding="utf-8") as fh:
+        fh.write(page)
+    print(f"wrote {argv[2]}: {len(entries)} run(s), "
+          f"{len(numeric_keys(entries))} key(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

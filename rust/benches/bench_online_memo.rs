@@ -22,6 +22,12 @@
 //!   *paraphrase-clustered* workload, where word order scatters the
 //!   min-hash but not the meaning) — both through the real router +
 //!   `form_batch` + shared tier;
+//! * a **continuous-vs-fixed batching A/B**: the same mixed-length warm
+//!   workload through `run_fixed_batch` (frozen membership, stragglers
+//!   hold their batch) and through the `ContinuousScheduler` (slots
+//!   refill at every step boundary) over a synthetic `StepEngine` with a
+//!   real shared memo tier — continuous must cut request p99 at equal
+//!   work, with no warm-hit-rate or dedup-yield regression;
 //! * an **end-to-end cold engine** over the real test workload when
 //!   artifacts are present (skipped otherwise, like every runtime bench).
 //!
@@ -684,6 +690,313 @@ fn signature_ab_section(table: &mut TableWriter) -> (AbOutcome, AbOutcome) {
     (sem, pre)
 }
 
+/// Tallies shared out of [`CbSimEngine`] — the scheduler owns the engine
+/// outright, so the A/B reads its counters through this handle after the
+/// run.
+#[derive(Default)]
+struct CbCounters {
+    steps: std::sync::atomic::AtomicU64,
+    attempts: std::sync::atomic::AtomicU64,
+    hits: std::sync::atomic::AtomicU64,
+    offered: std::sync::atomic::AtomicU64,
+    dedup: std::sync::atomic::AtomicU64,
+}
+
+/// Synthetic `StepEngine` for the continuous-vs-fixed A/B: each step runs
+/// the real memo-tier lookup + admission per packed row (cluster index
+/// and a per-request jitter nonce ride in the first two tokens), then
+/// spin-waits a deterministic compute cost — a fixed per-step overhead
+/// plus a per-row term. The overhead is what the fixed arm pays for every
+/// straggler step of a mixed-length batch and what the continuous arm
+/// saves by refilling freed slots.
+struct CbSimEngine {
+    tier: MemoTier,
+    centres: Vec<Vec<f32>>,
+    counters: Arc<CbCounters>,
+    seq: usize,
+    elems: usize,
+    threshold: f32,
+    base: std::time::Duration,
+    per_row: std::time::Duration,
+}
+
+impl attmemo::serving::StepEngine for CbSimEngine {
+    fn seq_len(&self) -> usize {
+        self.seq
+    }
+
+    fn step(&mut self, ids: &attmemo::tensor::tensor::IdTensor)
+        -> attmemo::Result<attmemo::serving::BatchResult> {
+        use std::sync::atomic::Ordering::Relaxed;
+
+        let t0 = std::time::Instant::now();
+        let n = ids.shape[0];
+        let mut buf = vec![0.0f32; self.elems];
+        let mut memo_hits = vec![0u32; n];
+        let mut miss: Vec<Vec<f32>> = Vec::new();
+        for (row, toks) in ids.data.chunks_exact(self.seq).enumerate() {
+            let c = (toks[0] - 4) as usize % self.centres.len();
+            let mut f = self.centres[c].clone();
+            let mut jitter = Pcg32::seeded(toks[1] as u64);
+            for x in f.iter_mut() {
+                *x += 0.005 * jitter.next_gaussian();
+            }
+            normalize(&mut f);
+            self.counters.attempts.fetch_add(1, Relaxed);
+            if self
+                .tier
+                .lookup_fetch(0, &f, 48, self.threshold, &mut buf)
+                .is_some()
+            {
+                self.counters.hits.fetch_add(1, Relaxed);
+                memo_hits[row] = 1;
+            } else {
+                miss.push(f);
+            }
+        }
+        if !miss.is_empty() {
+            let apm = vec![1.0f32; self.elems];
+            let rows: Vec<(&[f32], &[f32])> = miss
+                .iter()
+                .map(|f| (f.as_slice(), apm.as_slice()))
+                .collect();
+            let out =
+                self.tier.admit_batch(0, &rows, self.threshold, 48)?;
+            self.counters.offered.fetch_add(rows.len() as u64, Relaxed);
+            self.counters.dedup.fetch_add(out.deduped, Relaxed);
+        }
+        let cost = self.base + self.per_row * n as u32;
+        while t0.elapsed() < cost {
+            std::hint::spin_loop();
+        }
+        self.counters.steps.fetch_add(1, Relaxed);
+        Ok(attmemo::serving::BatchResult {
+            logits: attmemo::tensor::tensor::Tensor::new(
+                vec![n, 2], vec![0.0; n * 2])?,
+            labels: vec![1; n],
+            memo_hits,
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Outcome of one continuous-vs-fixed arm.
+struct CbOutcome {
+    /// Request p99 over the warm mixed-length phase (ms, arrival→final
+    /// chunk).
+    p99_ms: f64,
+    /// Hits / lookup attempts over the whole run (cold wave included).
+    hit_rate: f64,
+    /// dedup_skips / rows offered to admission (cold wave).
+    dedup_yield: f64,
+    /// Engine steps executed across both phases.
+    steps: u64,
+}
+
+/// One arm of the continuous-vs-fixed A/B. Two phases through the arm's
+/// own serving machinery:
+///
+/// 1. a **cold wave** — per cluster, exactly one slot-sized cohort of
+///    single-step requests. Single-step cohorts behave identically under
+///    both schedulers (the whole cohort joins, steps once, and leaves
+///    together), so admission order, hit pattern, and dedup yield are
+///    deterministic and *equal across arms* — the A/B isolates
+///    scheduling, not admission luck;
+/// 2. a **warm mixed-length phase** — interleaved clusters, 1..=4 steps
+///    per request, every lookup a hit. Here the arms genuinely differ:
+///    the fixed arm freezes each batch until its longest member drains
+///    (paying the per-step overhead for ever-emptier batches), while the
+///    continuous arm refills freed slots at every step boundary. Request
+///    p99 is measured over this phase only.
+fn run_cb_arm(continuous: bool, table: &mut TableWriter) -> CbOutcome {
+    use attmemo::config::MemoConfig;
+    use attmemo::serving::affinity::AffinityRouter;
+    use attmemo::serving::batcher::form_batch;
+    use attmemo::serving::{run_fixed_batch, ContinuousScheduler, Request};
+    use attmemo::util::stats::Summary;
+    use std::sync::atomic::Ordering::Relaxed;
+    use std::time::Duration;
+
+    const CLUSTERS: usize = 8;
+    const SLOTS: usize = 16;
+    const THRESHOLD: f32 = 0.8;
+    let waves = smoke::iters(48, 12);
+
+    let cfg = sim_cfg();
+    let seq = 32usize;
+    let elems = cfg.apm_elems(seq);
+    let memo = MemoConfig {
+        online_admission: true,
+        max_db_entries: 0,
+        admission_min_attempts: 0,
+        intra_batch_dedup: true,
+        ..MemoConfig::default()
+    };
+    let mut rng = Pcg32::seeded(113);
+    let centres: Vec<Vec<f32>> =
+        (0..CLUSTERS).map(|_| unit_vec(&mut rng, cfg.embed_dim)).collect();
+    let counters = Arc::new(CbCounters::default());
+    let engine = CbSimEngine {
+        tier: MemoTier::new(&cfg, seq, Default::default(), &memo),
+        centres,
+        counters: counters.clone(),
+        seq,
+        elems,
+        threshold: THRESHOLD,
+        base: Duration::from_micros(500),
+        per_row: Duration::from_micros(15),
+    };
+    let router: AffinityRouter<Request> =
+        AffinityRouter::new(CLUSTERS, 1, 8192);
+
+    // Per-request channel capacity == step count, so chunk sends never
+    // block in either arm: the A/B measures scheduling, not backpressure
+    // (the stall path has its own e2e tests).
+    let mut next_id = 0u64;
+    let mut push = |c: usize, steps: usize| {
+        let ids = vec![4 + c as i32, 1 + next_id as i32];
+        let (req, rx) =
+            Request::streaming(next_id, ids, c as u64, steps, steps);
+        next_id += 1;
+        router.push(c as u64, req).unwrap();
+        rx
+    };
+
+    let (mut sched, mut fixed_engine) = if continuous {
+        (Some(ContinuousScheduler::new(engine, SLOTS,
+                                       Duration::from_millis(50))),
+         None)
+    } else {
+        (None, Some(engine))
+    };
+    let mut drive = |n: usize, lat: &mut Summary| {
+        let mut done = 0usize;
+        while done < n {
+            if let Some(s) = sched.as_mut() {
+                let r = s.poll(&router, 0, Duration::from_millis(1))
+                    .unwrap();
+                for f in &r.finished {
+                    lat.record(f.request_ms);
+                }
+                done += r.finished.len();
+            } else {
+                let batch = form_batch(&router, 0, SLOTS,
+                                       Duration::from_millis(1),
+                                       Duration::from_millis(1));
+                if batch.is_empty() {
+                    continue;
+                }
+                let d = run_fixed_batch(fixed_engine.as_mut().unwrap(),
+                                        batch)
+                    .unwrap();
+                for f in &d {
+                    lat.record(f.request_ms);
+                }
+                done += d.len();
+            }
+        }
+    };
+
+    // Phase 1: the cold wave, cluster-blocked so every cohort is pure.
+    let mut cold_rxs = Vec::with_capacity(CLUSTERS * SLOTS);
+    for c in 0..CLUSTERS {
+        for _ in 0..SLOTS {
+            cold_rxs.push(push(c, 1));
+        }
+    }
+    let mut cold_lat = Summary::new();
+    drive(CLUSTERS * SLOTS, &mut cold_lat);
+
+    // Phase 2: warm mixed-length traffic, interleaved arrival order.
+    let mut expect = Vec::new();
+    let mut warm_rxs = Vec::new();
+    for w in 0..waves {
+        for c in 0..CLUSTERS {
+            let steps = 1 + (w + c) % 4;
+            expect.push(steps);
+            warm_rxs.push(push(c, steps));
+        }
+    }
+    let mut lat = Summary::new();
+    drive(waves * CLUSTERS, &mut lat);
+
+    // Every streamed response arrived complete, in order, ending with a
+    // final chunk — in both arms.
+    for (i, (rx, steps)) in
+        cold_rxs.iter().map(|rx| (rx, &1usize))
+            .chain(warm_rxs.iter().zip(&expect))
+            .enumerate()
+    {
+        let chunks: Vec<_> = rx.try_iter().collect();
+        assert_eq!(chunks.len(), *steps, "request {i} chunk count");
+        assert!(chunks.last().unwrap().last, "request {i} final chunk");
+    }
+
+    let attempts = counters.attempts.load(Relaxed);
+    let hits = counters.hits.load(Relaxed);
+    let offered = counters.offered.load(Relaxed);
+    let dedup = counters.dedup.load(Relaxed);
+    let out = CbOutcome {
+        p99_ms: lat.p99(),
+        hit_rate: hits as f64 / attempts.max(1) as f64,
+        dedup_yield: dedup as f64 / offered.max(1) as f64,
+        steps: counters.steps.load(Relaxed),
+    };
+    table.row(&[
+        if continuous { "continuous" } else { "fixed" }.to_string(),
+        (CLUSTERS * SLOTS + waves * CLUSTERS).to_string(),
+        out.steps.to_string(),
+        format!("{:.2}", out.p99_ms),
+        format!("{:.3}", out.hit_rate),
+        format!("{:.3}", out.dedup_yield),
+    ]);
+    out
+}
+
+/// A/B: iteration-level vs fixed-membership batching over the same
+/// workload and engine cost model. Continuous must execute strictly
+/// fewer engine steps (the mechanism: freed slots refill instead of
+/// riding out stragglers) and cut request p99, with hit rate and dedup
+/// yield within 0.05 of the fixed arm.
+fn continuous_batching_section(table: &mut TableWriter)
+    -> (CbOutcome, CbOutcome) {
+    let fixed = run_cb_arm(false, table);
+    let cont = run_cb_arm(true, table);
+    println!(
+        "continuous batching A/B: p99 continuous={:.2}ms fixed={:.2}ms; \
+         steps {} vs {}; hit rate {:.3} vs {:.3}; dedup yield {:.3} vs \
+         {:.3}",
+        cont.p99_ms, fixed.p99_ms, cont.steps, fixed.steps,
+        cont.hit_rate, fixed.hit_rate, cont.dedup_yield,
+        fixed.dedup_yield,
+    );
+    assert!(
+        cont.steps < fixed.steps,
+        "continuous batching must execute fewer engine steps on a \
+         mixed-length workload: {} vs {}",
+        cont.steps, fixed.steps
+    );
+    assert!(
+        cont.p99_ms < fixed.p99_ms,
+        "continuous batching must cut request p99: {:.2}ms vs {:.2}ms \
+         fixed",
+        cont.p99_ms, fixed.p99_ms
+    );
+    assert!(
+        (cont.hit_rate - fixed.hit_rate).abs() <= 0.05,
+        "warm hit rate must match across arms: continuous {:.3} vs \
+         fixed {:.3}",
+        cont.hit_rate, fixed.hit_rate
+    );
+    assert!(
+        (cont.dedup_yield - fixed.dedup_yield).abs() <= 0.05,
+        "dedup yield must survive continuous batching: continuous {:.3} \
+         vs fixed {:.3}",
+        cont.dedup_yield, fixed.dedup_yield
+    );
+    (cont, fixed)
+}
+
 fn main() {
     attmemo::util::logger::init();
     let mut summary = SmokeSummary::new();
@@ -759,19 +1072,41 @@ fn main() {
     summary.push("steady_hit_rate_semantic", sem.steady_hit_rate);
     summary.push("steady_hit_rate_prefix", pre.steady_hit_rate);
 
+    let mut cb = TableWriter::new(
+        "Continuous vs fixed batching A/B — mixed-length warm workload \
+         after an identical cold wave (16 slots, 8 clusters, shared tier)",
+        &["arm", "requests", "engine_steps", "p99_ms", "hit_rate",
+          "dedup_yield"],
+    );
+    let (cb_cont, cb_fixed) = continuous_batching_section(&mut cb);
+    cb.emit(Some(std::path::Path::new(
+        "bench_results/online_memo_continuous_ab.csv")));
+    summary.push("cb_p99_ms", cb_cont.p99_ms);
+    summary.push("cb_dedup_yield", cb_cont.dedup_yield);
+    summary.push("fixed_p99_ms", cb_fixed.p99_ms);
+
     // Merged, not overwritten: bench_db_scaling's cold-tier arm records
     // its own keys into the same file.
     summary.emit_merged(std::path::Path::new("BENCH_smoke.json"));
-    // CI trend (BENCH_HISTORY=1): gate the warm hit rate against the last
-    // committed history entry, then append this run's summary as a new
-    // JSON line — the cross-PR perf trajectory the artifacts alone never
-    // gave us.
+    // CI trend (BENCH_HISTORY=1): gate the warm hit rate, the continuous
+    // arm's dedup yield (floor — the refactor must not erode it) and p99
+    // (ceiling, with generous headroom for runner variance) against the
+    // last committed history entries, then append this run's summary as
+    // one new JSON line — the cross-PR perf trajectory the artifacts
+    // alone never gave us. The check-only gates run first; the single
+    // appending call carries every key into the history.
     if std::env::var("BENCH_HISTORY").map(|v| v == "1").unwrap_or(false) {
-        match summary.check_and_append_history(
-            std::path::Path::new("BENCH_history.jsonl"),
-            "sim_warm_hit_rate",
-            0.05,
-        ) {
+        let path = std::path::Path::new("BENCH_history.jsonl");
+        let gates = summary
+            .check_history(path, "cb_dedup_yield", 0.05)
+            .and_then(|()| {
+                summary.check_history_ceiling(path, "cb_p99_ms", 2.5)
+            })
+            .and_then(|()| {
+                summary.check_and_append_history(
+                    path, "sim_warm_hit_rate", 0.05)
+            });
+        match gates {
             Ok(()) => println!("history → BENCH_history.jsonl"),
             Err(e) => {
                 eprintln!("BENCH history gate failed: {e}");

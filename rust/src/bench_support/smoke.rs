@@ -131,12 +131,73 @@ impl SmokeSummary {
     pub fn check_and_append_history(
         &self, path: &Path, key: &str, margin: f64,
     ) -> std::result::Result<(), String> {
+        self.check_history(path, key, margin)?;
+        let mut text = std::fs::read_to_string(path).unwrap_or_default();
+        if !text.is_empty() && !text.ends_with('\n') {
+            text.push('\n');
+        }
+        text.push_str(&self.history_line());
+        text.push('\n');
+        std::fs::write(path, text)
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
+
+    /// The lower-bound gate of [`SmokeSummary::check_and_append_history`]
+    /// without the append: fail when this run's `key` dropped more than
+    /// `margin` below the most recent history entry carrying it. Use for
+    /// the extra keys of a bench that already appends its summary through
+    /// one `check_and_append_history` call — gating a second key must not
+    /// write the history line twice.
+    pub fn check_history(
+        &self, path: &Path, key: &str, margin: f64,
+    ) -> std::result::Result<(), String> {
+        let (previous, current) = self.gate_values(path, key)?;
+        if let (Some(prev), Some(cur)) = (previous, current) {
+            if cur + margin < prev {
+                return Err(format!(
+                    "{key} regressed: {cur:.4} vs last recorded {prev:.4} \
+                     (allowed margin {margin})"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Upper-bound (smaller-is-better) variant of
+    /// [`SmokeSummary::check_history`]: fail when this run's `key` grew
+    /// past `prev * allowed_ratio`. A ratio, not an absolute margin,
+    /// because the ceilinged keys are latencies whose scale is
+    /// machine-dependent; pick it generously (e.g. 2.0) so only step
+    /// regressions trip in CI. Non-appending, like `check_history`.
+    pub fn check_history_ceiling(
+        &self, path: &Path, key: &str, allowed_ratio: f64,
+    ) -> std::result::Result<(), String> {
+        let (previous, current) = self.gate_values(path, key)?;
+        if let (Some(prev), Some(cur)) = (previous, current) {
+            if cur > prev * allowed_ratio {
+                return Err(format!(
+                    "{key} regressed: {cur:.4} vs last recorded {prev:.4} \
+                     (allowed ratio {allowed_ratio})"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Shared reverse scan for the history gates: this run's `key` plus
+    /// the most recent history entry at `path` carrying it. Missing file
+    /// or absent key → `None` (the gates pass; the first entry seeds the
+    /// trajectory); a line that exists but fails to parse is a hard
+    /// error so a mangled history can never silently disable a gate.
+    fn gate_values(
+        &self, path: &Path, key: &str,
+    ) -> std::result::Result<(Option<f64>, Option<f64>), String> {
         let current = self
             .entries
             .iter()
             .find(|(k, _)| k.as_str() == key)
             .map(|(_, v)| *v);
-        let mut text = std::fs::read_to_string(path).unwrap_or_default();
+        let text = std::fs::read_to_string(path).unwrap_or_default();
         let mut previous = None;
         for line in text.lines().rev().filter(|l| !l.trim().is_empty()) {
             match crate::config::json::Json::parse(line) {
@@ -156,21 +217,7 @@ impl SmokeSummary {
                 }
             }
         }
-        if let (Some(prev), Some(cur)) = (previous, current) {
-            if cur + margin < prev {
-                return Err(format!(
-                    "{key} regressed: {cur:.4} vs last recorded {prev:.4} \
-                     (allowed margin {margin})"
-                ));
-            }
-        }
-        if !text.is_empty() && !text.ends_with('\n') {
-            text.push('\n');
-        }
-        text.push_str(&self.history_line());
-        text.push('\n');
-        std::fs::write(path, text)
-            .map_err(|e| format!("write {}: {e}", path.display()))
+        Ok((previous, current))
     }
 }
 
@@ -269,6 +316,48 @@ mod tests {
             .check_and_append_history(&path, "sim_warm_hit_rate", 0.05)
             .unwrap_err();
         assert!(err.contains("regressed"), "{err}");
+    }
+
+    #[test]
+    fn non_appending_gates_check_without_writing() {
+        let dir = std::env::temp_dir().join("attmemo_smoke_hist_cb");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hist.jsonl");
+        let _ = std::fs::remove_file(&path);
+
+        // Empty history: both gates pass and neither creates the file.
+        let mut s = SmokeSummary::new();
+        s.push("cb_p99_ms", 4.0);
+        s.push("cb_dedup_yield", 0.6);
+        s.check_history(&path, "cb_dedup_yield", 0.05).unwrap();
+        s.check_history_ceiling(&path, "cb_p99_ms", 2.0).unwrap();
+        assert!(!path.exists(), "non-appending gates must not write");
+
+        // Seed via the appending gate, then exercise both directions.
+        s.check_and_append_history(&path, "cb_dedup_yield", 0.05)
+            .unwrap();
+        let before = std::fs::read_to_string(&path).unwrap();
+
+        let mut worse = SmokeSummary::new();
+        worse.push("cb_p99_ms", 9.0); // > 4.0 * 2.0 → ceiling trips
+        worse.push("cb_dedup_yield", 0.4); // 0.4 + 0.05 < 0.6 → floor trips
+        let err = worse
+            .check_history_ceiling(&path, "cb_p99_ms", 2.0)
+            .unwrap_err();
+        assert!(err.contains("cb_p99_ms"), "{err}");
+        let err =
+            worse.check_history(&path, "cb_dedup_yield", 0.05).unwrap_err();
+        assert!(err.contains("regressed"), "{err}");
+
+        // Within bounds: lower latency always passes the ceiling, a
+        // within-margin dip passes the floor — and the file is untouched.
+        let mut ok = SmokeSummary::new();
+        ok.push("cb_p99_ms", 2.5);
+        ok.push("cb_dedup_yield", 0.57);
+        ok.check_history_ceiling(&path, "cb_p99_ms", 2.0).unwrap();
+        ok.check_history(&path, "cb_dedup_yield", 0.05).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), before,
+                   "check-only gates must never append");
     }
 
     /// Satellite: the CI trend gate — first entries seed, equal values

@@ -164,6 +164,28 @@ AFFINITY ROUTING (serve)
                         (--set affinity_max_buckets=N caps growth,
                         default 64)
 
+CONTINUOUS BATCHING (serve)
+  --continuous-batching
+                        replace the one-shot fixed-batch loop with the
+                        iteration-level scheduler: sequences join and
+                        leave the in-flight batch at every step
+                        boundary and responses stream back as chunks
+                        (STREAM protocol verb) with per-client
+                        backpressure — a slow reader stalls only its
+                        own slot, never the batch
+  --no-continuous-batching
+                        force the legacy fixed-batch loop (the
+                        default; overrides --set
+                        continuous_batching=on for A/B runs)
+  --max-inflight N      in-flight sequence slots per replica under
+                        continuous batching (default 32)
+  --client-stall-ms N   stall budget before a backpressured sequence
+                        yields its slot and parks (default 50); it
+                        rejoins once its client drains a chunk
+  --chunk-depth N       bounded per-client response channel depth
+                        (default 4): the backpressure window between
+                        the scheduler and a streaming reader
+
 SHARED MEMO TIER (serve/eval)
   --replicas N          engine replicas pulling from one request queue;
                         all replicas share one online memo tier, so a
@@ -353,6 +375,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.affinity_buckets = 1;
         cfg.affinity_adaptive = false;
     }
+    if args.flag("continuous-batching") {
+        cfg.continuous_batching = true;
+    }
+    if args.flag("no-continuous-batching") {
+        // The explicit off-switch wins over --set for easy A/B runs.
+        cfg.continuous_batching = false;
+    }
+    cfg.max_inflight =
+        args.opt_usize("max-inflight", cfg.max_inflight)?.max(1);
+    cfg.client_stall_ms = args
+        .opt_usize("client-stall-ms", cfg.client_stall_ms as usize)?
+        as u64;
+    cfg.chunk_depth =
+        args.opt_usize("chunk-depth", cfg.chunk_depth)?.max(1);
     let memo = parse_memo(args, level)?;
     let built = load_or_build_db(args, &rt, &family, cfg.seq_len, level)?;
     let tier =
@@ -591,6 +627,28 @@ mod tests {
         );
         assert_eq!(a.opt_usize("signature-prefix-len", 32).unwrap(), 16);
         assert!(a.flag("adaptive-buckets"));
+    }
+
+    #[test]
+    fn continuous_batching_flags_parse() {
+        let a = Args::parse(&argv(&[
+            "serve", "--continuous-batching", "--max-inflight", "16",
+            "--client-stall-ms", "20", "--chunk-depth", "2",
+        ]))
+        .unwrap();
+        assert!(a.flag("continuous-batching"));
+        assert!(!a.flag("no-continuous-batching"));
+        assert_eq!(a.opt_usize("max-inflight", 32).unwrap(), 16);
+        assert_eq!(a.opt_usize("client-stall-ms", 50).unwrap(), 20);
+        assert_eq!(a.opt_usize("chunk-depth", 4).unwrap(), 2);
+    }
+
+    #[test]
+    fn no_continuous_batching_is_a_bare_flag() {
+        let a =
+            Args::parse(&argv(&["serve", "--no-continuous-batching"]))
+                .unwrap();
+        assert!(a.flag("no-continuous-batching"));
     }
 
     #[test]

@@ -259,6 +259,23 @@ pub struct ServingConfig {
     /// Upper bound on adaptive bucket growth
     /// (`--set affinity_max_buckets=N`).
     pub affinity_max_buckets: usize,
+    /// Iteration-level (continuous) batching: sequences join and leave
+    /// the in-flight batch at every step boundary and responses stream
+    /// back as chunks (`--continuous-batching`). Off by default — the
+    /// legacy fixed-batch path stays the baseline
+    /// (`--no-continuous-batching`).
+    pub continuous_batching: bool,
+    /// Slots in the continuous scheduler's in-flight batch
+    /// (`--max-inflight`). Plays the role `max_batch` plays on the
+    /// legacy path.
+    pub max_inflight: usize,
+    /// Stall budget (ms) before a backpressured sequence yields its
+    /// in-flight slot and is parked (`--client-stall-ms`). `0` parks on
+    /// the first full-channel chunk.
+    pub client_stall_ms: u64,
+    /// Bound of each request's streaming-chunk channel — the per-client
+    /// backpressure depth (`--set chunk_depth=N`).
+    pub chunk_depth: usize,
 }
 
 impl Default for ServingConfig {
@@ -277,6 +294,10 @@ impl Default for ServingConfig {
             signature_prefix_len: 32,
             affinity_adaptive: false,
             affinity_max_buckets: 64,
+            continuous_batching: false,
+            max_inflight: 32,
+            client_stall_ms: 50,
+            chunk_depth: 4,
         }
     }
 }
@@ -307,6 +328,18 @@ impl ServingConfig {
             }
             "affinity_max_buckets" => {
                 self.affinity_max_buckets = parse_num(key, value)?.max(1)
+            }
+            "continuous_batching" => {
+                self.continuous_batching = parse_bool(key, value)?
+            }
+            "max_inflight" => {
+                self.max_inflight = parse_num(key, value)?.max(1)
+            }
+            "client_stall_ms" => {
+                self.client_stall_ms = parse_num(key, value)? as u64
+            }
+            "chunk_depth" => {
+                self.chunk_depth = parse_num(key, value)?.max(1)
             }
             other => {
                 return Err(Error::config(format!(
@@ -416,6 +449,30 @@ mod tests {
         assert!(s.set("affinity_adaptive", "maybe").is_err());
         s.set("affinity_max_buckets", "128").unwrap();
         assert_eq!(s.affinity_max_buckets, 128);
+    }
+
+    #[test]
+    fn continuous_batching_overrides() {
+        let s = ServingConfig::default();
+        assert!(!s.continuous_batching,
+                "legacy fixed batching stays the default");
+        assert_eq!(s.max_inflight, 32);
+        assert_eq!(s.client_stall_ms, 50);
+        assert_eq!(s.chunk_depth, 4);
+        let mut s = ServingConfig::default();
+        s.set("continuous_batching", "on").unwrap();
+        assert!(s.continuous_batching);
+        s.set("continuous_batching", "0").unwrap();
+        assert!(!s.continuous_batching);
+        assert!(s.set("continuous_batching", "perhaps").is_err());
+        s.set("max_inflight", "0").unwrap();
+        assert_eq!(s.max_inflight, 1, "in-flight slots clamp to 1");
+        s.set("max_inflight", "64").unwrap();
+        assert_eq!(s.max_inflight, 64);
+        s.set("client_stall_ms", "0").unwrap();
+        assert_eq!(s.client_stall_ms, 0, "zero budget parks immediately");
+        s.set("chunk_depth", "0").unwrap();
+        assert_eq!(s.chunk_depth, 1, "chunk channel bound clamps to 1");
     }
 
     #[test]

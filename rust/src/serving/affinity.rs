@@ -203,6 +203,12 @@ struct Inner<T> {
     /// Buckets that received at least one push in the current adaptive
     /// observation window.
     touched: Vec<bool>,
+    /// Monotone count of accepted pushes. Batchers snapshot it before an
+    /// affine drain and sleep on `not_empty` until it moves
+    /// ([`AffinityRouter::wait_newer_push`]) — a counter, not a boolean,
+    /// so a push that lands between the drain and the wait is never a
+    /// lost wakeup.
+    pushes: u64,
     window_pops: u64,
     window_steals: u64,
     resizes: u64,
@@ -264,6 +270,7 @@ impl<T> AffinityRouter<T> {
                 closed: false,
                 next_home: vec![0; replicas],
                 touched: vec![false; buckets],
+                pushes: 0,
                 window_pops: 0,
                 window_steals: 0,
                 resizes: 0,
@@ -315,7 +322,12 @@ impl<T> AffinityRouter<T> {
         g.touched[b] = true;
         g.buckets[b].push_back((sig, item));
         g.len += 1;
-        self.not_empty.notify_one();
+        g.pushes += 1;
+        // notify_all, not notify_one: pop_timeout waiters and
+        // wait_newer_push waiters share this condvar, and a single wakeup
+        // delivered to a batcher whose home buckets don't cover the pushed
+        // item would strand it for another replica's waiter.
+        self.not_empty.notify_all();
         Ok(())
     }
 
@@ -332,7 +344,9 @@ impl<T> AffinityRouter<T> {
                 g.touched[b] = true;
                 g.buckets[b].push_back((sig, item));
                 g.len += 1;
-                self.not_empty.notify_one();
+                g.pushes += 1;
+                // See try_push for why this is notify_all.
+                self.not_empty.notify_all();
                 return Ok(());
             }
             g = self.not_full.wait(g).unwrap();
@@ -534,6 +548,37 @@ impl<T> AffinityRouter<T> {
             self.not_full.notify_all();
         }
         out
+    }
+
+    /// Current value of the accepted-push counter. Snapshot it *before*
+    /// checking the queue for work, then hand it to
+    /// [`AffinityRouter::wait_newer_push`]: any push that raced the check
+    /// has already advanced the counter, so the wait returns immediately
+    /// instead of sleeping through available work.
+    pub fn push_seq(&self) -> u64 {
+        self.inner.lock().unwrap().pushes
+    }
+
+    /// Block until the push counter moves past `seen`, the router closes,
+    /// or `timeout` elapses; returns the counter's current value. This is
+    /// the batcher's straggler wait: parked on the `not_empty` condvar
+    /// (woken by every push) rather than sleep-polling, so an idle
+    /// batcher costs nothing and reacts to a push immediately.
+    pub fn wait_newer_push(&self, seen: u64, timeout: Duration) -> u64 {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.pushes != seen || g.closed {
+                return g.pushes;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return g.pushes;
+            }
+            let (guard, _) =
+                self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
     }
 
     /// Total queued requests across buckets.

@@ -1,5 +1,9 @@
-//! Dynamic batcher: fuses queued requests into engine batches under a
-//! max-batch / max-wait policy (the vLLM-style continuous batch former).
+//! Per-replica batching loop, in two flavours selected by
+//! `ServingConfig::continuous_batching`: the legacy fixed path fuses
+//! queued requests into one-shot batches under a max-batch / max-wait
+//! policy, while the continuous path runs the iteration-level scheduler
+//! in `serving::schedule` (sequences join and leave the in-flight batch
+//! at every step boundary).
 //!
 //! The server runs one batcher per engine replica, all popping from the
 //! same [`AffinityRouter`]: each batcher prefers its *home* affinity
@@ -17,8 +21,10 @@ use std::time::{Duration, Instant};
 use crate::config::ServingConfig;
 use crate::serving::affinity::AffinityRouter;
 use crate::serving::engine::Engine;
-use crate::serving::request::{Request, Response};
-use crate::tensor::tensor::IdTensor;
+use crate::serving::request::Request;
+use crate::serving::schedule::{
+    run_fixed_batch, ContinuousScheduler, FinishedSeq,
+};
 use crate::Result;
 
 /// Form one batch for `replica`: block up to `idle_wait` for the first
@@ -42,15 +48,27 @@ pub fn form_batch<T>(queue: &AffinityRouter<T>, replica: usize,
     let mut batch = vec![first];
     let deadline = Instant::now() + max_wait;
     while batch.len() < max_batch {
+        // Snapshot the push counter *before* draining: a push racing the
+        // drain advances it, so the wait below returns immediately
+        // instead of sleeping through the work.
+        let seen = queue.push_seq();
         let more = queue.drain_affine(replica, bucket,
                                       max_batch - batch.len());
         let idle = more.is_empty();
         batch.extend(more);
-        if batch.len() >= max_batch || Instant::now() >= deadline {
+        let now = Instant::now();
+        if batch.len() >= max_batch || now >= deadline {
             break;
         }
         if idle {
-            std::thread::sleep(Duration::from_micros(200));
+            if queue.is_closed() {
+                break;
+            }
+            // Park on the router's condvar until the next push (or the
+            // batch deadline) — the old 200 µs sleep-poll burned a core
+            // per idle batcher and added up to 200 µs to every
+            // straggler's latency.
+            queue.wait_newer_push(seen, deadline - now);
         }
     }
     batch
@@ -78,42 +96,49 @@ impl Batcher {
                    Duration::from_millis(self.cfg.max_wait_ms), idle_wait)
     }
 
-    /// Execute one batch and reply to every request.
+    /// Execute one fixed-membership batch and stream every reply. Each
+    /// member is timestamped at batch start (inside `run_fixed_batch`),
+    /// so `queue_seconds` is a real arrival→batch-start interval — no
+    /// whole-batch `result.seconds` subtraction, no clamp. The engine
+    /// mutex is held only inside each forward pass (the `StepEngine`
+    /// impl locks per step); chunk sends and latency recording happen
+    /// outside it, so a slow reply channel never blocks the engine for
+    /// the other replicas' batchers or the STATS path.
     fn serve_batch(&self, batch: Vec<Request>) -> Result<()> {
-        let n = batch.len();
-        let seq = self.cfg.seq_len;
-        let mut data = Vec::with_capacity(n * seq);
-        for r in &batch {
-            debug_assert_eq!(r.ids.len(), seq);
-            data.extend_from_slice(&r.ids);
-        }
-        let ids = IdTensor::new(vec![n, seq], data)?;
-
-        let mut engine = self.engine.lock().unwrap();
-        let result = engine.infer(&ids)?;
-        for (i, req) in batch.into_iter().enumerate() {
-            let queue_seconds = req.arrived.elapsed().as_secs_f64()
-                - result.seconds;
-            let resp = Response {
-                id: req.id,
-                logits: result.logits.row(i).to_vec(),
-                label: result.labels[i],
-                memo_hits: result.memo_hits[i],
-                queue_seconds: queue_seconds.max(0.0),
-                compute_seconds: result.seconds,
-            };
-            engine
-                .metrics
-                .request_latency_ms
-                .record(req.arrived.elapsed().as_secs_f64() * 1e3);
-            engine.metrics.queue_wait_ms.record(resp.queue_seconds * 1e3);
-            let _ = req.reply.send(resp); // receiver may have gone away
-        }
+        let mut engine = Arc::clone(&self.engine);
+        let done = run_fixed_batch(&mut engine, batch)?;
+        self.record_finished(&done);
         Ok(())
     }
 
-    /// Batch loop; returns when the queue is closed and drained.
+    /// Record per-request latencies under one short metrics lock (after
+    /// all replies went out).
+    fn record_finished(&self, done: &[FinishedSeq]) {
+        if done.is_empty() {
+            return;
+        }
+        let mut engine = self.engine.lock().unwrap();
+        for f in done {
+            engine.metrics.request_latency_ms.record(f.request_ms);
+            engine.metrics.queue_wait_ms.record(f.queue_ms);
+        }
+    }
+
+    /// Batch loop; returns when the queue is closed and drained. With
+    /// `continuous_batching` set this is the iteration-level scheduler,
+    /// otherwise the legacy fixed-batch loop (still the default, and the
+    /// A/B baseline).
     pub fn run(&self) {
+        if self.cfg.continuous_batching {
+            self.run_continuous();
+        } else {
+            self.run_fixed();
+        }
+    }
+
+    /// Legacy loop: form a batch behind the max-wait deadline, run it to
+    /// completion, repeat.
+    fn run_fixed(&self) {
         loop {
             let batch = self.next_batch(Duration::from_millis(50));
             if batch.is_empty() {
@@ -124,6 +149,44 @@ impl Batcher {
             }
             if let Err(e) = self.serve_batch(batch) {
                 log::error!("batcher[{}]: batch failed: {e}", self.replica);
+            }
+        }
+    }
+
+    /// Continuous loop: one scheduler iteration per pass — sequences
+    /// join and leave at every step boundary, chunks stream back with
+    /// per-client backpressure.
+    fn run_continuous(&self) {
+        let mut sched = ContinuousScheduler::new(
+            Arc::clone(&self.engine),
+            self.cfg.max_inflight,
+            Duration::from_millis(self.cfg.client_stall_ms),
+        );
+        loop {
+            match sched.poll(&self.queue, self.replica,
+                             Duration::from_millis(50)) {
+                Ok(r) => {
+                    if r.progressed() {
+                        let mut engine = self.engine.lock().unwrap();
+                        let m = &mut engine.metrics;
+                        m.cb_steps += u64::from(r.ran_step);
+                        m.cb_joins += (r.joins + r.rejoins) as u64;
+                        m.cb_stalls += r.stalls as u64;
+                        m.cb_parks += r.parks as u64;
+                        for f in &r.finished {
+                            m.request_latency_ms.record(f.request_ms);
+                            m.queue_wait_ms.record(f.queue_ms);
+                        }
+                    }
+                }
+                Err(e) => log::error!(
+                    "batcher[{}]: step failed: {e}", self.replica
+                ),
+            }
+            if sched.is_idle() && self.queue.is_closed()
+                && self.queue.is_empty()
+            {
+                return;
             }
         }
     }

@@ -227,8 +227,34 @@ impl Engine {
             && self.opts.level != MemoLevel::Off
     }
 
-    /// Run one batch of token id rows.
+    /// Whether the model family is causal — a step's argmax is a next
+    /// token (appended by the scheduler for multi-step requests) rather
+    /// than a class label.
+    pub fn causal(&self) -> bool {
+        self.runner.config().causal
+    }
+
+    /// Prefill half of the continuous-batching API: normalize a joining
+    /// request's token ids to the engine's fixed sequence length (pad
+    /// with `PAD`, truncate overflow) so the row can be packed into the
+    /// in-flight batch tensor. O(seq_len) bookkeeping; all compute is
+    /// charged per iteration by [`Engine::step_batch`].
+    pub fn prefill(&self, ids: &mut Vec<i32>) {
+        ids.resize(self.seq_len, crate::data::tokenizer::PAD);
+    }
+
+    /// Run one batch of token id rows — the single-shot (legacy) entry
+    /// point, now an alias for one [`Engine::step_batch`] iteration.
     pub fn infer(&mut self, ids: &IdTensor) -> Result<BatchResult> {
+        self.step_batch(ids)
+    }
+
+    /// Step half of the continuous-batching API: one full forward pass
+    /// over the packed rows of an in-flight batch. Each row's per-layer
+    /// memo lookups run against a fresh [`MemoTier`] shard snapshot taken
+    /// this iteration (inside `run_layer`), so sequences that joined a
+    /// step ago immediately see what the previous step admitted.
+    pub fn step_batch(&mut self, ids: &IdTensor) -> Result<BatchResult> {
         let t0 = Instant::now();
         let n = ids.shape[0];
         let mut memo_hits = vec![0u32; n];

@@ -58,6 +58,16 @@ pub struct EngineMetrics {
     /// Bytes of the cold tier's file-backed payload arenas (0 without
     /// one). Tier-level gauge.
     pub cold_resident_bytes: u64,
+    /// Continuous-batching scheduler iterations run (0 on the legacy
+    /// fixed path — the presence gate for the `cb(...)` report section).
+    pub cb_steps: u64,
+    /// Sequences admitted into the in-flight batch (fresh joins plus
+    /// rejoins of previously parked sequences).
+    pub cb_joins: u64,
+    /// Chunks that hit a full per-client channel (backpressure events).
+    pub cb_stalls: u64,
+    /// Sequences that exhausted the stall budget and yielded their slot.
+    pub cb_parks: u64,
     pub request_latency_ms: Summary,
     pub queue_wait_ms: Summary,
     pub batch_size: Summary,
@@ -88,6 +98,10 @@ impl Default for EngineMetrics {
             demotions: 0,
             hot_resident_bytes: 0,
             cold_resident_bytes: 0,
+            cb_steps: 0,
+            cb_joins: 0,
+            cb_stalls: 0,
+            cb_parks: 0,
             request_latency_ms: Summary::new(),
             queue_wait_ms: Summary::new(),
             batch_size: Summary::new(),
@@ -172,6 +186,15 @@ impl EngineMetrics {
                 self.cold_resident_bytes as f64 / (1 << 20) as f64,
             ));
         }
+        // Continuous-batching section: present only when the iteration
+        // scheduler actually ran (legacy-path reports stay byte-stable).
+        if self.cb_steps > 0 {
+            s.push_str(&format!(
+                " cb(steps={} joins={} stalls={} parks={})",
+                self.cb_steps, self.cb_joins, self.cb_stalls,
+                self.cb_parks,
+            ));
+        }
         s
     }
 
@@ -210,6 +233,12 @@ impl EngineMetrics {
             self.hot_resident_bytes.max(other.hot_resident_bytes);
         self.cold_resident_bytes =
             self.cold_resident_bytes.max(other.cold_resident_bytes);
+        // Per-replica scheduler counters: each batcher owns its own
+        // scheduler, so these sum like requests/batches.
+        self.cb_steps += other.cb_steps;
+        self.cb_joins += other.cb_joins;
+        self.cb_stalls += other.cb_stalls;
+        self.cb_parks += other.cb_parks;
         self.request_latency_ms.merge(&other.request_latency_ms);
         self.queue_wait_ms.merge(&other.queue_wait_ms);
         self.batch_size.merge(&other.batch_size);
@@ -276,6 +305,25 @@ mod tests {
         assert_eq!(m.cold_entries, 12, "shared gauge must not double");
         assert_eq!(m.cold_hits, 3, "shared counter must not double");
         assert_eq!(m.demotions, 20, "max carries the fresher reading");
+    }
+
+    #[test]
+    fn cb_section_is_gated_and_absorbs_by_sum() {
+        let mut m = EngineMetrics::new();
+        assert!(!m.report().contains("cb("),
+                "legacy path must not grow a cb section");
+        m.cb_steps = 4;
+        m.cb_joins = 6;
+        m.cb_stalls = 2;
+        m.cb_parks = 1;
+        let r = m.report();
+        assert!(r.contains("cb(steps=4 joins=6 stalls=2 parks=1)"), "{r}");
+        let mut other = EngineMetrics::new();
+        other.cb_steps = 3;
+        other.cb_parks = 2;
+        m.absorb(&other);
+        assert_eq!(m.cb_steps, 7, "per-replica counters sum");
+        assert_eq!(m.cb_parks, 3);
     }
 
     #[test]

@@ -6,10 +6,15 @@
 //! alike — by token prefix or, in semantic mode, by meaning through the
 //! embedding table — share a bucket; batchers prefer home buckets,
 //! work-steal when idle, and the bucket space can adaptively resize) →
-//! dynamic batcher (`batcher`) → inference engine (`engine`, where
-//! memoization happens) → response. `metrics` records per-stage latency
-//! for the paper's Table 4 breakdown plus the affinity/dedup gauges.
-//! `queue` keeps the plain single-FIFO `BoundedQueue` primitive.
+//! per-replica batching loop (`batcher`): either the legacy one-shot
+//! fixed-batch path or, with `continuous_batching`, the iteration-level
+//! scheduler in `schedule` (sequences join and leave a persistent
+//! in-flight batch at every step boundary, responses stream back as
+//! chunks with per-client backpressure) → inference engine (`engine`,
+//! where memoization happens) → streamed response. `metrics` records
+//! per-stage latency for the paper's Table 4 breakdown plus the
+//! affinity/dedup/scheduler gauges. `queue` keeps the plain single-FIFO
+//! `BoundedQueue` primitive.
 
 pub mod affinity;
 pub mod batcher;
@@ -17,12 +22,17 @@ pub mod engine;
 pub mod metrics;
 pub mod queue;
 pub mod request;
+pub mod schedule;
 pub mod server;
 
 pub use affinity::{bucket_for, bucket_of, signature, AffinityRouter,
                    Signer};
 pub use batcher::{form_batch, Batcher};
-pub use engine::{Engine, EngineOptions};
+pub use engine::{BatchResult, Engine, EngineOptions};
 pub use metrics::EngineMetrics;
 pub use queue::BoundedQueue;
-pub use request::{Request, RequestId, Response};
+pub use request::{Request, RequestId, Response, ResponseChunk};
+pub use schedule::{
+    run_fixed_batch, ContinuousScheduler, FinishedSeq, InFlightBatch,
+    IterReport, StepEngine,
+};

@@ -1,7 +1,21 @@
 //! Request/response types for the serving path.
+//!
+//! Since the continuous-batching refactor the reply side is a *stream*:
+//! every request carries a bounded [`ResponseChunk`] channel and receives
+//! one chunk per scheduler iteration it rides in (`max_steps` total, the
+//! final one flagged `last`). The bounded channel is the per-client
+//! backpressure mechanism — a consumer that stops draining fills only its
+//! own channel, stalling (then parking) only its own slot instead of the
+//! whole batch. Single-shot `INFER` requests are the degenerate case:
+//! `max_steps == 1`, one `last` chunk.
 
 use std::sync::mpsc;
 use std::time::Instant;
+
+/// Default bound of a request's chunk channel: deep enough that a client
+/// draining at compute speed never blocks the scheduler, shallow enough
+/// that a stalled client hits backpressure within a few iterations.
+pub const DEFAULT_CHUNK_DEPTH: usize = 4;
 
 /// Monotonically assigned request id.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -13,34 +27,67 @@ pub struct Request {
     pub id: RequestId,
     pub ids: Vec<i32>,
     pub arrived: Instant,
-    /// Completion channel back to the submitter.
-    pub reply: mpsc::Sender<Response>,
+    /// Affinity signature stamped at enqueue time. The continuous
+    /// scheduler uses it to prefer joins from the in-flight batch's
+    /// dominant bucket (keeping batches dedup-friendly); the legacy path
+    /// ignores it (the router already bucketed on it).
+    pub sig: u64,
+    /// Scheduler iterations this request runs for (≥ 1). Classification
+    /// requests take one step; causal families generate one token per
+    /// step, a chunk each.
+    pub max_steps: usize,
+    /// Bounded streaming channel back to the submitter.
+    pub reply: mpsc::SyncSender<ResponseChunk>,
 }
 
-/// Engine answer for one request.
+/// One streamed engine answer for one step of one request. The final
+/// chunk of a request has `last == true`; `INFER`-style single-shot
+/// requests produce exactly one chunk, which is also the last.
 #[derive(Debug, Clone)]
-pub struct Response {
+pub struct ResponseChunk {
     pub id: RequestId,
+    /// 0-based step index within the request.
+    pub step: u32,
+    /// Whether this is the request's final chunk.
+    pub last: bool,
     /// Class logits (encoder families) or final-position LM logits.
     pub logits: Vec<f32>,
-    /// argmax class for convenience.
+    /// argmax class (encoder) / generated token (causal) for this step.
     pub label: i32,
-    /// Layers where this sequence's APM came from the database.
+    /// Cumulative layers-served-from-memo count across steps so far.
     pub memo_hits: u32,
-    /// Queue + batch wait (seconds).
+    /// Queue + batch wait (seconds): arrival → first inclusion in a step.
     pub queue_seconds: f64,
-    /// Engine execution time for the batch this request rode in.
+    /// Engine execution time for the iteration this chunk came from.
     pub compute_seconds: f64,
 }
 
+/// Pre-refactor name for the single-shot answer; a one-step request's
+/// only chunk carries exactly the old fields.
+pub type Response = ResponseChunk;
+
 impl Request {
-    pub fn new(id: u64, ids: Vec<i32>) -> (Self, mpsc::Receiver<Response>) {
-        let (tx, rx) = mpsc::channel();
+    /// Single-shot request (one step, default channel depth, no affinity
+    /// signature). The receiver sees exactly one `last` chunk.
+    pub fn new(id: u64, ids: Vec<i32>)
+        -> (Self, mpsc::Receiver<ResponseChunk>) {
+        Self::streaming(id, ids, 0, 1, DEFAULT_CHUNK_DEPTH)
+    }
+
+    /// Streaming request: `max_steps` chunks over a channel bounded at
+    /// `chunk_depth` (both clamped to ≥ 1), tagged with the affinity
+    /// signature `sig` the router bucketed it by.
+    pub fn streaming(id: u64, ids: Vec<i32>, sig: u64, max_steps: usize,
+                     chunk_depth: usize)
+        -> (Self, mpsc::Receiver<ResponseChunk>) {
+        let (tx, rx) = mpsc::sync_channel(chunk_depth.max(1));
         (
             Request {
                 id: RequestId(id),
                 ids,
                 arrived: Instant::now(),
+                sig,
+                max_steps: max_steps.max(1),
                 reply: tx,
             },
             rx,

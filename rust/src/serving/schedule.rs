@@ -1,0 +1,810 @@
+//! Iteration-level (continuous) batching: the Orca-style scheduler that
+//! replaces one-shot `form_batch → infer → reply` with a persistent
+//! in-flight batch that sequences join and leave at every step boundary.
+//!
+//! The pieces:
+//!
+//! - [`StepEngine`]: the `prefill`/`step` half of the old `Engine::infer`
+//!   contract, as a trait so the scheduler is hermetically testable (the
+//!   real [`Engine`] implements it through its `Arc<Mutex<_>>` handle;
+//!   tests and benches substitute synthetic engines).
+//! - [`InFlightBatch`]: fixed `max_inflight` slots plus a free-list. A
+//!   slot holds one sequence's state (padded ids, step progress, pending
+//!   chunk) for as many iterations as it needs.
+//! - [`ContinuousScheduler`]: the per-replica iteration loop body. Each
+//!   [`ContinuousScheduler::poll`] retries stalled consumers, admits
+//!   joins from the [`AffinityRouter`] (preferring the in-flight batch's
+//!   dominant affinity bucket so intra-batch dedup yield survives the
+//!   refactor), runs exactly one engine step over the active rows, and
+//!   streams one [`ResponseChunk`] per row.
+//!
+//! Backpressure is per-client: a chunk that doesn't fit its request's
+//! bounded channel stalls only that slot (the row sits out subsequent
+//! steps), and after a configurable stall budget the sequence is *parked*
+//! — it yields its slot to queued work and rejoins once the consumer
+//! drains. A slow client therefore costs exactly one slot for the stall
+//! budget, never the whole batch; the legacy fixed path
+//! ([`run_fixed_batch`]) keeps the old queue-global behaviour for A/B.
+//!
+//! One "step" here is one full forward pass of the packed rows (this
+//! engine keeps no KV cache, so there is no incremental-decode shortcut);
+//! multi-step requests on causal families append each step's argmax token
+//! at the first pad position before the next iteration.
+
+use std::sync::mpsc::TrySendError;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::serving::affinity::{bucket_of, AffinityRouter};
+use crate::serving::engine::{BatchResult, Engine};
+use crate::serving::request::{Request, RequestId, ResponseChunk};
+use crate::tensor::tensor::IdTensor;
+use crate::Result;
+
+/// How long to block for a first join when the batch is empty but parked
+/// sequences still need send retries (they must not starve behind a long
+/// idle wait).
+const PARKED_POLL: Duration = Duration::from_millis(1);
+
+/// Extra patience past the stall budget before a stuck consumer is
+/// dropped at shutdown (a closed queue must drain even when one client
+/// never reads its chunks).
+const SHUTDOWN_GRACE: Duration = Duration::from_millis(250);
+
+/// The `prefill`/`step` engine contract the scheduler drives. One `step`
+/// is one forward pass over the packed rows of the in-flight batch; memo
+/// shard snapshots are (re)taken inside the step, so rows see what the
+/// previous iteration admitted.
+pub trait StepEngine {
+    /// Fixed sequence length every packed row must match.
+    fn seq_len(&self) -> usize;
+
+    /// Whether a step's argmax is a next token to append (causal
+    /// families) rather than a class label.
+    fn causal(&self) -> bool {
+        false
+    }
+
+    /// Prefill: normalize a joining request's token ids to `seq_len`
+    /// (pad, truncate) so the row packs into the batch tensor.
+    fn prefill(&self, ids: &mut Vec<i32>) {
+        ids.resize(self.seq_len(), crate::data::tokenizer::PAD);
+    }
+
+    /// Run one iteration over the packed rows; one result row per input
+    /// row, in order.
+    fn step(&mut self, ids: &IdTensor) -> Result<BatchResult>;
+}
+
+/// The real engine behind its replica handle. The mutex is held for
+/// exactly one forward pass per step — chunk sends and latency recording
+/// all happen outside it.
+impl StepEngine for Arc<Mutex<Engine>> {
+    fn seq_len(&self) -> usize {
+        self.lock().unwrap().seq_len()
+    }
+
+    fn causal(&self) -> bool {
+        self.lock().unwrap().causal()
+    }
+
+    fn prefill(&self, ids: &mut Vec<i32>) {
+        self.lock().unwrap().prefill(ids);
+    }
+
+    fn step(&mut self, ids: &IdTensor) -> Result<BatchResult> {
+        self.lock().unwrap().step_batch(ids)
+    }
+}
+
+/// Per-sequence state while it rides the in-flight batch (or sits parked
+/// waiting for its consumer to drain).
+struct SeqState {
+    req: Request,
+    /// First inclusion in a step: queue wait ends here.
+    joined: Instant,
+    steps_done: u32,
+    /// Cumulative memoized-layer count across steps.
+    memo_hits: u32,
+    /// A produced chunk the consumer's channel couldn't take. While set,
+    /// the sequence sits out engine steps (its own backpressure).
+    pending: Option<ResponseChunk>,
+    /// When the current stall began (cleared on every delivered chunk).
+    stalled_since: Option<Instant>,
+}
+
+impl SeqState {
+    fn new(req: Request) -> Self {
+        SeqState {
+            req,
+            joined: Instant::now(),
+            steps_done: 0,
+            memo_hits: 0,
+            pending: None,
+            stalled_since: None,
+        }
+    }
+
+    /// Steps still owed after the ones already done.
+    fn remaining(&self) -> bool {
+        (self.steps_done as usize) < self.req.max_steps
+    }
+
+    fn record(&self) -> FinishedSeq {
+        FinishedSeq {
+            id: self.req.id,
+            request_ms: self.req.arrived.elapsed().as_secs_f64() * 1e3,
+            queue_ms: self
+                .joined
+                .duration_since(self.req.arrived)
+                .as_secs_f64()
+                * 1e3,
+        }
+    }
+}
+
+/// Chunk for the step just completed (`steps_done` already incremented).
+fn make_chunk(seq: &SeqState, logits: &[f32], label: i32,
+              seconds: f64) -> ResponseChunk {
+    ResponseChunk {
+        id: seq.req.id,
+        step: seq.steps_done - 1,
+        last: !seq.remaining(),
+        logits: logits.to_vec(),
+        label,
+        memo_hits: seq.memo_hits,
+        queue_seconds: seq
+            .joined
+            .duration_since(seq.req.arrived)
+            .as_secs_f64(),
+        compute_seconds: seconds,
+    }
+}
+
+/// Append a generated token at the first pad position (no-op when the
+/// sequence is already at capacity).
+fn advance_causal(ids: &mut [i32], token: i32) {
+    if let Some(p) =
+        ids.iter().position(|&t| t == crate::data::tokenizer::PAD)
+    {
+        ids[p] = token;
+    }
+}
+
+/// The persistent batch: `max_inflight` slots and a free-list. Sequences
+/// occupy a slot from join to final chunk (or until parked).
+pub struct InFlightBatch {
+    slots: Vec<Option<SeqState>>,
+    free: Vec<usize>,
+}
+
+impl InFlightBatch {
+    /// Batch with `capacity` slots (clamped to at least 1).
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        InFlightBatch {
+            slots: (0..capacity).map(|_| None).collect(),
+            free: (0..capacity).rev().collect(),
+        }
+    }
+
+    /// Total slots.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Occupied slots.
+    pub fn len(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// Whether no sequence is in flight.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    fn insert(&mut self, seq: SeqState) -> Option<usize> {
+        let idx = self.free.pop()?;
+        self.slots[idx] = Some(seq);
+        Some(idx)
+    }
+
+    /// Vacate `idx`, returning its occupant (if any) and recycling the
+    /// slot through the free-list.
+    fn release(&mut self, idx: usize) -> Option<SeqState> {
+        let seq = self.slots[idx].take();
+        if seq.is_some() {
+            self.free.push(idx);
+        }
+        seq
+    }
+
+    /// The affinity bucket most of the in-flight sequences map to under
+    /// `buckets` — joins prefer it so batches stay bucket-homogeneous
+    /// (what makes intra-batch dedup pay) across join/leave churn.
+    fn dominant_bucket(&self, buckets: usize) -> Option<usize> {
+        let mut counts = vec![0usize; buckets.max(1)];
+        for seq in self.slots.iter().flatten() {
+            counts[bucket_of(seq.req.sig, buckets)] += 1;
+        }
+        let (bucket, &count) =
+            counts.iter().enumerate().max_by_key(|&(_, &c)| c)?;
+        if count == 0 {
+            None
+        } else {
+            Some(bucket)
+        }
+    }
+}
+
+/// A request that produced (and delivered) its final chunk this
+/// iteration, with the latencies the serving metrics record.
+#[derive(Debug, Clone)]
+pub struct FinishedSeq {
+    /// The completed request.
+    pub id: RequestId,
+    /// Arrival → final chunk delivered (milliseconds).
+    pub request_ms: f64,
+    /// Arrival → first inclusion in a step (milliseconds).
+    pub queue_ms: f64,
+}
+
+/// What one [`ContinuousScheduler::poll`] did — the driving loop records
+/// these into the engine metrics (outside the engine lock) and uses
+/// [`IterReport::progressed`] to pace itself.
+#[derive(Debug, Default)]
+pub struct IterReport {
+    /// Fresh sequences admitted from the router this iteration.
+    pub joins: usize,
+    /// Parked sequences that re-entered a slot.
+    pub rejoins: usize,
+    /// Rows stepped (0 when every slot was empty or stalled).
+    pub stepped: usize,
+    /// Whether an engine step ran at all.
+    pub ran_step: bool,
+    /// Chunks that hit a full client channel this iteration.
+    pub stalls: usize,
+    /// Sequences that exhausted the stall budget and yielded their slot.
+    pub parks: usize,
+    /// Previously stalled chunks that finally got through.
+    pub drained: usize,
+    /// Sequences dropped (consumer gone, engine error, or stuck past
+    /// shutdown grace).
+    pub abandoned: usize,
+    /// Requests whose final chunk was delivered this iteration.
+    pub finished: Vec<FinishedSeq>,
+}
+
+impl IterReport {
+    /// Did this iteration move anything? (When false the driving loop
+    /// may sleep briefly instead of spinning.)
+    pub fn progressed(&self) -> bool {
+        self.ran_step
+            || self.joins + self.rejoins + self.drained > 0
+            || self.parks + self.abandoned > 0
+            || !self.finished.is_empty()
+    }
+
+    fn finish(&mut self, seq: &SeqState) {
+        self.finished.push(seq.record());
+    }
+}
+
+/// Per-replica continuous-batching loop body. The owning thread calls
+/// [`ContinuousScheduler::poll`] in a loop; each call is one iteration.
+pub struct ContinuousScheduler<E: StepEngine> {
+    engine: E,
+    batch: InFlightBatch,
+    /// Sequences that yielded their slot to backpressure; retried every
+    /// iteration, rejoining (ahead of fresh work) once drained.
+    parked: Vec<SeqState>,
+    stall_budget: Duration,
+}
+
+impl<E: StepEngine> ContinuousScheduler<E> {
+    /// Scheduler over `engine` with `max_inflight` slots; a consumer
+    /// that stays stalled past `stall_budget` yields its slot.
+    pub fn new(engine: E, max_inflight: usize,
+               stall_budget: Duration) -> Self {
+        ContinuousScheduler {
+            engine,
+            batch: InFlightBatch::new(max_inflight),
+            parked: Vec::new(),
+            stall_budget,
+        }
+    }
+
+    /// Sequences currently holding a slot.
+    pub fn inflight(&self) -> usize {
+        self.batch.len()
+    }
+
+    /// Sequences parked on backpressure.
+    pub fn parked(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Nothing in flight and nothing parked — together with a closed,
+    /// drained router this means the loop can exit.
+    pub fn is_idle(&self) -> bool {
+        self.batch.is_empty() && self.parked.is_empty()
+    }
+
+    /// One scheduler iteration: retry stalled/parked consumers, admit
+    /// joins (blocking up to `idle_wait` only when nothing is in
+    /// flight), run one engine step over the active rows, and stream the
+    /// resulting chunks. An engine error fails only the sequences that
+    /// were in that step; the scheduler itself stays usable.
+    pub fn poll(&mut self, queue: &AffinityRouter<Request>,
+                replica: usize, idle_wait: Duration)
+        -> Result<IterReport> {
+        let mut report = IterReport::default();
+        let closed = queue.is_closed();
+        self.drain_pending(closed, &mut report);
+        let waited = self.admit(queue, replica, idle_wait, &mut report);
+        let stepped = self.step(&mut report);
+        if !waited && !report.progressed() {
+            // Every slot stalled and the queue idle: don't spin.
+            std::thread::sleep(Duration::from_micros(500));
+        }
+        stepped.map(|()| report)
+    }
+
+    /// Retry every pending chunk (in-slot stalls first, then parked
+    /// sequences), parking slots that exhausted the stall budget and
+    /// dropping consumers that disconnected or are stuck past shutdown.
+    fn drain_pending(&mut self, closed: bool, report: &mut IterReport) {
+        for idx in 0..self.batch.slots.len() {
+            let Some(seq) = self.batch.slots[idx].as_mut() else {
+                continue;
+            };
+            let Some(chunk) = seq.pending.take() else { continue };
+            match seq.req.reply.try_send(chunk) {
+                Ok(()) => {
+                    report.drained += 1;
+                    seq.stalled_since = None;
+                    if !seq.remaining() {
+                        let done = self.batch.release(idx).unwrap();
+                        report.finish(&done);
+                    }
+                }
+                Err(TrySendError::Full(chunk)) => {
+                    let since = *seq
+                        .stalled_since
+                        .get_or_insert_with(Instant::now);
+                    seq.pending = Some(chunk);
+                    if closed
+                        && since.elapsed()
+                            > self.stall_budget + SHUTDOWN_GRACE
+                    {
+                        self.batch.release(idx);
+                        report.abandoned += 1;
+                    } else if since.elapsed() >= self.stall_budget {
+                        let parked = self.batch.release(idx).unwrap();
+                        self.parked.push(parked);
+                        report.parks += 1;
+                    }
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    self.batch.release(idx);
+                    report.abandoned += 1;
+                }
+            }
+        }
+        let mut i = 0;
+        while i < self.parked.len() {
+            let seq = &mut self.parked[i];
+            let Some(chunk) = seq.pending.take() else {
+                i += 1;
+                continue;
+            };
+            match seq.req.reply.try_send(chunk) {
+                Ok(()) => {
+                    report.drained += 1;
+                    seq.stalled_since = None;
+                    if !seq.remaining() {
+                        let done = self.parked.swap_remove(i);
+                        report.finish(&done);
+                    } else {
+                        i += 1;
+                    }
+                }
+                Err(TrySendError::Full(chunk)) => {
+                    let stuck = seq.stalled_since.map_or(false, |s| {
+                        s.elapsed() > self.stall_budget + SHUTDOWN_GRACE
+                    });
+                    seq.pending = Some(chunk);
+                    if closed && stuck {
+                        self.parked.swap_remove(i);
+                        report.abandoned += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    self.parked.swap_remove(i);
+                    report.abandoned += 1;
+                }
+            }
+        }
+    }
+
+    /// Fill free slots: drained parked sequences rejoin first (they
+    /// already yielded once), then fresh requests — from the in-flight
+    /// batch's dominant affinity bucket when one exists. Blocks for the
+    /// first join only when nothing at all is in flight. Returns whether
+    /// the call slept on an empty router.
+    fn admit(&mut self, queue: &AffinityRouter<Request>, replica: usize,
+             idle_wait: Duration, report: &mut IterReport) -> bool {
+        while self.batch.free_count() > 0 {
+            let Some(pos) =
+                self.parked.iter().position(|s| s.pending.is_none())
+            else {
+                break;
+            };
+            let seq = self.parked.swap_remove(pos);
+            self.batch.insert(seq);
+            report.rejoins += 1;
+        }
+        if self.batch.free_count() == 0 {
+            return false;
+        }
+        let mut hint = self.batch.dominant_bucket(queue.num_buckets());
+        if self.batch.is_empty() {
+            let wait = if self.parked.is_empty() {
+                idle_wait
+            } else {
+                PARKED_POLL
+            };
+            match queue.pop_timeout(replica, wait) {
+                Some((bucket, req)) => {
+                    hint = Some(bucket);
+                    self.join(req, report);
+                }
+                None => return true,
+            }
+        }
+        let free = self.batch.free_count();
+        if free > 0 {
+            for req in
+                queue.drain_affine(replica, hint.unwrap_or(0), free)
+            {
+                self.join(req, report);
+            }
+        }
+        false
+    }
+
+    fn join(&mut self, mut req: Request, report: &mut IterReport) {
+        self.engine.prefill(&mut req.ids);
+        let inserted = self.batch.insert(SeqState::new(req));
+        debug_assert!(inserted.is_some(), "join admitted past capacity");
+        report.joins += 1;
+    }
+
+    /// One engine step over the active (occupied, un-stalled) rows, then
+    /// chunk distribution with per-client backpressure.
+    fn step(&mut self, report: &mut IterReport) -> Result<()> {
+        let active: Vec<usize> = (0..self.batch.slots.len())
+            .filter(|&i| {
+                self.batch.slots[i]
+                    .as_ref()
+                    .map_or(false, |s| s.pending.is_none())
+            })
+            .collect();
+        if active.is_empty() {
+            return Ok(());
+        }
+        let seq_len = self.engine.seq_len();
+        let mut data = Vec::with_capacity(active.len() * seq_len);
+        for &i in &active {
+            let seq = self.batch.slots[i].as_ref().unwrap();
+            debug_assert_eq!(seq.req.ids.len(), seq_len);
+            data.extend_from_slice(&seq.req.ids);
+        }
+        let ids = IdTensor::new(vec![active.len(), seq_len], data)?;
+        let result = match self.engine.step(&ids) {
+            Ok(r) => r,
+            Err(e) => {
+                // Fail only this step's sequences (their clients time
+                // out, exactly like a failed legacy batch); the
+                // scheduler stays alive for everyone else.
+                for &i in &active {
+                    self.batch.release(i);
+                    report.abandoned += 1;
+                }
+                return Err(e);
+            }
+        };
+        let causal = self.engine.causal();
+        report.ran_step = true;
+        report.stepped = active.len();
+        for (row, &idx) in active.iter().enumerate() {
+            let seq = self.batch.slots[idx].as_mut().unwrap();
+            seq.steps_done += 1;
+            seq.memo_hits += result.memo_hits[row];
+            let label = result.labels[row];
+            let last = !seq.remaining();
+            if !last && causal {
+                advance_causal(&mut seq.req.ids, label);
+            }
+            let chunk =
+                make_chunk(seq, result.logits.row(row), label,
+                           result.seconds);
+            match seq.req.reply.try_send(chunk) {
+                Ok(()) => {
+                    if last {
+                        let done = self.batch.release(idx).unwrap();
+                        report.finish(&done);
+                    }
+                }
+                Err(TrySendError::Full(chunk)) => {
+                    seq.pending = Some(chunk);
+                    seq.stalled_since = Some(Instant::now());
+                    report.stalls += 1;
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    self.batch.release(idx);
+                    report.abandoned += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The legacy fixed-membership path over the same [`StepEngine`]: step
+/// the given batch until every member produced its final chunk — nobody
+/// joins mid-flight, chunk sends are *blocking* (queue-global
+/// backpressure), and early finishers leave the tensor but their slot
+/// stays unused until the whole batch drains. This is both what
+/// `--no-continuous-batching` serves and the "fixed" arm of the bench
+/// A/B. Returns the finished-request latencies for metric recording
+/// (done by the caller, outside any engine lock).
+pub fn run_fixed_batch<E: StepEngine>(engine: &mut E,
+                                      batch: Vec<Request>)
+    -> Result<Vec<FinishedSeq>> {
+    let seq_len = engine.seq_len();
+    let mut seqs: Vec<Option<SeqState>> = batch
+        .into_iter()
+        .map(|mut r| {
+            engine.prefill(&mut r.ids);
+            Some(SeqState::new(r))
+        })
+        .collect();
+    let mut done = Vec::new();
+    loop {
+        let active: Vec<usize> =
+            (0..seqs.len()).filter(|&i| seqs[i].is_some()).collect();
+        if active.is_empty() {
+            return Ok(done);
+        }
+        let mut data = Vec::with_capacity(active.len() * seq_len);
+        for &i in &active {
+            data.extend_from_slice(&seqs[i].as_ref().unwrap().req.ids);
+        }
+        let ids = IdTensor::new(vec![active.len(), seq_len], data)?;
+        let result = engine.step(&ids)?;
+        let causal = engine.causal();
+        for (row, &i) in active.iter().enumerate() {
+            let seq = seqs[i].as_mut().unwrap();
+            seq.steps_done += 1;
+            seq.memo_hits += result.memo_hits[row];
+            let label = result.labels[row];
+            let last = !seq.remaining();
+            if !last && causal {
+                advance_causal(&mut seq.req.ids, label);
+            }
+            let chunk =
+                make_chunk(seq, result.logits.row(row), label,
+                           result.seconds);
+            let delivered = seq.req.reply.send(chunk).is_ok();
+            if last || !delivered {
+                let seq = seqs[i].take().unwrap();
+                if last {
+                    done.push(seq.record());
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::tensor::Tensor;
+
+    /// Zero-cost engine: every row gets label 7 and one memo hit per
+    /// step. Deterministic, so tests drive iterations by hand.
+    struct ToyEngine {
+        seq: usize,
+        causal: bool,
+        steps: usize,
+    }
+
+    impl StepEngine for ToyEngine {
+        fn seq_len(&self) -> usize {
+            self.seq
+        }
+
+        fn causal(&self) -> bool {
+            self.causal
+        }
+
+        fn step(&mut self, ids: &IdTensor) -> Result<BatchResult> {
+            self.steps += 1;
+            let n = ids.shape[0];
+            let logits = Tensor::new(vec![n, 2], vec![0.5; n * 2])?;
+            Ok(BatchResult {
+                logits,
+                labels: vec![7; n],
+                memo_hits: vec![1; n],
+                seconds: 0.0,
+            })
+        }
+    }
+
+    fn toy(seq: usize) -> ToyEngine {
+        ToyEngine { seq, causal: false, steps: 0 }
+    }
+
+    #[test]
+    fn single_step_request_joins_steps_and_finishes_in_one_poll() {
+        let q: AffinityRouter<Request> = AffinityRouter::new(4, 1, 64);
+        let (req, rx) = Request::streaming(1, vec![5, 6], 0, 1, 4);
+        q.try_push(req.sig, req).unwrap();
+        let mut sched =
+            ContinuousScheduler::new(toy(8), 4, Duration::ZERO);
+        let r = sched
+            .poll(&q, 0, Duration::from_millis(5))
+            .unwrap();
+        assert_eq!(r.joins, 1);
+        assert_eq!(r.stepped, 1);
+        assert_eq!(r.finished.len(), 1);
+        let chunk = rx.try_recv().unwrap();
+        assert!(chunk.last);
+        assert_eq!(chunk.step, 0);
+        assert_eq!(chunk.label, 7);
+        assert!(sched.is_idle());
+    }
+
+    #[test]
+    fn multi_step_request_streams_one_chunk_per_iteration() {
+        let q: AffinityRouter<Request> = AffinityRouter::new(4, 1, 64);
+        let (req, rx) = Request::streaming(1, vec![5], 0, 3, 8);
+        q.try_push(req.sig, req).unwrap();
+        let mut sched =
+            ContinuousScheduler::new(toy(4), 4, Duration::ZERO);
+        for step in 0..3u32 {
+            let r = sched.poll(&q, 0, Duration::ZERO).unwrap();
+            assert_eq!(r.stepped, 1, "step {step}");
+            let chunk = rx.try_recv().unwrap();
+            assert_eq!(chunk.step, step);
+            assert_eq!(chunk.last, step == 2);
+            assert_eq!(chunk.memo_hits, step + 1, "hits accumulate");
+        }
+        assert!(sched.is_idle());
+    }
+
+    #[test]
+    fn stalled_consumer_parks_and_yields_its_slot_then_completes() {
+        let q: AffinityRouter<Request> = AffinityRouter::new(1, 1, 64);
+        // Capacity-1 channel, 3 steps, never drained at first: the
+        // second chunk must stall and (budget zero) park immediately.
+        let (slow, slow_rx) = Request::streaming(1, vec![9], 0, 3, 1);
+        q.try_push(slow.sig, slow).unwrap();
+        let mut sched =
+            ContinuousScheduler::new(toy(4), 1, Duration::ZERO);
+        sched.poll(&q, 0, Duration::ZERO).unwrap(); // chunk 0 buffered
+        let r = sched.poll(&q, 0, Duration::ZERO).unwrap();
+        assert_eq!(r.stalls, 1, "second chunk hits the full channel");
+        let r = sched.poll(&q, 0, Duration::ZERO).unwrap();
+        assert_eq!(r.parks, 1, "stall budget exhausted → parked");
+        assert_eq!(sched.parked(), 1);
+
+        // The single slot is free again: a fast request flows past the
+        // parked one without waiting for it.
+        let (fast, fast_rx) = Request::streaming(2, vec![3], 0, 1, 4);
+        q.try_push(fast.sig, fast).unwrap();
+        let r = sched.poll(&q, 0, Duration::ZERO).unwrap();
+        assert_eq!(r.joins, 1);
+        assert!(fast_rx.try_recv().unwrap().last);
+
+        // Now the slow consumer drains; the parked sequence rejoins and
+        // runs to completion.
+        let mut got = vec![slow_rx.try_recv().unwrap()];
+        for _ in 0..8 {
+            let _ = sched.poll(&q, 0, Duration::ZERO).unwrap();
+            while let Ok(c) = slow_rx.try_recv() {
+                got.push(c);
+            }
+            if got.len() == 3 {
+                break;
+            }
+        }
+        assert_eq!(got.len(), 3, "slow client still completes");
+        assert!(got[2].last);
+        assert!(sched.is_idle());
+    }
+
+    #[test]
+    fn disconnected_consumer_is_dropped_not_wedged() {
+        let q: AffinityRouter<Request> = AffinityRouter::new(1, 1, 64);
+        let (req, rx) = Request::streaming(1, vec![2], 0, 5, 1);
+        q.try_push(req.sig, req).unwrap();
+        drop(rx);
+        let mut sched =
+            ContinuousScheduler::new(toy(4), 2, Duration::ZERO);
+        let r = sched.poll(&q, 0, Duration::ZERO).unwrap();
+        assert_eq!(r.abandoned, 1);
+        assert!(sched.is_idle());
+    }
+
+    #[test]
+    fn joins_prefer_the_dominant_affinity_bucket() {
+        // 4 buckets, in-flight work in bucket 1; queued work in buckets
+        // 1 and 2. With free slots the scheduler must drain bucket 1
+        // (the dominant one) before touching bucket 2.
+        let q: AffinityRouter<Request> = AffinityRouter::new(4, 1, 64);
+        let (a, _a_rx) = Request::streaming(1, vec![1], 1, 4, 8);
+        q.try_push(1, a).unwrap();
+        let mut sched =
+            ContinuousScheduler::new(toy(4), 2, Duration::ZERO);
+        sched.poll(&q, 0, Duration::ZERO).unwrap();
+        assert_eq!(sched.inflight(), 1);
+
+        let (b, b_rx) = Request::streaming(2, vec![2], 2, 1, 8);
+        let (c, c_rx) = Request::streaming(3, vec![3], 1, 1, 8);
+        q.try_push(2, b).unwrap();
+        q.try_push(1, c).unwrap();
+        let r = sched.poll(&q, 0, Duration::ZERO).unwrap();
+        // One free slot: the join must come from bucket 1 (request c),
+        // leaving bucket 2's request queued.
+        assert_eq!(r.joins, 1);
+        assert!(c_rx.try_recv().is_ok(), "same-bucket request joined");
+        assert!(b_rx.try_recv().is_err(), "other bucket still queued");
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn causal_steps_append_the_generated_token() {
+        let q: AffinityRouter<Request> = AffinityRouter::new(1, 1, 8);
+        let (req, _rx) = Request::streaming(1, vec![5], 0, 2, 8);
+        q.try_push(0, req).unwrap();
+        let mut sched = ContinuousScheduler::new(
+            ToyEngine { seq: 4, causal: true, steps: 0 },
+            1,
+            Duration::ZERO,
+        );
+        sched.poll(&q, 0, Duration::ZERO).unwrap();
+        let seq =
+            sched.batch.slots[0].as_ref().expect("still in flight");
+        assert_eq!(seq.req.ids, vec![5, 7, 0, 0],
+                   "argmax token appended at the first pad position");
+    }
+
+    #[test]
+    fn fixed_batch_runs_members_to_their_own_lengths() {
+        let mut eng = toy(4);
+        let mut reqs = Vec::new();
+        let mut rxs = Vec::new();
+        for (i, steps) in [1usize, 3, 2].into_iter().enumerate() {
+            let (r, rx) =
+                Request::streaming(i as u64, vec![1], 0, steps, 8);
+            reqs.push(r);
+            rxs.push((rx, steps));
+        }
+        let done = run_fixed_batch(&mut eng, reqs).unwrap();
+        assert_eq!(done.len(), 3);
+        assert_eq!(eng.steps, 3, "membership frozen: longest rules");
+        for (rx, steps) in rxs {
+            let chunks: Vec<_> = rx.try_iter().collect();
+            assert_eq!(chunks.len(), steps);
+            assert!(chunks.last().unwrap().last);
+        }
+    }
+}

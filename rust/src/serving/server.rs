@@ -2,10 +2,20 @@
 //!
 //! Protocol (one line per message, UTF-8):
 //!   client → `INFER <text…>`          classify a raw sentence
+//!   client → `STREAM <steps> <text…>` run `steps` iterations, streaming
+//!                                     one chunk line per step
 //!   client → `STATS`                  engine metrics snapshot
 //!   client → `QUIT`                   close the connection
 //!   server → `OK <label> <memo_hits> <latency_ms>`
+//!   server → `CH <step> <label> <memo_hits>`   (per non-final chunk)
+//!   server → `DONE <label> <memo_hits> <latency_ms>`
 //!   server → `ERR <reason>` / `STATS <report>` / `BYE`
+//!
+//! `STREAM` rides the same queue as `INFER`; under
+//! `--continuous-batching` each step's chunk is produced at one
+//! scheduler iteration and the handler relays it as soon as the bounded
+//! per-client channel hands it over (a client that stops reading fills
+//! its own channel and stalls only its own in-flight slot).
 //!
 //! Connections are handled by a small thread pool; handlers tokenize,
 //! sketch the request's affinity signature through the server's
@@ -24,8 +34,9 @@
 //! (`Engine::with_shared_tier`): each replica's forward pass runs behind
 //! its own mutex, while tier lookups from all replicas proceed in
 //! parallel on the tier's lock-free seqlock snapshots — there is no
-//! global engine mutex (nor any shard lock) on the lookup path. `STATS` aggregates the fleet and appends the
-//! router's affinity gauges (per-bucket depth, steal and resize counts).
+//! global engine mutex (nor any shard lock) on the lookup path.
+//! `STATS` aggregates the fleet and appends the router's affinity
+//! gauges (per-bucket depth, steal and resize counts).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -159,6 +170,7 @@ impl Server {
             let rejected2 = rejected.clone();
             let signer2 = signer.clone();
             let seq_len = cfg.seq_len;
+            let chunk_depth = cfg.chunk_depth;
             threads.push(
                 std::thread::Builder::new()
                     .name("attmemo-accept".into())
@@ -181,7 +193,7 @@ impl Server {
                                     handlers.push(std::thread::spawn(move || {
                                         let _ = handle_conn(
                                             stream, q, v, e, rej, ids, sg,
-                                            seq_len,
+                                            seq_len, chunk_depth,
                                         );
                                     }));
                                 }
@@ -224,7 +236,8 @@ impl Server {
 fn handle_conn(stream: TcpStream, queue: Arc<AffinityRouter<Request>>,
                vocab: Arc<Vocab>, engines: Arc<Vec<Arc<Mutex<Engine>>>>,
                rejected: Arc<AtomicU64>, next_id: Arc<AtomicU64>,
-               signer: Arc<Signer>, seq_len: usize) -> Result<()> {
+               signer: Arc<Signer>, seq_len: usize,
+               chunk_depth: usize) -> Result<()> {
     stream.set_nodelay(true)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
@@ -241,8 +254,10 @@ fn handle_conn(stream: TcpStream, queue: Arc<AffinityRouter<Request>>,
             // min-hash or by embedding-space SimHash) share a bucket, so
             // they meet in the same batch downstream.
             let sig = signer.sign(&ids);
-            let (req, rx) =
-                Request::new(next_id.fetch_add(1, Ordering::SeqCst), ids);
+            let (req, rx) = Request::streaming(
+                next_id.fetch_add(1, Ordering::SeqCst), ids, sig, 1,
+                chunk_depth,
+            );
             let t0 = std::time::Instant::now();
             if queue.try_push(sig, req).is_err() {
                 rejected.fetch_add(1, Ordering::Relaxed);
@@ -258,6 +273,55 @@ fn handle_conn(stream: TcpStream, queue: Arc<AffinityRouter<Request>>,
                     t0.elapsed().as_secs_f64() * 1e3
                 )?,
                 Err(_) => writeln!(out, "ERR timeout")?,
+            }
+        } else if let Some(rest) = msg.strip_prefix("STREAM ") {
+            // `STREAM <steps> <text…>`: run the request for `steps`
+            // iterations and relay each chunk as its own line; the final
+            // chunk closes with DONE and the client-observed latency.
+            let mut split = rest.splitn(2, ' ');
+            let steps: usize = split
+                .next()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0);
+            let text = split.next().unwrap_or("");
+            if steps == 0 || steps > 64 || text.is_empty() {
+                writeln!(out, "ERR usage: STREAM <steps 1..=64> <text>")?;
+                continue;
+            }
+            let ids = vocab.encode(text, seq_len);
+            let sig = signer.sign(&ids);
+            let (req, rx) = Request::streaming(
+                next_id.fetch_add(1, Ordering::SeqCst), ids, sig, steps,
+                chunk_depth,
+            );
+            let t0 = std::time::Instant::now();
+            if queue.try_push(sig, req).is_err() {
+                rejected.fetch_add(1, Ordering::Relaxed);
+                writeln!(out, "ERR overloaded")?;
+                continue;
+            }
+            loop {
+                match rx.recv_timeout(Duration::from_secs(60)) {
+                    Ok(ch) if ch.last => {
+                        writeln!(
+                            out,
+                            "DONE {} {} {:.2}",
+                            ch.label,
+                            ch.memo_hits,
+                            t0.elapsed().as_secs_f64() * 1e3
+                        )?;
+                        break;
+                    }
+                    Ok(ch) => writeln!(
+                        out,
+                        "CH {} {} {}",
+                        ch.step, ch.label, ch.memo_hits
+                    )?,
+                    Err(_) => {
+                        writeln!(out, "ERR timeout")?;
+                        break;
+                    }
+                }
             }
         } else if msg == "STATS" {
             // Aggregate the replica fleet into one report, then stamp on
@@ -313,6 +377,46 @@ impl Client {
                 Ok((label, hits, ms))
             }
             _ => Err(crate::Error::serving(format!("server said: {line}"))),
+        }
+    }
+
+    /// Stream `steps` iterations; returns one `(step, label, memo_hits)`
+    /// per chunk, the last entry being the final (DONE) chunk with the
+    /// step index `steps - 1`.
+    pub fn infer_stream(&mut self, text: &str,
+                        steps: usize) -> Result<Vec<(u32, i32, u32)>> {
+        writeln!(self.stream, "STREAM {steps} {text}")?;
+        let mut chunks = Vec::new();
+        loop {
+            let mut line = String::new();
+            self.reader.read_line(&mut line)?;
+            let line = line.trim_end();
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("CH") => {
+                    let step = parts.next().unwrap_or("0").parse()
+                        .unwrap_or(0);
+                    let label = parts.next().unwrap_or("0").parse()
+                        .unwrap_or(0);
+                    let hits = parts.next().unwrap_or("0").parse()
+                        .unwrap_or(0);
+                    chunks.push((step, label, hits));
+                }
+                Some("DONE") => {
+                    let label = parts.next().unwrap_or("0").parse()
+                        .unwrap_or(0);
+                    let hits = parts.next().unwrap_or("0").parse()
+                        .unwrap_or(0);
+                    chunks.push((steps.saturating_sub(1) as u32, label,
+                                 hits));
+                    return Ok(chunks);
+                }
+                _ => {
+                    return Err(crate::Error::serving(format!(
+                        "server said: {line}"
+                    )))
+                }
+            }
         }
     }
 

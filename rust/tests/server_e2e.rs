@@ -1,13 +1,20 @@
 //! End-to-end server test: real TCP server + dynamic batcher + memoizing
-//! engine(s), driven by concurrent clients. Skips without artifacts.
+//! engine(s), driven by concurrent clients. The TCP tests skip without
+//! artifacts; the continuous-batching tests at the bottom run hermetically
+//! against a synthetic `StepEngine`.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use attmemo::bench_support::workload;
 use attmemo::config::{MemoConfig, MemoLevel, ServingConfig, SignatureMode};
 use attmemo::data::tokenizer::Vocab;
-use attmemo::serving::affinity::bucket_for;
+use attmemo::serving::affinity::{bucket_for, AffinityRouter};
 use attmemo::serving::server::{Client, Server};
+use attmemo::serving::{
+    BatchResult, ContinuousScheduler, Request, StepEngine,
+};
+use attmemo::tensor::tensor::{IdTensor, Tensor};
 
 #[test]
 fn server_round_trip_with_concurrent_clients() {
@@ -362,4 +369,176 @@ fn two_replicas_share_one_memo_tier() {
             "fleet STATS must sum both replicas: {stats}");
     c.quit().unwrap();
     server.shutdown();
+}
+
+/// Zero-cost engine for the hermetic continuous-batching tests: every
+/// row gets label 1 immediately, so test timing is dominated entirely by
+/// scheduling and consumer behaviour.
+struct NullEngine {
+    seq: usize,
+}
+
+impl StepEngine for NullEngine {
+    fn seq_len(&self) -> usize {
+        self.seq
+    }
+
+    fn step(&mut self, ids: &IdTensor) -> attmemo::Result<BatchResult> {
+        let n = ids.shape[0];
+        Ok(BatchResult {
+            logits: Tensor::new(vec![n, 2], vec![0.0; n * 2])?,
+            labels: vec![1; n],
+            memo_hits: vec![0; n],
+            seconds: 0.0,
+        })
+    }
+}
+
+/// Per-client backpressure end-to-end (hermetic): one slow consumer
+/// (depth-1 channel, 25 ms per chunk) shares the scheduler with 32 fast
+/// clients. The slow consumer must stall only its own slot — parked
+/// after the 2 ms budget — so the fast cohort finishes orders of
+/// magnitude sooner than the slow stream's own drain time; and the slow
+/// client still receives every one of its chunks.
+#[test]
+fn slow_consumer_stalls_only_its_own_slot() {
+    const SLOW_STEPS: usize = 8;
+    const SLOW_DRAIN: Duration = Duration::from_millis(25);
+
+    let q: Arc<AffinityRouter<Request>> =
+        Arc::new(AffinityRouter::new(4, 1, 1024));
+    let q2 = q.clone();
+    let sched_thread = std::thread::spawn(move || {
+        let mut sched = ContinuousScheduler::new(
+            NullEngine { seq: 8 }, 8, Duration::from_millis(2));
+        loop {
+            sched.poll(&q2, 0, Duration::from_millis(5)).unwrap();
+            if sched.is_idle() && q2.is_closed() && q2.is_empty() {
+                return;
+            }
+        }
+    });
+
+    // The slow client first, so it holds a slot before the fast cohort
+    // arrives: 8 chunks through a depth-1 channel, 25 ms between reads.
+    let (sreq, srx) =
+        Request::streaming(999, vec![9, 9], 3, SLOW_STEPS, 1);
+    q.try_push(3, sreq).unwrap();
+    let slow = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        let mut got = 0usize;
+        loop {
+            let ch = srx
+                .recv_timeout(Duration::from_secs(20))
+                .expect("slow chunk");
+            got += 1;
+            if ch.last {
+                return (got, t0.elapsed());
+            }
+            std::thread::sleep(SLOW_DRAIN);
+        }
+    });
+
+    let mut fast = Vec::new();
+    for i in 0..32u64 {
+        let (req, rx) = Request::streaming(i, vec![1, 2], i % 4, 2, 4);
+        let t0 = Instant::now();
+        q.try_push(i % 4, req).unwrap();
+        fast.push(std::thread::spawn(move || {
+            loop {
+                let ch = rx
+                    .recv_timeout(Duration::from_secs(10))
+                    .expect("fast chunk");
+                if ch.last {
+                    return t0.elapsed();
+                }
+            }
+        }));
+    }
+
+    let fast_max = fast
+        .into_iter()
+        .map(|h| h.join().expect("fast client"))
+        .max()
+        .unwrap();
+    let (slow_chunks, slow_took) = slow.join().expect("slow client");
+    q.close();
+    sched_thread.join().expect("scheduler thread");
+
+    assert_eq!(slow_chunks, SLOW_STEPS,
+               "the slow client still gets its whole stream");
+    assert!(slow_took >= SLOW_DRAIN * (SLOW_STEPS as u32 - 1),
+            "slow stream is paced by its own drain rate: {slow_took:?}");
+    // The structural claim: the fast cohort never waits behind the slow
+    // consumer. Its slowest member beats the slow stream's *minimum*
+    // possible duration with a wide margin for CI scheduling noise.
+    assert!(fast_max < Duration::from_millis(150),
+            "a slow consumer delayed the fast cohort: {fast_max:?}");
+}
+
+/// Join/leave interleaving (hermetic, deterministically driven): mixed
+/// request lengths through a 4-slot scheduler polled by hand. Every
+/// request must emit exactly one chunk per poll from its join, finishing
+/// at poll `join + steps - 1` — no response is delayed past its own
+/// completion step, early finishers free their slots at step boundaries,
+/// and mid-flight joins start stepping immediately.
+#[test]
+fn joins_and_leaves_happen_at_step_boundaries() {
+    let q: AffinityRouter<Request> = AffinityRouter::new(1, 1, 64);
+    let mut sched = ContinuousScheduler::new(
+        NullEngine { seq: 4 }, 4, Duration::from_secs(1));
+    let mk = |id: u64, steps: usize| {
+        Request::streaming(id, vec![1], 0, steps, steps)
+    };
+
+    // Wave A: three requests of lengths 3, 1, 2 (one slot stays free).
+    let (a1, a1_rx) = mk(1, 3);
+    let (a2, a2_rx) = mk(2, 1);
+    let (a3, a3_rx) = mk(3, 2);
+    for r in [a1, a2, a3] {
+        q.try_push(0, r).unwrap();
+    }
+    let r = sched.poll(&q, 0, Duration::ZERO).unwrap();
+    assert_eq!(r.joins, 3);
+    assert_eq!(r.stepped, 3);
+    assert_eq!(r.finished.len(), 1, "a2 (1 step) leaves at poll 1");
+    assert_eq!(r.finished[0].id.0, 2);
+
+    // Wave B joins mid-flight, into a2's freed slot plus the spare one.
+    let (b1, b1_rx) = mk(4, 2);
+    let (b2, b2_rx) = mk(5, 1);
+    q.try_push(0, b1).unwrap();
+    q.try_push(0, b2).unwrap();
+    let r = sched.poll(&q, 0, Duration::ZERO).unwrap();
+    assert_eq!(r.joins, 2, "mid-flight joins fill freed slots");
+    assert_eq!(r.stepped, 4, "a1, a3, b1, b2 all step together");
+    let mut done: Vec<u64> =
+        r.finished.iter().map(|f| f.id.0).collect();
+    done.sort_unstable();
+    assert_eq!(done, vec![3, 5], "a3 and b2 leave at their own ends");
+
+    let r = sched.poll(&q, 0, Duration::ZERO).unwrap();
+    assert_eq!(r.stepped, 2, "only a1 and b1 remain");
+    let mut done: Vec<u64> =
+        r.finished.iter().map(|f| f.id.0).collect();
+    done.sort_unstable();
+    assert_eq!(done, vec![1, 4]);
+    assert!(sched.is_idle());
+
+    // Every stream: one chunk per poll from its join, final chunk at
+    // join_poll + steps - 1, steps numbered 0..steps.
+    for (rx, steps) in [
+        (a1_rx, 3usize),
+        (a2_rx, 1),
+        (a3_rx, 2),
+        (b1_rx, 2),
+        (b2_rx, 1),
+    ] {
+        let chunks: Vec<_> = rx.try_iter().collect();
+        assert_eq!(chunks.len(), steps);
+        for (s, ch) in chunks.iter().enumerate() {
+            assert_eq!(ch.step as usize, s);
+            assert_eq!(ch.last, s + 1 == steps);
+        }
+    }
 }
