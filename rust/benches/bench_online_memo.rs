@@ -17,6 +17,11 @@
 //! * a **write-path A/B** (dedup prepass on vs off on a steady-state
 //!   all-dedup workload — the prepass must strictly reduce publishes,
 //!   and on full runs its admit p99 must beat the full publish path);
+//! * a **generational publish A/B** (mixed batches — one fresh row plus
+//!   seven dedup rows — against 1× and 10× prefills, chunk-sharing vs
+//!   the `full_index_clone` deep-copy baseline: `publish_touched_nodes`
+//!   must stay flat across the growth and the generational mixed-batch
+//!   admit p99 must beat the baseline at the large size);
 //! * an **affinity A/B** (8 buckets vs 1 on a clustered workload) and a
 //!   **signature A/B** (semantic SimHash vs prefix min-hash on a
 //!   *paraphrase-clustered* workload, where word order scatters the
@@ -40,7 +45,7 @@ use std::sync::Arc;
 use attmemo::bench_support::harness::time_ms;
 use attmemo::bench_support::{smoke, SmokeSummary, TableWriter};
 use attmemo::config::{MemoLevel, ModelConfig};
-use attmemo::memo::index::HnswParams;
+use attmemo::memo::index::{Hnsw, HnswParams};
 use attmemo::memo::policy::AdmissionPolicy;
 use attmemo::memo::semhash::SemanticSketcher;
 use attmemo::memo::{AttentionDb, MemoTier};
@@ -453,6 +458,149 @@ fn write_path_section(table: &mut TableWriter) -> (f64, f64, f64) {
         );
     }
     (lat_on.p50(), lat_on.p99(), skips_on as f64)
+}
+
+/// Generational-index write path (the PR 9 tentpole): mixed batches —
+/// one fresh row forcing a real clone + publish plus seven dedup rows —
+/// admitted into tiers prefilled to `small` and `large` (10×) entries,
+/// generational chunk-sharing publish vs the deep-copy baseline
+/// (`MemoConfig::full_index_clone`) on the same build. Two claims are
+/// proven:
+///
+/// * **O(touched)**: the generational arm's per-publish touched-node
+///   count (node records + vector rows actually deep-copied) stays flat
+///   across the 10× growth, while the baseline's scales with the index —
+///   structural chunk-sharing properties with seeded inputs, so they
+///   assert even under `BENCH_SMOKE`;
+/// * **latency**: mixed-batch admit p99 on the generational arm beats
+///   the full-clone baseline at the large size, where the deep copy
+///   costs milliseconds against the generational microseconds — orders
+///   of magnitude apart, so this too asserts in smoke mode.
+///
+/// Returns the generational large-size (admit_p99_ns, touched/publish)
+/// for the smoke summary (`mixed_admit_p99_ns`, `publish_touched_nodes`).
+fn generational_publish_section(table: &mut TableWriter) -> (f64, f64) {
+    use attmemo::config::MemoConfig;
+    use attmemo::util::stats::Summary;
+
+    let cfg = sim_cfg();
+    let seq = 32usize;
+    let elems = cfg.apm_elems(seq);
+    let small = smoke::iters(1_000, 300);
+    let large = 10 * small;
+    let batches = smoke::iters(100, 30);
+    let apm = vec![1.0f32; elems];
+
+    // One arm: prefill to `n` entries, then `batches` timed mixed
+    // admissions. The rng is reseeded per size, so the two clone arms
+    // at one size admit byte-identical workloads.
+    let run_arm = |full_clone: bool, n: usize| -> (Summary, f64) {
+        let memo = MemoConfig {
+            online_admission: true,
+            max_db_entries: 0,
+            admission_min_attempts: 0,
+            intra_batch_dedup: true,
+            full_index_clone: full_clone,
+            ..MemoConfig::default()
+        };
+        let tier = MemoTier::new(&cfg, seq, Default::default(), &memo);
+        let mut rng = Pcg32::seeded(0x9e0 + n as u64);
+        let stored: Vec<Vec<f32>> =
+            (0..n).map(|_| unit_vec(&mut rng, cfg.embed_dim)).collect();
+        for chunk in stored.chunks(64) {
+            let rows: Vec<(&[f32], &[f32])> = chunk
+                .iter()
+                .map(|f| (f.as_slice(), apm.as_slice()))
+                .collect();
+            // Threshold 2.0: nothing clears it, so every row admits.
+            tier.admit_batch(0, &rows, 2.0, 48).unwrap();
+        }
+
+        let mut lat = Summary::new();
+        let pub0 = tier.publishes();
+        let touched0 = tier.publish_touched_nodes();
+        for b in 0..batches {
+            // Random unit vectors in 64-dim sit near similarity 0 to
+            // everything stored, so the fresh row always misses the 0.9
+            // dedup floor and forces the clone + publish; the repeats
+            // dedup at similarity 1.0.
+            let fresh = unit_vec(&mut rng, cfg.embed_dim);
+            let mut rows: Vec<(&[f32], &[f32])> =
+                vec![(fresh.as_slice(), apm.as_slice())];
+            for j in 0..7 {
+                rows.push((stored[(b * 7 + j) % n].as_slice(),
+                           apm.as_slice()));
+            }
+            let t0 = std::time::Instant::now();
+            tier.admit_batch(0, &rows, 0.9, 48).unwrap();
+            lat.record(t0.elapsed().as_nanos() as f64);
+        }
+        let pubs = tier.publishes() - pub0;
+        assert!(
+            pubs >= batches as u64,
+            "every mixed batch must publish (1 fresh row): {pubs} \
+             publishes over {batches} batches"
+        );
+        let touched = (tier.publish_touched_nodes() - touched0) as f64
+            / pubs as f64;
+        (lat, touched)
+    };
+
+    // Per arm: (p99_ns, touched/publish).
+    let mut arms = Vec::new();
+    for (name, full_clone, n) in [
+        ("generational", false, small),
+        ("generational", false, large),
+        ("full-clone", true, small),
+        ("full-clone", true, large),
+    ] {
+        let (mut lat, touched) = run_arm(full_clone, n);
+        table.row(&[
+            name.to_string(),
+            n.to_string(),
+            batches.to_string(),
+            format!("{:.0}", lat.p50()),
+            format!("{:.0}", lat.p99()),
+            format!("{touched:.0}"),
+        ]);
+        arms.push((lat.p99(), touched));
+    }
+    let (gen_small_touched, gen_large_touched) = (arms[0].1, arms[1].1);
+    let (gen_large_p99, full_large_p99) = (arms[1].0, arms[3].0);
+    println!(
+        "generational publish: touched/publish {gen_small_touched:.0} @ \
+         {small} → {gen_large_touched:.0} @ {large} entries \
+         (full-clone baseline {:.0} → {:.0}); mixed admit p99 \
+         {gen_large_p99:.0}ns vs {full_large_p99:.0}ns full-clone @ \
+         {large}",
+        arms[2].1, arms[3].1,
+    );
+    // Flatness margin: 3× absorbs graph-degree noise, the additive term
+    // absorbs the tail vector chunk — an insert recopies the partially
+    // filled tail (up to one chunk of rows, a prefill-size-mod-chunk
+    // artefact, not O(n) growth).
+    let flat_bound =
+        3.0 * gen_small_touched + 2.0 * Hnsw::node_chunk() as f64;
+    assert!(
+        gen_large_touched <= flat_bound,
+        "generational publish must stay O(touched) across 10× growth: \
+         {gen_small_touched:.0} touched/publish @ {small} entries vs \
+         {gen_large_touched:.0} @ {large} (bound {flat_bound:.0})"
+    );
+    assert!(
+        arms[3].1 > 2.0 * flat_bound,
+        "the full-clone baseline must scale with index size (else the \
+         A/B proves nothing): {:.0} touched/publish vs generational \
+         {gen_large_touched:.0}",
+        arms[3].1
+    );
+    assert!(
+        gen_large_p99 < full_large_p99,
+        "generational mixed-batch admit p99 must beat the full-clone \
+         baseline at {large} entries: {gen_large_p99:.0}ns vs \
+         {full_large_p99:.0}ns"
+    );
+    (gen_large_p99, gen_large_touched)
 }
 
 /// Outcome of one affinity A/B arm over the full run.
@@ -1046,6 +1194,19 @@ fn main() {
     summary.push("admit_p99_ns", admit_p99);
     summary.push("publish_skips", publish_skips);
 
+    let mut gp = TableWriter::new(
+        "Generational publish — mixed batches (1 fresh + 7 dedup rows) \
+         vs the full-index-clone baseline at 1× and 10× prefill",
+        &["arm", "entries", "batches", "admit_p50_ns", "admit_p99_ns",
+          "touched_per_publish"],
+    );
+    let (mixed_p99, touched_per_publish) =
+        generational_publish_section(&mut gp);
+    gp.emit(Some(std::path::Path::new(
+        "bench_results/online_memo_generational_publish.csv")));
+    summary.push("mixed_admit_p99_ns", mixed_p99);
+    summary.push("publish_touched_nodes", touched_per_publish);
+
     let mut ab = TableWriter::new(
         "Affinity routing A/B — clustered workload, 2 replicas, \
          shared tier (dedup on)",
@@ -1101,6 +1262,10 @@ fn main() {
             .check_history(path, "cb_dedup_yield", 0.05)
             .and_then(|()| {
                 summary.check_history_ceiling(path, "cb_p99_ms", 2.5)
+            })
+            .and_then(|()| {
+                summary.check_history_ceiling(
+                    path, "mixed_admit_p99_ns", 2.5)
             })
             .and_then(|()| {
                 summary.check_and_append_history(

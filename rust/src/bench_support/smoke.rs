@@ -23,6 +23,20 @@ pub fn iters(full: usize, short: usize) -> usize {
     if smoke() { short } else { full }
 }
 
+/// The headline keys every CI smoke run must leave in `BENCH_smoke.json`.
+/// Living next to the emitters (not in a workflow shell loop) so adding a
+/// key to a bench and to the required set is one diff in one language —
+/// CI enforces the list through `tests/smoke_keys.rs` calling
+/// [`SmokeSummary::require_keys`].
+pub const REQUIRED_SMOKE_KEYS: &[&str] = &[
+    "cold_hit_p99_ns",
+    "hot_resident_ratio",
+    "cb_p99_ms",
+    "cb_dedup_yield",
+    "publish_touched_nodes",
+    "mixed_admit_p99_ns",
+];
+
 /// Flat key → number summary collected by a bench run and emitted as
 /// `BENCH_smoke.json`.
 #[derive(Default)]
@@ -184,6 +198,36 @@ impl SmokeSummary {
         Ok(())
     }
 
+    /// Assert that the summary file at `path` carries every key in
+    /// `keys` — the CI "required smoke keys" gate, replacing the old
+    /// workflow shell loop so the list lives next to the emitters (see
+    /// [`REQUIRED_SMOKE_KEYS`]). A key is present even when its value is
+    /// `null` (a bench that ran but measured a non-finite number is a
+    /// bench regression, not a missing bench — the history gates catch
+    /// value problems). Errors list *all* missing keys at once.
+    pub fn require_keys(
+        path: &Path, keys: &[&str],
+    ) -> std::result::Result<(), String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let parsed = crate::config::json::Json::parse(&text)
+            .map_err(|e| format!("parse {}: {e}", path.display()))?;
+        let missing: Vec<&str> = keys
+            .iter()
+            .copied()
+            .filter(|k| parsed.get(k).is_none())
+            .collect();
+        if missing.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "{} is missing required smoke keys: {}",
+                path.display(),
+                missing.join(", ")
+            ))
+        }
+    }
+
     /// Shared reverse scan for the history gates: this run's `key` plus
     /// the most recent history entry at `path` carrying it. Missing file
     /// or absent key → `None` (the gates pass; the first entry seeds the
@@ -290,6 +334,34 @@ mod tests {
             Some(1500.0),
             "a re-emitted key takes the fresh value"
         );
+    }
+
+    #[test]
+    fn require_keys_reports_every_missing_key() {
+        let dir = std::env::temp_dir().join("attmemo_smoke_require");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("smoke.json");
+
+        let mut s = SmokeSummary::new();
+        s.push("cb_p99_ms", 4.0);
+        s.push("nan_key", f64::NAN); // present as null — still counts
+        s.emit(&path);
+        SmokeSummary::require_keys(&path, &["cb_p99_ms", "nan_key"])
+            .unwrap();
+        let err = SmokeSummary::require_keys(
+            &path,
+            &["cb_p99_ms", "cold_hit_p99_ns", "publish_touched_nodes"],
+        )
+        .unwrap_err();
+        assert!(err.contains("cold_hit_p99_ns"), "{err}");
+        assert!(err.contains("publish_touched_nodes"), "{err}");
+        assert!(!err.contains("cb_p99_ms"), "{err}");
+        // A missing file is an error, not a pass.
+        assert!(SmokeSummary::require_keys(
+            &dir.join("absent.json"),
+            REQUIRED_SMOKE_KEYS
+        )
+        .is_err());
     }
 
     #[test]

@@ -187,6 +187,13 @@ pub struct MemoConfig {
     /// cold entries fall off the end (FIFO — twice-demoted is the end
     /// of the line).
     pub cold_capacity: usize,
+    /// Bench-only A/B baseline: deep-copy the whole HNSW graph on every
+    /// copy-on-write publish instead of sharing unchanged chunks with
+    /// the displaced snapshot — the pre-generational O(n) write path.
+    /// Never set in production; exists so `bench_online_memo` can prove
+    /// the generational index's O(touched) publish against the
+    /// full-clone cost on the same build.
+    pub full_index_clone: bool,
 }
 
 impl Default for MemoConfig {
@@ -204,6 +211,7 @@ impl Default for MemoConfig {
             dedup_prepass: true,
             cold_tier_dir: None,
             cold_capacity: 0,
+            full_index_clone: false,
         }
     }
 }

@@ -51,7 +51,7 @@
 //! check-then-copy window when a forced reclaim overwrites a slot mid-read.
 
 use std::os::fd::RawFd;
-use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::{Error, Result};
@@ -536,10 +536,11 @@ impl ApmArena {
     /// when the entry was looked up (see [`ApmArena::epoch`]). Errors if
     /// the id has died, its slot was recycled for a new tenant, or the
     /// arena was compacted since the stamp — never returns another
-    /// tenant's bytes. Callers that *copy* the returned bytes while other
-    /// lineage writers run must confirm the copy with
-    /// [`ApmArena::recheck`] afterwards: a forced slot reclaim (tier
-    /// retire-cap overflow) may overwrite the slot mid-copy.
+    /// tenant's bytes. The returned slice is a *plain* view: it is only
+    /// safe to read while no lineage writer can overwrite the slot (the
+    /// writer mutex is held, or the arena is exclusively owned). Readers
+    /// racing live writers must copy through [`ApmArena::copy_checked`]
+    /// instead, which goes through word-sized atomics.
     pub fn get_checked(&self, id: ApmId, epoch: u64) -> Result<&[f32]> {
         if !self.stamp_valid(id, epoch) {
             return Err(Error::memo(format!(
@@ -560,6 +561,44 @@ impl ApmArena {
     pub fn recheck(&self, id: ApmId, epoch: u64) -> bool {
         std::sync::atomic::fence(Ordering::Acquire);
         self.stamp_valid(id, epoch)
+    }
+
+    /// Optimistic cross-thread copy of one entry into `dst`, validated
+    /// against an epoch stamp taken at lookup time. This is the reader
+    /// half of the seqlock-over-mmap discipline: the payload words are
+    /// read through word-sized `Relaxed` atomic loads (pairing with the
+    /// atomic stores in [`ApmArena::push`]), so racing a forced slot
+    /// reclaim is well-defined rather than UB and ThreadSanitizer accepts
+    /// it. A pre-copy stamp check rejects already-stale ids; callers must
+    /// still confirm the copy with [`ApmArena::recheck`] afterwards to
+    /// discard a torn copy from a reclaim that landed mid-read. Errors on
+    /// stale stamps and on `dst` length mismatches; on error `dst`'s
+    /// contents are unspecified.
+    pub fn copy_checked(
+        &self,
+        id: ApmId,
+        epoch: u64,
+        dst: &mut [f32],
+    ) -> Result<()> {
+        if dst.len() * 4 != self.entry_bytes {
+            return Err(Error::memo(format!(
+                "arena copy: want {} f32, got {}",
+                self.entry_bytes / 4,
+                dst.len()
+            )));
+        }
+        if !self.stamp_valid(id, epoch) {
+            return Err(Error::memo(format!(
+                "ApmId {} is stale: slot reused or arena compacted since \
+                 lookup",
+                id.0
+            )));
+        }
+        let off = self.file_offset(id)?;
+        unsafe {
+            load_entry_words(self.map.base.add(off), dst);
+        }
+        Ok(())
     }
 
     /// Live entries.
@@ -669,12 +708,16 @@ impl ApmArena {
             self.epochs.load(slot)
         };
         let off = slot as usize * self.store.stride;
+        // Payload bytes land through word-sized `Relaxed` atomic stores:
+        // an optimistic reader racing a forced reclaim may be copying the
+        // old tenant out of this slot concurrently (`copy_checked`), and
+        // word atomics make that deliberate race well-defined instead of
+        // UB — the reader's post-copy `recheck` discards the torn copy.
+        // Ordering is carried by the epoch claim above (`AcqRel`) and the
+        // reader's `Acquire` fence, not by these stores; on x86-64 a
+        // relaxed atomic store compiles to the same plain `mov`.
         unsafe {
-            std::ptr::copy_nonoverlapping(
-                data.as_ptr().cast::<u8>(),
-                self.map.base.add(off),
-                self.entry_bytes,
-            );
+            store_entry_words(self.map.base.add(off), data);
         }
         self.slots.push(Some(SlotRef { slot, epoch }));
         self.live += 1;
@@ -727,6 +770,57 @@ impl ApmArena {
     }
 }
 
+/// Write `src` into the slot at `dst` through word-sized `Relaxed` atomic
+/// stores: 8-byte words for the bulk, one 4-byte word for an odd tail
+/// element. Byte layout is identical to a plain `memcpy` of the `f32`s
+/// (words are read out of `src` in memory order), so single-threaded
+/// plain readers ([`ApmArena::get`]) see the same bytes.
+///
+/// # Safety
+/// `dst` must be valid for `src.len() * 4` bytes of writes and 8-byte
+/// aligned. Slot offsets satisfy this: the mmap base is page-aligned and
+/// the per-slot stride is a page multiple.
+unsafe fn store_entry_words(dst: *mut u8, src: &[f32]) {
+    let pairs = src.len() / 2;
+    let d64 = dst.cast::<AtomicU64>();
+    for p in 0..pairs {
+        // Unaligned read: `src` is only guaranteed 4-byte aligned.
+        let w = std::ptr::read_unaligned(
+            src.as_ptr().add(2 * p).cast::<u64>(),
+        );
+        (*d64.add(p)).store(w, Ordering::Relaxed);
+    }
+    if src.len() % 2 == 1 {
+        let d32 = dst.add(pairs * 8).cast::<AtomicU32>();
+        (*d32).store(src[src.len() - 1].to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Read one slot's payload into `dst` through word-sized `Relaxed` atomic
+/// loads — the counterpart of [`store_entry_words`]. The copy may be torn
+/// when it races a reclaiming writer; callers detect that through the
+/// post-copy epoch recheck, never by inspecting the bytes.
+///
+/// # Safety
+/// `src` must be valid for `dst.len() * 4` bytes of reads and 8-byte
+/// aligned (see [`store_entry_words`]).
+unsafe fn load_entry_words(src: *const u8, dst: &mut [f32]) {
+    let pairs = dst.len() / 2;
+    let s64 = src.cast::<AtomicU64>();
+    for p in 0..pairs {
+        let w = (*s64.add(p)).load(Ordering::Relaxed);
+        std::ptr::write_unaligned(
+            dst.as_mut_ptr().add(2 * p).cast::<u64>(),
+            w,
+        );
+    }
+    if dst.len() % 2 == 1 {
+        let s32 = src.add(pairs * 8).cast::<AtomicU32>();
+        let n = dst.len();
+        dst[n - 1] = f32::from_bits((*s32).load(Ordering::Relaxed));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -757,6 +851,24 @@ mod tests {
     fn wrong_size_push_rejected() {
         let mut a = ApmArena::new(16).unwrap();
         assert!(a.push(&[0.0; 8]).is_err());
+    }
+
+    #[test]
+    fn copy_checked_roundtrip_and_odd_tail() {
+        // Odd element count exercises the 4-byte tail word.
+        let mut a = ApmArena::new(17).unwrap();
+        let x: Vec<f32> = (0..17).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let id = a.push(&x).unwrap();
+        let stamp = a.epoch(id).unwrap();
+        let mut dst = vec![0.0f32; 17];
+        a.copy_checked(id, stamp, &mut dst).unwrap();
+        assert_eq!(dst, x);
+        assert!(a.recheck(id, stamp));
+        // Wrong-size destination and stale stamps are rejected.
+        assert!(a.copy_checked(id, stamp, &mut [0.0; 8]).is_err());
+        a.remove(id).unwrap();
+        let _ = a.push(&x).unwrap(); // recycles the slot, bumps its epoch
+        assert!(a.copy_checked(id, stamp, &mut dst).is_err());
     }
 
     #[test]

@@ -183,6 +183,10 @@ pub struct LayerDb {
     reuse: ReuseTrack,
     /// Eviction clock position (an id in `[0, arena.next_id())`).
     hand: usize,
+    /// Bench baseline: deep-copy the whole HNSW graph on every
+    /// `cow_clone`, as the pre-generational index did
+    /// (`MemoConfig::full_index_clone`). Never set in production.
+    full_index_clone: bool,
 }
 
 impl LayerDb {
@@ -194,21 +198,45 @@ impl LayerDb {
             index: Hnsw::new(cfg.embed_dim, params),
             reuse: ReuseTrack::default(),
             hand: 0,
+            full_index_clone: false,
         }
     }
 
     /// Copy-on-write snapshot for the seqlock tier: the index and the
-    /// arena's id tables are duplicated (so the copy can mutate freely),
-    /// the arena's payload store and the reuse-track chunks are shared —
-    /// reuse marked by readers of a frozen snapshot keeps feeding the
-    /// live eviction clock.
+    /// arena share their chunked tables with the copy (generational
+    /// clones — a mutation of the copy unshares only the chunks it
+    /// touches), the arena's payload store and the reuse-track chunks
+    /// are shared outright — reuse marked by readers of a frozen
+    /// snapshot keeps feeding the live eviction clock.
     pub(crate) fn cow_clone(&self) -> LayerDb {
+        let mut index = self.index.clone();
+        if self.full_index_clone {
+            // The O(index) whole-graph copy the generational layout
+            // replaced; kept as the write-path bench's baseline arm.
+            index.unshare_all();
+        }
         LayerDb {
             arena: self.arena.cow_clone(),
-            index: self.index.clone(),
+            index,
             reuse: self.reuse.clone(),
             hand: self.hand,
+            full_index_clone: self.full_index_clone,
         }
+    }
+
+    /// Force every `cow_clone` of this layer to deep-copy the whole
+    /// index graph (the pre-generational behaviour) — the A/B baseline
+    /// of the write-path bench, wired from `MemoConfig::full_index_clone`.
+    pub(crate) fn set_full_index_clone(&mut self, on: bool) {
+        self.full_index_clone = on;
+    }
+
+    /// Node records and vector rows the index deep-copied since this
+    /// working copy was cloned off the published snapshot — the actual
+    /// copy cost of the mutations behind one publish (the tier
+    /// aggregates it into `publish_touched_nodes`).
+    pub(crate) fn index_touched_nodes(&self) -> u64 {
+        self.index.touched_nodes()
     }
 
     /// Route the arena's evictions through the deferred-reclaim list (the

@@ -6,12 +6,27 @@
 //! links pruned to `m` (2·m at level 0) by distance. Search quality /
 //! recall is validated against `BruteForceIndex` in property tests and the
 //! Fig. 7 bench.
+//!
+//! # Generational storage
+//!
+//! The graph is stored the same way the arena's id/slot tables are:
+//! node records (neighbour lists + tombstone flag) and vector rows live
+//! in [`Hnsw::node_chunk`]-sized chunks whose `Arc`s are shared between
+//! a snapshot and its [`Clone`]. Within a chunk each node record is
+//! itself `Arc`-shared, so a mutation unshares the touched chunk's
+//! *pointer array* (cheap) and deep-copies only the node records it
+//! actually rewrites. `Clone` is therefore O(chunk pointers), an insert
+//! or tombstone is O(nodes touched), and the seqlock tier's
+//! copy-on-write publish no longer pays an O(index) graph copy per
+//! mixed batch. [`Hnsw::touched_nodes`] counts the deep copies since the
+//! clone — the `publish_touched_nodes` bench metric.
 
 use crate::memo::index::{Hit, VectorIndex};
 use crate::tensor::ops::l2_sq;
 use crate::util::Pcg32;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 
 /// Construction/search parameters.
 #[derive(Debug, Clone, Copy)]
@@ -32,36 +47,80 @@ impl Default for HnswParams {
     }
 }
 
+/// Nodes per copy-on-write chunk. Matches the arena's table chunking so
+/// one admission's index traffic has the same sharing granularity as its
+/// slot-table traffic.
+const NODE_CHUNK: usize = 256;
+
+/// One node: neighbour lists per level plus the tombstone flag.
+/// `Arc`-shared between generations; deep-copied only when rewritten.
 #[derive(Clone)]
 struct Node {
     /// Neighbour lists, one per level (index 0 = ground level).
     links: Vec<Vec<u32>>,
+    deleted: bool,
 }
 
-/// The index. Vectors are stored in one flat array.
+/// A chunk of `Arc`-shared node records. Unsharing a chunk copies the
+/// pointer array only — the records stay shared until touched.
+#[derive(Clone, Default)]
+struct NodeChunk {
+    nodes: Vec<Arc<Node>>,
+}
+
+/// A chunk of vector rows (append-only; only the tail chunk is ever
+/// unshared, when a new vector lands in a chunk a snapshot still holds).
+#[derive(Clone, Default)]
+struct VecChunk {
+    data: Vec<f32>,
+}
+
+/// The index. Vectors and node records live in generational chunks (see
+/// the module docs).
 ///
-/// Deletion is by tombstone (`remove`): the node keeps its vector and its
-/// links — so it still *routes* searches through the small world — but it
-/// is never returned as a hit and new nodes stop linking to it. This is
-/// the standard HNSW delete strategy and what lets the serve-time
-/// eviction path retire entries without rebuilding the graph.
-///
-/// `Clone` duplicates the whole graph (vectors, links, tombstones, RNG
-/// state) — the seqlock tier's copy-on-write admission path clones once
-/// per admitted *batch*, mutates the copy, and publishes it while frozen
-/// snapshots keep serving searches.
-#[derive(Clone)]
+/// Deletion is by tombstone (`remove`): the node keeps its id and its
+/// vector, but searches skip it during traversal — it is never returned
+/// as a hit, never expanded, and new nodes stop linking to it. Dead
+/// neighbour slots are reclaimed incrementally (`shrink` drops them
+/// whenever a list is touched) and wholesale by [`Hnsw::compact`].
 pub struct Hnsw {
     dim: usize,
     params: HnswParams,
-    data: Vec<f32>,
-    nodes: Vec<Node>,
-    deleted: Vec<bool>,
+    vec_chunks: Vec<Arc<VecChunk>>,
+    node_chunks: Vec<Arc<NodeChunk>>,
+    len: usize,
     live: usize,
     entry: Option<u32>,
     max_level: usize,
     rng: Pcg32,
     level_mult: f64,
+    /// Node records and vector rows deep-copied since this generation
+    /// was cloned (see [`Hnsw::touched_nodes`]).
+    touched: u64,
+}
+
+impl Clone for Hnsw {
+    /// Generational clone: shares every chunk with `self` (O(chunk
+    /// pointers), not O(nodes)) and starts its own
+    /// [`Hnsw::touched_nodes`] counter at zero. The seqlock tier's
+    /// copy-on-write admission path clones once per admitted batch,
+    /// mutates the clone, and publishes it while frozen snapshots keep
+    /// answering searches from their own generation.
+    fn clone(&self) -> Self {
+        Hnsw {
+            dim: self.dim,
+            params: self.params,
+            vec_chunks: self.vec_chunks.clone(),
+            node_chunks: self.node_chunks.clone(),
+            len: self.len,
+            live: self.live,
+            entry: self.entry,
+            max_level: self.max_level,
+            rng: self.rng.clone(),
+            level_mult: self.level_mult,
+            touched: 0,
+        }
+    }
 }
 
 /// Max-heap entry by distance (for result sets).
@@ -101,15 +160,22 @@ impl Hnsw {
         Hnsw {
             dim,
             params,
-            data: Vec::new(),
-            nodes: Vec::new(),
-            deleted: Vec::new(),
+            vec_chunks: Vec::new(),
+            node_chunks: Vec::new(),
+            len: 0,
             live: 0,
             entry: None,
             max_level: 0,
             rng: Pcg32::seeded(params.seed),
             level_mult,
+            touched: 0,
         }
+    }
+
+    /// Nodes per copy-on-write chunk (the sharing granularity between
+    /// generations; exposed for tests and sizing docs).
+    pub fn node_chunk() -> usize {
+        NODE_CHUNK
     }
 
     /// Vectors that are still searchable (not tombstoned).
@@ -119,7 +185,7 @@ impl Hnsw {
 
     /// Has this id been tombstoned?
     pub fn is_deleted(&self, id: u32) -> bool {
-        self.deleted.get(id as usize).copied().unwrap_or(false)
+        (id as usize) < self.len && self.node(id).deleted
     }
 
     /// Construction/search parameters the index was built with.
@@ -132,10 +198,98 @@ impl Hnsw {
         self.dim
     }
 
+    /// Node records and vector rows this generation deep-copied since it
+    /// was cloned off its parent: the actual byte cost of the
+    /// copy-on-write mutations behind one publish. Chunks merely
+    /// unshared at the pointer-array level do not count — only nodes
+    /// whose neighbour lists were rewritten and vector rows recopied
+    /// into a fresh tail chunk. Stays O(batch), not O(index): the
+    /// write-path bench gates on it (`publish_touched_nodes`).
+    pub fn touched_nodes(&self) -> u64 {
+        self.touched
+    }
+
+    /// Deep-copy every shared chunk and node record, as the pre-PR-9
+    /// whole-graph clone did. This is the A/B baseline arm of the
+    /// write-path bench (`MemoConfig::full_index_clone`); the copies are
+    /// counted by [`Hnsw::touched_nodes`] so both arms report through
+    /// the same metric.
+    pub fn unshare_all(&mut self) {
+        for id in 0..self.len as u32 {
+            let _ = self.node_mut(id);
+        }
+        let dim = self.dim.max(1);
+        let Hnsw { vec_chunks, touched, .. } = self;
+        for c in vec_chunks {
+            if Arc::get_mut(c).is_none() {
+                *touched += (c.data.len() / dim) as u64;
+                *c = Arc::new((**c).clone());
+            }
+        }
+    }
+
+    #[inline]
+    fn node(&self, id: u32) -> &Node {
+        let i = id as usize;
+        &self.node_chunks[i / NODE_CHUNK].nodes[i % NODE_CHUNK]
+    }
+
+    /// Mutable access to one node record, unsharing along the way: the
+    /// chunk's pointer array is cloned if a snapshot still holds it, and
+    /// the record itself is deep-copied (and counted as touched) only if
+    /// shared.
+    fn node_mut(&mut self, id: u32) -> &mut Node {
+        let i = id as usize;
+        let Hnsw { node_chunks, touched, .. } = self;
+        let chunk = &mut node_chunks[i / NODE_CHUNK];
+        if Arc::get_mut(chunk).is_none() {
+            *chunk = Arc::new((**chunk).clone());
+        }
+        let rec = &mut Arc::get_mut(chunk)
+            .expect("chunk just unshared")
+            .nodes[i % NODE_CHUNK];
+        if Arc::get_mut(rec).is_none() {
+            *touched += 1;
+            *rec = Arc::new((**rec).clone());
+        }
+        Arc::get_mut(rec).expect("node just unshared")
+    }
+
+    /// Append one node (vector row + empty links): extends the tail
+    /// chunks, unsharing them first when a snapshot still holds them
+    /// (the recopied tail vector rows count as touched).
+    fn push_node(&mut self, v: &[f32], levels: usize) {
+        if self.len % NODE_CHUNK == 0 {
+            self.vec_chunks.push(Arc::new(VecChunk::default()));
+            self.node_chunks.push(Arc::new(NodeChunk::default()));
+        }
+        let dim = self.dim.max(1);
+        let Hnsw { vec_chunks, node_chunks, touched, .. } = self;
+        let vtail = vec_chunks.last_mut().expect("tail chunk ensured");
+        if Arc::get_mut(vtail).is_none() {
+            *touched += (vtail.data.len() / dim) as u64;
+            *vtail = Arc::new((**vtail).clone());
+        }
+        Arc::get_mut(vtail)
+            .expect("tail just unshared")
+            .data
+            .extend_from_slice(v);
+        let ntail = node_chunks.last_mut().expect("tail chunk ensured");
+        if Arc::get_mut(ntail).is_none() {
+            *ntail = Arc::new((**ntail).clone());
+        }
+        Arc::get_mut(ntail).expect("tail just unshared").nodes.push(
+            Arc::new(Node { links: vec![Vec::new(); levels], deleted: false }),
+        );
+        self.len += 1;
+        self.live += 1;
+    }
+
     #[inline]
     fn vec(&self, id: u32) -> &[f32] {
-        let i = id as usize * self.dim;
-        &self.data[i..i + self.dim]
+        let i = id as usize;
+        let off = (i % NODE_CHUNK) * self.dim;
+        &self.vec_chunks[i / NODE_CHUNK].data[off..off + self.dim]
     }
 
     /// Stored vector by id (persistence / diagnostics).
@@ -148,13 +302,18 @@ impl Hnsw {
         l2_sq(q, self.vec(id))
     }
 
-    /// Greedy closest-point descent on one level.
+    /// Greedy closest-point descent on one level. Tombstoned neighbours
+    /// are skipped, so `cur` stays live throughout (the entry point is
+    /// kept live by `remove`).
     fn greedy(&self, q: &[f32], start: u32, level: usize) -> u32 {
         let mut cur = start;
         let mut cur_d = self.dist(q, cur);
         loop {
             let mut improved = false;
-            for &n in &self.nodes[cur as usize].links[level] {
+            for &n in &self.node(cur).links[level] {
+                if self.node(n).deleted {
+                    continue;
+                }
                 let d = self.dist(q, n);
                 if d < cur_d {
                     cur = n;
@@ -170,17 +329,20 @@ impl Hnsw {
 
     /// Beam search on one level; returns up to `ef` closest as a max-heap.
     ///
-    /// Tombstoned nodes participate in the frontier (they route) but are
-    /// never added to the result set.
+    /// Tombstoned nodes are skipped during candidate expansion: they
+    /// neither join the frontier nor the result set, so a churned index
+    /// stops paying distance evaluations for dead entries. Connectivity
+    /// across removed hubs is restored by `shrink` (drops dead links on
+    /// touch) and [`Hnsw::compact`] (bridges through them wholesale).
     fn search_level(&self, q: &[f32], start: u32, level: usize,
                     ef: usize) -> Vec<Hit> {
-        let mut visited = vec![false; self.nodes.len()];
+        let mut visited = vec![false; self.len];
         visited[start as usize] = true;
         let d0 = self.dist(q, start);
         let mut frontier = BinaryHeap::new(); // min-heap
         let mut results: BinaryHeap<Far> = BinaryHeap::new(); // max-heap
         frontier.push(Near(d0, start));
-        if !self.deleted[start as usize] {
+        if !self.node(start).deleted {
             results.push(Far(d0, start));
         }
         while let Some(Near(d, c)) = frontier.pop() {
@@ -188,20 +350,21 @@ impl Hnsw {
             if d > worst && results.len() >= ef {
                 break;
             }
-            for &n in &self.nodes[c as usize].links[level] {
+            for &n in &self.node(c).links[level] {
                 if visited[n as usize] {
                     continue;
                 }
                 visited[n as usize] = true;
+                if self.node(n).deleted {
+                    continue;
+                }
                 let dn = self.dist(q, n);
                 let worst = results.peek().map_or(f32::INFINITY, |f| f.0);
                 if results.len() < ef || dn < worst {
                     frontier.push(Near(dn, n));
-                    if !self.deleted[n as usize] {
-                        results.push(Far(dn, n));
-                        if results.len() > ef {
-                            results.pop();
-                        }
+                    results.push(Far(dn, n));
+                    if results.len() > ef {
+                        results.pop();
                     }
                 }
             }
@@ -219,22 +382,32 @@ impl Hnsw {
         hits.iter().take(m).map(|h| h.id).collect()
     }
 
-    /// Prune a node's link list back to the cap, keeping the closest.
+    /// Prune a node's link list: tombstoned neighbours are dropped first
+    /// (incremental slot reclamation — every touch of a list frees its
+    /// dead entries), then the survivors are capped to the closest.
     fn shrink(&mut self, id: u32, level: usize) {
         let cap = if level == 0 { self.params.m * 2 } else { self.params.m };
-        let links = &self.nodes[id as usize].links[level];
-        if links.len() <= cap {
+        let links = &self.node(id).links[level];
+        let has_dead = links.iter().any(|&n| self.node(n).deleted);
+        if !has_dead && links.len() <= cap {
             return;
         }
-        let base = self.vec(id).to_vec();
-        let mut scored: Vec<(f32, u32)> = links
+        let mut kept: Vec<u32> = links
             .iter()
-            .map(|&n| (l2_sq(&base, self.vec(n)), n))
+            .copied()
+            .filter(|&n| !self.node(n).deleted)
             .collect();
-        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        scored.truncate(cap);
-        self.nodes[id as usize].links[level] =
-            scored.into_iter().map(|(_, n)| n).collect();
+        if kept.len() > cap {
+            let base = self.vec(id).to_vec();
+            let mut scored: Vec<(f32, u32)> = kept
+                .iter()
+                .map(|&n| (l2_sq(&base, self.vec(n)), n))
+                .collect();
+            scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            scored.truncate(cap);
+            kept = scored.into_iter().map(|(_, n)| n).collect();
+        }
+        self.node_mut(id).links[level] = kept;
     }
 
     /// Search with an explicit beam width.
@@ -242,6 +415,7 @@ impl Hnsw {
         let Some(entry) = self.entry else {
             return Vec::new();
         };
+        debug_assert!(!self.node(entry).deleted, "entry must stay live");
         let mut cur = entry;
         for level in (1..=self.max_level).rev() {
             cur = self.greedy(q, cur, level);
@@ -250,17 +424,117 @@ impl Hnsw {
         hits.truncate(k);
         hits
     }
+
+    /// Reclaim tombstoned neighbour slots wholesale: drop every dead id
+    /// from every live node's lists — bridging through each dead
+    /// neighbour's own live links, so regions stitched together by a
+    /// since-removed hub stay reachable — then release the dead nodes'
+    /// link storage. Returns the number of dead link slots reclaimed.
+    ///
+    /// O(index); run it on maintenance boundaries. (The tier's
+    /// `LayerDb::compact` rebuilds and renumbers instead, which reclaims
+    /// as a side effect; this in-place form keeps ids stable for callers
+    /// that hold them.)
+    pub fn compact(&mut self) -> usize {
+        let mut reclaimed = 0;
+        for id in 0..self.len as u32 {
+            if self.node(id).deleted {
+                continue;
+            }
+            let levels = self.node(id).links.len();
+            for l in 0..levels {
+                let any_dead = self.node(id).links[l]
+                    .iter()
+                    .any(|&n| self.node(n).deleted);
+                if !any_dead {
+                    continue;
+                }
+                let links = self.node(id).links[l].clone();
+                let mut kept: Vec<u32> = links
+                    .iter()
+                    .copied()
+                    .filter(|&n| !self.node(n).deleted)
+                    .collect();
+                for &n in &links {
+                    if !self.node(n).deleted {
+                        continue;
+                    }
+                    reclaimed += 1;
+                    for &b in &self.node(n).links[l] {
+                        if b != id
+                            && !self.node(b).deleted
+                            && !kept.contains(&b)
+                        {
+                            kept.push(b);
+                        }
+                    }
+                }
+                self.node_mut(id).links[l] = kept;
+                self.shrink(id, l);
+            }
+        }
+        // Dead nodes stop holding links entirely: their lists are the
+        // reclaimed memory, and nothing routes through them any more.
+        for id in 0..self.len as u32 {
+            if self.node(id).deleted && !self.node(id).links.is_empty() {
+                self.node_mut(id).links = Vec::new();
+            }
+        }
+        reclaimed
+    }
+
+    /// Re-pick the entry point after the current one was tombstoned:
+    /// the highest-level live node (O(n) scan, but only ever paid when
+    /// the entry itself is removed). An empty live set clears the entry.
+    fn repick_entry(&mut self) {
+        let mut best: Option<(usize, u32)> = None;
+        for id in 0..self.len as u32 {
+            let n = self.node(id);
+            if n.deleted {
+                continue;
+            }
+            let lv = n.links.len().saturating_sub(1);
+            if best.map_or(true, |(bl, _)| lv > bl) {
+                best = Some((lv, id));
+            }
+        }
+        match best {
+            Some((lv, id)) => {
+                self.entry = Some(id);
+                self.max_level = lv;
+            }
+            None => {
+                self.entry = None;
+                self.max_level = 0;
+            }
+        }
+    }
+
+    /// Total dead ids still referenced from live nodes' neighbour lists
+    /// (0 right after [`Hnsw::compact`]; the churn regression test's
+    /// search-cost proxy — every dead slot is a wasted traversal visit).
+    #[cfg(test)]
+    fn dead_link_slots(&self) -> usize {
+        (0..self.len as u32)
+            .filter(|&id| !self.node(id).deleted)
+            .map(|id| {
+                self.node(id)
+                    .links
+                    .iter()
+                    .flat_map(|l| l.iter())
+                    .filter(|&&n| self.node(n).deleted)
+                    .count()
+            })
+            .sum()
+    }
 }
 
 impl VectorIndex for Hnsw {
     fn add(&mut self, v: &[f32]) -> u32 {
         assert_eq!(v.len(), self.dim, "dimension mismatch");
-        let id = self.nodes.len() as u32;
-        self.data.extend_from_slice(v);
+        let id = self.len as u32;
         let level = self.rng.hnsw_level(self.level_mult);
-        self.nodes.push(Node { links: vec![Vec::new(); level + 1] });
-        self.deleted.push(false);
-        self.live += 1;
+        self.push_node(v, level + 1);
 
         let Some(entry) = self.entry else {
             self.entry = Some(id);
@@ -281,13 +555,14 @@ impl VectorIndex for Hnsw {
                 self.params.m
             });
             if neighbours.is_empty() {
-                // Every beam candidate is tombstoned: bridge through the
-                // routing node anyway so the new vector stays reachable.
+                // No live candidate reachable at this level: bridge
+                // through the routing node (live — greedy and the beam
+                // skip tombstones) so the new vector stays reachable.
                 neighbours.push(cur);
             }
             for &n in &neighbours {
-                self.nodes[id as usize].links[l].push(n);
-                self.nodes[n as usize].links[l].push(id);
+                self.node_mut(id).links[l].push(n);
+                self.node_mut(n).links[l].push(id);
                 self.shrink(n, l);
             }
         }
@@ -303,18 +578,22 @@ impl VectorIndex for Hnsw {
     }
 
     fn len(&self) -> usize {
-        self.nodes.len()
+        self.len
     }
 
     fn remove(&mut self, id: u32) -> bool {
-        match self.deleted.get_mut(id as usize) {
-            Some(d) if !*d => {
-                *d = true;
-                self.live -= 1;
-                true
-            }
-            _ => false,
+        if id as usize >= self.len || self.node(id).deleted {
+            return false;
         }
+        self.node_mut(id).deleted = true;
+        self.live -= 1;
+        // Searches start at the entry point; a tombstoned entry would
+        // make every search start on (and an empty index search return)
+        // a dead node, so hand the role to a live survivor.
+        if self.entry == Some(id) {
+            self.repick_entry();
+        }
+        true
     }
 }
 
@@ -402,7 +681,7 @@ mod tests {
     }
 
     #[test]
-    fn removed_ids_stop_matching_but_keep_routing() {
+    fn removed_ids_stop_matching_and_stop_expanding() {
         let vecs = random_vecs(300, 8, 6);
         let mut idx = Hnsw::new(8, HnswParams::default());
         for v in &vecs {
@@ -410,7 +689,9 @@ mod tests {
         }
         // Tombstone every third vector (including, with high likelihood,
         // routing hubs) and verify none of them is ever returned while
-        // recall on the survivors stays intact.
+        // recall on the survivors stays intact — traversal now *skips*
+        // tombstones instead of routing through them, so this doubles as
+        // the connectivity check for the skip path.
         let mut removed = Vec::new();
         for id in (0..300u32).step_by(3) {
             assert!(idx.remove(id));
@@ -447,6 +728,152 @@ mod tests {
         let id = idx.add(&[1.0, 2.0, 3.0, 4.0]);
         let hits = idx.search(&[1.0, 2.0, 3.0, 4.0], 1);
         assert_eq!(hits[0].id, id);
+    }
+
+    #[test]
+    fn removing_the_entry_repicks_a_live_one() {
+        let vecs = random_vecs(100, 8, 9);
+        let mut idx = Hnsw::new(8, HnswParams::default());
+        for v in &vecs {
+            idx.add(v);
+        }
+        // Remove every node but one, searching as we go: each removal
+        // that hits the current entry point must hand the role to a live
+        // survivor (a dead entry would trip `search_ef`'s debug
+        // assertion, and a search can only start — and therefore only
+        // return anything — from a live entry).
+        for id in 0..100u32 {
+            if id == 37 {
+                continue;
+            }
+            assert!(idx.remove(id));
+            let hits = idx.search_ef(&vecs[37], 5, 64);
+            assert!(!hits.is_empty(), "no hits after remove({id})");
+            assert!(hits.iter().all(|h| !idx.is_deleted(h.id)));
+        }
+        assert_eq!(idx.live_len(), 1);
+        let hits = idx.search_ef(&vecs[37], 1, 64);
+        assert_eq!(hits[0].id, 37, "the last live node must be the entry");
+    }
+
+    /// PR 9 bugfix regression: heavy insert/remove churn (with the
+    /// maintenance `compact` a long-lived index gets) must neither leak
+    /// dead neighbour slots — the search-cost proxy: every dead slot is
+    /// a wasted traversal visit — nor erode recall on the survivors.
+    #[test]
+    fn churn_with_compact_keeps_recall_and_reclaims_links() {
+        let dim = 8;
+        let mut rng = Pcg32::seeded(0xc4u64);
+        let mut idx = Hnsw::new(dim, HnswParams::default());
+        let mut live: Vec<(u32, Vec<f32>)> = Vec::new();
+        let mut reclaimed_total = 0usize;
+        for _round in 0..6 {
+            for _ in 0..150 {
+                let v: Vec<f32> =
+                    (0..dim).map(|_| rng.next_gaussian()).collect();
+                let id = idx.add(&v);
+                live.push((id, v));
+            }
+            for _ in 0..100 {
+                let pick = rng.range_usize(0, live.len());
+                let (id, _) = live.swap_remove(pick);
+                assert!(idx.remove(id));
+            }
+            reclaimed_total += idx.compact();
+            assert_eq!(idx.dead_link_slots(), 0,
+                       "compact must reclaim every dead neighbour slot");
+        }
+        assert!(reclaimed_total > 0, "churn must have produced dead links");
+        assert_eq!(idx.live_len(), live.len());
+        // Recall of the survivors vs the exact oracle: 600 tombstones
+        // out of 900 inserted must not have severed the live graph.
+        let mut bf = BruteForceIndex::new(dim);
+        for (_, v) in &live {
+            bf.add(v);
+        }
+        let queries = random_vecs(30, dim, 0xc5);
+        let mut found = 0usize;
+        let mut total = 0usize;
+        for q in &queries {
+            let exact: Vec<u32> = bf
+                .search(q, 10)
+                .into_iter()
+                .map(|h| live[h.id as usize].0)
+                .collect();
+            let approx: Vec<u32> =
+                idx.search_ef(q, 10, 96).into_iter().map(|h| h.id).collect();
+            for h in &approx {
+                assert!(!idx.is_deleted(*h), "tombstoned id {h} returned");
+            }
+            total += exact.len();
+            found += exact.iter().filter(|e| approx.contains(e)).count();
+        }
+        let recall = found as f64 / total as f64;
+        assert!(recall > 0.8, "post-churn recall {recall}");
+    }
+
+    /// Tentpole: a clone shares chunks with its parent; mutating the
+    /// clone deep-copies only the touched node records, and the frozen
+    /// parent keeps answering from its own generation.
+    #[test]
+    fn clone_is_generational_and_freezes_the_parent() {
+        let dim = 8;
+        let vecs = random_vecs(1000, dim, 11);
+        let mut idx = Hnsw::new(dim, HnswParams::default());
+        for v in &vecs {
+            idx.add(v);
+        }
+        let frozen = idx.clone();
+        assert_eq!(frozen.touched_nodes(), 0, "a fresh clone touched nothing");
+        let before_len = frozen.len();
+
+        // Mutate the parent: one insert plus one tombstone.
+        let extra: Vec<f32> = vecs[0].iter().map(|x| x + 0.01).collect();
+        let new_id = idx.add(&extra);
+        assert!(idx.remove(3));
+
+        // The writer copied O(batch) node records, not the whole graph.
+        let touched = idx.touched_nodes();
+        assert!(touched > 0, "mutations must register as touched");
+        assert!(
+            (touched as usize) < idx.len() / 2,
+            "touched {touched} of {} nodes — generational clone degraded \
+             to a full copy",
+            idx.len()
+        );
+
+        // The frozen generation still answers from its own state.
+        assert_eq!(frozen.len(), before_len);
+        assert!(!frozen.is_deleted(3));
+        let hits = frozen.search_ef(&vecs[3], 1, 64);
+        assert_eq!(hits[0].id, 3, "frozen snapshot lost a pre-clone entry");
+        assert!(
+            frozen.search_ef(&extra, 10, 64).iter().all(|h| h.id != new_id),
+            "frozen snapshot sees a post-clone insert"
+        );
+        // And the writer sees its own mutations.
+        assert!(idx.is_deleted(3));
+        assert_eq!(idx.search_ef(&extra, 1, 64)[0].id, new_id);
+    }
+
+    /// The full-clone baseline arm: `unshare_all` deep-copies the whole
+    /// graph and reports it through the same touched counter.
+    #[test]
+    fn unshare_all_touches_every_node() {
+        let dim = 4;
+        let vecs = random_vecs(600, dim, 12);
+        let mut idx = Hnsw::new(dim, HnswParams::default());
+        for v in &vecs {
+            idx.add(v);
+        }
+        let mut full = idx.clone();
+        full.unshare_all();
+        // Every node record plus every vector row recopied.
+        assert_eq!(full.touched_nodes(), 2 * vecs.len() as u64);
+        // A second pass is a no-op: everything is already exclusive.
+        let again = full.touched_nodes();
+        full.unshare_all();
+        assert_eq!(full.touched_nodes(), again);
     }
 
     #[test]

@@ -196,14 +196,15 @@ impl ShardReader {
         if hit.similarity < min_similarity {
             return ReadAttempt::Miss;
         }
-        match self.db.arena().get_checked(hit.id, hit.epoch) {
-            Ok(apm) => {
-                dst.copy_from_slice(apm);
+        match self.db.arena().copy_checked(hit.id, hit.epoch, dst) {
+            Ok(()) => {
                 // Post-copy revalidation (seqlock read discipline): a
                 // forced slot reclaim on the writer side (retire-cap
                 // overflow) can overwrite the slot while the copy runs;
-                // the tenancy-epoch recheck turns that into a clean torn
-                // read instead of serving the next tenant's bytes.
+                // the copy itself goes through word atomics (so the race
+                // is defined behavior) and the tenancy-epoch recheck turns
+                // it into a clean torn read instead of serving the next
+                // tenant's bytes.
                 if !self.db.arena().recheck(hit.id, hit.epoch) {
                     return ReadAttempt::Torn;
                 }
@@ -215,8 +216,9 @@ impl ShardReader {
     }
 
     /// Lazy-buffer variant of [`ShardReader::fetch`]: `buf` is zero-filled
-    /// to `rows` rows only on the first actual hit, then row `row` is
-    /// filled.
+    /// to `rows` rows only once a lookup clears the similarity gate (so
+    /// misses and below-floor probes stay allocation-free), then row
+    /// `row` is filled.
     fn fetch_lazy(&self, feature: &[f32], ef: usize, min_similarity: f32,
                   buf: &mut Vec<f32>, rows: usize,
                   row: usize) -> ReadAttempt {
@@ -226,14 +228,13 @@ impl ShardReader {
         if hit.similarity < min_similarity {
             return ReadAttempt::Miss;
         }
-        match self.db.arena().get_checked(hit.id, hit.epoch) {
-            Ok(apm) => {
-                if buf.is_empty() {
-                    buf.resize(rows * self.apm_elems, 0.0);
-                }
-                let dst = &mut buf
-                    [row * self.apm_elems..(row + 1) * self.apm_elems];
-                dst.copy_from_slice(apm);
+        if buf.is_empty() {
+            buf.resize(rows * self.apm_elems, 0.0);
+        }
+        let dst =
+            &mut buf[row * self.apm_elems..(row + 1) * self.apm_elems];
+        match self.db.arena().copy_checked(hit.id, hit.epoch, dst) {
+            Ok(()) => {
                 // Post-copy revalidation — see [`ShardReader::fetch`]. A
                 // torn row is re-zeroed so a miss verdict never leaves
                 // another tenant's bytes behind in the batch buffer.
@@ -244,7 +245,10 @@ impl ShardReader {
                 self.db.mark_reused(hit.id);
                 ReadAttempt::Hit(hit)
             }
-            Err(_) => ReadAttempt::Torn,
+            Err(_) => {
+                dst.fill(0.0);
+                ReadAttempt::Torn
+            }
         }
     }
 
@@ -324,6 +328,10 @@ pub struct MemoTier {
     publishes: AtomicU64,
     /// Batches served entirely by the dedup prepass (no clone, no swap).
     publish_skips: AtomicU64,
+    /// HNSW node records + vector rows deep-copied across all published
+    /// snapshots — the O(touched) publish cost the generational index
+    /// bounds (flat per batch, independent of index size).
+    publish_touched: AtomicU64,
     /// Publishes that found a retire list at/above the high-water mark.
     retire_high_water: AtomicU64,
     /// Retired generations force-reclaimed past the cap.
@@ -378,6 +386,7 @@ impl MemoTier {
                     // Tier shards defer slot reuse: freed pages recycle
                     // only after snapshot quiescence (see module docs).
                     db.set_defer_free(true);
+                    db.set_full_index_clone(memo.full_index_clone);
                     let resident = db.arena().resident_bytes();
                     Shard {
                         seq: AtomicU64::new(0),
@@ -401,6 +410,7 @@ impl MemoTier {
             deduped: AtomicU64::new(0),
             publishes: AtomicU64::new(0),
             publish_skips: AtomicU64::new(0),
+            publish_touched: AtomicU64::new(0),
             retire_high_water: AtomicU64::new(0),
             forced_reclaims: AtomicU64::new(0),
             cold: None,
@@ -540,6 +550,16 @@ impl MemoTier {
     /// (the cheap-write fast path; see [`MemoTier::admit_batch`]).
     pub fn publish_skips(&self) -> u64 {
         self.publish_skips.load(Ordering::Relaxed)
+    }
+
+    /// Total HNSW node records + vector rows deep-copied by published
+    /// snapshots since creation — the generational index's O(touched)
+    /// publish cost. Per publish this stays flat (proportional to the
+    /// batch's fresh rows × graph degree) no matter how large the index
+    /// grows; the full-clone bench baseline (`MemoConfig::
+    /// full_index_clone`) makes it scale with index size instead.
+    pub fn publish_touched_nodes(&self) -> u64 {
+        self.publish_touched.load(Ordering::Relaxed)
     }
 
     /// Publishes that found a shard's retire list at or above the
@@ -861,6 +881,11 @@ impl MemoTier {
             self.forced_reclaims.fetch_add(1, Ordering::Relaxed);
         }
         let shard = &self.shards[layer];
+        // Account the publish's index cost while the working copy is
+        // still private: node records + vector rows the mutation actually
+        // deep-copied (flat per batch under the generational index).
+        self.publish_touched
+            .fetch_add(db.index_touched_nodes(), Ordering::Relaxed);
         let freed = db.take_pending_free();
         // The freed slots live on the *publishing* copy's store: an
         // intra-batch compaction drops its pre-compaction pending list

@@ -79,6 +79,102 @@ fn prop_hnsw_recall_vs_bruteforce() {
     });
 }
 
+/// Oracle agreement for one generational-HNSW state: top-k search vs
+/// exact k-NN over the live set, plus hit integrity — only live ids,
+/// only ids the state has issued, and stored vectors that still match
+/// the caller's ground truth exactly (a frozen generation whose chunks
+/// were since mutated through a newer clone must serve its own bytes).
+fn check_hnsw_vs_oracle(idx: &Hnsw, vecs: &[Vec<f32>], alive: &[bool],
+                        rng: &mut Pcg32, dim: usize) {
+    assert_eq!(idx.len(), alive.len());
+    let live: Vec<u32> = (0..alive.len())
+        .filter(|&i| alive[i])
+        .map(|i| i as u32)
+        .collect();
+    assert_eq!(idx.live_len(), live.len());
+    let mut found = 0usize;
+    let mut total = 0usize;
+    for _ in 0..8 {
+        let q: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+        let hits = idx.search_ef(&q, 5, 96);
+        assert!(hits.len() <= 5);
+        assert!(hits.len() <= live.len());
+        for h in &hits {
+            assert!((h.id as usize) < alive.len(),
+                    "hit id {} outside this generation", h.id);
+            assert!(alive[h.id as usize], "tombstoned id {} returned", h.id);
+            let d = ops::l2_sq(&q, &vecs[h.id as usize]);
+            assert!((h.dist_sq - d).abs() <= 1e-4 * d.max(1.0),
+                    "stored vector for id {} drifted", h.id);
+        }
+        let mut exact: Vec<(f32, u32)> = live
+            .iter()
+            .map(|&i| (ops::l2_sq(&q, &vecs[i as usize]), i))
+            .collect();
+        exact.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let k = 5.min(exact.len());
+        total += k;
+        found += exact[..k]
+            .iter()
+            .filter(|(_, i)| hits.iter().any(|h| h.id == *i))
+            .count();
+    }
+    if total > 0 {
+        let recall = found as f64 / total as f64;
+        assert!(recall > 0.75,
+                "recall {recall} vs oracle ({} live)", live.len());
+    }
+}
+
+/// PR 9 tentpole differential: the generational HNSW against the exact
+/// oracle under random insert/tombstone/search interleavings, with
+/// clone generations frozen mid-history. The writer keeps mutating the
+/// shared chunks after each clone; every frozen generation must keep
+/// answering from its own state — no post-clone inserts, no post-clone
+/// tombstones, byte-identical vectors.
+#[test]
+fn prop_generational_hnsw_matches_oracle_across_generations() {
+    forall(6, |rng| {
+        let dim = rng.range_usize(4, 12);
+        let mut idx = Hnsw::new(dim, HnswParams {
+            seed: rng.next_u64(),
+            ..HnswParams::default()
+        });
+        let mut vecs: Vec<Vec<f32>> = Vec::new();
+        let mut alive: Vec<bool> = Vec::new();
+        let mut gens: Vec<(Hnsw, Vec<bool>)> = Vec::new();
+
+        for op in 0..140 {
+            let r = rng.next_f32();
+            if r < 0.55 || vecs.is_empty() {
+                let v: Vec<f32> =
+                    (0..dim).map(|_| rng.next_gaussian()).collect();
+                let id = idx.add(&v);
+                assert_eq!(id as usize, vecs.len(), "ids must stay dense");
+                vecs.push(v);
+                alive.push(true);
+            } else if r < 0.8 {
+                let i = rng.range_usize(0, vecs.len());
+                assert_eq!(idx.remove(i as u32), alive[i],
+                           "remove must report prior liveness");
+                alive[i] = false;
+            } else {
+                check_hnsw_vs_oracle(&idx, &vecs, &alive, rng, dim);
+            }
+            // Freeze a generation a few times mid-history (as the
+            // tier's cow_clone + publish does once per admitted batch).
+            if op % 45 == 30 {
+                gens.push((idx.clone(), alive.clone()));
+            }
+        }
+        check_hnsw_vs_oracle(&idx, &vecs, &alive, rng, dim);
+        for (snap, snap_alive) in &gens {
+            check_hnsw_vs_oracle(snap, &vecs[..snap_alive.len()],
+                                 snap_alive, rng, dim);
+        }
+    });
+}
+
 #[test]
 fn prop_arena_roundtrips_random_batches() {
     forall(12, |rng| {

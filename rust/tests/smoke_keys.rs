@@ -1,0 +1,19 @@
+//! CI gate: after the bench-smoke suite runs, `BENCH_smoke.json` must
+//! carry every headline key in `REQUIRED_SMOKE_KEYS` — the key list
+//! lives in `bench_support::smoke` next to the emitters, not in a
+//! workflow shell loop. Gated behind `SMOKE_KEYS_FILE` (the path CI
+//! points at the freshly produced summary) so plain `cargo test` runs,
+//! which have no bench output to inspect, skip it.
+
+use attmemo::bench_support::smoke::{SmokeSummary, REQUIRED_SMOKE_KEYS};
+
+#[test]
+fn bench_smoke_json_carries_required_keys() {
+    let Ok(path) = std::env::var("SMOKE_KEYS_FILE") else {
+        eprintln!("SMOKE_KEYS_FILE not set; skipping smoke-key gate");
+        return;
+    };
+    SmokeSummary::require_keys(std::path::Path::new(&path),
+                               REQUIRED_SMOKE_KEYS)
+        .unwrap_or_else(|e| panic!("required smoke keys gate: {e}"));
+}
