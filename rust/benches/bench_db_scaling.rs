@@ -302,11 +302,17 @@ fn main() {
     // must not erase the other's headline numbers.
     summary.emit_merged(std::path::Path::new("BENCH_smoke.json"));
     if std::env::var("BENCH_HISTORY").map(|v| v == "1").unwrap_or(false) {
-        match summary.check_and_append_history(
-            std::path::Path::new("BENCH_history.jsonl"),
-            "cold_warm_hit_rate",
-            0.01,
-        ) {
+        let path = std::path::Path::new("BENCH_history.jsonl");
+        // Ceiling first (check-only): routing the cold probe through the
+        // SIMD distance primitive must not regress the cold-hit latency.
+        // Then the single appending call on the hit-rate floor.
+        match summary
+            .check_history_ceiling(path, "cold_hit_p99_ns", 2.5)
+            .and_then(|()| summary.check_and_append_history(
+                path,
+                "cold_warm_hit_rate",
+                0.01,
+            )) {
             Ok(()) => println!("history → BENCH_history.jsonl"),
             Err(e) => {
                 eprintln!("BENCH history gate failed: {e}");

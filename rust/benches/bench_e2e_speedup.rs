@@ -3,15 +3,161 @@
 //! levels. Expected shape: positive speedups everywhere, growing from
 //! batch 1 to the middle batch, dipping slightly at the largest batch
 //! (embedding cost), DeBERTa showing the largest gains.
+//!
+//! Cold arm (hermetic, no artifacts): the 0%-hit-rate worst case. Every
+//! lookup misses (threshold above the similarity ceiling), so each query
+//! pays the full miss pipeline — index probe, blocked host attention
+//! recompute, admission. Run twice, vectorized vs `--scalar-kernels`
+//! forced, to prove the kernel layer speeds up the path memoization does
+//! NOT shortcut: on AVX2 hosts the vectorized p50 must strictly beat the
+//! scalar baseline. Emits `cold_miss_p50_ns` (ceiling-gated) and
+//! `cold_miss_speedup` (floor-gated) into `BENCH_smoke.json` /
+//! `BENCH_history.jsonl`.
 
 use std::sync::Arc;
+use std::time::Instant;
 
-use attmemo::bench_support::{workload, TableWriter};
-use attmemo::config::MemoLevel;
+use attmemo::bench_support::{smoke, workload, SmokeSummary, TableWriter};
+use attmemo::config::{MemoConfig, MemoLevel, ModelConfig};
 use attmemo::eval::evaluate;
+use attmemo::kernels;
+use attmemo::memo::index::HnswParams;
+use attmemo::memo::MemoTier;
+use attmemo::model::forward::host_attn_scores;
+use attmemo::tensor::Tensor;
+use attmemo::util::Pcg32;
 
-fn main() -> attmemo::Result<()> {
-    attmemo::util::logger::init();
+/// Tiny hermetic model family for the cold arm (no artifacts). Sized so
+/// the attention recompute dominates the miss pipeline, as it does at
+/// real model scale.
+fn cold_cfg() -> ModelConfig {
+    ModelConfig {
+        family: "bert".into(),
+        vocab_size: 256,
+        hidden: 64,
+        layers: 1,
+        heads: 4,
+        ffn: 64,
+        max_len: 48,
+        num_classes: 2,
+        rel_pos_buckets: 8,
+        embed_dim: 8,
+        embed_hidden: 16,
+        embed_segments: 4,
+        causal: false,
+    }
+}
+
+fn unit(rng: &mut Pcg32, d: usize) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..d).map(|_| rng.next_gaussian()).collect();
+    let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+    v.iter_mut().for_each(|x| *x /= n);
+    v
+}
+
+/// One cold arm: `queries` guaranteed-miss lookups, each paying probe +
+/// blocked-attention recompute + admission. Returns the per-miss p50 in
+/// nanoseconds. The dispatch switch is set by the caller.
+fn run_cold_arm(queries: usize) -> f64 {
+    let c = cold_cfg();
+    let seq = c.max_len;
+    let elems = c.apm_elems(seq);
+    let memo = MemoConfig {
+        online_admission: true,
+        max_db_entries: 4096,
+        admission_min_attempts: 0,
+        ..MemoConfig::default()
+    };
+    let tier = MemoTier::new(&c, seq, HnswParams::default(), &memo);
+
+    let mut rng = Pcg32::seeded(0x0a77);
+    // Pre-populate so the probe traverses a real index, not an empty one.
+    for i in 0..128usize {
+        let f = unit(&mut rng, c.embed_dim);
+        let apm = vec![(10 + i) as f32; elems];
+        tier.admit_batch(0, &[(f.as_slice(), apm.as_slice())], 2.0, 32)
+            .expect("admit");
+    }
+
+    // Query features and hidden states built outside the timed loop —
+    // the miss pipeline is what's measured, not the RNG.
+    let feats: Vec<Vec<f32>> =
+        (0..queries).map(|_| unit(&mut rng, c.embed_dim)).collect();
+    let hiddens: Vec<Tensor> = (0..8)
+        .map(|_| Tensor::random(&[1, seq, c.hidden], &mut rng))
+        .collect();
+
+    let mut dst = vec![0.0f32; elems];
+    let mut ns: Vec<u64> = Vec::with_capacity(queries);
+    for (i, f) in feats.iter().enumerate() {
+        let t0 = Instant::now();
+        // Threshold above the similarity ceiling: a guaranteed miss, the
+        // 0%-hit-rate regime.
+        let hit = tier.lookup_fetch(0, f, 32, 1.01, &mut dst);
+        assert!(hit.is_none(), "cold arm must never hit");
+        let apm = host_attn_scores(&hiddens[i % hiddens.len()], c.heads)
+            .expect("host attention");
+        tier.admit_batch(
+            0,
+            &[(f.as_slice(), &apm.data()[..elems])],
+            2.0,
+            32,
+        )
+        .expect("admit");
+        ns.push(t0.elapsed().as_nanos() as u64);
+    }
+    ns.sort_unstable();
+    ns[ns.len() / 2] as f64
+}
+
+/// The hermetic 0%-hit A/B: vectorized kernels against the
+/// `--scalar-kernels` baseline on the identical miss workload.
+fn cold_arm_section(summary: &mut SmokeSummary) {
+    let queries = smoke::iters(200, 40);
+    let prior = kernels::scalar_forced();
+
+    kernels::set_scalar_kernels(true);
+    // Warmup arm discarded: first-touch page faults and allocator churn
+    // land here, not in either measured arm.
+    let _ = run_cold_arm(queries.min(16));
+    let scalar_p50 = run_cold_arm(queries);
+    kernels::set_scalar_kernels(false);
+    let vec_p50 = run_cold_arm(queries);
+    kernels::set_scalar_kernels(prior);
+
+    let speedup = scalar_p50 / vec_p50.max(1.0);
+    let mut table = TableWriter::new(
+        "Cold arm — 0%-hit miss pipeline, vectorized vs --scalar-kernels",
+        &["arm", "miss_p50_ns", "speedup"],
+    );
+    table.row(&["scalar".into(), format!("{scalar_p50:.0}"), "1.00x".into()]);
+    table.row(&[
+        "vectorized".into(),
+        format!("{vec_p50:.0}"),
+        format!("{speedup:.2}x"),
+    ]);
+    table.emit(Some(std::path::Path::new(
+        "bench_results/cold_miss_ab.csv")));
+
+    if kernels::avx2_available() {
+        // The tentpole's hard gate: on hosts with the AVX2 paths the
+        // vectorized miss pipeline must strictly beat the scalar A/B
+        // baseline — otherwise the kernel layer is dead weight.
+        assert!(
+            vec_p50 < scalar_p50,
+            "vectorized miss p50 {vec_p50:.0}ns not below scalar \
+             {scalar_p50:.0}ns"
+        );
+    } else {
+        eprintln!("SKIP cold-arm speedup assert (no AVX2 on this host)");
+    }
+
+    summary.push("cold_miss_p50_ns", vec_p50);
+    summary.push("cold_miss_speedup", speedup);
+}
+
+/// Artifact-gated Fig. 10 body (the original bench).
+fn artifact_section() -> attmemo::Result<()> {
     let rt = workload::open_runtime()?;
     let seq_len = rt.artifacts().serving_seq_len;
     let batches = rt.artifacts().serving_batches.clone();
@@ -57,4 +203,35 @@ fn main() -> attmemo::Result<()> {
     }
     table.emit(Some(std::path::Path::new("bench_results/fig10_speedup.csv")));
     Ok(())
+}
+
+fn main() {
+    attmemo::util::logger::init();
+
+    let mut summary = SmokeSummary::new();
+    cold_arm_section(&mut summary);
+    summary.emit_merged(std::path::Path::new("BENCH_smoke.json"));
+    if std::env::var("BENCH_HISTORY").map(|v| v == "1").unwrap_or(false) {
+        let path = std::path::Path::new("BENCH_history.jsonl");
+        // Ceiling on the miss latency (generous ratio for shared
+        // runners), floor on the A/B speedup, one appending call.
+        let gates = summary
+            .check_history_ceiling(path, "cold_miss_p50_ns", 2.5)
+            .and_then(|()| {
+                summary.check_and_append_history(
+                    path, "cold_miss_speedup", 2.0)
+            });
+        match gates {
+            Ok(()) => println!("history → BENCH_history.jsonl"),
+            Err(e) => {
+                eprintln!("BENCH history gate failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+
+    match artifact_section() {
+        Ok(()) => {}
+        Err(e) => eprintln!("SKIP Fig. 10 sections (no artifacts): {e}"),
+    }
 }

@@ -2,13 +2,75 @@
 //! memory-mapping technique, across sequence lengths and batch sizes.
 //! Also reports the memtier-projected numbers for an Optane-class backing
 //! store (the paper's testbed).
+//!
+//! Kernel A/B section: scoring a gathered batch against a probe APM
+//! (`gather::score_gathered`, the compute the mapping defers), vectorized
+//! vs `--scalar-kernels` forced.
 
 use attmemo::bench_support::harness::bench_fn;
 use attmemo::bench_support::TableWriter;
+use attmemo::kernels;
 use attmemo::memo::arena::ApmArena;
-use attmemo::memo::gather::{copy_gather, GatherWindow};
+use attmemo::memo::gather::{copy_gather, score_gathered, GatherWindow};
 use attmemo::memtier::TierModel;
 use attmemo::util::Pcg32;
+
+/// A/B the batch scoring pass over a gathered buffer: the similarity
+/// reductions route through `kernels::simd`, so forcing the scalar path
+/// isolates the vectorization win at gather shapes.
+fn score_ab_section() -> attmemo::Result<()> {
+    let heads = 4usize;
+    let seq_len = 64usize;
+    let rows = heads * seq_len;
+    let elems = rows * seq_len;
+    let batch = 32usize;
+    let mut rng = Pcg32::seeded(7);
+
+    let mut arena = ApmArena::new(elems)?;
+    let mut buf = vec![0.0f32; elems];
+    let mut ids = Vec::new();
+    for _ in 0..batch {
+        for v in buf.iter_mut() {
+            *v = rng.next_f32();
+        }
+        ids.push(arena.push(&buf)?);
+    }
+    let gathered = copy_gather(&arena, &ids)?;
+    let probe: Vec<f32> = (0..elems).map(|_| rng.next_f32()).collect();
+
+    let prior = kernels::scalar_forced();
+    let mut arms = [0.0f64; 2]; // [scalar, vectorized] p50 ms
+    for (i, force) in [true, false].into_iter().enumerate() {
+        kernels::set_scalar_kernels(force);
+        arms[i] = bench_fn("score", 2, 60.0, || {
+            std::hint::black_box(score_gathered(
+                std::hint::black_box(&gathered),
+                elems,
+                &probe,
+                rows,
+                seq_len,
+            ));
+        })
+        .p50_ms;
+    }
+    kernels::set_scalar_kernels(prior);
+
+    let mut table = TableWriter::new(
+        "Kernel A/B — batch APM scoring over a gathered buffer",
+        &["batch", "entry_elems", "scalar_ms_p50", "vectorized_ms_p50",
+          "speedup"],
+    );
+    table.row(&[
+        batch.to_string(),
+        elems.to_string(),
+        format!("{:.4}", arms[0]),
+        format!("{:.4}", arms[1]),
+        format!("{:.2}x", arms[0] / arms[1].max(1e-12)),
+    ]);
+    table.emit(Some(std::path::Path::new(
+        "bench_results/gather_score_ab.csv")));
+    Ok(())
+}
 
 fn main() -> attmemo::Result<()> {
     attmemo::util::logger::init();
@@ -76,5 +138,6 @@ fn main() -> attmemo::Result<()> {
     table.emit(Some(std::path::Path::new("bench_results/table6_gather.csv")));
     println!("note: optane columns add the memtier analytic model \
               (DESIGN.md §2) on top of measured DRAM numbers.");
+    score_ab_section()?;
     Ok(())
 }

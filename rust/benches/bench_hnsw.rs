@@ -2,11 +2,76 @@
 //! recall and latency vs `ef_search` and `m`, against the brute-force
 //! oracle, on embedding-like unit vectors. Supports the §5.3 claim that
 //! index search is never the bottleneck.
+//!
+//! Kernel A/B section: the distance primitive every probe routes through
+//! (`kernels::simd`), vectorized vs `--scalar-kernels` forced, at the
+//! index's working dimensionality. Emits `simd_dot_speedup` into
+//! `BENCH_smoke.json` and floor-gates it against `BENCH_history.jsonl`
+//! under `BENCH_HISTORY=1`.
 
 use attmemo::bench_support::harness::bench_fn;
-use attmemo::bench_support::TableWriter;
+use attmemo::bench_support::{SmokeSummary, TableWriter};
+use attmemo::kernels::{self, simd};
 use attmemo::memo::index::{BruteForceIndex, Hnsw, HnswParams, VectorIndex};
 use attmemo::util::Pcg32;
+
+/// A/B the SIMD primitives (and a whole search on top of them) against
+/// the scalar-forced baseline; record the dot-product speedup.
+fn kernel_ab_section(
+    idx: &Hnsw, qs: &[Vec<f32>], dim: usize, summary: &mut SmokeSummary,
+) {
+    let a = &qs[0];
+    let b = &qs[1];
+    // Many calls per timed closure: one 128-dim dot is nanoseconds,
+    // below timer resolution.
+    let reps = 512usize;
+    let prior = kernels::scalar_forced();
+
+    let mut arms = [0.0f64; 2]; // [scalar, vectorized] dot p50 ms
+    let mut search = [0.0f64; 2];
+    for (i, force) in [true, false].into_iter().enumerate() {
+        kernels::set_scalar_kernels(force);
+        arms[i] = bench_fn("dot", 2, 40.0, || {
+            let mut acc = 0.0f32;
+            for _ in 0..reps {
+                acc += simd::dot(
+                    std::hint::black_box(a),
+                    std::hint::black_box(b),
+                );
+            }
+            std::hint::black_box(acc);
+        })
+        .p50_ms;
+        search[i] = bench_fn("search", 2, 40.0, || {
+            std::hint::black_box(idx.search_ef(&qs[0], 10, 48));
+        })
+        .p50_ms;
+    }
+    kernels::set_scalar_kernels(prior);
+
+    let dot_speedup = arms[0] / arms[1].max(1e-12);
+    let search_speedup = search[0] / search[1].max(1e-12);
+    let mut table = TableWriter::new(
+        "Kernel A/B — simd::dot and HNSW search, scalar vs vectorized",
+        &["op", "scalar_ms_p50", "vectorized_ms_p50", "speedup"],
+    );
+    table.row(&[
+        format!("dot (d={dim}, {reps} reps)"),
+        format!("{:.4}", arms[0]),
+        format!("{:.4}", arms[1]),
+        format!("{dot_speedup:.2}x"),
+    ]);
+    table.row(&[
+        "search_ef(k=10, ef=48)".into(),
+        format!("{:.4}", search[0]),
+        format!("{:.4}", search[1]),
+        format!("{search_speedup:.2}x"),
+    ]);
+    table.emit(Some(std::path::Path::new(
+        "bench_results/hnsw_kernel_ab.csv")));
+
+    summary.push("simd_dot_speedup", dot_speedup);
+}
 
 fn unit_vecs(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
     let mut rng = Pcg32::seeded(seed);
@@ -75,4 +140,28 @@ fn main() {
         }
     }
     table.emit(Some(std::path::Path::new("bench_results/hnsw_ablation.csv")));
+
+    // Kernel A/B over a default-parameter index on the same vectors.
+    let mut idx = Hnsw::new(dim, HnswParams::default());
+    for v in &vecs {
+        idx.add(v);
+    }
+    let mut summary = SmokeSummary::new();
+    kernel_ab_section(&idx, &qs, dim, &mut summary);
+    summary.emit_merged(std::path::Path::new("BENCH_smoke.json"));
+    if std::env::var("BENCH_HISTORY").map(|v| v == "1").unwrap_or(false) {
+        // Floor gate: the distance primitive's vectorized speedup must
+        // not collapse (generous margin for shared-runner noise).
+        match summary.check_and_append_history(
+            std::path::Path::new("BENCH_history.jsonl"),
+            "simd_dot_speedup",
+            2.0,
+        ) {
+            Ok(()) => println!("history → BENCH_history.jsonl"),
+            Err(e) => {
+                eprintln!("BENCH history gate failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
 }

@@ -35,6 +35,8 @@ pub const REQUIRED_SMOKE_KEYS: &[&str] = &[
     "cb_dedup_yield",
     "publish_touched_nodes",
     "mixed_admit_p99_ns",
+    "cold_miss_p50_ns",
+    "simd_dot_speedup",
 ];
 
 /// Flat key → number summary collected by a bench run and emitted as

@@ -134,6 +134,12 @@ ONLINE MEMOIZATION (serve/eval)
   --cold-capacity N     per-layer entry budget of the cold tier
                         (required with --cold-tier-dir; the oldest cold
                         entries fall off FIFO past it)
+  --scalar-kernels      force the scalar fallback in the unified kernel
+                        layer (index distances, Eq. 1 similarity,
+                        pooling, host attention) instead of the
+                        runtime-dispatched AVX2 paths — the A/B
+                        baseline for SIMD speedup measurements; also
+                        settable via ATTMEMO_SCALAR_KERNELS=1
 
 AFFINITY ROUTING (serve)
   --affinity-buckets N  similarity-affinity buckets in front of the
@@ -256,6 +262,12 @@ fn parse_level(args: &Args) -> Result<MemoLevel> {
 /// policy + the online-admission knobs.
 fn parse_memo(args: &Args, level: MemoLevel) -> Result<MemoConfig> {
     let defaults = MemoConfig::default();
+    // The kernel-dispatch switch is process-global (the primitives sit
+    // under loops too hot for a per-call flag); apply it as soon as the
+    // config is parsed so every later code path agrees.
+    if args.flag("scalar-kernels") {
+        crate::kernels::set_scalar_kernels(true);
+    }
     Ok(MemoConfig {
         level,
         selective: !args.flag("no-selective"),
@@ -281,6 +293,7 @@ fn parse_memo(args: &Args, level: MemoLevel) -> Result<MemoConfig> {
             .map(std::path::PathBuf::from),
         cold_capacity: args.opt_usize("cold-capacity",
                                       defaults.cold_capacity)?,
+        scalar_kernels: args.flag("scalar-kernels"),
         ..defaults
     })
 }
@@ -666,6 +679,21 @@ mod tests {
         assert_eq!(memo.cold_capacity, 512);
         assert!(memo.online_admission,
                 "a spill directory implies the online tier");
+    }
+
+    #[test]
+    fn scalar_kernels_flag_parses_and_forces_fallback() {
+        let before = crate::kernels::scalar_forced();
+        let a = Args::parse(&argv(&["eval", "--scalar-kernels"])).unwrap();
+        let memo = parse_memo(&a, MemoLevel::Moderate).unwrap();
+        assert!(memo.scalar_kernels);
+        assert!(crate::kernels::scalar_forced(),
+                "parse_memo must apply the process-global switch");
+        // Restore: the switch is global to the test process (it may
+        // have been forced by the environment, e.g. the CI scalar leg).
+        crate::kernels::set_scalar_kernels(before);
+        let a = Args::parse(&argv(&["eval"])).unwrap();
+        assert!(!parse_memo(&a, MemoLevel::Moderate).unwrap().scalar_kernels);
     }
 
     #[test]

@@ -194,6 +194,12 @@ pub struct MemoConfig {
     /// the generational index's O(touched) publish against the
     /// full-clone cost on the same build.
     pub full_index_clone: bool,
+    /// Force the scalar fallback in the unified kernel layer
+    /// (`crate::kernels`) instead of the runtime-dispatched AVX2 paths.
+    /// A/B baseline for the SIMD similarity + blocked-attention work;
+    /// also settable via `ATTMEMO_SCALAR_KERNELS=1`. Never set in
+    /// production.
+    pub scalar_kernels: bool,
 }
 
 impl Default for MemoConfig {
@@ -212,6 +218,7 @@ impl Default for MemoConfig {
             cold_tier_dir: None,
             cold_capacity: 0,
             full_index_clone: false,
+            scalar_kernels: false,
         }
     }
 }

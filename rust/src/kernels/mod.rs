@@ -1,0 +1,97 @@
+//! The unified host kernel layer.
+//!
+//! Every scalar inner loop the request path leans on — index distances,
+//! Eq. 1 similarity, signature pooling, and the host-side attention
+//! fallback — routes through this module so there is exactly one place
+//! where vector width, dispatch and tiling decisions live.
+//!
+//! * [`simd`] holds runtime-dispatched vector primitives (dot, squared
+//!   L2, L1, axpy, max/sum reductions). On x86_64 an explicit AVX2 path
+//!   is selected when the CPU supports it; a portable scalar fallback is
+//!   always available and can be *forced* for A/B runs via
+//!   [`set_scalar_kernels`], the `--scalar-kernels` CLI flag, or the
+//!   `ATTMEMO_SCALAR_KERNELS=1` environment variable (read once at first
+//!   kernel use; the setter overrides it afterwards).
+//! * [`attention`] holds the blocked, online-softmax host attention
+//!   kernel (FlashAttention-style tiling) used by the miss-path
+//!   fallback in `model::forward` and the cold-workload benches.
+//!
+//! Dispatch is a process-global switch rather than a per-call parameter:
+//! the primitives sit under loops too hot to thread a flag through, and
+//! A/B consumers (benches, the CI scalar leg) want to flip *every* call
+//! site at once.
+
+#![warn(missing_docs)]
+
+pub mod attention;
+pub mod simd;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Once;
+
+static ENV_INIT: Once = Once::new();
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Environment variable that forces the scalar fallback at process
+/// start (any non-empty value other than `0`/`false` counts).
+pub const SCALAR_KERNELS_ENV: &str = "ATTMEMO_SCALAR_KERNELS";
+
+fn ensure_env_init() {
+    ENV_INIT.call_once(|| {
+        if let Ok(v) = std::env::var(SCALAR_KERNELS_ENV) {
+            let v = v.trim();
+            let on = !v.is_empty()
+                && !v.eq_ignore_ascii_case("0")
+                && !v.eq_ignore_ascii_case("false");
+            FORCE_SCALAR.store(on, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Force (or un-force) the scalar fallback for every dispatched
+/// primitive in this process. Used by `MemoConfig::scalar_kernels`
+/// plumbing and by the bench A/B arms.
+pub fn set_scalar_kernels(force: bool) {
+    ensure_env_init();
+    FORCE_SCALAR.store(force, Ordering::Relaxed);
+}
+
+/// Whether the scalar fallback is currently forced (flag or env).
+pub fn scalar_forced() -> bool {
+    ensure_env_init();
+    FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// Whether the AVX2 fast paths exist *and* the running CPU supports
+/// them. `false` on non-x86_64 targets.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Whether dispatched calls will take the vector path right now.
+pub fn vectorized_active() -> bool {
+    avx2_available() && !scalar_forced()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_switch_round_trips() {
+        let before = scalar_forced();
+        set_scalar_kernels(true);
+        assert!(scalar_forced());
+        assert!(!vectorized_active());
+        set_scalar_kernels(false);
+        assert!(!scalar_forced());
+        set_scalar_kernels(before);
+    }
+}

@@ -1,0 +1,586 @@
+//! Runtime-dispatched vector primitives.
+//!
+//! Each primitive comes in three forms:
+//!
+//! * the dispatched entry point (`dot`, `l2_sq`, …) — picks the AVX2
+//!   path when [`crate::kernels::vectorized_active`] says so, else the
+//!   scalar fallback;
+//! * an always-available `_scalar` variant (4-way unrolled so the
+//!   autovectorizer can still use the SSE2 baseline);
+//! * on x86_64, a safe `_avx2` probe returning `None` when the CPU
+//!   lacks AVX2, so differential tests can pin the vector path without
+//!   toggling the process-global switch.
+//!
+//! Length handling matches the historical `tensor::ops` kernels: binary
+//! primitives operate over `min(a.len(), b.len())` elements, and every
+//! path handles remainder lanes (lengths not a multiple of the vector
+//! width) with a scalar tail.
+
+// ---------------------------------------------------------------- dot --
+
+/// Dot product `Σ a[i]·b[i]` over the common prefix of `a` and `b`.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::kernels::vectorized_active() {
+            // SAFETY: AVX2 support verified by `vectorized_active`.
+            return unsafe { avx2::dot(a, b) };
+        }
+    }
+    dot_scalar(a, b)
+}
+
+/// Scalar dot product (4-way unrolled).
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// AVX2 dot product; `None` when the CPU lacks AVX2.
+#[cfg(target_arch = "x86_64")]
+pub fn dot_avx2(a: &[f32], b: &[f32]) -> Option<f32> {
+    if !crate::kernels::avx2_available() {
+        return None;
+    }
+    // SAFETY: AVX2 support checked just above.
+    Some(unsafe { avx2::dot(a, b) })
+}
+
+// -------------------------------------------------------------- l2_sq --
+
+/// Squared L2 distance `Σ (a[i] − b[i])²` (index hot loop).
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::kernels::vectorized_active() {
+            // SAFETY: AVX2 support verified by `vectorized_active`.
+            return unsafe { avx2::l2_sq(a, b) };
+        }
+    }
+    l2_sq_scalar(a, b)
+}
+
+/// Scalar squared L2 distance (4-way unrolled).
+#[inline]
+pub fn l2_sq_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        let d0 = a[j] - b[j];
+        let d1 = a[j + 1] - b[j + 1];
+        let d2 = a[j + 2] - b[j + 2];
+        let d3 = a[j + 3] - b[j + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    s
+}
+
+/// AVX2 squared L2 distance; `None` when the CPU lacks AVX2.
+#[cfg(target_arch = "x86_64")]
+pub fn l2_sq_avx2(a: &[f32], b: &[f32]) -> Option<f32> {
+    if !crate::kernels::avx2_available() {
+        return None;
+    }
+    // SAFETY: AVX2 support checked just above.
+    Some(unsafe { avx2::l2_sq(a, b) })
+}
+
+// -------------------------------------------------------- l1_distance --
+
+/// L1 distance `Σ |a[i] − b[i]|` (Eq. 1 total-variation inner loop).
+#[inline]
+pub fn l1_distance(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::kernels::vectorized_active() {
+            // SAFETY: AVX2 support verified by `vectorized_active`.
+            return unsafe { avx2::l1(a, b) };
+        }
+    }
+    l1_distance_scalar(a, b)
+}
+
+/// Scalar L1 distance (4-way unrolled).
+#[inline]
+pub fn l1_distance_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += (a[j] - b[j]).abs();
+        s1 += (a[j + 1] - b[j + 1]).abs();
+        s2 += (a[j + 2] - b[j + 2]).abs();
+        s3 += (a[j + 3] - b[j + 3]).abs();
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        s += (a[j] - b[j]).abs();
+    }
+    s
+}
+
+/// AVX2 L1 distance; `None` when the CPU lacks AVX2.
+#[cfg(target_arch = "x86_64")]
+pub fn l1_distance_avx2(a: &[f32], b: &[f32]) -> Option<f32> {
+    if !crate::kernels::avx2_available() {
+        return None;
+    }
+    // SAFETY: AVX2 support checked just above.
+    Some(unsafe { avx2::l1(a, b) })
+}
+
+// --------------------------------------------------------------- axpy --
+
+/// `y[i] += alpha · x[i]` over the common prefix (pooling / attention
+/// accumulate).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::kernels::vectorized_active() {
+            // SAFETY: AVX2 support verified by `vectorized_active`.
+            unsafe { avx2::axpy(alpha, x, y) };
+            return;
+        }
+    }
+    axpy_scalar(alpha, x, y)
+}
+
+/// Scalar axpy.
+#[inline]
+pub fn axpy_scalar(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yv, xv) in y.iter_mut().zip(x.iter()) {
+        *yv += alpha * *xv;
+    }
+}
+
+/// AVX2 axpy; returns `false` (leaving `y` untouched) when the CPU
+/// lacks AVX2.
+#[cfg(target_arch = "x86_64")]
+pub fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) -> bool {
+    if !crate::kernels::avx2_available() {
+        return false;
+    }
+    // SAFETY: AVX2 support checked just above.
+    unsafe { avx2::axpy(alpha, x, y) };
+    true
+}
+
+// --------------------------------------------------------- reductions --
+
+/// Running maximum of a slice (`NEG_INFINITY` for empty input).
+#[inline]
+pub fn max_reduce(xs: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::kernels::vectorized_active() {
+            // SAFETY: AVX2 support verified by `vectorized_active`.
+            return unsafe { avx2::max_reduce(xs) };
+        }
+    }
+    max_reduce_scalar(xs)
+}
+
+/// Scalar running maximum.
+#[inline]
+pub fn max_reduce_scalar(xs: &[f32]) -> f32 {
+    xs.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+}
+
+/// AVX2 running maximum; `None` when the CPU lacks AVX2.
+#[cfg(target_arch = "x86_64")]
+pub fn max_reduce_avx2(xs: &[f32]) -> Option<f32> {
+    if !crate::kernels::avx2_available() {
+        return None;
+    }
+    // SAFETY: AVX2 support checked just above.
+    Some(unsafe { avx2::max_reduce(xs) })
+}
+
+/// Running sum of a slice (0 for empty input).
+#[inline]
+pub fn sum_reduce(xs: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::kernels::vectorized_active() {
+            // SAFETY: AVX2 support verified by `vectorized_active`.
+            return unsafe { avx2::sum_reduce(xs) };
+        }
+    }
+    sum_reduce_scalar(xs)
+}
+
+/// Scalar running sum (4-way unrolled).
+#[inline]
+pub fn sum_reduce_scalar(xs: &[f32]) -> f32 {
+    let n = xs.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += xs[j];
+        s1 += xs[j + 1];
+        s2 += xs[j + 2];
+        s3 += xs[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for x in &xs[chunks * 4..] {
+        s += *x;
+    }
+    s
+}
+
+/// AVX2 running sum; `None` when the CPU lacks AVX2.
+#[cfg(target_arch = "x86_64")]
+pub fn sum_reduce_avx2(xs: &[f32]) -> Option<f32> {
+    if !crate::kernels::avx2_available() {
+        return None;
+    }
+    // SAFETY: AVX2 support checked just above.
+    Some(unsafe { avx2::sum_reduce(xs) })
+}
+
+// ----------------------------------------------------- AVX2 internals --
+
+/// Raw `#[target_feature(enable = "avx2")]` loops. Callers must have
+/// verified AVX2 support; every function handles remainder lanes with a
+/// scalar tail and matches its `_scalar` twin up to float reassociation.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of the 8 lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let q = _mm_add_ps(lo, hi);
+        let q = _mm_add_ps(q, _mm_movehl_ps(q, q));
+        let q = _mm_add_ss(q, _mm_shuffle_ps(q, q, 0b01));
+        _mm_cvtss_f32(q)
+    }
+
+    /// Horizontal max of the 8 lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hmax(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let q = _mm_max_ps(lo, hi);
+        let q = _mm_max_ps(q, _mm_movehl_ps(q, q));
+        let q = _mm_max_ss(q, _mm_shuffle_ps(q, q, 0b01));
+        _mm_cvtss_f32(q)
+    }
+
+    /// AVX2 dot product over the common prefix.
+    ///
+    /// # Safety
+    ///
+    /// The caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 16 <= n {
+            let p0 = _mm256_mul_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i)),
+                _mm256_loadu_ps(b.as_ptr().add(i)),
+            );
+            let p1 = _mm256_mul_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i + 8)),
+                _mm256_loadu_ps(b.as_ptr().add(i + 8)),
+            );
+            acc0 = _mm256_add_ps(acc0, p0);
+            acc1 = _mm256_add_ps(acc1, p1);
+            i += 16;
+        }
+        if i + 8 <= n {
+            let p = _mm256_mul_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i)),
+                _mm256_loadu_ps(b.as_ptr().add(i)),
+            );
+            acc0 = _mm256_add_ps(acc0, p);
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// AVX2 squared L2 distance over the common prefix.
+    ///
+    /// # Safety
+    ///
+    /// The caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 16 <= n {
+            let d0 = _mm256_sub_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i)),
+                _mm256_loadu_ps(b.as_ptr().add(i)),
+            );
+            let d1 = _mm256_sub_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i + 8)),
+                _mm256_loadu_ps(b.as_ptr().add(i + 8)),
+            );
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(d0, d0));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(d1, d1));
+            i += 16;
+        }
+        if i + 8 <= n {
+            let d = _mm256_sub_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i)),
+                _mm256_loadu_ps(b.as_ptr().add(i)),
+            );
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(d, d));
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            let d = a[i] - b[i];
+            s += d * d;
+            i += 1;
+        }
+        s
+    }
+
+    /// AVX2 L1 distance over the common prefix.
+    ///
+    /// # Safety
+    ///
+    /// The caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn l1(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        // Clearing the sign bit (andnot with -0.0) computes |x|.
+        let sign = _mm256_set1_ps(-0.0);
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 16 <= n {
+            let d0 = _mm256_sub_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i)),
+                _mm256_loadu_ps(b.as_ptr().add(i)),
+            );
+            let d1 = _mm256_sub_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i + 8)),
+                _mm256_loadu_ps(b.as_ptr().add(i + 8)),
+            );
+            acc0 = _mm256_add_ps(acc0, _mm256_andnot_ps(sign, d0));
+            acc1 = _mm256_add_ps(acc1, _mm256_andnot_ps(sign, d1));
+            i += 16;
+        }
+        if i + 8 <= n {
+            let d = _mm256_sub_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i)),
+                _mm256_loadu_ps(b.as_ptr().add(i)),
+            );
+            acc0 = _mm256_add_ps(acc0, _mm256_andnot_ps(sign, d));
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            s += (a[i] - b[i]).abs();
+            i += 1;
+        }
+        s
+    }
+
+    /// AVX2 `y += alpha·x` over the common prefix.
+    ///
+    /// # Safety
+    ///
+    /// The caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        let va = _mm256_set1_ps(alpha);
+        let mut i = 0;
+        while i + 8 <= n {
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let r = _mm256_add_ps(vy, _mm256_mul_ps(va, vx));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    /// AVX2 running maximum (`NEG_INFINITY` for empty input).
+    ///
+    /// # Safety
+    ///
+    /// The caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn max_reduce(xs: &[f32]) -> f32 {
+        let n = xs.len();
+        let mut i = 0;
+        let mut m = f32::NEG_INFINITY;
+        if n >= 8 {
+            let mut acc = _mm256_loadu_ps(xs.as_ptr());
+            i = 8;
+            while i + 8 <= n {
+                acc =
+                    _mm256_max_ps(acc, _mm256_loadu_ps(xs.as_ptr().add(i)));
+                i += 8;
+            }
+            m = hmax(acc);
+        }
+        while i < n {
+            m = m.max(xs[i]);
+            i += 1;
+        }
+        m
+    }
+
+    /// AVX2 running sum (0 for empty input).
+    ///
+    /// # Safety
+    ///
+    /// The caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sum_reduce(xs: &[f32]) -> f32 {
+        let n = xs.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(xs.as_ptr().add(i)));
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += xs[i];
+            i += 1;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::seeded(seed);
+        let a = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let b = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        (a, b)
+    }
+
+    fn close(x: f32, y: f32, n: usize) -> bool {
+        (x - y).abs() <= 1e-4 * (1.0 + n as f32) * (1.0 + y.abs())
+    }
+
+    #[test]
+    fn scalar_matches_naive_all_lengths() {
+        // Remainder-lane coverage: every length around the 8/16 widths.
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 33, 100] {
+            let (a, b) = vecs(n, 7 + n as u64);
+            let nd: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let nl2: f32 =
+                a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            let nl1: f32 =
+                a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+            assert!(close(dot_scalar(&a, &b), nd, n));
+            assert!(close(l2_sq_scalar(&a, &b), nl2, n));
+            assert!(close(l1_distance_scalar(&a, &b), nl1, n));
+            assert!(close(sum_reduce_scalar(&a), a.iter().sum(), n));
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_matches_scalar_all_lengths() {
+        if !crate::kernels::avx2_available() {
+            eprintln!("SKIP: no AVX2 on this host");
+            return;
+        }
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 24, 31, 33, 64, 100] {
+            let (a, b) = vecs(n, 31 + n as u64);
+            assert!(close(dot_avx2(&a, &b).unwrap(), dot_scalar(&a, &b), n));
+            assert!(close(
+                l2_sq_avx2(&a, &b).unwrap(),
+                l2_sq_scalar(&a, &b),
+                n
+            ));
+            assert!(close(
+                l1_distance_avx2(&a, &b).unwrap(),
+                l1_distance_scalar(&a, &b),
+                n
+            ));
+            assert!(close(
+                sum_reduce_avx2(&a).unwrap(),
+                sum_reduce_scalar(&a),
+                n
+            ));
+            assert_eq!(max_reduce_avx2(&a).unwrap(), max_reduce_scalar(&a));
+            let mut y1 = b.clone();
+            let mut y2 = b.clone();
+            assert!(axpy_avx2(0.7, &a, &mut y1));
+            axpy_scalar(0.7, &a, &mut y2);
+            for (v1, v2) in y1.iter().zip(&y2) {
+                assert!(close(*v1, *v2, n));
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_lengths_use_common_prefix() {
+        let (a, b) = vecs(20, 5);
+        let d_short = dot(&a[..13], &b);
+        let d_ref = dot_scalar(&a[..13], &b[..13]);
+        assert!(close(d_short, d_ref, 13));
+        let mut y = b.clone();
+        axpy(1.5, &a[..13], &mut y);
+        assert_eq!(&y[13..], &b[13..]);
+    }
+
+    #[test]
+    fn reductions_edge_cases() {
+        assert_eq!(max_reduce_scalar(&[]), f32::NEG_INFINITY);
+        assert_eq!(max_reduce(&[]), f32::NEG_INFINITY);
+        assert_eq!(sum_reduce(&[]), 0.0);
+        assert_eq!(max_reduce(&[-3.0]), -3.0);
+    }
+}

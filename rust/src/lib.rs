@@ -14,6 +14,7 @@ pub mod config;
 pub mod data;
 pub mod error;
 pub mod eval;
+pub mod kernels;
 pub mod memo;
 pub mod memtier;
 pub mod model;

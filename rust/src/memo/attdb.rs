@@ -332,8 +332,32 @@ impl LayerDb {
         let span = self.arena.next_id() as usize;
         if span >= COMPACT_MIN_IDS && span >= 4 * self.len() {
             self.compact()?;
+        } else if self.index.dead_since_compact() as usize
+            >= COMPACT_MIN_IDS.max(self.index.live_len())
+        {
+            // Steady-state churn at capacity rarely crosses the 4×-span
+            // wholesale rebuild above (evict + admit holds the live
+            // count flat while the id space creeps), but every eviction
+            // leaves a tombstone in live neighbour lists. Once the
+            // tombstones added since the last link reclaim rival the
+            // live set, sweep them in place (id-stable — cheaper than
+            // the rebuild and invisible to id holders).
+            self.index.compact();
         }
         Ok(AdmitOutcome { id, evicted })
+    }
+
+    /// Dead ids still referenced from the index's live neighbour lists
+    /// (O(index) diagnostic; the churn-compaction regression test's
+    /// bound).
+    pub fn index_dead_link_slots(&self) -> usize {
+        self.index.dead_link_slots()
+    }
+
+    /// Tombstones accumulated in the index since its last link
+    /// compaction (the churn-trigger counter; diagnostics and tests).
+    pub fn index_dead_since_compact(&self) -> u64 {
+        self.index.dead_since_compact()
     }
 
     /// Rebuild the arena, index and reuse tracking from the live entries
@@ -804,6 +828,52 @@ mod tests {
             let hit = layer.lookup(&v, 48).unwrap();
             assert_eq!(hit.id, id);
         }
+    }
+
+    #[test]
+    fn churn_keeps_dead_links_bounded_without_manual_compact() {
+        // Regime where the 4×-span wholesale rebuild in `admit_demoting`
+        // can never fire (span stays below 4 × capacity), so the only
+        // mechanism reclaiming tombstoned neighbour links is the
+        // churn-triggered `Hnsw::compact`. Removing that trigger makes
+        // this test fail: no reset is ever observed and the dead-link
+        // count grows with total admissions.
+        let c = cfg();
+        let mut db = AttentionDb::new(&c, 16, HnswParams::default());
+        let mut rng = Pcg32::seeded(23);
+        let elems = c.apm_elems(16);
+        let cap = 100usize;
+        let total = 390usize; // span < 4 * cap throughout
+        let threshold = COMPACT_MIN_IDS.max(cap) as u64;
+        let mut resets = 0usize;
+        let mut prev_counter = 0u64;
+        for i in 0..total {
+            let f = unit(&mut rng, c.embed_dim);
+            db.layer_mut(0).admit(&f, &vec![i as f32; elems], cap).unwrap();
+            let layer = db.layer(0);
+            let counter = layer.index_dead_since_compact();
+            // Bounded: the trigger fires the moment the counter reaches
+            // the threshold, so it can never exceed it between admits.
+            assert!(counter <= threshold,
+                    "dead counter {} above trigger threshold {}",
+                    counter, threshold);
+            if counter < prev_counter {
+                // The in-place link compaction just ran: every dead id
+                // has been swept from the live neighbour lists.
+                assert_eq!(layer.index_dead_link_slots(), 0,
+                           "links not swept at reset");
+                resets += 1;
+            }
+            prev_counter = counter;
+        }
+        // (total - cap) evictions with a reclaim every `threshold`:
+        // sustained churn fires the trigger repeatedly on its own.
+        assert!(resets >= 2, "link compaction fired {} times", resets);
+        // No wholesale rebuild happened (ids were never renumbered), so
+        // the resets above really came from the in-place sweep.
+        let layer = db.layer(0);
+        assert_eq!(layer.arena().next_id() as usize, total);
+        assert_eq!(layer.len(), cap);
     }
 
     /// The concurrent-eviction regression (satellite fix): a lookup result

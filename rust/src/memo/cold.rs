@@ -208,17 +208,14 @@ struct ColdShard {
 
 /// Index and squared distance of the nearest entry (linear scan — the
 /// features are DRAM-resident and cold probes only run after a hot
-/// miss, so the scan is off the hot path by construction).
+/// miss, so the scan is off the hot path by construction). The
+/// per-entry distance goes through the dispatched SIMD kernel, the same
+/// primitive the hot index uses.
 fn nearest(entries: &VecDeque<ColdEntry>,
            feature: &[f32]) -> Option<(usize, f32)> {
     let mut best: Option<(usize, f32)> = None;
     for (i, e) in entries.iter().enumerate() {
-        let d2: f32 = e
-            .feature
-            .iter()
-            .zip(feature)
-            .map(|(a, b)| (a - b) * (a - b))
-            .sum();
+        let d2 = crate::kernels::simd::l2_sq(&e.feature, feature);
         if best.map_or(true, |(_, bd)| d2 < bd) {
             best = Some((i, d2));
         }

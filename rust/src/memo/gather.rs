@@ -143,6 +143,31 @@ pub fn copy_gather(arena: &ApmArena, ids: &[ApmId]) -> Result<Vec<f32>> {
     Ok(out)
 }
 
+/// Eq. 1-score every gathered APM against a probe.
+///
+/// `batch` is a contiguous gather view — either [`copy_gather`]'s
+/// buffer or [`GatherWindow::map_batch`]'s mapped window — holding one
+/// `[rows, cols]` APM per `entry_elems` stride (`rows·cols ≤
+/// entry_elems`; mapped windows may carry page padding past the
+/// payload). The per-row total-variation loop runs through the
+/// dispatched kernel layer ([`crate::kernels::simd`]), so the gather →
+/// rescore pipeline inherits the AVX2/scalar A/B switch.
+pub fn score_gathered(batch: &[f32], entry_elems: usize, probe: &[f32],
+                      rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert!(rows * cols <= entry_elems);
+    batch
+        .chunks(entry_elems)
+        .map(|e| {
+            crate::tensor::ops::similarity_score(
+                &e[..rows * cols],
+                probe,
+                rows,
+                cols,
+            )
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,6 +224,29 @@ mod tests {
         assert!(win.map_batch(&a, &[id]).is_err());
         // copy gather still works
         assert_eq!(copy_gather(&a, &[id]).unwrap(), vec![0.5; 10]);
+    }
+
+    #[test]
+    fn score_gathered_identity_and_padding() {
+        use crate::tensor::ops::softmax_rows;
+        let (rows, cols) = (4, 8);
+        let elems = rows * cols + 5; // trailing padding lanes
+        let mut probe: Vec<f32> = (0..rows * cols)
+            .map(|i| (i % 7) as f32 * 0.3)
+            .collect();
+        softmax_rows(&mut probe, rows, cols);
+        let mut batch = vec![0.0f32; 2 * elems];
+        batch[..rows * cols].copy_from_slice(&probe);
+        // Second entry: a different stochastic matrix.
+        let mut other: Vec<f32> = (0..rows * cols)
+            .map(|i| (i % 3) as f32)
+            .collect();
+        softmax_rows(&mut other, rows, cols);
+        batch[elems..elems + rows * cols].copy_from_slice(&other);
+        let scores = score_gathered(&batch, elems, &probe, rows, cols);
+        assert_eq!(scores.len(), 2);
+        assert!((scores[0] - 1.0).abs() < 1e-5);
+        assert!(scores[1] < scores[0]);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Exact nearest-neighbour baseline (the paper's "exhaustive search").
 
+use crate::kernels::simd::l2_sq;
 use crate::memo::index::{Hit, VectorIndex};
-use crate::tensor::ops::l2_sq;
 
 /// Flat store + linear scan. O(N·d) per query; used for Fig. 7 quality
 /// comparisons and as the recall oracle in property tests. Deletion is by

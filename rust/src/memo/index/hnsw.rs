@@ -21,8 +21,8 @@
 //! mixed batch. [`Hnsw::touched_nodes`] counts the deep copies since the
 //! clone — the `publish_touched_nodes` bench metric.
 
+use crate::kernels::simd::l2_sq;
 use crate::memo::index::{Hit, VectorIndex};
-use crate::tensor::ops::l2_sq;
 use crate::util::Pcg32;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -97,6 +97,10 @@ pub struct Hnsw {
     /// Node records and vector rows deep-copied since this generation
     /// was cloned (see [`Hnsw::touched_nodes`]).
     touched: u64,
+    /// Tombstones added since the last [`Hnsw::compact`] — the
+    /// churn-trigger counter. Carried across generational clones (the
+    /// clone is the same logical index), reset only by a compact.
+    dead_since_compact: u64,
 }
 
 impl Clone for Hnsw {
@@ -119,6 +123,7 @@ impl Clone for Hnsw {
             rng: self.rng.clone(),
             level_mult: self.level_mult,
             touched: 0,
+            dead_since_compact: self.dead_since_compact,
         }
     }
 }
@@ -169,6 +174,7 @@ impl Hnsw {
             rng: Pcg32::seeded(params.seed),
             level_mult,
             touched: 0,
+            dead_since_compact: 0,
         }
     }
 
@@ -436,6 +442,7 @@ impl Hnsw {
     /// as a side effect; this in-place form keeps ids stable for callers
     /// that hold them.)
     pub fn compact(&mut self) -> usize {
+        self.dead_since_compact = 0;
         let mut reclaimed = 0;
         for id in 0..self.len as u32 {
             if self.node(id).deleted {
@@ -510,11 +517,17 @@ impl Hnsw {
         }
     }
 
+    /// Tombstones added since the last [`Hnsw::compact`] (the eviction
+    /// path's churn-trigger counter; see `LayerDb::admit_demoting`).
+    pub fn dead_since_compact(&self) -> u64 {
+        self.dead_since_compact
+    }
+
     /// Total dead ids still referenced from live nodes' neighbour lists
     /// (0 right after [`Hnsw::compact`]; the churn regression test's
     /// search-cost proxy — every dead slot is a wasted traversal visit).
-    #[cfg(test)]
-    fn dead_link_slots(&self) -> usize {
+    /// O(index) — diagnostics and tests, not the serve path.
+    pub fn dead_link_slots(&self) -> usize {
         (0..self.len as u32)
             .filter(|&id| !self.node(id).deleted)
             .map(|id| {
@@ -587,6 +600,7 @@ impl VectorIndex for Hnsw {
         }
         self.node_mut(id).deleted = true;
         self.live -= 1;
+        self.dead_since_compact += 1;
         // Searches start at the entry point; a tombstoned entry would
         // make every search start on (and an empty index search return)
         // a dead node, so hand the role to a live survivor.

@@ -80,7 +80,7 @@ impl SemanticSketcher {
             let row = &table[t * dim..(t + 1) * dim];
             for (b, p) in prow.iter_mut().enumerate() {
                 let plane = &planes[b * dim..(b + 1) * dim];
-                *p = row.iter().zip(plane).map(|(x, w)| x * w).sum();
+                *p = crate::kernels::simd::dot(row, plane);
             }
         }
         Ok(SemanticSketcher { proj, vocab, prefix_len: prefix_len.max(1) })
@@ -140,9 +140,7 @@ impl SemanticSketcher {
         let mut acc = [0.0f32; SIG_BITS];
         for &ti in &toks {
             let row = &self.proj[ti * SIG_BITS..(ti + 1) * SIG_BITS];
-            for (a, &p) in acc.iter_mut().zip(row) {
-                *a += p;
-            }
+            crate::kernels::simd::axpy(1.0, row, &mut acc);
         }
         let mut sig = 0u64;
         for (b, &a) in acc.iter().enumerate() {

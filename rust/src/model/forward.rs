@@ -316,6 +316,108 @@ impl ModelRunner {
     }
 }
 
+// -- host fallback kernels ----------------------------------------------
+//
+// The PJRT executables own the accelerated path, but a deployment with
+// no device (and every hermetic bench/test in this repo) still needs the
+// miss-path attention at host speed. These free functions compute the
+// same shapes the split graphs produce — APM `[n, heads, L, L]` and the
+// applied attention `[n, L, H]` — through the blocked, online-softmax
+// kernel in `crate::kernels::attention`, replacing the naive
+// per-element loops this module would otherwise need.
+
+/// Host-side `attn_scores` fallback: hidden `[n, L, H]` → APM
+/// `[n, heads, L, L]`.
+///
+/// Weightless self-attention: each head's query and key matrices are
+/// the head's slice of the hidden state itself (contiguous `d = H /
+/// heads` columns within a row, row pitch `H`), scaled by `1/√d`. The
+/// strided blocked kernel reads the slices in place — no repacking
+/// copy.
+pub fn host_attn_scores(hidden: &Tensor, heads: usize) -> Result<Tensor> {
+    if hidden.shape().len() != 3 {
+        return Err(Error::shape(format!(
+            "host_attn_scores wants [n, L, H], got {:?}",
+            hidden.shape()
+        )));
+    }
+    let (n, l, h) = (hidden.shape()[0], hidden.shape()[1], hidden.shape()[2]);
+    if heads == 0 || h % heads != 0 {
+        return Err(Error::shape(format!(
+            "hidden width {h} not divisible into {heads} heads"
+        )));
+    }
+    let d = h / heads;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0.0f32; n * heads * l * l];
+    for b in 0..n {
+        let hid = &hidden.data()[b * l * h..(b + 1) * l * h];
+        for head in 0..heads {
+            let slice = &hid[head * d..];
+            let o = (b * heads + head) * l * l;
+            crate::kernels::attention::apm_blocked_strided(
+                slice,
+                h,
+                slice,
+                h,
+                l,
+                d,
+                scale,
+                &mut out[o..o + l * l],
+            );
+        }
+    }
+    Tensor::new(vec![n, heads, l, l], out)
+}
+
+/// Host-side `attn_apply` fallback: `(hidden [n, L, H], apm [n, heads,
+/// L, L])` → `[n, L, H]`, where each head's value matrix is its slice
+/// of the hidden state. The APM may come from [`host_attn_scores`] or
+/// from the attention database; rows are applied with the kernel
+/// layer's axpy accumulate.
+pub fn host_attn_apply(hidden: &Tensor, apm: &Tensor) -> Result<Tensor> {
+    if hidden.shape().len() != 3 || apm.shape().len() != 4 {
+        return Err(Error::shape(format!(
+            "host_attn_apply wants [n, L, H] + [n, heads, L, L], got {:?} + {:?}",
+            hidden.shape(),
+            apm.shape()
+        )));
+    }
+    let (n, l, h) = (hidden.shape()[0], hidden.shape()[1], hidden.shape()[2]);
+    let heads = apm.shape()[1];
+    if apm.shape() != &[n, heads, l, l][..] || heads == 0 || h % heads != 0 {
+        return Err(Error::shape(format!(
+            "apm {:?} does not match hidden [{n}, {l}, {h}]",
+            apm.shape()
+        )));
+    }
+    let d = h / heads;
+    let mut out = vec![0.0f32; n * l * h];
+    let mut acc = vec![0.0f32; d];
+    for b in 0..n {
+        let hid = &hidden.data()[b * l * h..(b + 1) * l * h];
+        let out_b = &mut out[b * l * h..(b + 1) * l * h];
+        for head in 0..heads {
+            let probs =
+                &apm.data()[(b * heads + head) * l * l..][..l * l];
+            for i in 0..l {
+                acc.iter_mut().for_each(|a| *a = 0.0);
+                for j in 0..l {
+                    let v_j = &hid[j * h + head * d..j * h + (head + 1) * d];
+                    crate::kernels::simd::axpy(
+                        probs[i * l + j],
+                        v_j,
+                        &mut acc,
+                    );
+                }
+                out_b[i * h + head * d..i * h + (head + 1) * d]
+                    .copy_from_slice(&acc);
+            }
+        }
+    }
+    Tensor::new(vec![n, l, h], out)
+}
+
 /// Pad ids `[n, L]` to `[b, L]` with PAD(0) rows.
 fn pad_ids(ids: &IdTensor, b: usize) -> Result<IdTensor> {
     let (n, l) = (ids.shape[0], ids.shape[1]);
@@ -388,6 +490,48 @@ mod tests {
         let p = pad0(&t, 3).unwrap();
         assert_eq!(p.shape(), &[3, 2]);
         assert_eq!(p.data()[2..], [0.0; 4]);
+    }
+
+    #[test]
+    fn host_attn_scores_shape_and_stochastic_rows() {
+        let (n, l, h, heads) = (2, 6, 8, 2);
+        let mut rng = crate::util::Pcg32::seeded(41);
+        let data: Vec<f32> =
+            (0..n * l * h).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let hidden = Tensor::new(vec![n, l, h], data).unwrap();
+        let apm = host_attn_scores(&hidden, heads).unwrap();
+        assert_eq!(apm.shape(), &[n, heads, l, l]);
+        assert!(crate::tensor::ops::rows_stochastic(
+            apm.data(),
+            n * heads * l,
+            l,
+            1e-4
+        ));
+        // Bad head split rejected.
+        assert!(host_attn_scores(&hidden, 3).is_err());
+    }
+
+    #[test]
+    fn host_attn_apply_uniform_apm_averages_values() {
+        let (n, l, h, heads) = (1, 4, 6, 2);
+        let data: Vec<f32> = (0..n * l * h).map(|i| i as f32).collect();
+        let hidden = Tensor::new(vec![n, l, h], data).unwrap();
+        let apm = Tensor::new(
+            vec![n, heads, l, l],
+            vec![1.0 / l as f32; n * heads * l * l],
+        )
+        .unwrap();
+        let out = host_attn_apply(&hidden, &apm).unwrap();
+        assert_eq!(out.shape(), &[n, l, h]);
+        // A uniform APM means every output row is the column mean.
+        for c in 0..h {
+            let mean: f32 =
+                (0..l).map(|j| hidden.data()[j * h + c]).sum::<f32>()
+                    / l as f32;
+            for i in 0..l {
+                assert!((out.data()[i * h + c] - mean).abs() < 1e-4);
+            }
+        }
     }
 
     #[test]

@@ -1,8 +1,12 @@
-//! Host-side numeric kernels used by the coordinator.
+//! Host-side numeric helpers used by the coordinator.
 //!
-//! The Eq. 1 total-variation similarity score is the crate's hottest host
-//! loop (DB building compares thousands of APM pairs), so it gets an
-//! explicitly unrolled implementation; everything else is straightforward.
+//! The heavy inner loops (Eq. 1 total variation, index distances, the
+//! softmax reductions) route through the unified kernel layer in
+//! [`crate::kernels`], which owns SIMD dispatch and the scalar A/B
+//! fallback; this module keeps the shape-aware wrappers and the odd
+//! small utility.
+
+use crate::kernels::simd;
 
 /// Paper Eq. 1 over a single pair of attention matrices, flattened
 /// `[heads * rows, cols]`: `1 − mean_row(0.5 · ‖a_row − b_row‖₁)`.
@@ -21,63 +25,31 @@ pub fn similarity_score(a: &[f32], b: &[f32], rows: usize, cols: usize) -> f32 {
     (1.0 - tv_sum / rows as f64) as f32
 }
 
-/// L1 distance with 4-way unrolling (auto-vectorises well).
+/// L1 distance (dispatched kernel; see `kernels::simd::l1_distance`).
 #[inline]
 pub fn l1_distance(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len().min(b.len());
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += (a[j] - b[j]).abs();
-        s1 += (a[j + 1] - b[j + 1]).abs();
-        s2 += (a[j + 2] - b[j + 2]).abs();
-        s3 += (a[j + 3] - b[j + 3]).abs();
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for j in chunks * 4..n {
-        s += (a[j] - b[j]).abs();
-    }
-    s
+    simd::l1_distance(a, b)
 }
 
-/// Squared L2 distance, 4-way unrolled (HNSW hot loop).
+/// Squared L2 distance (dispatched kernel; HNSW hot loop).
 #[inline]
 pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len().min(b.len());
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
-    for i in 0..chunks {
-        let j = i * 4;
-        let d0 = a[j] - b[j];
-        let d1 = a[j + 1] - b[j + 1];
-        let d2 = a[j + 2] - b[j + 2];
-        let d3 = a[j + 3] - b[j + 3];
-        s0 += d0 * d0;
-        s1 += d1 * d1;
-        s2 += d2 * d2;
-        s3 += d3 * d3;
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for j in chunks * 4..n {
-        let d = a[j] - b[j];
-        s += d * d;
-    }
-    s
+    simd::l2_sq(a, b)
 }
 
-/// Row-wise softmax in place over `[rows, cols]`.
+/// Row-wise softmax in place over `[rows, cols]`, reductions through
+/// the kernel layer.
 pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
     for r in 0..rows {
         let row = &mut x[r * cols..(r + 1) * cols];
-        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0;
+        let m = simd::max_reduce(row);
         for v in row.iter_mut() {
             *v = (*v - m).exp();
-            sum += *v;
         }
+        let sum = simd::sum_reduce(row);
+        let inv = if sum > 0.0 { 1.0 / sum } else { 0.0 };
         for v in row.iter_mut() {
-            *v /= sum;
+            *v *= inv;
         }
     }
 }

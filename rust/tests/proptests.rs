@@ -4,6 +4,7 @@
 //! replay deterministically.
 
 use attmemo::config::json::{self, Json};
+use attmemo::kernels::{attention, simd};
 use attmemo::memo::arena::{page_size, ApmArena, ApmId};
 use attmemo::memo::builder::alpha_at;
 use attmemo::memo::gather::{copy_gather, GatherWindow};
@@ -485,5 +486,196 @@ fn prop_summary_percentiles_are_order_statistics() {
         let p50 = s.percentile(50.0);
         assert!(xs.contains(&p50));
         assert!(s.min() <= s.mean() && s.mean() <= s.max());
+    });
+}
+
+// ------------------------------------------------- kernel layer pins --
+
+/// Relative-tolerance check against an f64 reference: SIMD lanes and
+/// the 4-way unrolled scalar paths reassociate the reduction, so the
+/// comparison must absorb O(n·eps) drift without hiding real bugs.
+fn close_to(got: f32, want: f64, n: usize) -> bool {
+    let tol = 1e-4 * (1.0 + want.abs()) + 1e-6 * n as f64;
+    (got as f64 - want).abs() <= tol
+}
+
+fn naive_dot(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+fn naive_l2_sq(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = *x as f64 - *y as f64;
+            d * d
+        })
+        .sum()
+}
+
+fn naive_l1(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (*x as f64 - *y as f64).abs()).sum()
+}
+
+/// Every `kernels::simd` path — the dispatched front door, the scalar
+/// fallback, and (where the host supports it) the explicit AVX2 probe —
+/// agrees with an f64 naive reference across random lengths, including
+/// the remainder lanes past the 16- and 8-wide main loops.
+#[test]
+fn prop_simd_primitives_match_f64_reference() {
+    forall(60, |rng| {
+        // Bias towards lengths straddling the vector widths so the
+        // 16-wide, 8-wide, and scalar tail loops all get remainders.
+        let n = rng.range_usize(0, 4) * 16 + rng.range_usize(0, 18);
+        let a: Vec<f32> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.next_gaussian()).collect();
+
+        let refs = [
+            (simd::dot(&a, &b), simd::dot_scalar(&a, &b), naive_dot(&a, &b)),
+            (
+                simd::l2_sq(&a, &b),
+                simd::l2_sq_scalar(&a, &b),
+                naive_l2_sq(&a, &b),
+            ),
+            (
+                simd::l1_distance(&a, &b),
+                simd::l1_distance_scalar(&a, &b),
+                naive_l1(&a, &b),
+            ),
+        ];
+        for (dispatched, scalar, want) in refs {
+            assert!(close_to(dispatched, want, n), "{dispatched} vs {want}");
+            assert!(close_to(scalar, want, n), "{scalar} vs {want}");
+        }
+
+        // Reductions.
+        let want_sum: f64 = a.iter().map(|x| *x as f64).sum();
+        assert!(close_to(simd::sum_reduce(&a), want_sum, n));
+        assert!(close_to(simd::sum_reduce_scalar(&a), want_sum, n));
+        let want_max =
+            a.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        assert_eq!(simd::max_reduce(&a), want_max);
+        assert_eq!(simd::max_reduce_scalar(&a), want_max);
+
+        // axpy: y += alpha * x, elementwise (no reduction drift).
+        let alpha = rng.next_gaussian();
+        let y0: Vec<f32> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mut y_fast = y0.clone();
+        simd::axpy(alpha, &a, &mut y_fast);
+        for i in 0..n {
+            let want = y0[i] as f64 + alpha as f64 * a[i] as f64;
+            assert!(close_to(y_fast[i], want, 1));
+        }
+
+        // Explicit AVX2 probes (None on non-AVX2 hosts is a pass: the
+        // scalar leg of the CI matrix still pins the fallback).
+        #[cfg(target_arch = "x86_64")]
+        {
+            if let Some(v) = simd::dot_avx2(&a, &b) {
+                assert!(close_to(v, naive_dot(&a, &b), n));
+            }
+            if let Some(v) = simd::l2_sq_avx2(&a, &b) {
+                assert!(close_to(v, naive_l2_sq(&a, &b), n));
+            }
+            if let Some(v) = simd::l1_distance_avx2(&a, &b) {
+                assert!(close_to(v, naive_l1(&a, &b), n));
+            }
+            if let Some(v) = simd::sum_reduce_avx2(&a) {
+                assert!(close_to(v, want_sum, n));
+            }
+            if let Some(v) = simd::max_reduce_avx2(&a) {
+                assert_eq!(v, want_max);
+            }
+            let mut y_avx = y0.clone();
+            if simd::axpy_avx2(alpha, &a, &mut y_avx) {
+                for i in 0..n {
+                    let want = y0[i] as f64 + alpha as f64 * a[i] as f64;
+                    assert!(close_to(y_avx[i], want, 1));
+                }
+            }
+        }
+
+        // Mismatched lengths operate over the common prefix.
+        if n >= 2 {
+            let cut = rng.range_usize(1, n);
+            let want = naive_dot(&a[..cut], &b);
+            assert!(close_to(simd::dot(&a[..cut], &b), want, cut));
+            assert!(close_to(simd::dot(&a, &b[..cut]), want, cut));
+        }
+    });
+}
+
+/// The blocked online-softmax attention kernels (APM and fused, packed
+/// and strided) agree with the naive three-pass scalar reference across
+/// random shapes, pitches, and scales.
+#[test]
+fn prop_blocked_attention_matches_reference() {
+    forall(16, |rng| {
+        let l = rng.range_usize(1, 150);
+        let d = rng.range_usize(1, 33);
+        let scale = 0.125 + rng.next_f32();
+        let gauss = |rng: &mut Pcg32, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.next_gaussian()).collect()
+        };
+        let q = gauss(rng, l * d);
+        let k = gauss(rng, l * d);
+        let v = gauss(rng, l * d);
+
+        let mut apm = vec![0.0f32; l * l];
+        let mut apm_ref = vec![0.0f32; l * l];
+        attention::apm_blocked(&q, &k, l, d, scale, &mut apm);
+        attention::apm_reference(&q, &k, l, d, scale, &mut apm_ref);
+        for i in 0..l * l {
+            assert!(
+                close_to(apm[i], apm_ref[i] as f64, d),
+                "apm[{i}] {} vs {} (l={l}, d={d})",
+                apm[i],
+                apm_ref[i]
+            );
+        }
+        for i in 0..l {
+            let row_sum: f32 = apm[i * l..(i + 1) * l].iter().sum();
+            assert!((row_sum - 1.0).abs() < 1e-3, "row {i} sums to {row_sum}");
+        }
+
+        let mut out = vec![0.0f32; l * d];
+        let mut out_ref = vec![0.0f32; l * d];
+        attention::attention_blocked(&q, &k, &v, l, d, scale, &mut out);
+        attention::attention_reference(&q, &k, &v, l, d, scale, &mut out_ref);
+        for i in 0..l * d {
+            assert!(
+                close_to(out[i], out_ref[i] as f64, l),
+                "out[{i}] {} vs {} (l={l}, d={d})",
+                out[i],
+                out_ref[i]
+            );
+        }
+
+        // Strided operands: embed each row at a random pitch > d with
+        // garbage in the pad lanes; results must match the packed run.
+        let pitch = d + rng.range_usize(1, 9);
+        let embed = |rng: &mut Pcg32, m: &[f32]| -> Vec<f32> {
+            let mut out = vec![0.0f32; l * pitch];
+            for (i, chunk) in out.chunks_mut(pitch).enumerate() {
+                chunk[..d].copy_from_slice(&m[i * d..(i + 1) * d]);
+                for pad in &mut chunk[d..] {
+                    *pad = 1e6 * rng.next_gaussian(); // poison
+                }
+            }
+            out
+        };
+        let qs = embed(rng, &q);
+        let ks = embed(rng, &k);
+        let vs = embed(rng, &v);
+        let mut apm_strided = vec![0.0f32; l * l];
+        attention::apm_blocked_strided(
+            &qs, pitch, &ks, pitch, l, d, scale, &mut apm_strided,
+        );
+        assert_eq!(apm, apm_strided, "strided APM diverged (pitch {pitch})");
+        let mut out_strided = vec![0.0f32; l * d];
+        attention::attention_blocked_strided(
+            &qs, pitch, &ks, pitch, &vs, pitch, l, d, scale, &mut out_strided,
+        );
+        assert_eq!(out, out_strided, "strided fused diverged (pitch {pitch})");
     });
 }
